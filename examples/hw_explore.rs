@@ -1,0 +1,68 @@
+//! Design-space exploration of the hardware cost model: sweep hidden
+//! dimension and number format, print area/power/latency for both blocks
+//! and the structural breakdown of where FLASH-D saves.
+//!
+//!     cargo run --release --example hw_explore -- --dmax 512
+
+use flashd::hw::activity::ActivityStats;
+use flashd::hw::{area, datapath, power, CostDb, Design, Format};
+use flashd::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env(&[]);
+    let dmax = args.get_usize("dmax", 512);
+    let db = CostDb::tsmc28();
+    let act = ActivityStats { skip_fraction: 0.02, ..ActivityStats::default_random() };
+
+    println!("== area / power sweep (28 nm @ 500 MHz) ==");
+    println!(
+        "{:<10} {:>5} {:>12} {:>12} {:>8} {:>10} {:>10} {:>8} {:>8}",
+        "format", "d", "FA2 mm2", "FLASHD mm2", "Δarea", "FA2 mW", "FLASHD mW", "Δpower", "cycles"
+    );
+    for fmt in [Format::BF16, Format::FP8_E4M3, Format::FP32] {
+        let mut d = 8usize;
+        while d <= dmax {
+            let a2 = Design::FlashAttention2.area_um2(d, fmt, &db) / 1e6;
+            let ad = Design::FlashD.area_um2(d, fmt, &db) / 1e6;
+            let p2 = power::block_power_mw(Design::FlashAttention2, d, fmt, &act, &db);
+            let pd = power::block_power_mw(Design::FlashD, d, fmt, &act, &db);
+            println!(
+                "{:<10} {:>5} {:>12.4} {:>12.4} {:>7.1}% {:>10.3} {:>10.3} {:>7.1}% {:>8}",
+                fmt.name(),
+                d,
+                a2,
+                ad,
+                100.0 * (a2 - ad) / a2,
+                p2,
+                pd,
+                100.0 * (p2 - pd) / p2,
+                datapath::latency_cycles(Design::FlashD, d),
+            );
+            d *= 2;
+        }
+        println!();
+    }
+
+    println!("== structural breakdown, bf16 d=64 (kGE) ==");
+    for design in [Design::FlashAttention2, Design::FlashD] {
+        let b = area::breakdown(design, 64, Format::BF16, &db);
+        println!(
+            "{:<16} dot={:>6.1} nonlin={:>6.1} update={:>7.1} state={:>5.1} epilogue={:>7.1} regs={:>6.1}  total={:>8.1}",
+            design.name(),
+            b.dot / 1e3,
+            b.nonlinear / 1e3,
+            b.update / 1e3,
+            b.state / 1e3,
+            b.epilogue / 1e3,
+            b.regs / 1e3,
+            b.total() / 1e3,
+        );
+    }
+
+    println!("\n== skip-fraction sensitivity (FLASH-D power, bf16 d=64) ==");
+    for skip in [0.0, 0.01, 0.02, 0.05, 0.1, 0.25, 0.5] {
+        let a = ActivityStats { skip_fraction: skip, ..ActivityStats::default_random() };
+        let p = power::block_power_mw(Design::FlashD, 64, Format::BF16, &a, &db);
+        println!("  skip {:>5.1}%  ->  {:.3} mW", skip * 100.0, p);
+    }
+}

@@ -1,0 +1,60 @@
+//! §Perf measurement: full-window re-forward decode (baseline) vs the
+//! KV-cached DecodeSession (optimized). Writes reports/perf_decode.txt.
+//!
+//!     cargo run --release --example perf_decode -- --model phi-tiny
+
+use flashd::model::engine::Engine;
+use flashd::model::tokenizer::ByteTokenizer;
+use flashd::util::cli::Args;
+use std::fmt::Write as _;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&[]);
+    let dir = flashd::runtime::default_artifact_dir();
+    let model = args.get_or("model", "phi-tiny");
+    let tokens = args.get_usize("tokens", 12);
+    let engine = Engine::from_artifacts(&dir, model)?;
+    let tok = ByteTokenizer;
+
+    let mut report = String::new();
+    let _ = writeln!(report, "decode perf, model={model}, {tokens} new tokens");
+    let _ = writeln!(
+        report,
+        "{:<12} {:>14} {:>14} {:>9}",
+        "prompt_len", "baseline_ms", "kv_cached_ms", "speedup"
+    );
+    println!("{report}");
+
+    for prompt_len in [16usize, 48, 96] {
+        let prompt: Vec<i32> = tok
+            .encode(&"the quick brown fox jumps over the lazy dog. ".repeat(4))
+            .into_iter()
+            .take(prompt_len)
+            .collect();
+
+        let t = Instant::now();
+        let (slow, _) = engine.greedy_decode(&prompt, tokens);
+        let slow_ms = t.elapsed().as_secs_f64() * 1e3;
+
+        let t = Instant::now();
+        let (fast, _) = engine.greedy_decode_fast(&prompt, tokens);
+        let fast_ms = t.elapsed().as_secs_f64() * 1e3;
+
+        assert_eq!(slow, fast, "optimization changed outputs!");
+        let line = format!(
+            "{:<12} {:>14.1} {:>14.2} {:>8.1}x",
+            prompt_len,
+            slow_ms,
+            fast_ms,
+            slow_ms / fast_ms
+        );
+        println!("{line}");
+        let _ = writeln!(report, "{line}");
+    }
+
+    std::fs::create_dir_all("reports").ok();
+    std::fs::write("reports/perf_decode.txt", &report)?;
+    println!("\nwrote reports/perf_decode.txt (outputs verified identical)");
+    Ok(())
+}

@@ -1,0 +1,61 @@
+//! Quickstart: load the FLASH-D attention artifact, run it through PJRT,
+//! and cross-check against the Rust golden kernel.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use flashd::kernels::{self, max_abs_diff};
+use flashd::runtime::{lit_f32, lit_i32, open_default, to_vec_f32};
+use flashd::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Open the artifact directory and the PJRT CPU client.
+    let rt = open_default()?;
+    println!("platform: {}", rt.platform());
+
+    // 2. Pick the FLASH-D serving artifact for (4 heads, 128 seq, 32 dim).
+    let name = "attn_flashd_h4_l128_d32";
+    let (h, l, d) = (4usize, 128usize, 32usize);
+    println!("artifact: {name}");
+
+    // 3. Random attention problem.
+    let mut rng = Rng::new(0xF1A5D);
+    let q = rng.normal_vec(h * l * d, 0.5);
+    let k = rng.normal_vec(h * l * d, 0.5);
+    let v = rng.normal_vec(h * l * d, 1.0);
+
+    // 4. Execute through PJRT (kv_len = full window).
+    let t = std::time::Instant::now();
+    let out = rt.execute(
+        name,
+        &[
+            lit_f32(&q, &[h, l, d])?,
+            lit_f32(&k, &[h, l, d])?,
+            lit_f32(&v, &[h, l, d])?,
+            lit_i32(&[l as i32], &[1, 1])?,
+        ],
+    )?;
+    let pjrt_out = to_vec_f32(&out[0])?;
+    println!("pjrt execute: {:?}", t.elapsed());
+
+    // 5. Same problem through the Rust FLASH-D kernel (Alg. 3).
+    let scale = (d as f32).powf(-0.5);
+    let mut rust_out = Vec::with_capacity(h * l * d);
+    for hh in 0..h {
+        let off = hh * l * d;
+        rust_out.extend(kernels::flashd::attention_multi(
+            &q[off..off + l * d],
+            &k[off..off + l * d],
+            &v[off..off + l * d],
+            l,
+            l,
+            d,
+            scale,
+        ));
+    }
+
+    let diff = max_abs_diff(&pjrt_out, &rust_out);
+    println!("max |pjrt - rust| = {diff:.2e}");
+    assert!(diff < 2e-4, "kernel mismatch");
+    println!("OK: the Pallas FLASH-D kernel and the Rust Alg. 3 agree.");
+    Ok(())
+}

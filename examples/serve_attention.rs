@@ -1,0 +1,86 @@
+//! Serving example: spin up the coordinator, run a multi-session
+//! prefill + decode workload, and report latency/throughput percentiles —
+//! the software analogue of the paper's parallel-query hardware block.
+//!
+//!     cargo run --release --example serve_attention -- --sessions 4 --decode 24
+
+use flashd::bench_harness::workload::{session_requests, WorkloadSpec};
+use flashd::coordinator::{Coordinator, CoordinatorConfig, Variant};
+use flashd::util::cli::Args;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&[]);
+    let sessions = args.get_usize("sessions", 4);
+    let decode = args.get_usize("decode", 24);
+    let variant = match args.get_or("variant", "flashd") {
+        "flash2" => Variant::Flash2,
+        _ => Variant::FlashD,
+    };
+
+    let coord = Coordinator::start(CoordinatorConfig::default())?;
+    let spec = WorkloadSpec { sessions, decode_steps: decode, variant, ..Default::default() };
+
+    println!("== sequential per-session decode ==");
+    let t = Instant::now();
+    let mut latencies = Vec::new();
+    for s in 0..sessions as u64 {
+        for req in session_requests(&spec, s, s * 10_000) {
+            let resp = coord.submit_blocking(req);
+            resp.output.map_err(|e| anyhow::anyhow!(e))?;
+            latencies.push(resp.latency_us as f64);
+        }
+    }
+    let wall = t.elapsed().as_secs_f64();
+    let n = latencies.len();
+    println!(
+        "{n} requests in {wall:.2}s  ({:.1} req/s)  p50={:.0}µs p95={:.0}µs p99={:.0}µs",
+        n as f64 / wall,
+        flashd::util::percentile(&latencies, 50.0),
+        flashd::util::percentile(&latencies, 95.0),
+        flashd::util::percentile(&latencies, 99.0),
+    );
+
+    println!("\n== concurrent decode burst (dynamic batching) ==");
+    // prefill one shared session, then hammer it from worker threads
+    let s = 999u64;
+    let mut reqs = session_requests(
+        &WorkloadSpec { sessions: 1, decode_steps: 0, variant, ..Default::default() },
+        s,
+        10_000_000,
+    );
+    let prefill = reqs.remove(0);
+    coord
+        .submit_blocking(prefill)
+        .output
+        .map_err(|e| anyhow::anyhow!(e))?;
+
+    let coord = std::sync::Arc::new(coord);
+    let t = Instant::now();
+    let burst = 64usize;
+    let mut handles = Vec::new();
+    for i in 0..burst as u64 {
+        let c = coord.clone();
+        let spec2 = WorkloadSpec { variant, ..Default::default() };
+        handles.push(std::thread::spawn(move || {
+            let mut reqs = session_requests(&spec2, s, 20_000_000 + i * 100);
+            let dec = reqs.pop().unwrap(); // one decode request
+            c.submit_blocking(dec)
+        }));
+    }
+    let mut batched: Vec<f64> = Vec::new();
+    let mut max_batch = 0usize;
+    for h in handles {
+        let resp = h.join().unwrap();
+        resp.output.map_err(|e| anyhow::anyhow!(e))?;
+        batched.push(resp.latency_us as f64);
+        max_batch = max_batch.max(resp.batch_size);
+    }
+    let wall = t.elapsed().as_secs_f64();
+    println!(
+        "{burst} concurrent decodes in {wall:.3}s  ({:.1} req/s)  largest batch={max_batch}",
+        burst as f64 / wall
+    );
+    println!("\nmetrics:\n{}", coord.metrics.snapshot().render());
+    Ok(())
+}

@@ -1,0 +1,188 @@
+"""AOT compile path: lower every Layer-1/Layer-2 computation to HLO *text*
+artifacts that the Rust runtime loads via the xla crate's PJRT CPU client.
+
+HLO text (NOT ``lowered.compile()`` / serialized HloModuleProto) is the
+interchange format: jax >= 0.5 emits protos with 64-bit instruction ids
+that xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly.  See /opt/xla-example.
+
+Artifacts (written to ``artifacts/``):
+  attn_flashd_*.hlo.txt      serving attention kernels (Pallas FLASH-D)
+  attn_flash2_*.hlo.txt      baseline FlashAttention2 kernels
+  model_fwd_<name>.hlo.txt   full transformer forward (Pallas FLASH-D inside)
+  train_step_<name>.hlo.txt  AdamW train step (differentiable FLASH-D scan)
+  init_<name>.fdw            initial parameters (FDW1 binary, shared ABI)
+  manifest.json              everything the Rust side needs to load them
+
+Run once via ``make artifacts``; Python never runs on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import struct
+import sys
+from typing import Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+from compile.kernels.flash2 import flash2_attention
+from compile.kernels.flashd import flashd_attention
+
+# Serving attention shapes: (heads, seq, head_dim).  h4_l128_d32 matches the
+# zoo's phi-tiny layer shape; the larger one exercises longer sequences.
+ATTN_SHAPES = [(4, 128, 32), (4, 256, 32), (8, 128, 64)]
+TRAIN_BATCH = 8
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def write_fdw(path: str, named: Sequence) -> None:
+    """FDW1 binary weights: the flat-tensor ABI shared with rust/src/model.
+
+    layout:  b"FDW1" | u32 n | n x ( u16 name_len | name | u8 ndim |
+             ndim x u32 dim | f32-LE data )
+    """
+    with open(path, "wb") as f:
+        f.write(b"FDW1")
+        f.write(struct.pack("<I", len(named)))
+        for name, arr in named:
+            arr = np.asarray(arr, np.float32)
+            nb = name.encode()
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<B", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.astype("<f4").tobytes())
+
+
+def _iospec(avals) -> List[Dict]:
+    return [{"shape": list(a.shape), "dtype": str(a.dtype)} for a in avals]
+
+
+def lower_attention(out_dir: str, manifest: Dict) -> None:
+    for h, l, d in ATTN_SHAPES:
+        spec = jax.ShapeDtypeStruct((h, l, d), jnp.float32)
+        len_spec = jax.ShapeDtypeStruct((1, 1), jnp.int32)
+        scale = float(d) ** -0.5
+        for name, fn in (("flashd", flashd_attention), ("flash2", flash2_attention)):
+            for causal in (False, True):
+                tag = f"attn_{name}_h{h}_l{l}_d{d}" + ("_causal" if causal else "")
+                lowered = jax.jit(
+                    lambda q, k, v, kvl, fn=fn, causal=causal, scale=scale:
+                    (fn(q, k, v, kvl, sm_scale=scale, causal=causal,
+                        block_q=min(32, l), block_k=min(32, l)),)
+                ).lower(spec, spec, spec, len_spec)
+                path = os.path.join(out_dir, f"{tag}.hlo.txt")
+                open(path, "w").write(to_hlo_text(lowered))
+                manifest["artifacts"][tag] = {
+                    "file": os.path.basename(path),
+                    "kind": "attention",
+                    "variant": name,
+                    "causal": causal,
+                    "heads": h, "seq": l, "head_dim": d,
+                    "inputs": _iospec([spec, spec, spec, len_spec]),
+                    "n_outputs": 1,
+                }
+                print(f"  {tag}: {os.path.getsize(path)} bytes")
+
+
+def lower_model(out_dir: str, manifest: Dict, names: Sequence[str]) -> None:
+    for name in names:
+        cfg = M.MODEL_ZOO[name]
+        spec_list = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in M.param_spec(cfg)]
+        tok1 = jax.ShapeDtypeStruct((1, cfg.seq_len), jnp.int32)
+        tokB = jax.ShapeDtypeStruct((TRAIN_BATCH, cfg.seq_len), jnp.int32)
+        step_spec = jax.ShapeDtypeStruct((), jnp.int32)
+        tcfg = M.TrainConfig()
+
+        # -- forward (inference; Pallas FLASH-D kernel inside) --------------
+        fwd = jax.jit(lambda ps, t: (M.forward_batch(cfg, list(ps), t, use_pallas=True),))
+        lowered = fwd.lower(tuple(spec_list), tok1)
+        path = os.path.join(out_dir, f"model_fwd_{name}.hlo.txt")
+        open(path, "w").write(to_hlo_text(lowered))
+        manifest["artifacts"][f"model_fwd_{name}"] = {
+            "file": os.path.basename(path),
+            "kind": "model_fwd",
+            "model": name,
+            "inputs": _iospec(spec_list + [tok1]),
+            "n_outputs": 1,
+        }
+        print(f"  model_fwd_{name}: {os.path.getsize(path)} bytes")
+
+        # -- train step ------------------------------------------------------
+        def tstep(ps, m, v, step, toks):
+            nps, nm, nv, loss = M.train_step(cfg, tcfg, list(ps), list(m),
+                                             list(v), step, toks)
+            return tuple(nps) + tuple(nm) + tuple(nv) + (loss,)
+
+        lowered = jax.jit(tstep).lower(
+            tuple(spec_list), tuple(spec_list), tuple(spec_list), step_spec, tokB)
+        path = os.path.join(out_dir, f"train_step_{name}.hlo.txt")
+        open(path, "w").write(to_hlo_text(lowered))
+        manifest["artifacts"][f"train_step_{name}"] = {
+            "file": os.path.basename(path),
+            "kind": "train_step",
+            "model": name,
+            "batch": TRAIN_BATCH,
+            "inputs": _iospec(spec_list * 3 + [step_spec, tokB]),
+            "n_outputs": 3 * len(spec_list) + 1,
+        }
+        print(f"  train_step_{name}: {os.path.getsize(path)} bytes")
+
+        # -- initial weights + optimizer zeros -------------------------------
+        params = M.init_params(cfg, seed=hash(name) % 2**31)
+        write_fdw(os.path.join(out_dir, f"init_{name}.fdw"),
+                  list(zip([n for n, _ in M.param_spec(cfg)], params)))
+        manifest["models"][name] = {
+            "config": {
+                "vocab_size": cfg.vocab_size, "seq_len": cfg.seq_len,
+                "d_model": cfg.d_model, "n_heads": cfg.n_heads,
+                "n_layers": cfg.n_layers, "d_ff": cfg.d_ff,
+                "block_q": cfg.block_q, "block_k": cfg.block_k,
+                "qk_gain": cfg.qk_gain,
+            },
+            "n_params": M.n_params(cfg),
+            "param_spec": [{"name": n, "shape": list(s)} for n, s in M.param_spec(cfg)],
+            "init_weights": f"init_{name}.fdw",
+            "train": {"lr": tcfg.lr, "batch": TRAIN_BATCH},
+        }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default=",".join(M.MODEL_ZOO),
+                    help="comma-separated zoo names (empty to skip models)")
+    ap.add_argument("--skip-attn", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest: Dict = {"version": 1, "artifacts": {}, "models": {}}
+    if not args.skip_attn:
+        print("lowering attention kernels ...")
+        lower_attention(args.out, manifest)
+    names = [n for n in args.models.split(",") if n]
+    if names:
+        print(f"lowering models {names} ...")
+        lower_model(args.out, manifest, names)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {args.out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

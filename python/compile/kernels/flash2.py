@@ -1,0 +1,96 @@
+"""Layer-1 Pallas kernel: FlashAttention2 (Alg. 2) — the baseline FLASH-D is
+compared against.  Carries the classical (o, m, l) state across KV blocks and
+performs the lazy softmax division in the epilogue, exactly mirroring the
+structure of the paper's Fig. 1 datapath.
+
+interpret=True for the same CPU-PJRT reason as flashd.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash2_kernel(q_ref, k_ref, v_ref, kvlen_ref, o_ref, o_acc, m_ref, l_ref,
+                   *, sm_scale, causal, block_q, block_k, num_kv_blocks):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        o_acc[...] = jnp.zeros_like(o_acc)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * sm_scale
+    cols = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    if causal:
+        rows = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        s = jnp.where(rows >= cols, s, NEG_INF)
+    s = jnp.where(cols < kvlen_ref[0, 0], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))       # running max
+    alpha = jnp.exp(m_prev - m_new)                       # rescale factor
+    p = jnp.exp(s - m_new[:, None])
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)  # Alg.2 line 5
+    pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    o_acc[...] = o_acc[...] * alpha[:, None] + pv         # Alg.2 line 6
+    m_ref[...] = m_new
+
+    @pl.when(ki == num_kv_blocks - 1)
+    def _emit():
+        # Alg.2 line 8: the lazy softmax division.
+        o_ref[0] = (o_acc[...] / l_ref[...][:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("sm_scale", "causal", "block_q", "block_k"))
+def flash2_attention(q, k, v, kv_len=None, sm_scale=1.0, causal=False,
+                     block_q=64, block_k=64):
+    """FlashAttention2 attention. q, k, v: (H, L, D) -> (H, Lq, D).
+
+    ``kv_len``: optional (1, 1) int32 valid-KV-prefix length (serving path).
+    """
+    h, lq, d = q.shape
+    lk = k.shape[1]
+    block_q = min(block_q, lq)
+    block_k = min(block_k, lk)
+    assert lq % block_q == 0 and lk % block_k == 0, (lq, block_q, lk, block_k)
+    num_kv_blocks = lk // block_k
+    if kv_len is None:
+        kv_len = jnp.full((1, 1), lk, jnp.int32)
+
+    grid = (h, lq // block_q, lk // block_k)
+    return pl.pallas_call(
+        functools.partial(_flash2_kernel, sm_scale=sm_scale, causal=causal,
+                          block_q=block_q, block_k=block_k,
+                          num_kv_blocks=num_kv_blocks),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda hh, qi, ki: (hh, qi, 0)),
+            pl.BlockSpec((1, block_k, d), lambda hh, qi, ki: (hh, ki, 0)),
+            pl.BlockSpec((1, block_k, d), lambda hh, qi, ki: (hh, ki, 0)),
+            pl.BlockSpec((1, 1), lambda hh, qi, ki: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda hh, qi, ki: (hh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, lq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+        ],
+        interpret=True,
+    )(q, k, v, kv_len)

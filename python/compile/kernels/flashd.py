@@ -1,0 +1,128 @@
+"""Layer-1 Pallas kernel: FLASH-D (Alg. 3), tiled for the TPU memory
+hierarchy, executed with ``interpret=True`` so the lowered HLO runs on any
+PJRT backend (including the Rust CPU client).
+
+Hardware adaptation (DESIGN.md §5): the paper's ASIC datapath processes one
+key/value vector per cycle with a scalar sigmoid-weight recursion.  On a
+TPU-shaped target the natural unit of streaming is a *KV block* staged
+HBM -> VMEM by the BlockSpec; the FLASH-D recursion generalizes cleanly to
+block granularity because the carried state ``(s_prev, ln w)`` is exactly a
+log-sum-exp in disguise (Eq. (8) gives  e^{s_i}/w_i = sum_j e^{s_j}):
+
+    lam      = s_prev - ln w          # LSE of all scores seen so far
+    W        = sigmoid(lam_b - lam)   # block-granular FLASH-D weight
+    o'       = o + (o_b - o) * W      # Eq. (12): one FMA per element
+    lam'     = logaddexp(lam, lam_b)  #   = lam_b - ln W
+
+The per-element Alg. 3 is the ``block_k == 1`` special case; equality is
+checked in python/tests/test_kernel.py against ref.flashd_single.
+
+No running maximum is carried between blocks and no epilogue division is
+performed — the two structural savings the paper claims — while the block-
+local softmax stays numerically safe via its own private max.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flashd_kernel(q_ref, k_ref, v_ref, kvlen_ref, o_ref, o_acc, lam_ref, *,
+                   sm_scale, causal, block_q, block_k, num_kv_blocks):
+    """One (head, q-block, kv-block) grid step.
+
+    Scratch carries (o_acc, lam) across the sequential kv-block axis.
+    ``kvlen_ref`` holds the valid KV length (serving pads K/V to the
+    compiled sequence length; keys at index >= kv_len are masked out).
+    """
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    # Reset the carry at the start of each query block's kv sweep.
+    @pl.when(ki == 0)
+    def _init():
+        o_acc[...] = jnp.zeros_like(o_acc)
+        lam_ref[...] = jnp.full_like(lam_ref, NEG_INF)
+
+    q = q_ref[0].astype(jnp.float32)          # (block_q, d)
+    k = k_ref[0].astype(jnp.float32)          # (block_k, d)
+    v = v_ref[0].astype(jnp.float32)          # (block_k, d)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * sm_scale
+
+    cols = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    if causal:
+        rows = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        s = jnp.where(rows >= cols, s, NEG_INF)
+    s = jnp.where(cols < kvlen_ref[0, 0], s, NEG_INF)
+
+    # Block-local softmax statistics (private max keeps exp() in range).
+    mb = jnp.max(s, axis=1)                               # (block_q,)
+    pb = jnp.exp(s - mb[:, None])                         # (block_q, block_k)
+    lb = jnp.sum(pb, axis=1)                              # (block_q,)
+    lam_b = mb + jnp.log(lb)                              # block LSE
+    ob = jax.lax.dot_general(pb / lb[:, None], v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+
+    lam = lam_ref[...]
+    lam_new = jnp.logaddexp(lam, lam_b)
+    # W = sigmoid(lam_b - lam); computed as exp(lam_b - lam') which is the
+    # identical quantity evaluated from the already-needed carry update.
+    w = jnp.exp(lam_b - lam_new)                          # in (0, 1]
+    o_acc[...] = o_acc[...] + (ob - o_acc[...]) * w[:, None]   # Eq. (12)
+    lam_ref[...] = lam_new
+
+    @pl.when(ki == num_kv_blocks - 1)
+    def _emit():
+        o_ref[0] = o_acc[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("sm_scale", "causal", "block_q", "block_k"))
+def flashd_attention(q, k, v, kv_len=None, sm_scale=1.0, causal=False,
+                     block_q=64, block_k=64):
+    """FLASH-D attention. q, k, v: (H, L, D) -> (H, Lq, D).
+
+    ``kv_len``: optional (1, 1) int32 array with the valid KV prefix length
+    (used by the serving path, which pads K/V to the compiled shape).
+
+    interpret=True: real-TPU lowering would emit a Mosaic custom call the
+    CPU PJRT plugin cannot execute; interpret mode lowers to plain HLO.
+    """
+    h, lq, d = q.shape
+    lk = k.shape[1]
+    block_q = min(block_q, lq)
+    block_k = min(block_k, lk)
+    assert lq % block_q == 0 and lk % block_k == 0, (lq, block_q, lk, block_k)
+    num_kv_blocks = lk // block_k
+    if kv_len is None:
+        kv_len = jnp.full((1, 1), lk, jnp.int32)
+
+    grid = (h, lq // block_q, lk // block_k)
+    return pl.pallas_call(
+        functools.partial(_flashd_kernel, sm_scale=sm_scale, causal=causal,
+                          block_q=block_q, block_k=block_k,
+                          num_kv_blocks=num_kv_blocks),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda hh, qi, ki: (hh, qi, 0)),
+            pl.BlockSpec((1, block_k, d), lambda hh, qi, ki: (hh, ki, 0)),
+            pl.BlockSpec((1, block_k, d), lambda hh, qi, ki: (hh, ki, 0)),
+            pl.BlockSpec((1, 1), lambda hh, qi, ki: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda hh, qi, ki: (hh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, lq, d), q.dtype),
+        scratch_shapes=[
+            # f32 accumulators live in VMEM scratch across the kv sweep.
+            pltpu.VMEM((block_q, d), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+        ],
+        interpret=True,
+    )(q, k, v, kv_len)

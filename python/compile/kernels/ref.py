@@ -1,0 +1,169 @@
+"""Pure-jnp / pure-python correctness oracles for the attention kernels.
+
+Implements, in the most literal possible form:
+  * safe-softmax attention (the mathematical ground truth),
+  * Alg. 1  (baseline FlashAttention, incremental division),
+  * Alg. 2  (FlashAttention2, lazy division),
+  * Alg. 3  (FLASH-D, sigmoid-hidden division)  -- the paper's kernel,
+  * the blocked (tiled) generalization of FLASH-D used by the Pallas kernel.
+
+All recursions are written exactly as the paper states them so the Pallas
+kernels and the Rust kernels can be validated against an unambiguous oracle.
+Everything here is build/test-time only; nothing is imported at runtime.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, sm_scale=1.0, causal=False):
+    """Safe-softmax attention. q: (Lq, D), k/v: (Lk, D). Returns (Lq, D)."""
+    s = (q @ k.T) * sm_scale
+    if causal:
+        lq, lk = s.shape
+        mask = jnp.tril(jnp.ones((lq, lk), dtype=bool), k=lk - lq)
+        s = jnp.where(mask, s, NEG_INF)
+    s = s - jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return p @ v
+
+
+def mha_ref(q, k, v, sm_scale=1.0, causal=False):
+    """Multi-head reference. q,k,v: (H, L, D)."""
+    return jax.vmap(lambda qh, kh, vh: attention_ref(qh, kh, vh, sm_scale, causal))(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# Literal per-element recursions (numpy, float64) for a single query vector.
+# ---------------------------------------------------------------------------
+
+def _sigmoid(x: float) -> float:
+    """Branching sigmoid: never exponentiates a positive argument.  This is
+    the float analog of the paper's saturation argument — outside the active
+    region the exponential is never evaluated."""
+    if x >= 0.0:
+        return 1.0 / (1.0 + np.exp(-x))
+    e = np.exp(x)
+    return e / (1.0 + e)
+
+
+def _log_sigmoid(x: float) -> float:
+    """ln sigma(x), stable on both tails (~x for x<<0, ~0 for x>>0)."""
+    if x >= 0.0:
+        return -np.log1p(np.exp(-x))
+    return x - np.log1p(np.exp(x))
+
+def flash1_single(q, k, v):
+    """Alg. 1: baseline FlashAttention with incremental softmax division."""
+    q, k, v = np.asarray(q, np.float64), np.asarray(k, np.float64), np.asarray(v, np.float64)
+    n = k.shape[0]
+    m = -np.inf
+    ell = 0.0
+    o = np.zeros(v.shape[1], np.float64)
+    for i in range(n):
+        s = float(q @ k[i])
+        m_new = max(m, s)
+        ell_new = ell * np.exp(m - m_new) + np.exp(s - m_new)
+        o = o * (ell * np.exp(m - m_new) / ell_new) + v[i] * (np.exp(s - m_new) / ell_new)
+        m, ell = m_new, ell_new
+    return o
+
+
+def flash2_single(q, k, v):
+    """Alg. 2: FlashAttention2 with lazy (final) division."""
+    q, k, v = np.asarray(q, np.float64), np.asarray(k, np.float64), np.asarray(v, np.float64)
+    n = k.shape[0]
+    m = -np.inf
+    ell = 0.0
+    o = np.zeros(v.shape[1], np.float64)
+    for i in range(n):
+        s = float(q @ k[i])
+        m_new = max(m, s)
+        o = o * np.exp(m - m_new) + v[i] * np.exp(s - m_new)
+        ell = ell * np.exp(m - m_new) + np.exp(s - m_new)
+        m = m_new
+    return o / ell
+
+
+def flashd_single(q, k, v, clip=None):
+    """Alg. 3: FLASH-D. The softmax division is hidden in the sigmoid.
+
+    With ``clip=(lo, hi)`` the paper's saturation rule is applied: when the
+    sigmoid argument falls below ``lo`` the update is skipped entirely
+    (w ~ 0); above ``hi`` the output is replaced by the value vector
+    (w ~ 1). ``clip=None`` computes the exact recursion. Returns
+    ``(o, skipped)`` when clipping, else ``o``.
+    """
+    q, k, v = np.asarray(q, np.float64), np.asarray(k, np.float64), np.asarray(v, np.float64)
+    n = k.shape[0]
+    o = np.zeros(v.shape[1], np.float64)
+    s_prev = 0.0
+    ln_w = 0.0
+    skipped = 0
+    for i in range(n):
+        s = float(q @ k[i])
+        if i == 0:
+            w = 1.0
+            ln_w = 0.0
+        else:
+            x = s - s_prev + ln_w
+            if clip is not None and x <= clip[0]:
+                skipped += 1
+                s_prev = s
+                # ln sigmoid(x) ~ x on the low tail: the ln unit is bypassed
+                # and the argument passes through as the carried ln w
+                ln_w = x
+                continue
+            if clip is not None and x >= clip[1]:
+                skipped += 1
+                o = v[i].copy()
+                s_prev = s
+                ln_w = 0.0  # w ~ 1
+                continue
+            w = _sigmoid(x)
+            ln_w = _log_sigmoid(x)
+        o = o + (v[i] - o) * w  # Eq. (12): one mul, one add, one sub
+        s_prev = s
+    return (o, skipped) if clip is not None else o
+
+
+def flashd_blocked_ref(q, k, v, block_k, sm_scale=1.0):
+    """Tiled FLASH-D (the form the Pallas kernel implements), single query
+    block. q: (Lq, D), k/v: (Lk, D).
+
+    Carry between KV blocks is the log-sum-exp ``lam`` of all scores seen so
+    far; each new block contributes through the *sigmoid of LSE differences*:
+
+        W    = sigmoid(lam_b - lam)          # block-granular FLASH-D weight
+        o'   = o + (o_b - o) * W             # Eq. (12) at block granularity
+        lam' = lam_b - log(W)                #   = logaddexp(lam, lam_b)
+
+    which degenerates to Alg. 3 exactly when ``block_k == 1``.
+    """
+    q = np.asarray(q, np.float64)
+    k = np.asarray(k, np.float64)
+    v = np.asarray(v, np.float64)
+    lq, d = q.shape
+    lk = k.shape[0]
+    o = np.zeros((lq, d), np.float64)
+    lam = np.full((lq,), -np.inf)
+    for j0 in range(0, lk, block_k):
+        kb = k[j0:j0 + block_k]
+        vb = v[j0:j0 + block_k]
+        s = (q @ kb.T) * sm_scale                      # (lq, B)
+        mb = s.max(axis=1)
+        pb = np.exp(s - mb[:, None])
+        lb = pb.sum(axis=1)
+        lam_b = mb + np.log(lb)                        # block LSE
+        ob = (pb / lb[:, None]) @ vb                   # block-local softmax @ V
+        with np.errstate(over="ignore"):
+            w = 1.0 / (1.0 + np.exp(-(lam_b - lam)))   # sigmoid(LSE diff)
+        o = o + (ob - o) * w[:, None]
+        lam = np.logaddexp(lam, lam_b)
+    return o

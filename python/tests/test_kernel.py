@@ -1,0 +1,186 @@
+"""Layer-1 correctness: Pallas kernels vs the pure-jnp/numpy oracles.
+
+Hypothesis sweeps shapes/dtypes/block sizes and asserts allclose against
+ref.py — the CORE correctness signal for the compile path.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.flash2 import flash2_attention
+from compile.kernels.flashd import flashd_attention
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rand_qkv(rng, h, l, d, scale=1.0, dtype=np.float32):
+    q = rng.normal(0, scale, size=(h, l, d)).astype(dtype)
+    k = rng.normal(0, scale, size=(h, l, d)).astype(dtype)
+    v = rng.normal(0, scale, size=(h, l, d)).astype(dtype)
+    return jnp.array(q), jnp.array(k), jnp.array(v)
+
+
+# ---------------------------------------------------------------------------
+# Algorithmic equivalence of the paper's three formulations (float64, exact)
+# ---------------------------------------------------------------------------
+
+class TestAlgorithmEquivalence:
+    @pytest.mark.parametrize("n,d", [(1, 4), (7, 8), (64, 16), (256, 8)])
+    def test_flash1_matches_softmax(self, n, d):
+        rng = np.random.default_rng(n * 31 + d)
+        q = rng.normal(size=(d,))
+        k = rng.normal(size=(n, d))
+        v = rng.normal(size=(n, d))
+        want = np.array(ref.attention_ref(q[None], k, v))[0]
+        np.testing.assert_allclose(ref.flash1_single(q, k, v), want, rtol=1e-5, atol=1e-6)
+
+    @pytest.mark.parametrize("n,d", [(1, 4), (7, 8), (64, 16), (256, 8)])
+    def test_flash2_matches_flash1(self, n, d):
+        rng = np.random.default_rng(n * 17 + d)
+        q = rng.normal(size=(d,))
+        k = rng.normal(size=(n, d))
+        v = rng.normal(size=(n, d))
+        np.testing.assert_allclose(ref.flash2_single(q, k, v),
+                                   ref.flash1_single(q, k, v), rtol=1e-12)
+
+    @pytest.mark.parametrize("n,d", [(1, 4), (7, 8), (64, 16), (256, 8)])
+    def test_flashd_matches_flash1(self, n, d):
+        """The paper's central claim: Alg. 3 == Alg. 1 with no approximation."""
+        rng = np.random.default_rng(n * 13 + d)
+        q = rng.normal(size=(d,))
+        k = rng.normal(size=(n, d))
+        v = rng.normal(size=(n, d))
+        np.testing.assert_allclose(ref.flashd_single(q, k, v),
+                                   ref.flash1_single(q, k, v), rtol=1e-9, atol=1e-12)
+
+    def test_flashd_stable_without_max_subtraction(self):
+        """Huge scores that would overflow naive exp() are fine in FLASH-D."""
+        rng = np.random.default_rng(0)
+        d, n = 8, 64
+        q = rng.normal(size=(d,)) * 10.0
+        k = rng.normal(size=(n, d)) * 10.0   # scores ~ O(several hundred)
+        v = rng.normal(size=(n, d))
+        out = ref.flashd_single(q, k, v)
+        want = np.array(ref.attention_ref(q[None], k, v))[0]
+        assert np.all(np.isfinite(out))
+        np.testing.assert_allclose(out, want, rtol=1e-6, atol=1e-9)
+
+    def test_blocked_equals_elementwise_when_block1(self):
+        rng = np.random.default_rng(7)
+        d, n = 8, 32
+        q = rng.normal(size=(1, d))
+        k = rng.normal(size=(n, d))
+        v = rng.normal(size=(n, d))
+        blocked = ref.flashd_blocked_ref(q, k, v, block_k=1)[0]
+        single = ref.flashd_single(q[0], k, v)
+        np.testing.assert_allclose(blocked, single, rtol=1e-12)
+
+    @pytest.mark.parametrize("block_k", [1, 2, 8, 32])
+    def test_blocked_block_size_invariance(self, block_k):
+        rng = np.random.default_rng(block_k)
+        q = rng.normal(size=(4, 8))
+        k = rng.normal(size=(32, 8))
+        v = rng.normal(size=(32, 8))
+        out = ref.flashd_blocked_ref(q, k, v, block_k=block_k)
+        want = np.array(ref.attention_ref(q, k, v))
+        # attention_ref is float32 (jnp default); compare at f32 precision
+        np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-6)
+
+    def test_skip_criterion_preserves_output(self):
+        """Static [-6, 11] clipping changes outputs only negligibly."""
+        rng = np.random.default_rng(3)
+        d, n = 16, 128
+        q = rng.normal(size=(d,))
+        k = rng.normal(size=(n, d))
+        v = rng.normal(size=(n, d))
+        exact = ref.flashd_single(q, k, v)
+        clipped, skipped = ref.flashd_single(q, k, v, clip=(-6.0, 11.0))
+        np.testing.assert_allclose(clipped, exact, rtol=1e-2, atol=5e-3)
+        assert 0 <= skipped <= n
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernels vs oracle
+# ---------------------------------------------------------------------------
+
+class TestPallasKernels:
+    @pytest.mark.parametrize("causal", [False, True])
+    @pytest.mark.parametrize("h,l,d", [(1, 32, 8), (2, 64, 16), (4, 128, 32)])
+    def test_flashd_pallas(self, h, l, d, causal):
+        rng = np.random.default_rng(h * l + d)
+        q, k, v = rand_qkv(rng, h, l, d)
+        scale = d ** -0.5
+        out = flashd_attention(q, k, v, sm_scale=scale, causal=causal,
+                               block_q=min(32, l), block_k=min(32, l))
+        want = ref.mha_ref(q, k, v, sm_scale=scale, causal=causal)
+        np.testing.assert_allclose(np.array(out), np.array(want), rtol=2e-5, atol=2e-5)
+
+    @pytest.mark.parametrize("causal", [False, True])
+    @pytest.mark.parametrize("h,l,d", [(1, 32, 8), (2, 64, 16), (4, 128, 32)])
+    def test_flash2_pallas(self, h, l, d, causal):
+        rng = np.random.default_rng(h + l + d)
+        q, k, v = rand_qkv(rng, h, l, d)
+        scale = d ** -0.5
+        out = flash2_attention(q, k, v, sm_scale=scale, causal=causal,
+                               block_q=min(32, l), block_k=min(32, l))
+        want = ref.mha_ref(q, k, v, sm_scale=scale, causal=causal)
+        np.testing.assert_allclose(np.array(out), np.array(want), rtol=2e-5, atol=2e-5)
+
+    def test_flashd_equals_flash2_bitwise_shape(self):
+        """Both kernels agree with each other (not just with the oracle)."""
+        rng = np.random.default_rng(42)
+        q, k, v = rand_qkv(rng, 2, 64, 16)
+        a = flashd_attention(q, k, v, sm_scale=0.25, block_q=32, block_k=32)
+        b = flash2_attention(q, k, v, sm_scale=0.25, block_q=32, block_k=32)
+        np.testing.assert_allclose(np.array(a), np.array(b), rtol=2e-5, atol=2e-5)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        h=st.sampled_from([1, 2, 4]),
+        lpow=st.integers(4, 7),                    # L in {16..128}
+        d=st.sampled_from([8, 16, 32]),
+        bq=st.sampled_from([8, 16, 32]),
+        bk=st.sampled_from([8, 16, 32]),
+        scale=st.floats(0.05, 2.0),
+        causal=st.booleans(),
+        seed=st.integers(0, 2**16),
+    )
+    def test_flashd_hypothesis_sweep(self, h, lpow, d, bq, bk, scale, causal, seed):
+        l = 2 ** lpow
+        bq, bk = min(bq, l), min(bk, l)
+        rng = np.random.default_rng(seed)
+        q, k, v = rand_qkv(rng, h, l, d, scale=2.0)
+        out = flashd_attention(q, k, v, sm_scale=scale, causal=causal,
+                               block_q=bq, block_k=bk)
+        want = ref.mha_ref(q, k, v, sm_scale=scale, causal=causal)
+        np.testing.assert_allclose(np.array(out), np.array(want), rtol=5e-4, atol=5e-4)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        dtype=st.sampled_from(["float32", "bfloat16"]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_flashd_dtypes(self, dtype, seed):
+        rng = np.random.default_rng(seed)
+        q, k, v = rand_qkv(rng, 2, 64, 16)
+        q = q.astype(dtype); k = k.astype(dtype); v = v.astype(dtype)
+        out = flashd_attention(q, k, v, sm_scale=0.25, block_q=32, block_k=32)
+        assert out.dtype == jnp.dtype(dtype)
+        want = ref.mha_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                           v.astype(jnp.float32), sm_scale=0.25)
+        tol = 5e-2 if dtype == "bfloat16" else 5e-5
+        np.testing.assert_allclose(np.array(out, np.float32), np.array(want),
+                                   rtol=tol, atol=tol)
+
+    def test_extreme_scores_no_nan(self):
+        """No max-subtraction needed: large-magnitude scores stay finite."""
+        rng = np.random.default_rng(1)
+        q, k, v = rand_qkv(rng, 1, 32, 8, scale=30.0)  # scores O(1000s)
+        out = flashd_attention(q, k, v, sm_scale=1.0, block_q=32, block_k=32)
+        assert np.all(np.isfinite(np.array(out)))
+        want = ref.mha_ref(q, k, v, sm_scale=1.0)
+        np.testing.assert_allclose(np.array(out), np.array(want), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,119 @@
+"""Layer-2 correctness: model shapes, loss behaviour, train-step dynamics,
+and the scan-form FLASH-D attention used in the training graph.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.kernels import ref
+
+CFG = M.ModelConfig(vocab_size=64, seq_len=32, d_model=32, n_heads=2,
+                    n_layers=2, d_ff=64, block_q=16, block_k=16)
+
+
+def test_param_spec_shapes_consistent():
+    params = M.init_params(CFG, seed=0)
+    for (name, shape), p in zip(M.param_spec(CFG), params):
+        assert tuple(p.shape) == tuple(shape), name
+
+
+def test_n_params_counts():
+    assert M.n_params(CFG) == sum(int(np.prod(s)) for _, s in M.param_spec(CFG))
+
+
+def test_scan_attention_matches_ref():
+    rng = np.random.default_rng(0)
+    h, l, d = 2, 32, 16
+    q = jnp.array(rng.normal(size=(h, l, d)), jnp.float32)
+    k = jnp.array(rng.normal(size=(h, l, d)), jnp.float32)
+    v = jnp.array(rng.normal(size=(h, l, d)), jnp.float32)
+    out = M.flashd_attention_scan(q, k, v, sm_scale=0.25, causal=True, block_k=8)
+    want = ref.mha_ref(q, k, v, sm_scale=0.25, causal=True)
+    np.testing.assert_allclose(np.array(out), np.array(want), rtol=2e-5, atol=2e-5)
+
+
+def test_scan_attention_block_invariance():
+    rng = np.random.default_rng(1)
+    h, l, d = 1, 32, 8
+    q = jnp.array(rng.normal(size=(h, l, d)), jnp.float32)
+    k = jnp.array(rng.normal(size=(h, l, d)), jnp.float32)
+    v = jnp.array(rng.normal(size=(h, l, d)), jnp.float32)
+    outs = [np.array(M.flashd_attention_scan(q, k, v, 0.3, True, block_k=b))
+            for b in (4, 8, 16, 32)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], rtol=1e-5, atol=1e-5)
+
+
+def test_forward_shapes():
+    params = M.init_params(CFG, 0)
+    toks = jnp.arange(CFG.seq_len, dtype=jnp.int32) % CFG.vocab_size
+    logits = M.forward(CFG, params, toks)
+    assert logits.shape == (CFG.seq_len, CFG.vocab_size)
+    assert np.all(np.isfinite(np.array(logits)))
+
+
+def test_forward_pallas_matches_scan():
+    """The inference artifact (Pallas kernel) and the training graph
+    (scan recursion) compute the same forward pass."""
+    params = M.init_params(CFG, 0)
+    toks = (jnp.arange(CFG.seq_len, dtype=jnp.int32) * 7) % CFG.vocab_size
+    a = M.forward(CFG, params, toks, use_pallas=False)
+    b = M.forward(CFG, params, toks, use_pallas=True)
+    np.testing.assert_allclose(np.array(a), np.array(b), rtol=2e-4, atol=2e-4)
+
+
+def test_causality():
+    """Changing a future token must not change past logits."""
+    params = M.init_params(CFG, 0)
+    toks = jnp.zeros((CFG.seq_len,), jnp.int32)
+    toks2 = toks.at[CFG.seq_len - 1].set(5)
+    a = M.forward(CFG, params, toks)
+    b = M.forward(CFG, params, toks2)
+    np.testing.assert_allclose(np.array(a[:-1]), np.array(b[:-1]), rtol=1e-5, atol=1e-6)
+
+
+def test_loss_near_uniform_at_init():
+    params = M.init_params(CFG, 0)
+    rng = np.random.default_rng(0)
+    toks = jnp.array(rng.integers(0, CFG.vocab_size, size=(2, CFG.seq_len)), jnp.int32)
+    loss = float(M.loss_fn(CFG, params, toks))
+    assert abs(loss - np.log(CFG.vocab_size)) < 1.0
+
+
+def test_train_step_reduces_loss_on_fixed_batch():
+    params = M.init_params(CFG, 0)
+    zeros = [jnp.zeros_like(p) for p in params]
+    m, v = list(zeros), list(zeros)
+    tcfg = M.TrainConfig(lr=1e-2)
+    rng = np.random.default_rng(0)
+    toks = jnp.array(rng.integers(0, CFG.vocab_size, size=(4, CFG.seq_len)), jnp.int32)
+
+    step_fn = jax.jit(lambda p, m, v, s: M.train_step(CFG, tcfg, p, m, v, s, toks))
+    losses = []
+    step = jnp.int32(0)
+    for i in range(12):
+        params, m, v, loss = step_fn(params, m, v, step + i)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.3, losses
+
+
+def test_train_step_grad_clip_finite():
+    params = [p * 50.0 for p in M.init_params(CFG, 1)]   # pathological init
+    zeros = [jnp.zeros_like(p) for p in params]
+    tcfg = M.TrainConfig()
+    toks = jnp.ones((2, CFG.seq_len), jnp.int32)
+    nps, nm, nv, loss = M.train_step(CFG, tcfg, params, list(zeros), list(zeros),
+                                     jnp.int32(0), toks)
+    for p in nps:
+        assert np.all(np.isfinite(np.array(p)))
+
+
+@pytest.mark.parametrize("name", list(M.MODEL_ZOO))
+def test_zoo_configs_valid(name):
+    cfg = M.MODEL_ZOO[name]
+    assert cfg.d_model % cfg.n_heads == 0
+    assert cfg.seq_len % cfg.block_k == 0
+    assert M.n_params(cfg) > 0

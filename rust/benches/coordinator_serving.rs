@@ -1,0 +1,120 @@
+//! Coordinator serving benchmark: end-to-end request latency and
+//! throughput through the full stack (router -> batcher -> KV cache ->
+//! PJRT FLASH-D artifact), including the batching-vs-sequential ablation.
+
+use flashd::bench_harness::workload::{session_requests, stateless_request, WorkloadSpec};
+use flashd::coordinator::{Coordinator, CoordinatorConfig, Variant};
+use std::time::Instant;
+
+fn main() {
+    let dir = flashd::runtime::default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts missing; run `make artifacts`");
+        std::process::exit(1);
+    }
+    let fast = std::env::var("FLASHD_BENCH_FAST").is_ok();
+
+    println!("=== coordinator serving (PJRT FLASH-D engine) ===\n");
+    let coord = Coordinator::start(CoordinatorConfig::default()).expect("start coordinator");
+
+    // -- stateless prefill-style requests, varying context --------------
+    for &nkv in &[32usize, 128, 256] {
+        let spec = WorkloadSpec::default();
+        let iters = if fast { 5 } else { 20 };
+        let mut lat = Vec::new();
+        for i in 0..iters {
+            let req = stateless_request(&spec, 50_000 + i as u64 * 7 + nkv as u64, 1, nkv);
+            let t = Instant::now();
+            let resp = coord.submit_blocking(req);
+            resp.output.expect("ok");
+            lat.push(t.elapsed().as_secs_f64() * 1e6);
+        }
+        println!(
+            "stateless nkv={nkv:<4} p50={:>8.0}µs p95={:>8.0}µs  ({} iters)",
+            flashd::util::percentile(&lat, 50.0),
+            flashd::util::percentile(&lat, 95.0),
+            lat.len()
+        );
+    }
+
+    // -- decode stream through the KV cache ------------------------------
+    let spec = WorkloadSpec {
+        sessions: 1,
+        prefill_len: 64,
+        decode_steps: if fast { 8 } else { 32 },
+        ..Default::default()
+    };
+    let reqs = session_requests(&spec, 7, 100_000);
+    let t = Instant::now();
+    let mut lat = Vec::new();
+    for req in reqs {
+        let t0 = Instant::now();
+        coord.submit_blocking(req).output.expect("ok");
+        lat.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    println!(
+        "\ndecode stream: {} steps in {:.2}s  p50={:.0}µs p95={:.0}µs",
+        lat.len() - 1,
+        t.elapsed().as_secs_f64(),
+        flashd::util::percentile(&lat[1..], 50.0),
+        flashd::util::percentile(&lat[1..], 95.0),
+    );
+
+    // -- batching ablation: concurrent burst vs sequential ---------------
+    let burst = if fast { 8 } else { 32 };
+    // fresh session
+    let mut pre = session_requests(
+        &WorkloadSpec { sessions: 1, decode_steps: 0, ..Default::default() },
+        11,
+        200_000,
+    );
+    coord.submit_blocking(pre.remove(0)).output.expect("prefill");
+
+    // sequential
+    let t = Instant::now();
+    for i in 0..burst as u64 {
+        let mut reqs = session_requests(&WorkloadSpec::default(), 11, 300_000 + i * 50);
+        let dec = reqs.pop().unwrap();
+        coord.submit_blocking(dec).output.expect("ok");
+    }
+    let seq_s = t.elapsed().as_secs_f64();
+
+    // concurrent (dynamic batching window can merge them)
+    let coord = std::sync::Arc::new(coord);
+    let t = Instant::now();
+    let mut handles = Vec::new();
+    for i in 0..burst as u64 {
+        let c = coord.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut reqs = session_requests(&WorkloadSpec::default(), 11, 400_000 + i * 50);
+            let dec = reqs.pop().unwrap();
+            c.submit_blocking(dec)
+        }));
+    }
+    let mut max_batch = 0;
+    for h in handles {
+        let r = h.join().unwrap();
+        r.output.expect("ok");
+        max_batch = max_batch.max(r.batch_size);
+    }
+    let conc_s = t.elapsed().as_secs_f64();
+    println!(
+        "\nbatching ablation ({burst} decodes): sequential {:.3}s ({:.0} req/s) vs concurrent {:.3}s ({:.0} req/s), max batch {max_batch}, speedup {:.2}x",
+        seq_s,
+        burst as f64 / seq_s,
+        conc_s,
+        burst as f64 / conc_s,
+        seq_s / conc_s
+    );
+    println!("\nmetrics:\n{}", coord.metrics.snapshot().render());
+
+    std::fs::create_dir_all("reports").ok();
+    std::fs::write(
+        "reports/coordinator_serving.txt",
+        format!(
+            "sequential_s={seq_s:.4}\nconcurrent_s={conc_s:.4}\nmax_batch={max_batch}\n{}\n",
+            coord.metrics.snapshot().render()
+        ),
+    )
+    .ok();
+}

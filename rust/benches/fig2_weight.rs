@@ -1,0 +1,60 @@
+//! Fig. 2 reproduction: the FLASH-D weight function
+//! w_i = sigmoid(s_i - s_{i-1} + ln w_{i-1}) for w_{i-1} in
+//! {0.99, 0.5, 0.1, 0.01}, swept over score differences — plus a
+//! micro-benchmark of the weight update itself.
+//!
+//! Emits reports/fig2.csv with the four curves the paper plots.
+
+use flashd::kernels::flashd::{log_sigmoid, sigmoid, weight, ACTIVE_HI, ACTIVE_LO};
+use flashd::util::bench::{bb, Bench};
+
+fn main() {
+    println!("=== Fig. 2: weight function w_i over score differences ===\n");
+
+    let w_prevs = [0.99, 0.5, 0.1, 0.01];
+    let mut csv = String::from("s_diff,w_prev_0.99,w_prev_0.5,w_prev_0.1,w_prev_0.01\n");
+    println!("{:>7}  {:>9} {:>9} {:>9} {:>9}", "s_diff", "w=0.99", "w=0.5", "w=0.1", "w=0.01");
+    for i in (-100..=140).step_by(10) {
+        let x = i as f64 / 10.0;
+        let row: Vec<f64> = w_prevs.iter().map(|&wp| weight(x, wp)).collect();
+        println!("{x:>7.1}  {:>9.5} {:>9.5} {:>9.5} {:>9.5}", row[0], row[1], row[2], row[3]);
+    }
+    for i in -100..=140 {
+        let x = i as f64 / 10.0;
+        let row: Vec<f64> = w_prevs.iter().map(|&wp| weight(x, wp)).collect();
+        csv.push_str(&format!("{x},{},{},{},{}\n", row[0], row[1], row[2], row[3]));
+    }
+    std::fs::create_dir_all("reports").ok();
+    std::fs::write("reports/fig2.csv", &csv).unwrap();
+    println!("\nwrote reports/fig2.csv ({} rows)", csv.lines().count() - 1);
+
+    // The paper's saturation claim: outside [-6, 11] (with any plotted
+    // w_prev) the weight is within 2.5e-3 of 0 or 1.
+    for &wp in &w_prevs {
+        let lo = weight(ACTIVE_LO, wp);
+        let hi = weight(ACTIVE_HI, wp);
+        assert!(lo < 2.5e-3, "w({ACTIVE_LO}, {wp}) = {lo}");
+        assert!(hi > 1.0 - 2.5e-3, "w({ACTIVE_HI}, {wp}) = {hi}");
+    }
+    println!("saturation check: w < 0.25% below {ACTIVE_LO}, w > 99.75% above {ACTIVE_HI} ✓\n");
+
+    // Micro-bench: the per-step weight update (sigmoid + log-sigmoid) vs
+    // the FA2 state update (max + 2 exp).
+    let mut b = Bench::new("fig2_weight");
+    let mut x = 0.37f64;
+    b.bench("flashd_weight_update (sigmoid+ln)", || {
+        let w = sigmoid(bb(x));
+        let lnw = log_sigmoid(bb(x));
+        x = bb(w + lnw * 1e-9 + 0.37);
+    });
+    let mut m = 0.0f64;
+    let mut s = 0.4f64;
+    b.bench("fa2_state_update (max+2exp)", || {
+        let mn = m.max(bb(s));
+        let a = (m - mn).exp();
+        let p = (s - mn).exp();
+        m = bb(mn);
+        s = bb(a * 0.1 + p * 0.01 + 0.4);
+    });
+    b.write_csv();
+}

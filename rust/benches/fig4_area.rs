@@ -1,0 +1,50 @@
+//! Fig. 4 reproduction: 28 nm block area for FLASH-D vs the
+//! FlashAttention2 kernel, BFloat16 and FP8-E4M3, d in {16, 64, 256} —
+//! plus the iso-latency check of §V-A (8/10/12 cycles at 500 MHz).
+//!
+//! Emits reports/fig4.csv.
+
+use flashd::hw::{area, datapath, CostDb, Design};
+
+fn main() {
+    println!("=== Fig. 4: hardware area at 28 nm (single-query block) ===\n");
+    let db = CostDb::tsmc28();
+    let rows = area::fig4_rows(&db);
+    println!("{}", area::render_table(&rows));
+
+    let savings: Vec<f64> = rows.iter().map(|r| r.saving_pct).collect();
+    let avg = flashd::util::mean(&savings);
+    let (min, max) = savings
+        .iter()
+        .fold((f64::MAX, f64::MIN), |(a, b), &x| (a.min(x), b.max(x)));
+    println!("area saving: avg {avg:.1}%  range {min:.1}%–{max:.1}%");
+    println!("paper:       avg 22.8%  range ~20%–28%\n");
+
+    // §V-A iso-performance: identical pipelined latency for both designs.
+    println!("latency (cycles @ 500 MHz), both designs:");
+    for &d in &area::PAPER_DIMS {
+        let fa2 = datapath::latency_cycles(Design::FlashAttention2, d);
+        let fd = datapath::latency_cycles(Design::FlashD, d);
+        assert_eq!(fa2, fd);
+        println!(
+            "  d={d:<4} {fa2:>2} cycles = {:.0} ns   (paper: {})",
+            datapath::latency_ns(Design::FlashD, d, db.clock_hz),
+            match d { 16 => 8, 64 => 10, _ => 12 },
+        );
+    }
+
+    // Structural breakdown for DESIGN.md §Perf.
+    println!("\nbreakdown bf16 d=64 (kGE):");
+    for design in [Design::FlashAttention2, Design::FlashD] {
+        let b = area::breakdown(design, 64, flashd::hw::Format::BF16, &db);
+        println!(
+            "  {:<16} dot={:.1} nonlin={:.1} update={:.1} state={:.1} epilogue={:.1} regs={:.1}",
+            design.name(), b.dot / 1e3, b.nonlinear / 1e3, b.update / 1e3,
+            b.state / 1e3, b.epilogue / 1e3, b.regs / 1e3
+        );
+    }
+
+    std::fs::create_dir_all("reports").ok();
+    std::fs::write("reports/fig4.csv", area::to_csv(&rows)).unwrap();
+    println!("\nwrote reports/fig4.csv");
+}

@@ -1,0 +1,85 @@
+//! Kernel throughput: the four software attention formulations head to
+//! head (f32), the reduced-precision + PWL hardware-faithful paths, and
+//! the end-to-end PJRT artifact latency of FLASH-D vs FlashAttention2 —
+//! the software analogue of the paper's "no performance penalty" claim.
+
+use flashd::kernels::flashd as fd;
+use flashd::kernels::{flash1, flash2, naive, AttnProblem};
+use flashd::numerics::{Bf16, Fp8E4M3};
+use flashd::pwl::{LnPwl, SigmoidPwl};
+use flashd::util::bench::{bb, Bench};
+use flashd::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::new("kernel_throughput");
+    let mut rng = Rng::new(0xBEEF);
+
+    println!("=== software kernels, f32, one query over (n, d) KV pairs ===");
+    for &(n, d) in &[(128usize, 32usize), (512, 64), (2048, 64)] {
+        let p = AttnProblem::random(&mut rng, 1, n, d, 2.0);
+        let pairs = n as f64;
+        b.bench_throughput(&format!("naive      n={n} d={d}"), pairs, "pair", || {
+            bb(naive::attention(&p.q, &p.k, &p.v, n, d, 1.0));
+        });
+        b.bench_throughput(&format!("flash1     n={n} d={d}"), pairs, "pair", || {
+            bb(flash1::attention(&p.q, &p.k, &p.v, n, d, 1.0));
+        });
+        b.bench_throughput(&format!("flash2     n={n} d={d}"), pairs, "pair", || {
+            bb(flash2::attention(&p.q, &p.k, &p.v, n, d, 1.0));
+        });
+        b.bench_throughput(&format!("flashd     n={n} d={d}"), pairs, "pair", || {
+            bb(fd::attention(&p.q, &p.k, &p.v, n, d, 1.0));
+        });
+        b.bench_throughput(&format!("flashd+skip n={n} d={d}"), pairs, "pair", || {
+            bb(fd::attention_instrumented(
+                &p.q, &p.k, &p.v, n, d, 1.0,
+                fd::SkipCriterion::Static,
+            ));
+        });
+    }
+
+    println!("\n=== hardware-faithful paths (reduced precision + PWL) ===");
+    let sig = SigmoidPwl::new();
+    let ln = LnPwl::new();
+    let p = AttnProblem::random(&mut rng, 1, 256, 32, 2.0);
+    b.bench("flashd bf16 exact-nonlin n=256 d=32", || {
+        bb(fd::attention_generic::<Bf16>(&p.q, &p.k, &p.v, 256, 32, 1.0));
+    });
+    b.bench("flashd bf16 pwl          n=256 d=32", || {
+        bb(fd::attention_pwl::<Bf16>(&p.q, &p.k, &p.v, 256, 32, 1.0, &sig, &ln));
+    });
+    b.bench("flashd fp8  pwl          n=256 d=32", || {
+        bb(fd::attention_pwl::<Fp8E4M3>(&p.q, &p.k, &p.v, 256, 32, 1.0, &sig, &ln));
+    });
+    b.bench("flash2 bf16 exact-nonlin n=256 d=32", || {
+        bb(flash2::attention_generic::<Bf16>(&p.q, &p.k, &p.v, 256, 32, 1.0));
+    });
+
+    println!("\n=== PJRT artifact latency (iso-performance check) ===");
+    match flashd::runtime::open_default() {
+        Err(e) => println!("(skipped: {e})"),
+        Ok(rt) => {
+            let (h, l, d) = (4usize, 128usize, 32usize);
+            let q = Rng::new(1).normal_vec(h * l * d, 0.5);
+            let inputs = [
+                flashd::runtime::lit_f32(&q, &[h, l, d]).unwrap(),
+                flashd::runtime::lit_f32(&q, &[h, l, d]).unwrap(),
+                flashd::runtime::lit_f32(&q, &[h, l, d]).unwrap(),
+                flashd::runtime::lit_i32(&[l as i32], &[1, 1]).unwrap(),
+            ];
+            // warm the executable cache outside the timed region
+            rt.execute("attn_flashd_h4_l128_d32", &inputs).unwrap();
+            rt.execute("attn_flash2_h4_l128_d32", &inputs).unwrap();
+            let t_fd = b.bench_throughput("pjrt attn_flashd h4_l128_d32", (h * l) as f64, "q", || {
+                bb(rt.execute("attn_flashd_h4_l128_d32", &inputs).unwrap());
+            });
+            let t_f2 = b.bench_throughput("pjrt attn_flash2 h4_l128_d32", (h * l) as f64, "q", || {
+                bb(rt.execute("attn_flash2_h4_l128_d32", &inputs).unwrap());
+            });
+            let ratio = t_fd / t_f2;
+            println!("flashd/flash2 latency ratio: {ratio:.3} (paper: 1.00 — same performance)");
+        }
+    }
+
+    b.write_csv();
+}

@@ -1,0 +1,56 @@
+//! Table I reproduction: percentage of skipped output updates during
+//! inference, 4 zoo models x 6 benchmark suites, under the paper's static
+//! [-6, 11] criterion.
+//!
+//! Uses trained weights when `flashd train` (or the train_e2e example) has
+//! produced them; otherwise the init weights (noted in the output, since
+//! untrained attention is more diffuse and skips differ).
+//!
+//! Emits reports/table1.csv.
+
+use flashd::bench_harness::table1::{self, Table1Options};
+
+fn main() {
+    println!("=== Table I: % skipped output updates during inference ===\n");
+    let dir = flashd::runtime::default_artifact_dir();
+    let fast = std::env::var("FLASHD_BENCH_FAST").is_ok();
+    let opts = Table1Options {
+        prompts_per_suite: if fast { 2 } else { 5 },
+        decode_tokens: if fast { 6 } else { 14 },
+        ..Default::default()
+    };
+
+    let man = match flashd::runtime::Manifest::load(&dir) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("artifacts missing ({e}); run `make artifacts` first");
+            std::process::exit(1);
+        }
+    };
+    for name in man.models.keys() {
+        let trained = dir.join(format!("weights_{name}.fdw"));
+        println!(
+            "  {name}: {}",
+            if trained.exists() { "trained weights" } else { "INIT weights (train first for the paper-faithful run)" }
+        );
+    }
+    println!();
+
+    let cells = table1::run_all(&dir, &opts).expect("table1 run");
+    println!("{}", table1::render_table(&cells));
+    println!("paper (for reference): 0.5%–2.8% across models/benchmarks,");
+    println!("always a win (skips only remove work, never accuracy).");
+
+    let pcts: Vec<f64> = cells.iter().map(|c| c.skip_pct).collect();
+    println!(
+        "ours: min {:.2}%  avg {:.2}%  max {:.2}%  ({} cells)",
+        pcts.iter().cloned().fold(f64::MAX, f64::min),
+        flashd::util::mean(&pcts),
+        pcts.iter().cloned().fold(f64::MIN, f64::max),
+        pcts.len()
+    );
+
+    std::fs::create_dir_all("reports").ok();
+    std::fs::write("reports/table1.csv", table1::to_csv(&cells)).unwrap();
+    println!("\nwrote reports/table1.csv");
+}

@@ -1,0 +1,8 @@
+//! Shared benchmark infrastructure: the PromptBench-substitute suites, the
+//! Table I skip study, trace capture for the power model, and serving
+//! workload generation.
+
+pub mod suites;
+pub mod table1;
+pub mod traces;
+pub mod workload;

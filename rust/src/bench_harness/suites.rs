@@ -1,0 +1,214 @@
+//! Synthetic benchmark suites standing in for the paper's PromptBench
+//! tasks (Table I columns): CSQA, GSM8K, QASC, MMLU, Date, Object
+//! Tracking. Each suite generates prompts with the same *shape* as its
+//! namesake — commonsense QA, arithmetic word problems, science QA,
+//! multi-domain multiple choice, date reasoning, and object state
+//! tracking — from templated grammars with deterministic randomness.
+//!
+//! The training corpus samples from the same grammars, so the trained zoo
+//! models see in-distribution text at evaluation time (mirroring how the
+//! paper's LLMs are evaluated on natural language they model well).
+
+use crate::util::rng::Rng;
+
+/// The six Table I benchmark columns.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum Suite {
+    Csqa,
+    Gsm8k,
+    Qasc,
+    Mmlu,
+    Date,
+    ObjectTracking,
+}
+
+pub const ALL_SUITES: [Suite; 6] =
+    [Suite::Csqa, Suite::Gsm8k, Suite::Qasc, Suite::Mmlu, Suite::Date, Suite::ObjectTracking];
+
+impl Suite {
+    pub fn name(self) -> &'static str {
+        match self {
+            Suite::Csqa => "CSQA",
+            Suite::Gsm8k => "GSM8K",
+            Suite::Qasc => "QASC",
+            Suite::Mmlu => "MMLU",
+            Suite::Date => "Date",
+            Suite::ObjectTracking => "ObjectTracking",
+        }
+    }
+
+    /// Generate one prompt.
+    pub fn prompt(self, rng: &mut Rng) -> String {
+        match self {
+            Suite::Csqa => csqa(rng),
+            Suite::Gsm8k => gsm8k(rng),
+            Suite::Qasc => qasc(rng),
+            Suite::Mmlu => mmlu(rng),
+            Suite::Date => date(rng),
+            Suite::ObjectTracking => tracking(rng),
+        }
+    }
+
+    /// Generate `n` prompts.
+    pub fn prompts(self, n: usize, seed: u64) -> Vec<String> {
+        let mut rng = Rng::new(seed ^ (self as u64).wrapping_mul(0x9E3779B9));
+        (0..n).map(|_| self.prompt(&mut rng)).collect()
+    }
+}
+
+const PEOPLE: [&str; 8] = ["alice", "bob", "carol", "dave", "erin", "frank", "grace", "heidi"];
+const OBJECTS: [&str; 8] = ["ball", "book", "key", "apple", "coin", "cup", "hat", "pen"];
+const COLORS: [&str; 6] = ["red", "blue", "green", "yellow", "black", "white"];
+const PLACES: [&str; 6] = ["kitchen", "garden", "office", "park", "library", "garage"];
+const ANIMALS: [&str; 6] = ["dog", "cat", "bird", "fish", "horse", "bee"];
+const NEEDS: [&str; 6] = ["water", "food", "sleep", "light", "air", "warmth"];
+const SUBJECTS: [&str; 6] = ["plants", "metals", "magnets", "planets", "rivers", "clouds"];
+const VERBS: [&str; 4] = ["grow", "shine", "move", "change"];
+const MONTHS: [&str; 12] = [
+    "january", "february", "march", "april", "may", "june",
+    "july", "august", "september", "october", "november", "december",
+];
+const DAYS: [&str; 7] =
+    ["monday", "tuesday", "wednesday", "thursday", "friday", "saturday", "sunday"];
+
+fn csqa(rng: &mut Rng) -> String {
+    let why = [
+        ("why do people wear coats in winter?", "to stay warm"),
+        ("why do people drink water?", "they are thirsty"),
+        ("where do books belong?", "on the shelf"),
+        ("what do you use to cut paper?", "scissors"),
+        ("why do people sleep at night?", "they are tired"),
+        ("where does bread come from?", "the bakery"),
+    ];
+    let (q, a) = why[rng.below(why.len())];
+    let subj = PEOPLE[rng.below(PEOPLE.len())];
+    format!("question: {q} answer: {a}. {subj} agrees with the answer. ")
+}
+
+fn gsm8k(rng: &mut Rng) -> String {
+    let a = rng.below(40) + 2;
+    let b = rng.below(30) + 1;
+    let who = PEOPLE[rng.below(PEOPLE.len())];
+    let obj = OBJECTS[rng.below(OBJECTS.len())];
+    match rng.below(3) {
+        0 => format!(
+            "{who} has {a} {obj}s and buys {b} more. now {who} has {} {obj}s. ",
+            a + b
+        ),
+        1 => format!(
+            "{who} had {a} {obj}s and gave away {b}. now {who} has {} {obj}s. ",
+            a.saturating_sub(b)
+        ),
+        _ => format!(
+            "there are {a} boxes with {b} {obj}s each, so {} {obj}s in total. ",
+            a * b
+        ),
+    }
+}
+
+fn qasc(rng: &mut Rng) -> String {
+    let s = SUBJECTS[rng.below(SUBJECTS.len())];
+    let v = VERBS[rng.below(VERBS.len())];
+    let n = NEEDS[rng.below(NEEDS.len())];
+    let an = ANIMALS[rng.below(ANIMALS.len())];
+    format!("fact: {s} {v} when given {n}. a {an} also needs {n} to live. ")
+}
+
+fn mmlu(rng: &mut Rng) -> String {
+    let qs = [
+        ("which planet is red?", ["mars", "venus", "pluto", "luna"], 0usize),
+        ("what gas do plants breathe?", ["carbon", "helium", "neon", "argon"], 0),
+        ("how many legs has a spider?", ["eight", "six", "four", "ten"], 0),
+        ("what melts ice?", ["heat", "cold", "dark", "wind"], 0),
+    ];
+    let (q, opts, ans) = qs[rng.below(qs.len())];
+    format!(
+        "question: {q} (a) {} (b) {} (c) {} (d) {} answer: (a) {}. ",
+        opts[0], opts[1], opts[2], opts[3], opts[ans]
+    )
+}
+
+fn date(rng: &mut Rng) -> String {
+    let d = rng.below(27) + 1;
+    let m = rng.below(12);
+    let wd = rng.below(7);
+    format!(
+        "today is {} {} {}. yesterday was {}. tomorrow is {}. ",
+        DAYS[wd],
+        MONTHS[m],
+        d + 1,
+        DAYS[(wd + 6) % 7],
+        DAYS[(wd + 1) % 7]
+    )
+}
+
+fn tracking(rng: &mut Rng) -> String {
+    let p1 = PEOPLE[rng.below(PEOPLE.len())];
+    let mut p2 = PEOPLE[rng.below(PEOPLE.len())];
+    while p2 == p1 {
+        p2 = PEOPLE[rng.below(PEOPLE.len())];
+    }
+    let c = COLORS[rng.below(COLORS.len())];
+    let o = OBJECTS[rng.below(OBJECTS.len())];
+    let pl = PLACES[rng.below(PLACES.len())];
+    format!(
+        "{p1} holds the {c} {o} in the {pl}. {p1} gives the {c} {o} to {p2}. now {p2} holds the {c} {o}. "
+    )
+}
+
+/// Build a training corpus of roughly `target_bytes` by concatenating
+/// prompts from all suites (the zoo models train on this mixture).
+pub fn training_corpus(target_bytes: usize, seed: u64) -> String {
+    let mut rng = Rng::new(seed);
+    let mut out = String::with_capacity(target_bytes + 128);
+    while out.len() < target_bytes {
+        let suite = ALL_SUITES[rng.below(ALL_SUITES.len())];
+        out.push_str(&suite.prompt(&mut rng));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prompts_nonempty_ascii_and_deterministic() {
+        for suite in ALL_SUITES {
+            let a = suite.prompts(5, 42);
+            let b = suite.prompts(5, 42);
+            assert_eq!(a, b, "{}", suite.name());
+            for p in &a {
+                assert!(!p.is_empty());
+                assert!(p.is_ascii(), "{}: {p}", suite.name());
+                assert!(p.len() < 300);
+            }
+        }
+    }
+
+    #[test]
+    fn suites_differ() {
+        let a = Suite::Csqa.prompts(3, 1);
+        let b = Suite::Gsm8k.prompts(3, 1);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn gsm8k_arithmetic_is_correct() {
+        // the generated text must contain internally consistent numbers
+        let mut rng = Rng::new(7);
+        for _ in 0..50 {
+            let p = gsm8k(&mut rng);
+            assert!(p.contains("now") || p.contains("total"), "{p}");
+        }
+    }
+
+    #[test]
+    fn corpus_reaches_target_and_mixes() {
+        let c = training_corpus(10_000, 3);
+        assert!(c.len() >= 10_000);
+        assert!(c.contains("question:"));
+        assert!(c.contains("fact:"));
+        assert!(c.contains("today is"));
+    }
+}

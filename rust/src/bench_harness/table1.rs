@@ -1,0 +1,142 @@
+//! Table I reproduction: percentage of skipped output updates during
+//! inference, per (model, benchmark suite).
+//!
+//! For each zoo model the engine decodes/scores prompts from all six
+//! suites with the instrumented FLASH-D attention and the paper's static
+//! [-6, 11] criterion, counting how often the output update simplifies.
+
+use crate::bench_harness::suites::ALL_SUITES;
+use crate::kernels::flashd::SkipCriterion;
+use crate::model::engine::Engine;
+use crate::model::tokenizer::ByteTokenizer;
+use anyhow::Result;
+use std::path::Path;
+
+/// One Table I cell.
+#[derive(Clone, Debug)]
+pub struct Cell {
+    pub model: String,
+    pub suite: &'static str,
+    pub skip_pct: f64,
+    pub skip_low: u64,
+    pub skip_high: u64,
+    pub total: u64,
+}
+
+/// Study parameters.
+#[derive(Clone, Debug)]
+pub struct Table1Options {
+    pub prompts_per_suite: usize,
+    pub decode_tokens: usize,
+    pub seed: u64,
+    pub criterion: SkipCriterion,
+}
+
+impl Default for Table1Options {
+    fn default() -> Self {
+        Table1Options {
+            prompts_per_suite: 6,
+            decode_tokens: 16,
+            seed: 7,
+            criterion: SkipCriterion::Static,
+        }
+    }
+}
+
+/// Run the study for one model engine across all suites.
+pub fn run_model(engine: &mut Engine, opts: &Table1Options) -> Vec<Cell> {
+    let tok = ByteTokenizer;
+    engine.criterion = opts.criterion;
+    let mut cells = Vec::new();
+    for suite in ALL_SUITES {
+        let mut agg = crate::kernels::flashd::SkipStats::default();
+        for (i, prompt) in suite
+            .prompts(opts.prompts_per_suite, opts.seed)
+            .iter()
+            .enumerate()
+        {
+            let window = engine.info.seq_len.saturating_sub(opts.decode_tokens).max(8);
+            let ids = tok.encode_window(prompt, window.min(tok_len(prompt).max(8)));
+            let (_, stats) = engine.greedy_decode_fast(&ids, opts.decode_tokens);
+            agg.merge(&stats.skip);
+            let _ = i;
+        }
+        cells.push(Cell {
+            model: engine.info.name.clone(),
+            suite: suite.name(),
+            skip_pct: agg.percent(),
+            skip_low: agg.skip_low,
+            skip_high: agg.skip_high,
+            total: agg.total,
+        });
+    }
+    cells
+}
+
+fn tok_len(s: &str) -> usize {
+    s.len()
+}
+
+/// Run the study for every model in the artifact directory's zoo.
+pub fn run_all(dir: &Path, opts: &Table1Options) -> Result<Vec<Cell>> {
+    let man = crate::runtime::Manifest::load(dir)?;
+    let mut cells = Vec::new();
+    for name in man.models.keys() {
+        let mut engine = Engine::from_artifacts(dir, name)?;
+        cells.extend(run_model(&mut engine, opts));
+    }
+    Ok(cells)
+}
+
+/// Render in the paper's row-per-model layout.
+pub fn render_table(cells: &[Cell]) -> String {
+    let mut models: Vec<&str> = cells.iter().map(|c| c.model.as_str()).collect();
+    models.dedup();
+    let mut out = format!("{:<14}", "LLM");
+    for s in ALL_SUITES {
+        out.push_str(&format!("{:>16}", s.name()));
+    }
+    out.push('\n');
+    for m in models {
+        out.push_str(&format!("{m:<14}"));
+        for s in ALL_SUITES {
+            let cell = cells
+                .iter()
+                .find(|c| c.model == m && c.suite == s.name());
+            match cell {
+                Some(c) => out.push_str(&format!("{:>15.2}%", c.skip_pct)),
+                None => out.push_str(&format!("{:>16}", "-")),
+            }
+        }
+        out.push('\n');
+    }
+    out
+}
+
+pub fn to_csv(cells: &[Cell]) -> String {
+    let mut out = String::from("model,suite,skip_pct,skip_low,skip_high,total\n");
+    for c in cells {
+        out.push_str(&format!(
+            "{},{},{:.4},{},{},{}\n",
+            c.model, c.suite, c.skip_pct, c.skip_low, c.skip_high, c.total
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_handles_multiple_models() {
+        let cells = vec![
+            Cell { model: "a".into(), suite: "CSQA", skip_pct: 1.5, skip_low: 3, skip_high: 0, total: 200 },
+            Cell { model: "b".into(), suite: "CSQA", skip_pct: 2.5, skip_low: 5, skip_high: 0, total: 200 },
+        ];
+        let t = render_table(&cells);
+        assert!(t.contains("1.50%"));
+        assert!(t.contains("2.50%"));
+        assert_eq!(to_csv(&cells).lines().count(), 3);
+    }
+}

@@ -1,0 +1,69 @@
+//! Attention-trace capture: runs zoo models over suite prompts and collects
+//! per-layer/head attention problems — the stimulus the power model (Fig. 5)
+//! measures toggle activity on, mirroring the paper's "average power
+//! measured after executing attention kernels for various LLMs".
+
+use crate::bench_harness::suites::ALL_SUITES;
+use crate::hw::activity::{self, ActivityStats};
+use crate::kernels::AttnProblem;
+use crate::model::engine::Engine;
+use crate::model::tokenizer::ByteTokenizer;
+use crate::numerics::Scalar;
+use anyhow::Result;
+use std::path::Path;
+
+/// Capture attention problems from a model over suite prompts.
+pub fn capture_problems(engine: &Engine, prompts_per_suite: usize, seed: u64) -> Vec<AttnProblem> {
+    let tok = ByteTokenizer;
+    let mut problems = Vec::new();
+    for suite in ALL_SUITES {
+        for prompt in suite.prompts(prompts_per_suite, seed) {
+            let len = prompt.len().clamp(8, engine.info.seq_len);
+            let ids = tok.encode_window(&prompt, len);
+            let (_, _, probs) = engine.forward_capture(&ids);
+            problems.extend(probs);
+        }
+    }
+    problems
+}
+
+/// Measure activity for a format from real model traces; falls back to the
+/// synthetic default when no models/weights are available.
+pub fn measured_activity<T: Scalar>(dir: &Path, prompts_per_suite: usize) -> ActivityStats {
+    match activity_from_models::<T>(dir, prompts_per_suite) {
+        Ok(a) if a.n_queries > 0 => a,
+        _ => {
+            // Synthetic fallback: random attention problems at a trained-
+            // model score scale.
+            let mut rng = crate::util::rng::Rng::new(0xAC71);
+            let problems: Vec<AttnProblem> = (0..8)
+                .map(|_| AttnProblem::random(&mut rng, 4, 64, 32, 2.0))
+                .collect();
+            activity::measure::<T>(&problems)
+        }
+    }
+}
+
+fn activity_from_models<T: Scalar>(dir: &Path, prompts_per_suite: usize) -> Result<ActivityStats> {
+    let man = crate::runtime::Manifest::load(dir)?;
+    let mut problems = Vec::new();
+    // One model is representative for toggle statistics; use the first.
+    if let Some(name) = man.models.keys().next() {
+        let engine = Engine::from_artifacts(dir, name)?;
+        problems.extend(capture_problems(&engine, prompts_per_suite, 11));
+    }
+    Ok(activity::measure::<T>(&problems))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numerics::Bf16;
+
+    #[test]
+    fn fallback_activity_is_sane() {
+        let a = measured_activity::<Bf16>(Path::new("/nonexistent"), 1);
+        assert!(a.alpha_kv > 0.05 && a.alpha_kv < 0.7);
+        assert!(a.n_queries > 0);
+    }
+}

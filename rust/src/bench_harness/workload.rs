@@ -1,0 +1,110 @@
+//! Serving workload generation for the coordinator benches: session
+//! lifecycles (prefill then a decode stream) with deterministic pseudo-
+//! random arrival interleaving.
+
+use crate::coordinator::request::{AttentionRequest, RequestKind, ShapeSig, Variant};
+use crate::util::rng::Rng;
+use std::time::Instant;
+
+/// Workload parameters.
+#[derive(Clone, Debug)]
+pub struct WorkloadSpec {
+    pub sessions: usize,
+    pub prefill_len: usize,
+    pub decode_steps: usize,
+    pub sig: ShapeSig,
+    pub variant: Variant,
+    pub seed: u64,
+}
+
+impl Default for WorkloadSpec {
+    fn default() -> Self {
+        WorkloadSpec {
+            sessions: 4,
+            prefill_len: 64,
+            decode_steps: 16,
+            sig: ShapeSig { heads: 4, head_dim: 32 },
+            variant: Variant::FlashD,
+            seed: 1,
+        }
+    }
+}
+
+/// Generate the request sequence for one session.
+pub fn session_requests(spec: &WorkloadSpec, session: u64, base_id: u64) -> Vec<AttentionRequest> {
+    let mut rng = Rng::new(spec.seed ^ session.wrapping_mul(0x9E37));
+    let hd = spec.sig.heads * spec.sig.head_dim;
+    // score scale ~ trained-model range
+    let std = (2.0 / (spec.sig.head_dim as f32).sqrt()).sqrt();
+    let mut reqs = Vec::new();
+    reqs.push(AttentionRequest {
+        id: base_id,
+        kind: RequestKind::Prefill { session },
+        variant: spec.variant,
+        sig: spec.sig,
+        q: rng.normal_vec(hd, std),
+        nq: 1,
+        k: rng.normal_vec(hd * spec.prefill_len, std),
+        v: rng.normal_vec(hd * spec.prefill_len, 1.0),
+        nkv: spec.prefill_len,
+        submitted_at: Instant::now(),
+    });
+    for i in 0..spec.decode_steps {
+        reqs.push(AttentionRequest {
+            id: base_id + 1 + i as u64,
+            kind: RequestKind::Decode { session },
+            variant: spec.variant,
+            sig: spec.sig,
+            q: rng.normal_vec(hd, std),
+            nq: 1,
+            k: rng.normal_vec(hd, std),
+            v: rng.normal_vec(hd, 1.0),
+            nkv: 1,
+            submitted_at: Instant::now(),
+        });
+    }
+    reqs
+}
+
+/// A stateless prefill-style request (carries its own K/V).
+pub fn stateless_request(spec: &WorkloadSpec, id: u64, nq: usize, nkv: usize) -> AttentionRequest {
+    let mut rng = Rng::new(spec.seed ^ id.wrapping_mul(0x2545F491));
+    let hd = spec.sig.heads * spec.sig.head_dim;
+    let std = (2.0 / (spec.sig.head_dim as f32).sqrt()).sqrt();
+    AttentionRequest {
+        id,
+        kind: RequestKind::Stateless,
+        variant: spec.variant,
+        sig: spec.sig,
+        q: rng.normal_vec(hd * nq, std),
+        nq,
+        k: rng.normal_vec(hd * nkv, std),
+        v: rng.normal_vec(hd * nkv, 1.0),
+        nkv,
+        submitted_at: Instant::now(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn session_shape() {
+        let spec = WorkloadSpec::default();
+        let reqs = session_requests(&spec, 3, 100);
+        assert_eq!(reqs.len(), 1 + spec.decode_steps);
+        assert!(matches!(reqs[0].kind, RequestKind::Prefill { session: 3 }));
+        for r in &reqs {
+            assert!(r.validate().is_ok(), "{:?}", r.kind);
+        }
+        assert_eq!(reqs[1].id, 101);
+    }
+
+    #[test]
+    fn stateless_valid() {
+        let r = stateless_request(&WorkloadSpec::default(), 9, 4, 32);
+        assert!(r.validate().is_ok());
+        assert_eq!(r.nq, 4);
+    }
+}

@@ -1,0 +1,156 @@
+//! Dynamic batching: groups decode requests that target the same session
+//! (and therefore share K/V) into one parallel query block — the software
+//! image of the paper's unrolled hardware, which serves "multiple preloaded
+//! query vectors" against a single streamed K/V context.
+//!
+//! Stateless/prefill requests execute alone (their K/V is private), but
+//! a stateless request's own `nq` query rows already fill the block.
+
+use super::request::AttentionRequest;
+
+/// Batch formation parameters.
+#[derive(Clone, Debug)]
+pub struct BatchPolicy {
+    /// Maximum decode queries fused into one block (bounded by the
+    /// artifact's q_slots at dispatch time).
+    pub max_batch: usize,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 32 }
+    }
+}
+
+/// A formed batch: indices into the pending queue, all mergeable.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Batch {
+    /// Session shared by all members (None = single stateless request).
+    pub session: Option<u64>,
+    pub members: Vec<usize>,
+}
+
+/// Partition `pending` into executable batches, preserving arrival order
+/// within each batch.
+///
+/// Invariants (checked by the property tests):
+/// * every index appears in exactly one batch,
+/// * a batch has at most `max_batch` members,
+/// * all members of a multi-request batch are decode requests on the same
+///   (session, variant, signature),
+/// * non-decode requests are always alone.
+pub fn form_batches(pending: &[AttentionRequest], policy: &BatchPolicy) -> Vec<Batch> {
+    let mut batches: Vec<Batch> = Vec::new();
+    let mut used = vec![false; pending.len()];
+    for i in 0..pending.len() {
+        if used[i] {
+            continue;
+        }
+        used[i] = true;
+        let r = &pending[i];
+        if !r.is_decode() {
+            batches.push(Batch { session: r.session(), members: vec![i] });
+            continue;
+        }
+        let mut members = vec![i];
+        for (j, rj) in pending.iter().enumerate().skip(i + 1) {
+            if members.len() >= policy.max_batch {
+                break;
+            }
+            if used[j] || !rj.is_decode() {
+                continue;
+            }
+            if rj.session() == r.session() && rj.variant == r.variant && rj.sig == r.sig {
+                used[j] = true;
+                members.push(j);
+            }
+        }
+        batches.push(Batch { session: r.session(), members });
+    }
+    batches
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::{RequestKind, ShapeSig, Variant};
+    use std::time::Instant;
+
+    fn decode(id: u64, session: u64) -> AttentionRequest {
+        let sig = ShapeSig { heads: 1, head_dim: 2 };
+        AttentionRequest {
+            id,
+            kind: RequestKind::Decode { session },
+            variant: Variant::FlashD,
+            sig,
+            q: vec![0.0; 2],
+            nq: 1,
+            k: vec![0.0; 2],
+            v: vec![0.0; 2],
+            nkv: 1,
+            submitted_at: Instant::now(),
+        }
+    }
+
+    fn stateless(id: u64) -> AttentionRequest {
+        let mut r = decode(id, 0);
+        r.kind = RequestKind::Stateless;
+        r.nkv = 4;
+        r.k = vec![0.0; 8];
+        r.v = vec![0.0; 8];
+        r
+    }
+
+    #[test]
+    fn same_session_decodes_merge() {
+        let pending = vec![decode(1, 7), decode(2, 7), decode(3, 7)];
+        let batches = form_batches(&pending, &BatchPolicy::default());
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].members, vec![0, 1, 2]);
+        assert_eq!(batches[0].session, Some(7));
+    }
+
+    #[test]
+    fn different_sessions_split() {
+        let pending = vec![decode(1, 7), decode(2, 8), decode(3, 7)];
+        let batches = form_batches(&pending, &BatchPolicy::default());
+        assert_eq!(batches.len(), 2);
+        assert_eq!(batches[0].members, vec![0, 2]);
+        assert_eq!(batches[1].members, vec![1]);
+    }
+
+    #[test]
+    fn stateless_never_merges() {
+        let pending = vec![stateless(1), stateless(2), decode(3, 1), decode(4, 1)];
+        let batches = form_batches(&pending, &BatchPolicy::default());
+        assert_eq!(batches.len(), 3);
+        assert_eq!(batches[0].members, vec![0]);
+        assert_eq!(batches[1].members, vec![1]);
+        assert_eq!(batches[2].members, vec![2, 3]);
+    }
+
+    #[test]
+    fn max_batch_respected() {
+        let pending: Vec<_> = (0..10).map(|i| decode(i, 1)).collect();
+        let batches = form_batches(&pending, &BatchPolicy { max_batch: 4 });
+        assert_eq!(batches.len(), 3);
+        assert_eq!(batches[0].members.len(), 4);
+        assert_eq!(batches[1].members.len(), 4);
+        assert_eq!(batches[2].members.len(), 2);
+    }
+
+    #[test]
+    fn variant_mismatch_splits() {
+        let mut a = decode(1, 5);
+        let mut b = decode(2, 5);
+        a.variant = Variant::FlashD;
+        b.variant = Variant::Flash2;
+        let batches = form_batches(&[a, b], &BatchPolicy::default());
+        assert_eq!(batches.len(), 2);
+    }
+
+    #[test]
+    fn empty_input() {
+        assert!(form_batches(&[], &BatchPolicy::default()).is_empty());
+    }
+}

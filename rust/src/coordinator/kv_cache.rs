@@ -1,0 +1,224 @@
+//! Per-session KV cache with capacity accounting and LRU eviction — the
+//! state the decode path reads instead of re-shipping the whole context on
+//! every token.
+//!
+//! Layout matches the attention artifacts: K and V are (heads, cap,
+//! head_dim) flat with the live prefix `len` valid and the tail zero-padded
+//! (the artifacts mask by `kv_len`, so padding content is irrelevant —
+//! zeros keep buffers deterministic).
+
+use std::collections::HashMap;
+
+/// One session's cached keys/values.
+#[derive(Clone, Debug)]
+pub struct KvCache {
+    pub heads: usize,
+    pub head_dim: usize,
+    pub cap: usize,
+    pub len: usize,
+    /// (heads, cap, head_dim) flat, zero-padded beyond `len`.
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+impl KvCache {
+    pub fn new(heads: usize, head_dim: usize, cap: usize) -> KvCache {
+        KvCache {
+            heads,
+            head_dim,
+            cap,
+            len: 0,
+            k: vec![0.0; heads * cap * head_dim],
+            v: vec![0.0; heads * cap * head_dim],
+        }
+    }
+
+    pub fn bytes(&self) -> usize {
+        (self.k.len() + self.v.len()) * std::mem::size_of::<f32>()
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.cap - self.len
+    }
+
+    /// Append `n` KV pairs given as (heads, n, head_dim) flat slices.
+    /// Fails (leaving the cache untouched) if capacity would be exceeded.
+    pub fn append(&mut self, k_new: &[f32], v_new: &[f32], n: usize) -> Result<(), String> {
+        let hd = self.heads * self.head_dim;
+        if k_new.len() != hd * n || v_new.len() != hd * n {
+            return Err(format!("append: expected {} elems, got {}", hd * n, k_new.len()));
+        }
+        if self.len + n > self.cap {
+            return Err(format!("kv cache full: {} + {n} > {}", self.len, self.cap));
+        }
+        for h in 0..self.heads {
+            for i in 0..n {
+                let src = (h * n + i) * self.head_dim;
+                let dst = (h * self.cap + self.len + i) * self.head_dim;
+                self.k[dst..dst + self.head_dim].copy_from_slice(&k_new[src..src + self.head_dim]);
+                self.v[dst..dst + self.head_dim].copy_from_slice(&v_new[src..src + self.head_dim]);
+            }
+        }
+        self.len += n;
+        Ok(())
+    }
+}
+
+/// Session store with LRU eviction under a byte budget.
+#[derive(Debug)]
+pub struct SessionStore {
+    sessions: HashMap<u64, KvCache>,
+    /// Recency order: front = least recently used.
+    lru: Vec<u64>,
+    pub max_bytes: usize,
+    pub bytes: usize,
+    pub evictions: u64,
+}
+
+impl SessionStore {
+    pub fn new(max_bytes: usize) -> SessionStore {
+        SessionStore { sessions: HashMap::new(), lru: Vec::new(), max_bytes, bytes: 0, evictions: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.sessions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sessions.is_empty()
+    }
+
+    pub fn contains(&self, id: u64) -> bool {
+        self.sessions.contains_key(&id)
+    }
+
+    fn touch(&mut self, id: u64) {
+        if let Some(pos) = self.lru.iter().position(|&x| x == id) {
+            self.lru.remove(pos);
+        }
+        self.lru.push(id);
+    }
+
+    /// Create a session (evicting LRU sessions if needed). Replaces any
+    /// existing cache under the same id.
+    pub fn create(&mut self, id: u64, heads: usize, head_dim: usize, cap: usize) -> Result<(), String> {
+        let cache = KvCache::new(heads, head_dim, cap);
+        let need = cache.bytes();
+        if need > self.max_bytes {
+            return Err(format!("session of {need} bytes exceeds budget {}", self.max_bytes));
+        }
+        self.remove(id);
+        while self.bytes + need > self.max_bytes {
+            let victim = *self.lru.first().ok_or("lru empty but over budget")?;
+            self.remove(victim);
+            self.evictions += 1;
+        }
+        self.bytes += need;
+        self.sessions.insert(id, cache);
+        self.touch(id);
+        Ok(())
+    }
+
+    /// Access a session mutably, refreshing its recency.
+    pub fn get_mut(&mut self, id: u64) -> Option<&mut KvCache> {
+        if self.sessions.contains_key(&id) {
+            self.touch(id);
+        }
+        self.sessions.get_mut(&id)
+    }
+
+    pub fn get(&self, id: u64) -> Option<&KvCache> {
+        self.sessions.get(&id)
+    }
+
+    pub fn remove(&mut self, id: u64) {
+        if let Some(c) = self.sessions.remove(&id) {
+            self.bytes -= c.bytes();
+        }
+        if let Some(pos) = self.lru.iter().position(|&x| x == id) {
+            self.lru.remove(pos);
+        }
+    }
+
+    /// Internal-consistency check used by the property tests.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        if self.lru.len() != self.sessions.len() {
+            return Err(format!("lru {} != sessions {}", self.lru.len(), self.sessions.len()));
+        }
+        let bytes: usize = self.sessions.values().map(KvCache::bytes).sum();
+        if bytes != self.bytes {
+            return Err(format!("bytes {} != accounted {}", bytes, self.bytes));
+        }
+        if self.bytes > self.max_bytes {
+            return Err(format!("over budget: {} > {}", self.bytes, self.max_bytes));
+        }
+        for c in self.sessions.values() {
+            if c.len > c.cap {
+                return Err("cache len > cap".into());
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn append_layout_round_trips() {
+        let mut c = KvCache::new(2, 3, 4);
+        // two heads, one pair: head0 = [1,2,3], head1 = [4,5,6]
+        c.append(&[1., 2., 3., 4., 5., 6.], &[9., 9., 9., 8., 8., 8.], 1).unwrap();
+        assert_eq!(c.len, 1);
+        assert_eq!(&c.k[0..3], &[1., 2., 3.]); // head 0, slot 0
+        assert_eq!(&c.k[4 * 3..4 * 3 + 3], &[4., 5., 6.]); // head 1, slot 0
+        c.append(&[10., 11., 12., 13., 14., 15.], &[0.; 6], 1).unwrap();
+        assert_eq!(&c.k[3..6], &[10., 11., 12.]); // head 0, slot 1
+        assert_eq!(c.remaining(), 2);
+    }
+
+    #[test]
+    fn append_over_capacity_fails_cleanly() {
+        let mut c = KvCache::new(1, 2, 2);
+        c.append(&[1., 2.], &[3., 4.], 1).unwrap();
+        c.append(&[5., 6.], &[7., 8.], 1).unwrap();
+        let before = c.k.clone();
+        assert!(c.append(&[9., 9.], &[9., 9.], 1).is_err());
+        assert_eq!(c.k, before);
+        assert_eq!(c.len, 2);
+    }
+
+    #[test]
+    fn store_lru_eviction() {
+        // each session: 1 head * cap 4 * dim 2 * 2 tensors * 4B = 64B
+        let mut s = SessionStore::new(128);
+        s.create(1, 1, 2, 4).unwrap();
+        s.create(2, 1, 2, 4).unwrap();
+        s.check_invariants().unwrap();
+        // touch 1 so 2 becomes LRU
+        s.get_mut(1).unwrap();
+        s.create(3, 1, 2, 4).unwrap(); // evicts 2
+        assert!(s.contains(1) && s.contains(3) && !s.contains(2));
+        assert_eq!(s.evictions, 1);
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn create_too_large_rejected() {
+        let mut s = SessionStore::new(32);
+        assert!(s.create(1, 4, 64, 128).is_err());
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn recreate_replaces() {
+        let mut s = SessionStore::new(1024);
+        s.create(7, 1, 2, 4).unwrap();
+        s.get_mut(7).unwrap().append(&[1., 2.], &[3., 4.], 1).unwrap();
+        s.create(7, 1, 2, 4).unwrap();
+        assert_eq!(s.get(7).unwrap().len, 0);
+        assert_eq!(s.len(), 1);
+        s.check_invariants().unwrap();
+    }
+}

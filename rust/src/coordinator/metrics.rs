@@ -1,0 +1,174 @@
+//! Service metrics: lock-free counters + a fixed-bucket latency histogram,
+//! snapshotted by the serving bench and the `flashd serve` CLI.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Latency histogram buckets in microseconds (upper bounds).
+pub const BUCKETS_US: [u64; 12] =
+    [50, 100, 250, 500, 1_000, 2_500, 5_000, 10_000, 25_000, 50_000, 100_000, u64::MAX];
+
+/// Shared, thread-safe metrics sink.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub responses: AtomicU64,
+    pub errors: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_requests: AtomicU64,
+    pub kv_appends: AtomicU64,
+    pub queue_rejections: AtomicU64,
+    latency_buckets: [AtomicU64; 12],
+    latency_sum_us: AtomicU64,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn observe_latency(&self, us: u64) {
+        self.latency_sum_us.fetch_add(us, Ordering::Relaxed);
+        for (i, ub) in BUCKETS_US.iter().enumerate() {
+            if us <= *ub {
+                self.latency_buckets[i].fetch_add(1, Ordering::Relaxed);
+                break;
+            }
+        }
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        Snapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            responses: self.responses.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            batched_requests: self.batched_requests.load(Ordering::Relaxed),
+            kv_appends: self.kv_appends.load(Ordering::Relaxed),
+            queue_rejections: self.queue_rejections.load(Ordering::Relaxed),
+            latency_buckets: self
+                .latency_buckets
+                .iter()
+                .map(|b| b.load(Ordering::Relaxed))
+                .collect(),
+            latency_sum_us: self.latency_sum_us.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time copy of the metrics.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    pub requests: u64,
+    pub responses: u64,
+    pub errors: u64,
+    pub batches: u64,
+    pub batched_requests: u64,
+    pub kv_appends: u64,
+    pub queue_rejections: u64,
+    pub latency_buckets: Vec<u64>,
+    pub latency_sum_us: u64,
+}
+
+impl Snapshot {
+    pub fn mean_latency_us(&self) -> f64 {
+        if self.responses == 0 {
+            0.0
+        } else {
+            self.latency_sum_us as f64 / self.responses as f64
+        }
+    }
+
+    /// Approximate percentile from the histogram (upper bound of the
+    /// bucket containing the quantile).
+    pub fn latency_percentile_us(&self, p: f64) -> u64 {
+        let total: u64 = self.latency_buckets.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = (p / 100.0 * total as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, c) in self.latency_buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return BUCKETS_US[i];
+            }
+        }
+        BUCKETS_US[BUCKETS_US.len() - 1]
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batched_requests as f64 / self.batches as f64
+        }
+    }
+
+    pub fn render(&self) -> String {
+        let fmt_b = |us: u64| -> String {
+            if us == u64::MAX { ">100000".into() } else { us.to_string() }
+        };
+        format!(
+            "requests={} responses={} errors={} rejections={}\n\
+             batches={} mean_batch={:.2} kv_appends={}\n\
+             latency: mean={:.0}µs p50<={}µs p95<={}µs p99<={}µs",
+            self.requests,
+            self.responses,
+            self.errors,
+            self.queue_rejections,
+            self.batches,
+            self.mean_batch_size(),
+            self.kv_appends,
+            self.mean_latency_us(),
+            fmt_b(self.latency_percentile_us(50.0)),
+            fmt_b(self.latency_percentile_us(95.0)),
+            fmt_b(self.latency_percentile_us(99.0)),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets() {
+        let m = Metrics::new();
+        m.responses.store(3, Ordering::Relaxed);
+        m.observe_latency(40);
+        m.observe_latency(900);
+        m.observe_latency(70_000);
+        let s = m.snapshot();
+        assert_eq!(s.latency_buckets[0], 1); // <=50
+        assert_eq!(s.latency_buckets[4], 1); // <=1000
+        assert_eq!(s.latency_buckets[10], 1); // <=100000
+        assert!((s.mean_latency_us() - (40.0 + 900.0 + 70_000.0) / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentiles_monotone() {
+        let m = Metrics::new();
+        for us in [10, 20, 30, 400, 5000, 99_000] {
+            m.observe_latency(us);
+        }
+        let s = m.snapshot();
+        assert!(s.latency_percentile_us(50.0) <= s.latency_percentile_us(95.0));
+        assert!(s.latency_percentile_us(95.0) <= s.latency_percentile_us(99.9));
+    }
+
+    #[test]
+    fn batch_size_mean() {
+        let m = Metrics::new();
+        m.batches.store(2, Ordering::Relaxed);
+        m.batched_requests.store(10, Ordering::Relaxed);
+        assert_eq!(m.snapshot().mean_batch_size(), 5.0);
+    }
+
+    #[test]
+    fn empty_snapshot_safe() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.mean_latency_us(), 0.0);
+        assert_eq!(s.latency_percentile_us(99.0), 0);
+        assert!(s.render().contains("requests=0"));
+    }
+}

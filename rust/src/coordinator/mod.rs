@@ -1,0 +1,28 @@
+//! Layer-3 coordinator: an attention-serving runtime in the style of a
+//! vLLM-class request router, shaped after the paper's unrolled hardware
+//! (Figs. 1/3): a *block of query vectors* is served in parallel against a
+//! streamed KV context.
+//!
+//! Components:
+//! * [`request`]   — request/response types and shape signatures,
+//! * [`kv_cache`]  — per-session KV cache with LRU eviction,
+//! * [`router`]    — maps (variant, shape) to a compiled artifact + pad,
+//! * [`batcher`]   — dynamic batching of decode requests into query blocks,
+//! * [`scheduler`] — bounded two-class (prefill/decode) admission queue,
+//! * [`metrics`]   — counters + latency histograms,
+//! * [`server`]    — the engine thread that owns the PJRT [`crate::runtime::Runtime`]
+//!   and drives the request loop (std threads + mpsc; tokio is not in the
+//!   offline vendor set).
+//!
+//! Python never appears here: the engine executes AOT artifacts only.
+
+pub mod batcher;
+pub mod kv_cache;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod scheduler;
+pub mod server;
+
+pub use request::{AttentionRequest, AttentionResponse, RequestKind, ShapeSig, Variant};
+pub use server::{Coordinator, CoordinatorConfig};

@@ -1,0 +1,149 @@
+//! Request/response types for the attention service.
+
+use std::time::Instant;
+
+/// Which kernel variant serves the request (routing policy knob; the
+/// paper's comparison pair).
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Hash)]
+pub enum Variant {
+    FlashD,
+    Flash2,
+}
+
+impl Variant {
+    pub fn artifact_str(self) -> &'static str {
+        match self {
+            Variant::FlashD => "flashd",
+            Variant::Flash2 => "flash2",
+        }
+    }
+}
+
+/// Attention-problem shape signature used for routing and batching.
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Hash)]
+pub struct ShapeSig {
+    pub heads: usize,
+    pub head_dim: usize,
+}
+
+/// How the request interacts with session state.
+#[derive(Clone, Debug, PartialEq)]
+pub enum RequestKind {
+    /// Stateless: the request carries its own K/V (prefill / offload style).
+    Stateless,
+    /// Create/extend a session cache with the carried K/V, then attend.
+    Prefill { session: u64 },
+    /// Decode step: append one K/V pair to the session, attend with the
+    /// carried single query against the whole cache.
+    Decode { session: u64 },
+}
+
+/// One attention request.
+#[derive(Clone, Debug)]
+pub struct AttentionRequest {
+    pub id: u64,
+    pub kind: RequestKind,
+    pub variant: Variant,
+    pub sig: ShapeSig,
+    /// Queries, flat (heads, nq, head_dim).
+    pub q: Vec<f32>,
+    pub nq: usize,
+    /// Keys/values, flat (heads, nkv, head_dim). For Decode, nkv == 1.
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub nkv: usize,
+    pub submitted_at: Instant,
+}
+
+impl AttentionRequest {
+    pub fn validate(&self) -> Result<(), String> {
+        let hd = self.sig.heads * self.sig.head_dim;
+        if self.q.len() != hd * self.nq {
+            return Err(format!("q len {} != H*nq*D {}", self.q.len(), hd * self.nq));
+        }
+        if self.k.len() != hd * self.nkv || self.v.len() != self.k.len() {
+            return Err(format!(
+                "k/v len {}/{} != H*nkv*D {}",
+                self.k.len(),
+                self.v.len(),
+                hd * self.nkv
+            ));
+        }
+        if self.nq == 0 {
+            return Err("empty query".into());
+        }
+        match self.kind {
+            RequestKind::Decode { .. } if self.nq != 1 || self.nkv != 1 => {
+                Err("decode carries exactly one query and one kv pair".into())
+            }
+            RequestKind::Stateless if self.nkv == 0 => Err("stateless needs kv".into()),
+            _ => Ok(()),
+        }
+    }
+
+    /// The session this request touches, if any.
+    pub fn session(&self) -> Option<u64> {
+        match self.kind {
+            RequestKind::Stateless => None,
+            RequestKind::Prefill { session } | RequestKind::Decode { session } => Some(session),
+        }
+    }
+
+    pub fn is_decode(&self) -> bool {
+        matches!(self.kind, RequestKind::Decode { .. })
+    }
+}
+
+/// The served result.
+#[derive(Clone, Debug)]
+pub struct AttentionResponse {
+    pub id: u64,
+    /// Output rows, flat (heads, nq, head_dim) matching the request's q.
+    pub output: Result<Vec<f32>, String>,
+    /// Microseconds spent queued + executing.
+    pub latency_us: u64,
+    /// How many requests shared the executed batch.
+    pub batch_size: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(kind: RequestKind, nq: usize, nkv: usize) -> AttentionRequest {
+        let sig = ShapeSig { heads: 2, head_dim: 4 };
+        AttentionRequest {
+            id: 1,
+            kind,
+            variant: Variant::FlashD,
+            sig,
+            q: vec![0.0; 2 * 4 * nq],
+            nq,
+            k: vec![0.0; 2 * 4 * nkv],
+            v: vec![0.0; 2 * 4 * nkv],
+            nkv,
+            submitted_at: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn validates_shapes() {
+        assert!(req(RequestKind::Stateless, 3, 8).validate().is_ok());
+        let mut bad = req(RequestKind::Stateless, 3, 8);
+        bad.q.pop();
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn decode_must_be_single_step() {
+        assert!(req(RequestKind::Decode { session: 9 }, 1, 1).validate().is_ok());
+        assert!(req(RequestKind::Decode { session: 9 }, 2, 1).validate().is_err());
+    }
+
+    #[test]
+    fn session_extraction() {
+        assert_eq!(req(RequestKind::Stateless, 1, 1).session(), None);
+        assert_eq!(req(RequestKind::Prefill { session: 5 }, 1, 1).session(), Some(5));
+        assert_eq!(req(RequestKind::Decode { session: 7 }, 1, 1).session(), Some(7));
+    }
+}

@@ -1,0 +1,158 @@
+//! Shape routing: picks the compiled attention artifact for a request and
+//! decides how the problem pads into it.
+//!
+//! The AOT artifacts are fixed-shape (heads, seq, head_dim); the router
+//! selects, per (variant, signature), the smallest compiled `seq` that fits
+//! the live KV length — exactly how a fixed-function accelerator with a few
+//! provisioned context sizes would be driven.
+
+use super::request::{ShapeSig, Variant};
+use crate::runtime::Manifest;
+
+/// A routing decision: which artifact, and the padded geometry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Route {
+    pub artifact: String,
+    pub heads: usize,
+    pub head_dim: usize,
+    /// Compiled query-row capacity (the parallel query block size).
+    pub q_slots: usize,
+    /// Compiled KV capacity.
+    pub kv_slots: usize,
+}
+
+/// The router: a snapshot of available (variant, shape) -> artifact entries.
+#[derive(Clone, Debug, Default)]
+pub struct Router {
+    /// (variant, heads, head_dim) -> sorted [(seq, artifact_name)]
+    entries: Vec<(Variant, usize, usize, Vec<(usize, String)>)>,
+}
+
+impl Router {
+    /// Build from the manifest (non-causal serving artifacts only).
+    pub fn from_manifest(man: &Manifest) -> Router {
+        let mut r = Router::default();
+        for variant in [Variant::FlashD, Variant::Flash2] {
+            let vs = variant.artifact_str();
+            let mut by_sig: Vec<(usize, usize, Vec<(usize, String)>)> = Vec::new();
+            for a in man.artifacts.values() {
+                if a.kind != "attention" || a.causal || a.variant.as_deref() != Some(vs) {
+                    continue;
+                }
+                match by_sig.iter_mut().find(|(h, d, _)| *h == a.heads && *d == a.head_dim) {
+                    Some((_, _, v)) => v.push((a.seq, a.name.clone())),
+                    None => by_sig.push((a.heads, a.head_dim, vec![(a.seq, a.name.clone())])),
+                }
+            }
+            for (h, d, mut v) in by_sig {
+                v.sort();
+                r.entries.push((variant, h, d, v));
+            }
+        }
+        r
+    }
+
+    /// All signatures servable for a variant.
+    pub fn signatures(&self, variant: Variant) -> Vec<ShapeSig> {
+        self.entries
+            .iter()
+            .filter(|(v, _, _, _)| *v == variant)
+            .map(|(_, h, d, _)| ShapeSig { heads: *h, head_dim: *d })
+            .collect()
+    }
+
+    /// Route a problem: `nq` query rows against `nkv` live KV pairs.
+    pub fn route(&self, variant: Variant, sig: ShapeSig, nq: usize, nkv: usize) -> Result<Route, String> {
+        let (_, _, _, seqs) = self
+            .entries
+            .iter()
+            .find(|(v, h, d, _)| *v == variant && *h == sig.heads && *d == sig.head_dim)
+            .ok_or_else(|| {
+                format!(
+                    "no compiled artifact for variant={variant:?} heads={} head_dim={}",
+                    sig.heads, sig.head_dim
+                )
+            })?;
+        let need = nkv.max(nq); // q rows and kv pairs share the seq axis
+        let (seq, name) = seqs
+            .iter()
+            .find(|(s, _)| *s >= need)
+            .ok_or_else(|| format!("problem size {need} exceeds largest compiled seq {}", seqs.last().map(|(s, _)| *s).unwrap_or(0)))?;
+        Ok(Route {
+            artifact: name.clone(),
+            heads: sig.heads,
+            head_dim: sig.head_dim,
+            q_slots: *seq,
+            kv_slots: *seq,
+        })
+    }
+
+    /// The maximum KV capacity servable for a signature (used to size
+    /// session caches).
+    pub fn max_kv(&self, variant: Variant, sig: ShapeSig) -> Option<usize> {
+        self.entries
+            .iter()
+            .find(|(v, h, d, _)| *v == variant && *h == sig.heads && *d == sig.head_dim)
+            .and_then(|(_, _, _, seqs)| seqs.last().map(|(s, _)| *s))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+
+    fn manifest() -> Manifest {
+        Manifest::parse(
+            r#"{
+          "artifacts": {
+            "attn_flashd_h4_l128_d32": {"file":"a","kind":"attention","variant":"flashd","causal":false,
+              "heads":4,"seq":128,"head_dim":32,"inputs":[],"n_outputs":1},
+            "attn_flashd_h4_l256_d32": {"file":"b","kind":"attention","variant":"flashd","causal":false,
+              "heads":4,"seq":256,"head_dim":32,"inputs":[],"n_outputs":1},
+            "attn_flashd_h4_l128_d32_causal": {"file":"c","kind":"attention","variant":"flashd","causal":true,
+              "heads":4,"seq":128,"head_dim":32,"inputs":[],"n_outputs":1},
+            "attn_flash2_h4_l128_d32": {"file":"d","kind":"attention","variant":"flash2","causal":false,
+              "heads":4,"seq":128,"head_dim":32,"inputs":[],"n_outputs":1}
+          }
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn routes_to_smallest_fitting_seq() {
+        let r = Router::from_manifest(&manifest());
+        let sig = ShapeSig { heads: 4, head_dim: 32 };
+        let route = r.route(Variant::FlashD, sig, 1, 100).unwrap();
+        assert_eq!(route.artifact, "attn_flashd_h4_l128_d32");
+        assert_eq!(route.kv_slots, 128);
+        let route = r.route(Variant::FlashD, sig, 1, 129).unwrap();
+        assert_eq!(route.artifact, "attn_flashd_h4_l256_d32");
+    }
+
+    #[test]
+    fn causal_artifacts_not_served() {
+        let r = Router::from_manifest(&manifest());
+        let sig = ShapeSig { heads: 4, head_dim: 32 };
+        // only two non-causal flashd seqs exist
+        assert_eq!(r.max_kv(Variant::FlashD, sig), Some(256));
+        assert_eq!(r.max_kv(Variant::Flash2, sig), Some(128));
+    }
+
+    #[test]
+    fn unknown_signature_and_oversize_rejected() {
+        let r = Router::from_manifest(&manifest());
+        assert!(r.route(Variant::FlashD, ShapeSig { heads: 9, head_dim: 32 }, 1, 1).is_err());
+        let sig = ShapeSig { heads: 4, head_dim: 32 };
+        assert!(r.route(Variant::FlashD, sig, 1, 1000).is_err());
+    }
+
+    #[test]
+    fn q_rows_also_constrain_route() {
+        let r = Router::from_manifest(&manifest());
+        let sig = ShapeSig { heads: 4, head_dim: 32 };
+        let route = r.route(Variant::FlashD, sig, 200, 10).unwrap();
+        assert_eq!(route.q_slots, 256);
+    }
+}

@@ -1,0 +1,186 @@
+//! Admission control and dispatch ordering: a bounded two-class queue with
+//! decode-priority (latency-sensitive single-token steps preempt bulk
+//! prefill work) and backpressure when full.
+
+use super::request::AttentionRequest;
+use std::collections::VecDeque;
+
+/// Dispatch policies.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum Policy {
+    /// Strict arrival order.
+    Fifo,
+    /// Decode requests before prefill/stateless (vLLM-style decode-first).
+    DecodeFirst,
+}
+
+/// Rejection reason surfaced to clients.
+#[derive(Debug, PartialEq, Eq)]
+pub enum Rejected {
+    QueueFull,
+    Invalid(String),
+}
+
+/// Bounded scheduler queue.
+#[derive(Debug)]
+pub struct Scheduler {
+    decode: VecDeque<AttentionRequest>,
+    other: VecDeque<AttentionRequest>,
+    pub capacity: usize,
+    pub policy: Policy,
+    pub admitted: u64,
+    pub rejected: u64,
+    seq: u64,
+}
+
+impl Scheduler {
+    pub fn new(capacity: usize, policy: Policy) -> Scheduler {
+        Scheduler {
+            decode: VecDeque::new(),
+            other: VecDeque::new(),
+            capacity,
+            policy,
+            admitted: 0,
+            rejected: 0,
+            seq: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.decode.len() + self.other.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Admit a request, applying validation and backpressure.
+    pub fn submit(&mut self, req: AttentionRequest) -> Result<(), Rejected> {
+        if let Err(e) = req.validate() {
+            self.rejected += 1;
+            return Err(Rejected::Invalid(e));
+        }
+        if self.len() >= self.capacity {
+            self.rejected += 1;
+            return Err(Rejected::QueueFull);
+        }
+        self.admitted += 1;
+        self.seq += 1;
+        if req.is_decode() {
+            self.decode.push_back(req);
+        } else {
+            self.other.push_back(req);
+        }
+        Ok(())
+    }
+
+    /// Drain up to `max` requests in dispatch order.
+    pub fn drain(&mut self, max: usize) -> Vec<AttentionRequest> {
+        let mut out = Vec::new();
+        match self.policy {
+            Policy::DecodeFirst => {
+                while out.len() < max {
+                    if let Some(r) = self.decode.pop_front() {
+                        out.push(r);
+                    } else if let Some(r) = self.other.pop_front() {
+                        out.push(r);
+                    } else {
+                        break;
+                    }
+                }
+            }
+            Policy::Fifo => {
+                // merge by submission id (ids are client-assigned; use
+                // arrival order within each queue and compare timestamps)
+                while out.len() < max {
+                    let take_decode = match (self.decode.front(), self.other.front()) {
+                        (Some(d), Some(o)) => d.submitted_at <= o.submitted_at,
+                        (Some(_), None) => true,
+                        (None, Some(_)) => false,
+                        (None, None) => break,
+                    };
+                    let r = if take_decode {
+                        self.decode.pop_front().unwrap()
+                    } else {
+                        self.other.pop_front().unwrap()
+                    };
+                    out.push(r);
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::{RequestKind, ShapeSig, Variant};
+    use std::time::Instant;
+
+    fn req(id: u64, decode: bool) -> AttentionRequest {
+        AttentionRequest {
+            id,
+            kind: if decode { RequestKind::Decode { session: 1 } } else { RequestKind::Stateless },
+            variant: Variant::FlashD,
+            sig: ShapeSig { heads: 1, head_dim: 2 },
+            q: vec![0.0; 2],
+            nq: 1,
+            k: vec![0.0; 2],
+            v: vec![0.0; 2],
+            nkv: 1,
+            submitted_at: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn backpressure_when_full() {
+        let mut s = Scheduler::new(2, Policy::Fifo);
+        s.submit(req(1, true)).unwrap();
+        s.submit(req(2, false)).unwrap();
+        assert_eq!(s.submit(req(3, true)), Err(Rejected::QueueFull));
+        assert_eq!(s.admitted, 2);
+        assert_eq!(s.rejected, 1);
+    }
+
+    #[test]
+    fn invalid_rejected_before_capacity() {
+        let mut s = Scheduler::new(1, Policy::Fifo);
+        let mut bad = req(1, true);
+        bad.q.clear();
+        assert!(matches!(s.submit(bad), Err(Rejected::Invalid(_))));
+        assert_eq!(s.len(), 0);
+    }
+
+    #[test]
+    fn decode_first_ordering() {
+        let mut s = Scheduler::new(10, Policy::DecodeFirst);
+        s.submit(req(1, false)).unwrap();
+        s.submit(req(2, true)).unwrap();
+        s.submit(req(3, false)).unwrap();
+        s.submit(req(4, true)).unwrap();
+        let order: Vec<u64> = s.drain(10).iter().map(|r| r.id).collect();
+        assert_eq!(order, vec![2, 4, 1, 3]);
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn fifo_respects_arrival() {
+        let mut s = Scheduler::new(10, Policy::Fifo);
+        s.submit(req(1, false)).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        s.submit(req(2, true)).unwrap();
+        let order: Vec<u64> = s.drain(10).iter().map(|r| r.id).collect();
+        assert_eq!(order, vec![1, 2]);
+    }
+
+    #[test]
+    fn drain_partial() {
+        let mut s = Scheduler::new(10, Policy::DecodeFirst);
+        for i in 0..5 {
+            s.submit(req(i, true)).unwrap();
+        }
+        assert_eq!(s.drain(2).len(), 2);
+        assert_eq!(s.len(), 3);
+    }
+}

@@ -1,0 +1,609 @@
+//! The engine thread: owns the (deliberately single-threaded) PJRT
+//! runtime, drains the request channel through the scheduler + batcher,
+//! manages session KV state, executes attention blocks, and responds.
+//!
+//! `AttnEngine` abstracts the executor so the entire coordination logic is
+//! testable against a pure-Rust engine ([`NaiveEngine`]) without compiled
+//! artifacts; production uses [`PjrtEngine`] over the AOT artifacts.
+
+use super::batcher::{form_batches, Batch, BatchPolicy};
+use super::kv_cache::SessionStore;
+use super::metrics::Metrics;
+use super::request::{AttentionRequest, AttentionResponse, RequestKind};
+use super::router::{Route, Router};
+use super::scheduler::{Policy, Rejected, Scheduler};
+use crate::runtime::{lit_f32, lit_i32, to_vec_f32, Runtime};
+use anyhow::{anyhow, Result};
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Executes one routed attention block.
+/// Inputs are flat (heads, slots, head_dim); `kv_len` marks the valid
+/// prefix of the K/V tensors.
+pub trait AttnEngine {
+    fn execute(&self, route: &Route, q: &[f32], k: &[f32], v: &[f32], kv_len: usize) -> Result<Vec<f32>>;
+    /// The router snapshot this engine can serve.
+    fn router(&self) -> Router;
+}
+
+/// Production engine: compiled AOT artifacts via PJRT.
+pub struct PjrtEngine {
+    pub rt: Runtime,
+}
+
+impl PjrtEngine {
+    pub fn open(dir: &std::path::Path) -> Result<PjrtEngine> {
+        Ok(PjrtEngine { rt: Runtime::open(dir)? })
+    }
+}
+
+impl AttnEngine for PjrtEngine {
+    fn execute(&self, route: &Route, q: &[f32], k: &[f32], v: &[f32], kv_len: usize) -> Result<Vec<f32>> {
+        let shape = [route.heads, route.q_slots, route.head_dim];
+        let kshape = [route.heads, route.kv_slots, route.head_dim];
+        let inputs = [
+            lit_f32(q, &shape)?,
+            lit_f32(k, &kshape)?,
+            lit_f32(v, &kshape)?,
+            lit_i32(&[kv_len as i32], &[1, 1])?,
+        ];
+        let out = self.rt.execute(&route.artifact, &inputs)?;
+        to_vec_f32(&out[0])
+    }
+
+    fn router(&self) -> Router {
+        Router::from_manifest(&self.rt.manifest)
+    }
+}
+
+/// Test/bench engine: the Rust golden kernel (no PJRT). Serves the same
+/// shapes as the given router and applies the artifacts' 1/sqrt(d) scale.
+pub struct NaiveEngine {
+    pub router: Router,
+}
+
+impl AttnEngine for NaiveEngine {
+    fn execute(&self, route: &Route, q: &[f32], k: &[f32], v: &[f32], kv_len: usize) -> Result<Vec<f32>> {
+        let (h, lq, lkv, d) = (route.heads, route.q_slots, route.kv_slots, route.head_dim);
+        let scale = (d as f32).powf(-0.5);
+        let mut out = vec![0.0f32; h * lq * d];
+        for hh in 0..h {
+            let koff = hh * lkv * d;
+            let kslice = &k[koff..koff + kv_len * d];
+            let vslice = &v[koff..koff + kv_len * d];
+            for iq in 0..lq {
+                let qoff = (hh * lq + iq) * d;
+                let o = crate::kernels::flashd::attention(
+                    &q[qoff..qoff + d],
+                    kslice,
+                    vslice,
+                    kv_len,
+                    d,
+                    scale,
+                );
+                out[qoff..qoff + d].copy_from_slice(&o);
+            }
+        }
+        Ok(out)
+    }
+
+    fn router(&self) -> Router {
+        self.router.clone()
+    }
+}
+
+/// Coordinator configuration.
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    pub artifact_dir: std::path::PathBuf,
+    pub policy: Policy,
+    pub queue_capacity: usize,
+    pub batch: BatchPolicy,
+    /// Session KV budget in bytes.
+    pub kv_budget_bytes: usize,
+    /// How long the engine waits for more arrivals before dispatching a
+    /// non-full batch.
+    pub batch_window: Duration,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            artifact_dir: crate::runtime::default_artifact_dir(),
+            policy: Policy::DecodeFirst,
+            queue_capacity: 1024,
+            batch: BatchPolicy::default(),
+            kv_budget_bytes: 256 << 20,
+            batch_window: Duration::from_micros(200),
+        }
+    }
+}
+
+enum Msg {
+    Request(AttentionRequest, Sender<AttentionResponse>),
+    Shutdown,
+}
+
+/// Client handle to a running coordinator.
+pub struct Coordinator {
+    tx: Sender<Msg>,
+    pub metrics: Arc<Metrics>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Start with the production PJRT engine.
+    pub fn start(cfg: CoordinatorConfig) -> Result<Coordinator> {
+        let dir = cfg.artifact_dir.clone();
+        Coordinator::start_with(cfg, move || {
+            PjrtEngine::open(&dir).map_err(|e| anyhow!("engine startup: {e}"))
+        })
+    }
+
+    /// Start with an arbitrary engine factory (constructed *inside* the
+    /// engine thread — PJRT handles are not Send).
+    pub fn start_with<E, F>(cfg: CoordinatorConfig, factory: F) -> Result<Coordinator>
+    where
+        E: AttnEngine,
+        F: FnOnce() -> Result<E> + Send + 'static,
+    {
+        let (tx, rx) = channel::<Msg>();
+        let metrics = Arc::new(Metrics::new());
+        let m2 = metrics.clone();
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let handle = std::thread::Builder::new()
+            .name("flashd-engine".into())
+            .spawn(move || {
+                let engine = match factory() {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                engine_loop(engine, rx, cfg, m2);
+            })
+            .expect("spawn engine thread");
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("engine thread died during startup"))??;
+        Ok(Coordinator { tx, metrics, handle: Some(handle) })
+    }
+
+    /// Submit a request; returns the response receiver.
+    pub fn submit(&self, req: AttentionRequest) -> Receiver<AttentionResponse> {
+        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = channel();
+        // engine gone => receiver errors out, surfaced to caller on recv
+        let _ = self.tx.send(Msg::Request(req, tx));
+        rx
+    }
+
+    /// Submit and wait.
+    pub fn submit_blocking(&self, req: AttentionRequest) -> AttentionResponse {
+        let id = req.id;
+        match self.submit(req).recv() {
+            Ok(r) => r,
+            Err(_) => AttentionResponse {
+                id,
+                output: Err("engine unavailable".into()),
+                latency_us: 0,
+                batch_size: 0,
+            },
+        }
+    }
+
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+struct Pending {
+    req: AttentionRequest,
+    reply: Sender<AttentionResponse>,
+}
+
+fn engine_loop<E: AttnEngine>(engine: E, rx: Receiver<Msg>, cfg: CoordinatorConfig, metrics: Arc<Metrics>) {
+    let router = engine.router();
+    let mut sessions = SessionStore::new(cfg.kv_budget_bytes);
+    let mut sched = Scheduler::new(cfg.queue_capacity, cfg.policy);
+    let mut replies: std::collections::HashMap<u64, Sender<AttentionResponse>> =
+        std::collections::HashMap::new();
+
+    'outer: loop {
+        // Block for the first message, then greedily drain within the
+        // batch window to give the batcher material.
+        let first = match rx.recv() {
+            Ok(m) => m,
+            Err(_) => break,
+        };
+        let mut msgs = vec![first];
+        let deadline = Instant::now() + cfg.batch_window;
+        loop {
+            match rx.try_recv() {
+                Ok(m) => msgs.push(m),
+                Err(_) => {
+                    // Hold the window open briefly so near-simultaneous
+                    // arrivals can share a batch.
+                    if Instant::now() >= deadline {
+                        break;
+                    }
+                    std::thread::yield_now();
+                }
+            }
+        }
+
+        let mut shutdown = false;
+        for m in msgs {
+            match m {
+                Msg::Shutdown => shutdown = true,
+                Msg::Request(req, reply) => {
+                    let id = req.id;
+                    match sched.submit(req) {
+                        Ok(()) => {
+                            replies.insert(id, reply);
+                        }
+                        Err(Rejected::QueueFull) => {
+                            metrics.queue_rejections.fetch_add(1, Ordering::Relaxed);
+                            metrics.errors.fetch_add(1, Ordering::Relaxed);
+                            let _ = reply.send(AttentionResponse {
+                                id,
+                                output: Err("queue full".into()),
+                                latency_us: 0,
+                                batch_size: 0,
+                            });
+                        }
+                        Err(Rejected::Invalid(e)) => {
+                            metrics.errors.fetch_add(1, Ordering::Relaxed);
+                            let _ = reply.send(AttentionResponse {
+                                id,
+                                output: Err(format!("invalid request: {e}")),
+                                latency_us: 0,
+                                batch_size: 0,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+
+        // Dispatch everything admitted so far.
+        while !sched.is_empty() {
+            let pending_reqs = sched.drain(cfg.queue_capacity);
+            let batches = form_batches(&pending_reqs, &cfg.batch);
+            let mut pend: Vec<Option<Pending>> = pending_reqs
+                .into_iter()
+                .map(|req| {
+                    let reply = replies.remove(&req.id)?;
+                    Some(Pending { req, reply })
+                })
+                .collect();
+            for batch in batches {
+                serve_batch(&engine, &router, &mut sessions, &batch, &mut pend, &metrics);
+            }
+        }
+        if shutdown {
+            break 'outer;
+        }
+    }
+}
+
+/// Execute one batch end to end and deliver its responses.
+fn serve_batch<E: AttnEngine>(
+    engine: &E,
+    router: &Router,
+    sessions: &mut SessionStore,
+    batch: &Batch,
+    pend: &mut [Option<Pending>],
+    metrics: &Arc<Metrics>,
+) {
+    let members: Vec<Pending> = batch
+        .members
+        .iter()
+        .filter_map(|&i| pend[i].take())
+        .collect();
+    if members.is_empty() {
+        return;
+    }
+    metrics.batches.fetch_add(1, Ordering::Relaxed);
+    metrics.batched_requests.fetch_add(members.len() as u64, Ordering::Relaxed);
+
+    let result = build_and_execute(engine, router, sessions, &members, metrics);
+    match result {
+        Ok(outputs) => {
+            for (m, out) in members.into_iter().zip(outputs) {
+                let latency_us = m.req.submitted_at.elapsed().as_micros() as u64;
+                metrics.responses.fetch_add(1, Ordering::Relaxed);
+                metrics.observe_latency(latency_us);
+                let _ = m.reply.send(AttentionResponse {
+                    id: m.req.id,
+                    output: Ok(out),
+                    latency_us,
+                    batch_size: batch.members.len(),
+                });
+            }
+        }
+        Err(e) => {
+            let msg = format!("{e}");
+            for m in members {
+                metrics.errors.fetch_add(1, Ordering::Relaxed);
+                let _ = m.reply.send(AttentionResponse {
+                    id: m.req.id,
+                    output: Err(msg.clone()),
+                    latency_us: m.req.submitted_at.elapsed().as_micros() as u64,
+                    batch_size: batch.members.len(),
+                });
+            }
+        }
+    }
+}
+
+/// Assemble the padded block tensors for a batch, run it, split outputs.
+fn build_and_execute<E: AttnEngine>(
+    engine: &E,
+    router: &Router,
+    sessions: &mut SessionStore,
+    members: &[Pending],
+    metrics: &Arc<Metrics>,
+) -> Result<Vec<Vec<f32>>> {
+    let first = &members[0].req;
+    let sig = first.sig;
+    let variant = first.variant;
+    let (h, d) = (sig.heads, sig.head_dim);
+
+    // 1. Update session state.
+    match &first.kind {
+        RequestKind::Stateless => {}
+        RequestKind::Prefill { session } => {
+            let cap = router
+                .max_kv(variant, sig)
+                .ok_or_else(|| anyhow!("no artifacts for signature"))?;
+            sessions
+                .create(*session, h, d, cap)
+                .map_err(|e| anyhow!("session create: {e}"))?;
+            let cache = sessions.get_mut(*session).unwrap();
+            cache
+                .append(&first.k, &first.v, first.nkv)
+                .map_err(|e| anyhow!("prefill append: {e}"))?;
+            metrics.kv_appends.fetch_add(first.nkv as u64, Ordering::Relaxed);
+        }
+        RequestKind::Decode { session } => {
+            let sid = *session;
+            if !sessions.contains(sid) {
+                return Err(anyhow!("unknown session {sid}"));
+            }
+            let cache = sessions.get_mut(sid).unwrap();
+            for m in members {
+                cache
+                    .append(&m.req.k, &m.req.v, 1)
+                    .map_err(|e| anyhow!("decode append: {e}"))?;
+            }
+            metrics.kv_appends.fetch_add(members.len() as u64, Ordering::Relaxed);
+        }
+    }
+
+    // 2. Gather K/V + query rows.
+    let total_q: usize = members.iter().map(|m| m.req.nq).sum();
+    let (kv_src_k, kv_src_v, kv_len, kv_src_cap): (&[f32], &[f32], usize, usize) =
+        match first.session() {
+            Some(sid) if !matches!(first.kind, RequestKind::Stateless) => {
+                let cache = sessions.get(sid).ok_or_else(|| anyhow!("session vanished"))?;
+                (&cache.k, &cache.v, cache.len, cache.cap)
+            }
+            _ => (&first.k, &first.v, first.nkv, first.nkv),
+        };
+
+    let route = router.route(variant, sig, total_q, kv_len).map_err(|e| anyhow!(e))?;
+
+    // 3. Pack tensors (heads, slots, d).
+    let mut q = vec![0.0f32; h * route.q_slots * d];
+    let mut row = 0usize;
+    for m in members {
+        for r in 0..m.req.nq {
+            for hh in 0..h {
+                let src = (hh * m.req.nq + r) * d;
+                let dst = (hh * route.q_slots + row) * d;
+                q[dst..dst + d].copy_from_slice(&m.req.q[src..src + d]);
+            }
+            row += 1;
+        }
+    }
+    let mut k = vec![0.0f32; h * route.kv_slots * d];
+    let mut v = vec![0.0f32; h * route.kv_slots * d];
+    for hh in 0..h {
+        let src = hh * kv_src_cap * d;
+        let dst = hh * route.kv_slots * d;
+        let n = kv_len * d;
+        k[dst..dst + n].copy_from_slice(&kv_src_k[src..src + n]);
+        v[dst..dst + n].copy_from_slice(&kv_src_v[src..src + n]);
+    }
+
+    // 4. Execute and split.
+    let out = engine.execute(&route, &q, &k, &v, kv_len)?;
+    let mut outputs = Vec::with_capacity(members.len());
+    let mut row = 0usize;
+    for m in members {
+        let mut o = vec![0.0f32; h * m.req.nq * d];
+        for r in 0..m.req.nq {
+            for hh in 0..h {
+                let src = (hh * route.q_slots + row + r) * d;
+                let dst = (hh * m.req.nq + r) * d;
+                o[dst..dst + d].copy_from_slice(&out[src..src + d]);
+            }
+        }
+        row += m.req.nq;
+        outputs.push(o);
+    }
+    Ok(outputs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::{ShapeSig, Variant};
+    use crate::runtime::Manifest;
+
+    fn test_router() -> Router {
+        Router::from_manifest(
+            &Manifest::parse(
+                r#"{"artifacts": {
+              "a128": {"file":"x","kind":"attention","variant":"flashd","causal":false,
+                "heads":2,"seq":128,"head_dim":8,"inputs":[],"n_outputs":1},
+              "a256": {"file":"y","kind":"attention","variant":"flashd","causal":false,
+                "heads":2,"seq":256,"head_dim":8,"inputs":[],"n_outputs":1}
+            }}"#,
+            )
+            .unwrap(),
+        )
+    }
+
+    fn start_naive() -> Coordinator {
+        let cfg = CoordinatorConfig {
+            batch_window: Duration::from_micros(10),
+            ..CoordinatorConfig::default()
+        };
+        Coordinator::start_with(cfg, || Ok(NaiveEngine { router: test_router() })).unwrap()
+    }
+
+    fn rand_req(id: u64, kind: RequestKind, nq: usize, nkv: usize, seed: u64) -> AttentionRequest {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let sig = ShapeSig { heads: 2, head_dim: 8 };
+        AttentionRequest {
+            id,
+            kind,
+            variant: Variant::FlashD,
+            sig,
+            q: rng.normal_vec(2 * 8 * nq, 1.0),
+            nq,
+            k: rng.normal_vec(2 * 8 * nkv, 1.0),
+            v: rng.normal_vec(2 * 8 * nkv, 1.0),
+            nkv,
+            submitted_at: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn stateless_roundtrip_matches_reference() {
+        let c = start_naive();
+        let req = rand_req(1, RequestKind::Stateless, 3, 20, 42);
+        let (q, k, v) = (req.q.clone(), req.k.clone(), req.v.clone());
+        let resp = c.submit_blocking(req);
+        let out = resp.output.expect("ok");
+        assert_eq!(out.len(), 2 * 3 * 8);
+        // reference: per-head naive attention with 1/sqrt(8) scale
+        let scale = (8f32).powf(-0.5);
+        for hh in 0..2 {
+            let ks = &k[hh * 20 * 8..(hh + 1) * 20 * 8];
+            let vs = &v[hh * 20 * 8..(hh + 1) * 20 * 8];
+            for r in 0..3 {
+                let qs = &q[(hh * 3 + r) * 8..(hh * 3 + r + 1) * 8];
+                let want = crate::kernels::naive::attention(qs, ks, vs, 20, 8, scale);
+                let got = &out[(hh * 3 + r) * 8..(hh * 3 + r + 1) * 8];
+                let diff = crate::kernels::max_abs_diff(got, &want);
+                assert!(diff < 1e-4, "h={hh} r={r}: {diff}");
+            }
+        }
+        c.shutdown();
+    }
+
+    #[test]
+    fn prefill_then_decode_uses_cache() {
+        let c = start_naive();
+        let prefill = rand_req(1, RequestKind::Prefill { session: 5 }, 1, 16, 7);
+        let (pk, pv) = (prefill.k.clone(), prefill.v.clone());
+        assert!(c.submit_blocking(prefill).output.is_ok());
+
+        let dec = rand_req(2, RequestKind::Decode { session: 5 }, 1, 1, 8);
+        let (dq, dk, dv) = (dec.q.clone(), dec.k.clone(), dec.v.clone());
+        let resp = c.submit_blocking(dec);
+        let out = resp.output.expect("decode ok");
+
+        // reference: attend 17 kv pairs (16 prefill + 1 decode)
+        let scale = (8f32).powf(-0.5);
+        for hh in 0..2 {
+            let mut ks = pk[hh * 16 * 8..(hh + 1) * 16 * 8].to_vec();
+            ks.extend_from_slice(&dk[hh * 8..(hh + 1) * 8]);
+            let mut vs = pv[hh * 16 * 8..(hh + 1) * 16 * 8].to_vec();
+            vs.extend_from_slice(&dv[hh * 8..(hh + 1) * 8]);
+            let want = crate::kernels::naive::attention(&dq[hh * 8..(hh + 1) * 8], &ks, &vs, 17, 8, scale);
+            let got = &out[hh * 8..(hh + 1) * 8];
+            assert!(crate::kernels::max_abs_diff(got, &want) < 1e-4);
+        }
+        c.shutdown();
+    }
+
+    #[test]
+    fn decode_without_session_errors() {
+        let c = start_naive();
+        let resp = c.submit_blocking(rand_req(1, RequestKind::Decode { session: 999 }, 1, 1, 1));
+        assert!(resp.output.is_err());
+        assert_eq!(c.metrics.snapshot().errors, 1);
+        c.shutdown();
+    }
+
+    #[test]
+    fn invalid_request_rejected() {
+        let c = start_naive();
+        let mut bad = rand_req(1, RequestKind::Stateless, 1, 4, 2);
+        bad.q.pop();
+        let resp = c.submit_blocking(bad);
+        assert!(resp.output.unwrap_err().contains("invalid"));
+        c.shutdown();
+    }
+
+    #[test]
+    fn concurrent_decodes_batch_and_all_respond() {
+        let c = start_naive();
+        assert!(c
+            .submit_blocking(rand_req(0, RequestKind::Prefill { session: 1 }, 1, 8, 3))
+            .output
+            .is_ok());
+        // submit a burst of decodes from worker threads
+        let c = std::sync::Arc::new(c);
+        let mut handles = Vec::new();
+        for i in 0..8u64 {
+            let c2 = c.clone();
+            handles.push(std::thread::spawn(move || {
+                c2.submit_blocking(rand_req(100 + i, RequestKind::Decode { session: 1 }, 1, 1, 50 + i))
+            }));
+        }
+        let mut ok = 0;
+        for h in handles {
+            let resp = h.join().unwrap();
+            if resp.output.is_ok() {
+                ok += 1;
+            }
+        }
+        assert_eq!(ok, 8);
+        let snap = c.metrics.snapshot();
+        assert_eq!(snap.responses, 9);
+        assert!(snap.kv_appends >= 16);
+        c.metrics.snapshot();
+        std::sync::Arc::try_unwrap(c).ok().map(|c| c.shutdown());
+    }
+
+    #[test]
+    fn oversize_problem_surfaces_router_error() {
+        let c = start_naive();
+        let resp = c.submit_blocking(rand_req(1, RequestKind::Stateless, 1, 300, 4));
+        assert!(resp.output.is_err());
+        c.shutdown();
+    }
+}

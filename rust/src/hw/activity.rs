@@ -1,0 +1,139 @@
+//! Switching-activity extraction: runs the FLASH-D recursion over real
+//! attention problems and measures the toggle densities (average fraction
+//! of storage bits flipping between consecutive operands) that feed the
+//! power model, plus the skip fraction under the paper's static criterion.
+//!
+//! This plays the role of the paper's PowerPro stimulus: "average power
+//! measured after executing attention kernels for various LLMs".
+
+use crate::kernels::flashd::{self, SkipCriterion};
+use crate::kernels::AttnProblem;
+use crate::numerics::{toggle_count, Scalar};
+
+/// Average toggle densities per operand stream, in [0, 1].
+#[derive(Clone, Debug)]
+pub struct ActivityStats {
+    /// Toggle density of the streamed key/value elements (drives the dot
+    /// product and output-update operand switching).
+    pub alpha_kv: f64,
+    /// Toggle density of consecutive attention scores.
+    pub alpha_score: f64,
+    /// Toggle density of the nonlinear-unit outputs (exp/sigmoid stream).
+    pub alpha_nonlin: f64,
+    /// Fraction of KV steps skipped under the static criterion.
+    pub skip_fraction: f64,
+    /// Queries measured.
+    pub n_queries: usize,
+}
+
+impl ActivityStats {
+    /// A conservative default (used when no trace is available): typical
+    /// random-data toggle densities.
+    pub fn default_random() -> ActivityStats {
+        ActivityStats {
+            alpha_kv: 0.35,
+            alpha_score: 0.30,
+            alpha_nonlin: 0.25,
+            skip_fraction: 0.0,
+            n_queries: 0,
+        }
+    }
+}
+
+/// Measure toggle densities in format `T` for a batch of problems.
+pub fn measure<T: Scalar>(problems: &[AttnProblem]) -> ActivityStats {
+    let mut kv_toggles = 0u64;
+    let mut kv_bits = 0u64;
+    let mut sc_toggles = 0u64;
+    let mut sc_bits = 0u64;
+    let mut nl_toggles = 0u64;
+    let mut nl_bits = 0u64;
+    let mut skipped = 0u64;
+    let mut total = 0u64;
+    let mut n_queries = 0usize;
+
+    for p in problems {
+        for iq in 0..p.nq {
+            n_queries += 1;
+            let q = p.q_row(iq);
+            let (_, tr) = flashd::attention_traced(q, &p.k, &p.v, p.nkv, p.d, p.scale);
+
+            // KV element stream: consecutive value-vector elements through
+            // the same physical multiplier port.
+            for i in 1..p.nkv {
+                for j in 0..p.d {
+                    let a = T::from_f64(p.v[(i - 1) * p.d + j] as f64);
+                    let b = T::from_f64(p.v[i * p.d + j] as f64);
+                    kv_toggles += toggle_count(a, b) as u64;
+                    kv_bits += T::BITS as u64;
+                }
+            }
+            // Score stream.
+            for w in tr.scores.windows(2) {
+                let a = T::from_f64(w[0] as f64);
+                let b = T::from_f64(w[1] as f64);
+                sc_toggles += toggle_count(a, b) as u64;
+                sc_bits += T::BITS as u64;
+            }
+            // Nonlinear output stream (weights).
+            for w in tr.weights.windows(2) {
+                let a = T::from_f64(w[0] as f64);
+                let b = T::from_f64(w[1] as f64);
+                nl_toggles += toggle_count(a, b) as u64;
+                nl_bits += T::BITS as u64;
+            }
+            let st = flashd::skip_stats_from_scores(&tr.scores, SkipCriterion::Static);
+            skipped += st.skipped();
+            total += st.total;
+        }
+    }
+
+    ActivityStats {
+        alpha_kv: kv_toggles as f64 / kv_bits.max(1) as f64,
+        alpha_score: sc_toggles as f64 / sc_bits.max(1) as f64,
+        alpha_nonlin: nl_toggles as f64 / nl_bits.max(1) as f64,
+        skip_fraction: skipped as f64 / total.max(1) as f64,
+        n_queries,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numerics::{Bf16, Fp8E4M3};
+    use crate::util::rng::Rng;
+
+    fn problems(seed: u64, n: usize) -> Vec<AttnProblem> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| AttnProblem::random(&mut rng, 2, 64, 16, 2.0)).collect()
+    }
+
+    #[test]
+    fn densities_in_unit_interval() {
+        let a = measure::<Bf16>(&problems(1, 3));
+        for v in [a.alpha_kv, a.alpha_score, a.alpha_nonlin, a.skip_fraction] {
+            assert!((0.0..=1.0).contains(&v), "{a:?}");
+        }
+        assert_eq!(a.n_queries, 6);
+    }
+
+    #[test]
+    fn random_data_has_substantial_activity() {
+        let a = measure::<Bf16>(&problems(2, 3));
+        assert!(a.alpha_kv > 0.15 && a.alpha_kv < 0.6, "{}", a.alpha_kv);
+    }
+
+    #[test]
+    fn fp8_and_bf16_measurable() {
+        let a8 = measure::<Fp8E4M3>(&problems(3, 2));
+        let a16 = measure::<Bf16>(&problems(3, 2));
+        assert!(a8.alpha_kv > 0.0 && a16.alpha_kv > 0.0);
+    }
+
+    #[test]
+    fn empty_input_safe() {
+        let a = measure::<Bf16>(&[]);
+        assert_eq!(a.n_queries, 0);
+        assert_eq!(a.alpha_kv, 0.0);
+    }
+}

@@ -1,0 +1,171 @@
+//! Fig. 4 reproduction: block area for FLASH-D vs the FlashAttention2
+//! kernel across hidden dimensions and number formats.
+
+use super::cost::{CostDb, Format, Op};
+use super::{datapath, Design};
+
+/// One row of the Fig. 4 data.
+#[derive(Clone, Debug)]
+pub struct AreaRow {
+    pub fmt: Format,
+    pub d: usize,
+    pub fa2_um2: f64,
+    pub flashd_um2: f64,
+    pub saving_pct: f64,
+    pub latency_cycles: u32,
+}
+
+/// The paper's evaluation grid: BF16 and FP8-E4M3 at d ∈ {16, 64, 256}.
+pub const PAPER_DIMS: [usize; 3] = [16, 64, 256];
+pub const PAPER_FORMATS: [Format; 2] = [Format::BF16, Format::FP8_E4M3];
+
+/// Compute all Fig. 4 rows.
+pub fn fig4_rows(db: &CostDb) -> Vec<AreaRow> {
+    let mut rows = Vec::new();
+    for &fmt in &PAPER_FORMATS {
+        for &d in &PAPER_DIMS {
+            let fa2 = Design::FlashAttention2.area_um2(d, fmt, db);
+            let fd = Design::FlashD.area_um2(d, fmt, db);
+            rows.push(AreaRow {
+                fmt,
+                d,
+                fa2_um2: fa2,
+                flashd_um2: fd,
+                saving_pct: 100.0 * (fa2 - fd) / fa2,
+                latency_cycles: datapath::latency_cycles(Design::FlashD, d),
+            });
+        }
+    }
+    rows
+}
+
+/// Coarse module-level area breakdown (for DESIGN.md and the ablation
+/// bench): dot front end, nonlinear units, output update, softmax state,
+/// division epilogue, architectural registers.
+#[derive(Clone, Debug, Default)]
+pub struct AreaBreakdown {
+    pub dot: f64,
+    pub nonlinear: f64,
+    pub update: f64,
+    pub state: f64,
+    pub epilogue: f64,
+    pub regs: f64,
+}
+
+impl AreaBreakdown {
+    pub fn total(&self) -> f64 {
+        self.dot + self.nonlinear + self.update + self.state + self.epilogue + self.regs
+    }
+}
+
+/// Break a design's inventory into the module groups above (GE).
+pub fn breakdown(design: Design, d: usize, fmt: Format, db: &CostDb) -> AreaBreakdown {
+    let mut b = AreaBreakdown::default();
+    let a = |op: Op, n: usize| db.area_ge(op, fmt) * n as f64;
+    match design {
+        Design::FlashAttention2 => {
+            b.dot = a(Op::Mul, d) + a(Op::Add, d - 1);
+            b.state = a(Op::Max, 1) + a(Op::Sub, 2) + a(Op::Mul, 1) + a(Op::Add, 1);
+            b.nonlinear = a(Op::Exp, 2);
+            b.update = a(Op::Mul, 2 * d) + a(Op::Add, d);
+            b.epilogue = a(Op::Div, 1) + a(Op::Mul, d);
+            b.regs = a(Op::Reg, d + 3);
+        }
+        Design::FlashD => {
+            b.dot = a(Op::Mul, d) + a(Op::Add, d - 1);
+            b.state = a(Op::Sub, 1) + a(Op::Add, 1);
+            b.nonlinear = a(Op::Sigmoid, 1) + a(Op::Ln, 1);
+            b.update = a(Op::Sub, d) + a(Op::Mul, d) + a(Op::Add, d);
+            b.epilogue = 0.0;
+            b.regs = a(Op::Reg, d + 2);
+        }
+    }
+    b
+}
+
+/// Render the Fig. 4 table as aligned text (what the bench prints).
+pub fn render_table(rows: &[AreaRow]) -> String {
+    let mut out = String::from(
+        "format     d    FA2 area (mm^2)  FLASH-D area (mm^2)  saving   latency\n",
+    );
+    for r in rows {
+        out.push_str(&format!(
+            "{:<9} {:>4}  {:>15.4}  {:>19.4}  {:>5.1}%  {:>4} cyc\n",
+            r.fmt.name(),
+            r.d,
+            r.fa2_um2 / 1e6,
+            r.flashd_um2 / 1e6,
+            r.saving_pct,
+            r.latency_cycles,
+        ));
+    }
+    out
+}
+
+/// CSV for reports/fig4.csv.
+pub fn to_csv(rows: &[AreaRow]) -> String {
+    let mut out = String::from("format,d,fa2_um2,flashd_um2,saving_pct,latency_cycles\n");
+    for r in rows {
+        out.push_str(&format!(
+            "{},{},{:.1},{:.1},{:.3},{}\n",
+            r.fmt.name(), r.d, r.fa2_um2, r.flashd_um2, r.saving_pct, r.latency_cycles
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn six_rows_on_paper_grid() {
+        let rows = fig4_rows(&CostDb::tsmc28());
+        assert_eq!(rows.len(), 6);
+        for r in &rows {
+            assert!(r.saving_pct > 0.0, "FLASH-D must be smaller: {r:?}");
+        }
+    }
+
+    /// The paper's Fig. 4 trend: the relative saving shrinks as d grows
+    /// (the shared dot-product front end dilutes the kernel savings).
+    #[test]
+    fn saving_decreases_with_d() {
+        let rows = fig4_rows(&CostDb::tsmc28());
+        for fmt_rows in rows.chunks(3) {
+            assert!(fmt_rows[0].saving_pct > fmt_rows[1].saving_pct);
+            assert!(fmt_rows[1].saving_pct > fmt_rows[2].saving_pct);
+        }
+    }
+
+    #[test]
+    fn average_saving_near_papers_22_8() {
+        let rows = fig4_rows(&CostDb::tsmc28());
+        let avg = crate::util::mean(&rows.iter().map(|r| r.saving_pct).collect::<Vec<_>>());
+        assert!((avg - 22.8).abs() < 8.0, "avg {avg:.1}% too far from paper's 22.8%");
+    }
+
+    #[test]
+    fn breakdown_total_matches_inventory_area() {
+        let db = CostDb::tsmc28();
+        for &design in &[Design::FlashAttention2, Design::FlashD] {
+            for &d in &PAPER_DIMS {
+                let b = breakdown(design, d, Format::BF16, &db).total();
+                let inv: f64 = design
+                    .inventory(d, Format::BF16)
+                    .iter()
+                    .map(|(op, n)| db.area_ge(*op, Format::BF16) * *n as f64)
+                    .sum();
+                assert!((b - inv).abs() < 1e-6, "{design:?} d={d}: {b} vs {inv}");
+            }
+        }
+    }
+
+    #[test]
+    fn csv_and_table_render() {
+        let rows = fig4_rows(&CostDb::tsmc28());
+        let csv = to_csv(&rows);
+        assert_eq!(csv.lines().count(), 7);
+        assert!(render_table(&rows).contains("FLASH-D"));
+    }
+}

@@ -1,0 +1,215 @@
+//! Gate-equivalent (GE) cost database for 28 nm floating-point operators.
+//!
+//! Area and energy are expressed in NAND2-gate equivalents, the standard
+//! technology-portable unit: 1 GE ≈ 0.49 µm² in a 28 nm HPM standard-cell
+//! library, with a dynamic energy of ~0.8 fJ per switching GE at nominal
+//! voltage and ~25% wire load. The per-operator gate counts follow the
+//! classic decompositions (array multiplier cells, align-add-normalize
+//! adders, radix-4 SRT dividers, ROM-backed PWL units) calibrated so that
+//! well-known reference points hold: a bf16 multiplier lands at ~0.5 kGE,
+//! a bf16 adder slightly below it, an fp8 multiplier at ~0.2 kGE, and a
+//! pipelined divider at ~3 multipliers.
+//!
+//! What matters downstream (Figs. 4-5) is the *relative* cost of the two
+//! inventories, which is robust to the absolute calibration.
+
+/// A reduced-precision floating-point storage format.
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Hash)]
+#[allow(non_camel_case_types)]
+pub enum Format {
+    BF16,
+    FP8_E4M3,
+    FP32,
+}
+
+impl Format {
+    pub fn exp_bits(self) -> u32 {
+        match self {
+            Format::BF16 => 8,
+            Format::FP8_E4M3 => 4,
+            Format::FP32 => 8,
+        }
+    }
+
+    pub fn mant_bits(self) -> u32 {
+        match self {
+            Format::BF16 => 7,
+            Format::FP8_E4M3 => 3,
+            Format::FP32 => 23,
+        }
+    }
+
+    pub fn bits(self) -> u32 {
+        1 + self.exp_bits() + self.mant_bits()
+    }
+
+    /// Mantissa width including the hidden bit.
+    pub fn mant_full(self) -> u32 {
+        self.mant_bits() + 1
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Format::BF16 => "bf16",
+            Format::FP8_E4M3 => "fp8-e4m3",
+            Format::FP32 => "fp32",
+        }
+    }
+}
+
+/// Datapath operator classes appearing in the two block inventories.
+#[derive(Copy, Clone, Debug, PartialEq)]
+pub enum Op {
+    /// Floating-point adder (also used for subtractors: identical datapath
+    /// plus a sign flip).
+    Add,
+    Sub,
+    Mul,
+    /// Pipelined divider (radix-4 SRT / Newton reciprocal class).
+    Div,
+    /// Compare-and-select (running max).
+    Max,
+    /// Exponential unit: range reduction (mul + add) + 8-segment PWL + the
+    /// exponent-field add that applies 2^k.
+    Exp,
+    /// Sigmoid unit: 8-segment PWL with saturation (no range reduction —
+    /// the active region [-6, 11] is the whole domain).
+    Sigmoid,
+    /// Natural-log unit: 8-segment PWL over (0, 1].
+    Ln,
+    /// Architectural register, one operand wide.
+    Reg,
+    /// Coefficient ROM for one PWL unit (counted inside Exp/Sigmoid/Ln;
+    /// exposed for ablations).
+    Rom,
+}
+
+/// Technology calibration + per-operator cost model.
+#[derive(Clone, Debug)]
+pub struct CostDb {
+    /// µm² per gate equivalent (28 nm HPM: ~0.49).
+    pub um2_per_ge: f64,
+    /// Dynamic energy per switching GE, femtojoules.
+    pub fj_per_ge_switch: f64,
+    /// Leakage power per kGE, microwatts (28 nm HVT-dominant mix).
+    pub uw_leak_per_kge: f64,
+    /// Fraction of datapath area added for pipeline registers + control.
+    pub pipeline_overhead: f64,
+    /// Clock frequency the paper synthesizes at.
+    pub clock_hz: f64,
+}
+
+impl CostDb {
+    /// Calibration used throughout the reproduction (28 nm, 500 MHz).
+    pub fn tsmc28() -> CostDb {
+        CostDb {
+            um2_per_ge: 0.49,
+            fj_per_ge_switch: 0.8,
+            uw_leak_per_kge: 0.12,
+            pipeline_overhead: 0.20,
+            clock_hz: 500.0e6,
+        }
+    }
+
+    /// Area of one operator instance in gate equivalents.
+    pub fn area_ge(&self, op: Op, fmt: Format) -> f64 {
+        let m = fmt.mant_full() as f64; // mantissa incl. hidden bit
+        let e = fmt.exp_bits() as f64;
+        let bits = fmt.bits() as f64;
+        let log2m = (fmt.mant_full() as f64).log2().ceil().max(1.0);
+        match op {
+            // align (shifter) + mantissa add + LZD/normalize + round + exp
+            Op::Add | Op::Sub => 10.0 * m * log2m + 8.0 * m + 10.0 * e + 40.0,
+            // array multiplier cells dominate + exponent add + normalize
+            Op::Mul => 6.0 * m * m + 10.0 * e + 60.0,
+            // pipelined divider ~ 3 multipliers of the same format
+            Op::Div => 3.0 * (6.0 * m * m + 10.0 * e + 60.0),
+            // exponent compare + mantissa compare + select
+            Op::Max => 4.0 * bits + 20.0,
+            // range reduction (mul+add) + PWL (mul+add+ROM+select) + exp add
+            Op::Exp => {
+                2.0 * self.area_ge(Op::Mul, fmt)
+                    + 2.0 * self.area_ge(Op::Add, fmt)
+                    + self.area_ge(Op::Rom, fmt)
+                    + 60.0
+            }
+            // PWL only: mul + add + ROM + segment select + saturation
+            Op::Sigmoid | Op::Ln => {
+                self.area_ge(Op::Mul, fmt)
+                    + self.area_ge(Op::Add, fmt)
+                    + self.area_ge(Op::Rom, fmt)
+                    + 60.0
+            }
+            // one flop ~ 6 GE per bit
+            Op::Reg => 6.0 * bits,
+            // 8 segments x (slope + intercept) x bits, ~0.25 GE per ROM bit
+            Op::Rom => 8.0 * 2.0 * bits * 0.25 + 30.0,
+        }
+    }
+
+    /// Dynamic energy of one invocation of `op` at toggle density `alpha`
+    /// (fraction of the operator's gates that switch), picojoules.
+    pub fn energy_pj(&self, op: Op, fmt: Format, alpha: f64) -> f64 {
+        self.area_ge(op, fmt) * alpha * self.fj_per_ge_switch / 1000.0
+    }
+
+    /// Leakage power for an area in GE, milliwatts.
+    pub fn leakage_mw(&self, area_ge: f64) -> f64 {
+        area_ge / 1000.0 * self.uw_leak_per_kge / 1000.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn format_fields() {
+        assert_eq!(Format::BF16.bits(), 16);
+        assert_eq!(Format::FP8_E4M3.bits(), 8);
+        assert_eq!(Format::BF16.mant_full(), 8);
+        assert_eq!(Format::FP8_E4M3.mant_full(), 4);
+    }
+
+    #[test]
+    fn calibration_anchor_points() {
+        let db = CostDb::tsmc28();
+        let mul16 = db.area_ge(Op::Mul, Format::BF16);
+        let add16 = db.area_ge(Op::Add, Format::BF16);
+        // bf16 multiplier ~0.5 kGE, adder slightly smaller
+        assert!((400.0..700.0).contains(&mul16), "{mul16}");
+        assert!(add16 < mul16, "add {add16} !< mul {mul16}");
+        assert!(add16 > 0.6 * mul16, "add implausibly small: {add16}");
+        // divider ~ 3 multipliers
+        assert!((db.area_ge(Op::Div, Format::BF16) / mul16 - 3.0).abs() < 1e-9);
+        // fp8 ops substantially smaller than bf16
+        assert!(db.area_ge(Op::Mul, Format::FP8_E4M3) < 0.5 * mul16);
+    }
+
+    #[test]
+    fn nonlinear_units_order() {
+        let db = CostDb::tsmc28();
+        for &f in &[Format::BF16, Format::FP8_E4M3] {
+            // exp (range reduction + PWL) costs more than sigmoid (PWL only)
+            assert!(db.area_ge(Op::Exp, f) > db.area_ge(Op::Sigmoid, f));
+            assert_eq!(db.area_ge(Op::Sigmoid, f), db.area_ge(Op::Ln, f));
+            // max unit is far cheaper than an adder
+            assert!(db.area_ge(Op::Max, f) < 0.3 * db.area_ge(Op::Add, f));
+        }
+    }
+
+    #[test]
+    fn energy_scales_with_alpha_and_area() {
+        let db = CostDb::tsmc28();
+        let e_half = db.energy_pj(Op::Mul, Format::BF16, 0.5);
+        let e_full = db.energy_pj(Op::Mul, Format::BF16, 1.0);
+        assert!((e_full / e_half - 2.0).abs() < 1e-9);
+        assert!(db.energy_pj(Op::Mul, Format::FP8_E4M3, 0.5) < e_half);
+    }
+
+    #[test]
+    fn fp32_larger_than_bf16() {
+        let db = CostDb::tsmc28();
+        assert!(db.area_ge(Op::Mul, Format::FP32) > 4.0 * db.area_ge(Op::Mul, Format::BF16));
+    }
+}

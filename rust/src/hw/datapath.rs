@@ -1,0 +1,69 @@
+//! Pipeline timing model for the two blocks.
+//!
+//! Both designs run at the same 500 MHz clock and the same pipelined
+//! latency (paper §V-A): one KV pair enters the block every cycle, and the
+//! result of one step is available after
+//!
+//!   1 cycle   multiplier stage of the dot product,
+//!   log2(d)   adder-tree levels (one level per cycle),
+//!   3 cycles  kernel tail (argument/state formation, nonlinear unit,
+//!             output update),
+//!
+//! which reproduces the paper's 8 / 10 / 12 cycles for d = 16 / 64 / 256.
+//! FLASH-D's tail has the same depth — sigmoid argument, sigmoid+ln,
+//! FMA — as FA2's max/exp, l/o update, so the latencies are identical and
+//! the comparison is iso-performance.
+
+use super::Design;
+
+/// Pipelined latency (cycles) for one KV step at hidden dimension `d`.
+pub fn latency_cycles(_design: Design, d: usize) -> u32 {
+    let tree = (d.max(2) as f64).log2().ceil() as u32;
+    1 + tree + 3
+}
+
+/// Cycles to process one query against `n_kv` key/value pairs: pipeline
+/// fill + one KV pair per cycle (+1 epilogue cycle for FA2's division,
+/// hidden by the next block's fill in steady state).
+pub fn query_cycles(design: Design, d: usize, n_kv: usize) -> u64 {
+    latency_cycles(design, d) as u64 + n_kv as u64 - 1
+}
+
+/// Steady-state throughput in KV-pairs/s per query lane at `clock_hz`.
+pub fn throughput_pairs_per_s(clock_hz: f64) -> f64 {
+    clock_hz // 1 KV pair per cycle per lane, both designs
+}
+
+/// Latency in nanoseconds at the given clock.
+pub fn latency_ns(design: Design, d: usize, clock_hz: f64) -> f64 {
+    latency_cycles(design, d) as f64 / clock_hz * 1e9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reproduces_papers_cycle_counts() {
+        // Paper §V-A: 8, 10, 12 cycles for d = 16, 64, 256.
+        assert_eq!(latency_cycles(Design::FlashD, 16), 8);
+        assert_eq!(latency_cycles(Design::FlashD, 64), 10);
+        assert_eq!(latency_cycles(Design::FlashD, 256), 12);
+        assert_eq!(latency_cycles(Design::FlashAttention2, 16), 8);
+        assert_eq!(latency_cycles(Design::FlashAttention2, 64), 10);
+        assert_eq!(latency_cycles(Design::FlashAttention2, 256), 12);
+    }
+
+    #[test]
+    fn query_cycles_pipeline() {
+        // 128 KV pairs at d=64: 10-cycle fill + 127 more pairs
+        assert_eq!(query_cycles(Design::FlashD, 64, 128), 137);
+        assert_eq!(query_cycles(Design::FlashD, 64, 1), 10);
+    }
+
+    #[test]
+    fn latency_ns_at_500mhz() {
+        let ns = latency_ns(Design::FlashD, 16, 500e6);
+        assert!((ns - 16.0).abs() < 1e-9); // 8 cycles * 2 ns
+    }
+}

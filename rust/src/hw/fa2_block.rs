@@ -1,0 +1,119 @@
+//! Operator inventory of the paper's Fig. 1: the parallel FlashAttention2
+//! per-query block.
+//!
+//! Per KV step (one key + one value vector per cycle, Alg. 2 lines 3-6):
+//!   * QK dot product: d multipliers + (d-1)-adder reduction tree,
+//!   * running max: one compare-select,
+//!   * two subtractors forming (m_{i-1} - m_i) and (s_i - m_i),
+//!   * two exponential units (range-reduced 8-segment PWL),
+//!   * sum-of-exponents update: one multiplier + one adder,
+//!   * output update (line 6): two vector multipliers + one vector adder,
+//! and per query epilogue (line 8, the lazy division):
+//!   * one divider producing 1/l_N + a dedicated vector multiplier lane.
+//!
+//! The epilogue is dedicated hardware: in the fully-pipelined block the
+//! division of query block b overlaps the accumulation of block b+1, so it
+//! cannot reuse the update multipliers without a stall — the paper's
+//! "no performance penalty" framing implies the same choice.
+//!
+//! Architectural registers: m, l (scalars) and the d-wide output
+//! accumulator, plus the previous-score pipeline register.
+
+use super::cost::{Format, Op};
+
+/// Full operator inventory for one query lane at hidden dimension `d`.
+pub fn inventory(d: usize, _fmt: Format) -> Vec<(Op, usize)> {
+    vec![
+        // --- QK dot product front end ---
+        (Op::Mul, d),
+        (Op::Add, d - 1),
+        // --- softmax state (Alg. 2 lines 4-5) ---
+        (Op::Max, 1),
+        (Op::Sub, 2),
+        (Op::Exp, 2),
+        (Op::Mul, 1), // l * alpha
+        (Op::Add, 1), // + e^{s-m}
+        // --- output update (line 6): o*alpha + v*p ---
+        (Op::Mul, 2 * d),
+        (Op::Add, d),
+        // --- lazy-division epilogue (line 8) ---
+        (Op::Div, 1),    // reciprocal of l_N
+        (Op::Mul, d),    // o_N * (1/l_N), dedicated lane
+        // --- architectural registers: o (d-wide), m, l, s_prev ---
+        (Op::Reg, d + 3),
+    ]
+}
+
+/// Operator invocation counts for processing `n_kv` KV pairs for one query
+/// (used by the power model; epilogue ops fire once per query).
+pub fn invocations(d: usize, n_kv: usize) -> Vec<(Op, u64)> {
+    let n = n_kv as u64;
+    let du = d as u64;
+    vec![
+        (Op::Mul, du * n),       // dot
+        (Op::Add, (du - 1) * n), // dot tree
+        (Op::Max, n),
+        (Op::Sub, 2 * n),
+        (Op::Exp, 2 * n),
+        (Op::Mul, n),            // l update mul
+        (Op::Add, n),            // l update add
+        (Op::Mul, 2 * du * n),   // output update muls
+        (Op::Add, du * n),       // output update adds
+        (Op::Div, 1),
+        (Op::Mul, du),           // epilogue vector mul
+        (Op::Reg, (du + 3) * n),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::cost::CostDb;
+
+    #[test]
+    fn inventory_counts_scale_with_d() {
+        let small = inventory(16, Format::BF16);
+        let big = inventory(256, Format::BF16);
+        let muls = |inv: &[(Op, usize)]| -> usize {
+            inv.iter().filter(|(o, _)| *o == Op::Mul).map(|(_, n)| n).sum()
+        };
+        // 3d+1 multipliers at hidden dim d (d dot + 2d update + d epilogue + 1)
+        assert_eq!(muls(&small), 3 * 16 + 16 + 1);
+        assert_eq!(muls(&big), 3 * 256 + 256 + 1);
+    }
+
+    #[test]
+    fn has_divider_and_two_exp_units() {
+        let inv = inventory(64, Format::BF16);
+        let count = |op: Op| -> usize {
+            inv.iter().filter(|(o, _)| *o == op).map(|(_, n)| n).sum()
+        };
+        assert_eq!(count(Op::Div), 1);
+        assert_eq!(count(Op::Exp), 2);
+        assert_eq!(count(Op::Max), 1);
+    }
+
+    #[test]
+    fn area_grows_monotonically_with_d() {
+        let db = CostDb::tsmc28();
+        let area = |d: usize| -> f64 {
+            inventory(d, Format::BF16)
+                .iter()
+                .map(|(op, n)| db.area_ge(*op, Format::BF16) * *n as f64)
+                .sum()
+        };
+        assert!(area(16) < area(64));
+        assert!(area(64) < area(256));
+        // roughly linear in d
+        let ratio = area(256) / area(64);
+        assert!((3.0..5.0).contains(&ratio), "{ratio}");
+    }
+
+    #[test]
+    fn invocations_match_inventory_structure() {
+        let inv = invocations(16, 100);
+        let total_mul: u64 = inv.iter().filter(|(o, _)| *o == Op::Mul).map(|(_, n)| n).sum();
+        // d*n dot + 2d*n update + n l-update + d epilogue
+        assert_eq!(total_mul, 16 * 100 + 2 * 16 * 100 + 100 + 16);
+    }
+}

@@ -1,0 +1,141 @@
+//! Operator inventory of the paper's Fig. 3: the FLASH-D per-query block.
+//!
+//! Per KV step (Alg. 3 lines 3-9):
+//!   * QK dot product: identical front end to Fig. 1,
+//!   * sigmoid argument: one subtractor (s_i - s_{i-1}) + one adder
+//!     (+ ln w_{i-1}),
+//!   * one sigmoid PWL unit (8 segments over the active region [-6, 11]),
+//!   * one ln PWL unit (8 segments over (0, 1]),
+//!   * output update (Eq. 12): one vector subtractor, one vector
+//!     multiplier, one vector adder — o += (v - o) * w.
+//!
+//! Gone relative to Fig. 1 (the paper's three structural savings):
+//!   * the divider and its dedicated epilogue multiplier lane,
+//!   * the running max compare-select and the sum-of-exponents mul+add,
+//!   * one of the two vector multipliers (replaced by a subtractor).
+//!
+//! Architectural registers: o (d-wide), s_prev, ln_w.
+
+use super::cost::{Format, Op};
+
+/// Full operator inventory for one query lane at hidden dimension `d`.
+pub fn inventory(d: usize, _fmt: Format) -> Vec<(Op, usize)> {
+    vec![
+        // --- QK dot product front end (same as Fig. 1) ---
+        (Op::Mul, d),
+        (Op::Add, d - 1),
+        // --- sigmoid argument: (s_i - s_{i-1}) + ln w_{i-1} ---
+        (Op::Sub, 1),
+        (Op::Add, 1),
+        // --- the two nonlinear units ---
+        (Op::Sigmoid, 1),
+        (Op::Ln, 1),
+        // --- output update (Eq. 12): o + (v - o) * w ---
+        (Op::Sub, d),
+        (Op::Mul, d),
+        (Op::Add, d),
+        // --- architectural registers: o (d-wide), s_prev, ln_w ---
+        (Op::Reg, d + 2),
+    ]
+}
+
+/// Operator invocation counts for processing `n_kv` KV pairs for one query.
+/// `skipped` KV steps bypass the value load and the entire output update
+/// (the paper's §III-C saving); the dot product and argument formation
+/// still run (they produce the skip decision itself).
+pub fn invocations(d: usize, n_kv: usize, skipped: u64) -> Vec<(Op, u64)> {
+    let n = n_kv as u64;
+    let du = d as u64;
+    let active = n - skipped.min(n);
+    vec![
+        (Op::Mul, du * n),       // dot
+        (Op::Add, (du - 1) * n), // dot tree
+        (Op::Sub, n),            // s diff
+        (Op::Add, n),            // + ln w
+        (Op::Sigmoid, active),   // saturated steps bypass the PWL mul/add
+        (Op::Ln, active),
+        (Op::Sub, du * active),  // output update only on active steps
+        (Op::Mul, du * active),
+        (Op::Add, du * active),
+        (Op::Reg, (du + 2) * n),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::cost::CostDb;
+    use crate::hw::Design;
+
+    #[test]
+    fn no_divider_no_max_no_exp() {
+        let inv = inventory(64, Format::BF16);
+        for (op, _) in &inv {
+            assert!(!matches!(op, Op::Div | Op::Max | Op::Exp), "{op:?}");
+        }
+    }
+
+    #[test]
+    fn one_vector_multiplier_in_update() {
+        let inv = inventory(32, Format::BF16);
+        let muls: usize = inv.iter().filter(|(o, _)| *o == Op::Mul).map(|(_, n)| n).sum();
+        // d dot + d update (vs FA2's 3d+1 + epilogue)
+        assert_eq!(muls, 2 * 32);
+    }
+
+    #[test]
+    fn fewer_registers_than_fa2() {
+        let regs = |inv: &[(Op, usize)]| -> usize {
+            inv.iter().filter(|(o, _)| *o == Op::Reg).map(|(_, n)| n).sum()
+        };
+        let fd = regs(&inventory(64, Format::BF16));
+        let fa2 = regs(&crate::hw::fa2_block::inventory(64, Format::BF16));
+        assert!(fd < fa2, "{fd} !< {fa2}");
+    }
+
+    #[test]
+    fn skipping_reduces_invocations() {
+        let no_skip = invocations(16, 100, 0);
+        let with_skip = invocations(16, 100, 30);
+        let update_muls = |inv: &[(Op, u64)]| -> u64 {
+            // second Mul entry is the output-update multiplier bank
+            inv.iter().filter(|(o, _)| *o == Op::Mul).map(|(_, n)| n).sum()
+        };
+        assert!(update_muls(&with_skip) < update_muls(&no_skip));
+    }
+
+    /// The structural decomposition of the area saving, per the paper §V-A:
+    /// divider gone, one vector multiplier swapped for a subtractor,
+    /// max + sum-of-exponents logic gone, exp units -> sigmoid + ln.
+    #[test]
+    fn saving_decomposition_adds_up() {
+        let db = CostDb::tsmc28();
+        let fmt = Format::BF16;
+        let d = 64usize;
+        let a = |op: Op| db.area_ge(op, fmt);
+
+        let fa2: f64 = Design::FlashAttention2
+            .inventory(d, fmt)
+            .iter()
+            .map(|(op, n)| a(*op) * *n as f64)
+            .sum();
+        let fd: f64 = Design::FlashD
+            .inventory(d, fmt)
+            .iter()
+            .map(|(op, n)| a(*op) * *n as f64)
+            .sum();
+
+        let divider_saving = a(Op::Div) + d as f64 * a(Op::Mul);
+        let update_saving = d as f64 * (a(Op::Mul) - a(Op::Sub));
+        let state_saving = a(Op::Max) + a(Op::Mul) + a(Op::Add) + a(Op::Reg) + a(Op::Sub);
+        let nonlin_delta = 2.0 * a(Op::Exp) - (a(Op::Sigmoid) + a(Op::Ln)) - a(Op::Add);
+
+        let predicted = divider_saving + update_saving + state_saving + nonlin_delta;
+        assert!(
+            ((fa2 - fd) - predicted).abs() < 1.0,
+            "decomposition mismatch: {} vs {}",
+            fa2 - fd,
+            predicted
+        );
+    }
+}

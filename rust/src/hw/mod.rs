@@ -1,0 +1,122 @@
+//! The 28 nm hardware cost model + datapath simulator that substitutes for
+//! the paper's Catapult-HLS → Cadence synthesis flow (DESIGN.md §2).
+//!
+//! The paper's evaluation compares two fully-unrolled per-query datapaths:
+//!
+//! * **Fig. 1** — the FlashAttention2 kernel block: QK dot-product unit,
+//!   running max, two exponential (PWL) units, running sum-of-exponents,
+//!   an output-update module with two vector multipliers + one vector
+//!   adder, and a dedicated lazy-division epilogue (reciprocal + vector
+//!   multiplier) so back-to-back query blocks never stall.
+//! * **Fig. 3** — the FLASH-D block: the same dot-product front end, one
+//!   sigmoid PWL unit + one ln PWL unit, and an output-update module with
+//!   one vector subtractor, one vector multiplier and one vector adder
+//!   (Eq. 12). No max, no sum-of-exponents, no divider.
+//!
+//! Both blocks are modelled as inventories of floating-point operators
+//! whose area/energy come from a gate-equivalent (GE) cost database
+//! ([`cost`]). Area (Fig. 4) is a roll-up of the inventory; power (Fig. 5)
+//! is activity-based: operator energies weighted by measured toggle
+//! densities from attention traces, at the paper's 500 MHz clock.
+//!
+//! The absolute numbers are a model, not silicon; what the reproduction
+//! preserves is the *relative* comparison (who wins, by what factor, and
+//! how the gap moves with hidden dimension and number format), which is
+//! the paper's claim.
+
+pub mod activity;
+pub mod area;
+pub mod cost;
+pub mod datapath;
+pub mod fa2_block;
+pub mod flashd_block;
+pub mod power;
+
+pub use cost::{CostDb, Format, Op};
+pub use datapath::latency_cycles;
+
+/// The two competing designs.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum Design {
+    FlashAttention2,
+    FlashD,
+}
+
+impl Design {
+    pub fn name(self) -> &'static str {
+        match self {
+            Design::FlashAttention2 => "FlashAttention2",
+            Design::FlashD => "FLASH-D",
+        }
+    }
+
+    /// Operator inventory of the per-query block at hidden dimension `d`.
+    pub fn inventory(self, d: usize, fmt: Format) -> Vec<(Op, usize)> {
+        match self {
+            Design::FlashAttention2 => fa2_block::inventory(d, fmt),
+            Design::FlashD => flashd_block::inventory(d, fmt),
+        }
+    }
+
+    /// Block area in gate equivalents.
+    pub fn area_ge(self, d: usize, fmt: Format, db: &CostDb) -> f64 {
+        let base: f64 = self
+            .inventory(d, fmt)
+            .iter()
+            .map(|(op, n)| db.area_ge(*op, fmt) * *n as f64)
+            .sum();
+        // Pipeline registers / control overhead: proportional to datapath
+        // width and depth (same factor for both designs — they share the
+        // pipeline structure and clock).
+        base * (1.0 + db.pipeline_overhead)
+    }
+
+    pub fn area_um2(self, d: usize, fmt: Format, db: &CostDb) -> f64 {
+        self.area_ge(d, fmt, db) * db.um2_per_ge
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flashd_block_is_smaller_for_all_paper_points() {
+        let db = CostDb::tsmc28();
+        for &fmt in &[Format::BF16, Format::FP8_E4M3] {
+            for &d in &[16usize, 64, 256] {
+                let fa2 = Design::FlashAttention2.area_ge(d, fmt, &db);
+                let fd = Design::FlashD.area_ge(d, fmt, &db);
+                assert!(fd < fa2, "d={d} fmt={fmt:?}: {fd} !< {fa2}");
+            }
+        }
+    }
+
+    /// Paper headline: 22.8% average area reduction (range ~20-28%).
+    #[test]
+    fn area_savings_in_papers_band() {
+        let db = CostDb::tsmc28();
+        let mut savings = Vec::new();
+        for &fmt in &[Format::BF16, Format::FP8_E4M3] {
+            for &d in &[16usize, 64, 256] {
+                let fa2 = Design::FlashAttention2.area_ge(d, fmt, &db);
+                let fd = Design::FlashD.area_ge(d, fmt, &db);
+                let pct = 100.0 * (fa2 - fd) / fa2;
+                assert!(pct > 12.0 && pct < 35.0, "d={d} fmt={fmt:?}: {pct:.1}%");
+                savings.push(pct);
+            }
+        }
+        let avg = crate::util::mean(&savings);
+        assert!((15.0..30.0).contains(&avg), "avg savings {avg:.1}%");
+    }
+
+    #[test]
+    fn both_designs_same_latency() {
+        for &d in &[16usize, 64, 256] {
+            assert_eq!(
+                datapath::latency_cycles(Design::FlashAttention2, d),
+                datapath::latency_cycles(Design::FlashD, d)
+            );
+        }
+    }
+}

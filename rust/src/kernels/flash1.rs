@@ -1,0 +1,78 @@
+//! Alg. 1 — baseline FlashAttention (Dao et al. 2022) with the softmax
+//! division performed *incrementally* during output accumulation. Kept as a
+//! faithful transcription of the paper's pseudocode: two divisions and three
+//! vector multiplies per key/value step.
+
+use super::dot;
+
+/// Single-query baseline FlashAttention.
+pub fn attention(q: &[f32], k: &[f32], v: &[f32], n: usize, d: usize, scale: f32) -> Vec<f32> {
+    assert!(n > 0);
+    let mut m = f32::NEG_INFINITY; // running max  (Alg.1 line 4)
+    let mut ell = 0.0f32;          // running sum-of-exponents (line 5)
+    let mut o = vec![0.0f32; d];
+    for i in 0..n {
+        let s = dot(q, &k[i * d..(i + 1) * d]) * scale;
+        let m_new = m.max(s);
+        let alpha = (m - m_new).exp(); // e^{m_{i-1}-m_i}; exp(-inf)=0 at i=0
+        let p = (s - m_new).exp();
+        let ell_new = ell * alpha + p;
+        let co = ell * alpha / ell_new; // coefficient on o_{i-1}
+        let cv = p / ell_new;           // coefficient on v_i
+        let vi = &v[i * d..(i + 1) * d];
+        for j in 0..d {
+            o[j] = o[j] * co + vi[j] * cv; // Alg.1 line 6
+        }
+        m = m_new;
+        ell = ell_new;
+    }
+    o
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{max_abs_diff, naive};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matches_naive_small() {
+        let mut rng = Rng::new(10);
+        let (n, d) = (33, 8);
+        let q = rng.normal_vec(d, 1.0);
+        let k = rng.normal_vec(n * d, 1.0);
+        let v = rng.normal_vec(n * d, 1.0);
+        let a = attention(&q, &k, &v, n, d, 0.5);
+        let b = naive::attention(&q, &k, &v, n, d, 0.5);
+        assert!(max_abs_diff(&a, &b) < 1e-5);
+    }
+
+    #[test]
+    fn first_iteration_sets_output_to_v0() {
+        let q = [1.0, 2.0];
+        let k = [0.5, -0.5];
+        let v = [3.0, 4.0];
+        assert_eq!(attention(&q, &k, &v, 1, 2, 1.0), vec![3.0, 4.0]);
+    }
+
+    #[test]
+    fn monotone_decreasing_scores_need_no_rescale() {
+        // max never changes after i=0 -> alpha stays 1; still correct.
+        let q = [1.0];
+        let k = [5.0, 4.0, 3.0];
+        let v = [1.0, 2.0, 3.0];
+        let a = attention(&q, &k, &v, 3, 1, 1.0);
+        let b = naive::attention(&q, &k, &v, 3, 1, 1.0);
+        assert!((a[0] - b[0]).abs() < 1e-6);
+    }
+
+    #[test]
+    fn increasing_scores_trigger_rescale_path() {
+        let q = [1.0];
+        let k = [1.0, 2.0, 3.0, 4.0];
+        let v = [1.0, 2.0, 3.0, 4.0];
+        let a = attention(&q, &k, &v, 4, 1, 1.0);
+        let b = naive::attention(&q, &k, &v, 4, 1, 1.0);
+        assert!((a[0] - b[0]).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,141 @@
+//! Alg. 2 — FlashAttention2 (Dao 2023): same recursion as Alg. 1 but with
+//! the softmax division *postponed* to a single epilogue division ("lazy
+//! softmax"). This is the algorithm implemented by the paper's baseline
+//! hardware (Fig. 1): per step it needs the running max, the running
+//! sum-of-exponents, two exponentials, two vector multipliers and one vector
+//! adder, plus the final vector division.
+//!
+//! The generic variant runs in any [`Scalar`] format and the instrumented
+//! variant additionally records the operand stream consumed by the power
+//! model (hw::power).
+
+use super::dot;
+use crate::numerics::Scalar;
+
+/// Single-query FlashAttention2 in f32.
+pub fn attention(q: &[f32], k: &[f32], v: &[f32], n: usize, d: usize, scale: f32) -> Vec<f32> {
+    assert!(n > 0);
+    let mut m = f32::NEG_INFINITY;
+    let mut ell = 0.0f32;
+    let mut o = vec![0.0f32; d];
+    for i in 0..n {
+        let s = dot(q, &k[i * d..(i + 1) * d]) * scale;
+        let m_new = m.max(s);
+        let alpha = (m - m_new).exp();
+        let p = (s - m_new).exp();
+        let vi = &v[i * d..(i + 1) * d];
+        for j in 0..d {
+            o[j] = o[j] * alpha + vi[j] * p; // Alg.2 line 6: two mults + add
+        }
+        ell = ell * alpha + p;
+        m = m_new;
+    }
+    // Alg.2 line 8: the lazy division epilogue.
+    for j in 0..d {
+        o[j] /= ell;
+    }
+    o
+}
+
+/// Multi-query helper mirroring the unrolled hardware of Fig. 1: each query
+/// keeps independent (m, l, o) state while K/V stream past.
+pub fn attention_multi(q: &[f32], k: &[f32], v: &[f32], nq: usize, nkv: usize, d: usize, scale: f32) -> Vec<f32> {
+    let mut out = Vec::with_capacity(nq * d);
+    for iq in 0..nq {
+        out.extend(attention(&q[iq * d..(iq + 1) * d], k, v, nkv, d, scale));
+    }
+    out
+}
+
+/// FlashAttention2 in an arbitrary scalar format `T` — the hardware-faithful
+/// path (all intermediate state held at format precision, dot products
+/// accumulated in f32 like the fused vector units of [25], [26]).
+pub fn attention_generic<T: Scalar>(q: &[f32], k: &[f32], v: &[f32], n: usize, d: usize, scale: f32) -> Vec<f32> {
+    let mut m = T::from_f64(-3.0e38);
+    let mut ell = T::zero();
+    let mut o: Vec<T> = vec![T::zero(); d];
+    for i in 0..n {
+        let s = T::from_f64((dot(q, &k[i * d..(i + 1) * d]) * scale) as f64);
+        let m_new = m.max(s);
+        let alpha = m.sub(m_new).exp();
+        let p = s.sub(m_new).exp();
+        for j in 0..d {
+            let vi = T::from_f64(v[i * d + j] as f64);
+            o[j] = o[j].mul(alpha).add(vi.mul(p));
+        }
+        ell = ell.mul(alpha).add(p);
+        m = m_new;
+    }
+    o.iter().map(|x| x.div(ell).to_f64() as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{flash1, max_abs_diff, naive};
+    use crate::numerics::{Bf16, Fp8E4M3};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matches_flash1_exactly_in_structure() {
+        let mut rng = Rng::new(20);
+        let (n, d) = (129, 16);
+        let q = rng.normal_vec(d, 1.0);
+        let k = rng.normal_vec(n * d, 0.7);
+        let v = rng.normal_vec(n * d, 1.0);
+        let a = attention(&q, &k, &v, n, d, 0.25);
+        let b = flash1::attention(&q, &k, &v, n, d, 0.25);
+        assert!(max_abs_diff(&a, &b) < 1e-5);
+    }
+
+    #[test]
+    fn multi_matches_per_query() {
+        let mut rng = Rng::new(21);
+        let (nq, nkv, d) = (4, 64, 8);
+        let q = rng.normal_vec(nq * d, 1.0);
+        let k = rng.normal_vec(nkv * d, 1.0);
+        let v = rng.normal_vec(nkv * d, 1.0);
+        let multi = attention_multi(&q, &k, &v, nq, nkv, d, 1.0);
+        for iq in 0..nq {
+            let single = attention(&q[iq * d..(iq + 1) * d], &k, &v, nkv, d, 1.0);
+            assert!(max_abs_diff(&multi[iq * d..(iq + 1) * d], &single) < 1e-7);
+        }
+    }
+
+    #[test]
+    fn generic_f32_matches_plain() {
+        let mut rng = Rng::new(22);
+        let (n, d) = (48, 8);
+        let q = rng.normal_vec(d, 1.0);
+        let k = rng.normal_vec(n * d, 1.0);
+        let v = rng.normal_vec(n * d, 1.0);
+        let a = attention(&q, &k, &v, n, d, 0.3);
+        let b = attention_generic::<f32>(&q, &k, &v, n, d, 0.3);
+        assert!(max_abs_diff(&a, &b) < 1e-6);
+    }
+
+    #[test]
+    fn bf16_tracks_reference_loosely() {
+        let mut rng = Rng::new(23);
+        let (n, d) = (64, 16);
+        let q = rng.normal_vec(d, 0.8);
+        let k = rng.normal_vec(n * d, 0.8);
+        let v = rng.normal_vec(n * d, 1.0);
+        let gold = naive::attention(&q, &k, &v, n, d, 0.25);
+        let b16 = attention_generic::<Bf16>(&q, &k, &v, n, d, 0.25);
+        assert!(max_abs_diff(&gold, &b16) < 0.06, "{}", max_abs_diff(&gold, &b16));
+    }
+
+    #[test]
+    fn fp8_stays_finite_and_plausible() {
+        let mut rng = Rng::new(24);
+        let (n, d) = (32, 8);
+        let q = rng.normal_vec(d, 0.5);
+        let k = rng.normal_vec(n * d, 0.5);
+        let v = rng.normal_vec(n * d, 0.5);
+        let gold = naive::attention(&q, &k, &v, n, d, 0.35);
+        let f8 = attention_generic::<Fp8E4M3>(&q, &k, &v, n, d, 0.35);
+        assert!(f8.iter().all(|x| x.is_finite()));
+        assert!(max_abs_diff(&gold, &f8) < 0.4, "{}", max_abs_diff(&gold, &f8));
+    }
+}

@@ -1,0 +1,542 @@
+//! Alg. 3 — **FLASH-D**, the paper's contribution: FlashAttention with the
+//! softmax division hidden inside a sigmoid evaluation.
+//!
+//! Per key/value step the kernel computes
+//!
+//! ```text
+//!   s_i = dot(q, k_i) * scale
+//!   w_i = sigmoid(s_i - s_{i-1} + ln w_{i-1})        (w_1 = 1)
+//!   o_i = o_{i-1} + (v_i - o_{i-1}) * w_i            (Eq. 12)
+//! ```
+//!
+//! There is no running maximum, no running sum-of-exponents and no division
+//! anywhere — the division lives inside the sigmoid. Numerical stability is
+//! inherent: the sigmoid argument only needs to be evaluated in the active
+//! region [-6, 11]; outside it the weight saturates to ~0/~1 and the entire
+//! output update (value load + FMA) can be **skipped** — the effect Table I
+//! quantifies.
+
+use super::dot;
+use crate::numerics::Scalar;
+use crate::pwl::{LnPwl, SigmoidPwl};
+
+/// Numerically stable sigmoid (never exponentiates a positive argument).
+#[inline]
+pub fn sigmoid(x: f64) -> f64 {
+    if x >= 0.0 {
+        1.0 / (1.0 + (-x).exp())
+    } else {
+        let e = x.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// Numerically stable ln(sigmoid(x)).
+#[inline]
+pub fn log_sigmoid(x: f64) -> f64 {
+    if x >= 0.0 {
+        -(-x).exp().ln_1p()
+    } else {
+        x - x.exp().ln_1p()
+    }
+}
+
+/// The weight-update function of Eq. (11): `w_i` as a function of the
+/// consecutive-score difference and the previous weight. This is exactly
+/// the family of curves in the paper's Fig. 2.
+#[inline]
+pub fn weight(s_diff: f64, w_prev: f64) -> f64 {
+    sigmoid(s_diff + w_prev.ln())
+}
+
+/// The paper's static active region for the sigmoid argument (§III-C).
+pub const ACTIVE_LO: f64 = -6.0;
+pub const ACTIVE_HI: f64 = 11.0;
+
+/// Single-query FLASH-D in f32 (exact nonlinearities).
+pub fn attention(q: &[f32], k: &[f32], v: &[f32], n: usize, d: usize, scale: f32) -> Vec<f32> {
+    assert!(n > 0);
+    let mut o = vec![0.0f32; d];
+    let mut s_prev = 0.0f64;
+    let mut ln_w = 0.0f64;
+    for i in 0..n {
+        let s = (dot(q, &k[i * d..(i + 1) * d]) * scale) as f64;
+        let w = if i == 0 {
+            ln_w = 0.0;
+            1.0
+        } else {
+            let x = s - s_prev + ln_w;
+            ln_w = log_sigmoid(x);
+            sigmoid(x)
+        } as f32;
+        let vi = &v[i * d..(i + 1) * d];
+        for j in 0..d {
+            o[j] += (vi[j] - o[j]) * w; // Eq. (12): sub + mul + add
+        }
+        s_prev = s;
+    }
+    o
+}
+
+/// Multi-query FLASH-D mirroring the unrolled Fig. 3 hardware.
+pub fn attention_multi(q: &[f32], k: &[f32], v: &[f32], nq: usize, nkv: usize, d: usize, scale: f32) -> Vec<f32> {
+    let mut out = Vec::with_capacity(nq * d);
+    for iq in 0..nq {
+        out.extend(attention(&q[iq * d..(iq + 1) * d], k, v, nkv, d, scale));
+    }
+    out
+}
+
+/// Which saturation rule decides that an output update can be skipped.
+#[derive(Copy, Clone, Debug, PartialEq)]
+pub enum SkipCriterion {
+    /// No skipping: always evaluate (exact Alg. 3).
+    None,
+    /// The paper's static rule: skip when `s_i - s_{i-1}` leaves [-6, 11].
+    Static,
+    /// The paper's proposed future-work rule: test the *full* sigmoid
+    /// argument `s_i - s_{i-1} + ln w_{i-1}` against a symmetric band.
+    Adaptive { lo: f64, hi: f64 },
+}
+
+/// Counters for the skip study (Table I).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SkipStats {
+    /// Output updates where w saturated to ~0 (o unchanged, v load skipped).
+    pub skip_low: u64,
+    /// Updates where w saturated to ~1 (o replaced by v, FMA skipped).
+    pub skip_high: u64,
+    /// Total weight-update steps (excludes the fixed w_1 = 1 step).
+    pub total: u64,
+}
+
+impl SkipStats {
+    pub fn skipped(&self) -> u64 {
+        self.skip_low + self.skip_high
+    }
+
+    /// Percentage of output updates simplified — the Table I quantity.
+    pub fn percent(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            100.0 * self.skipped() as f64 / self.total as f64
+        }
+    }
+
+    pub fn merge(&mut self, other: &SkipStats) {
+        self.skip_low += other.skip_low;
+        self.skip_high += other.skip_high;
+        self.total += other.total;
+    }
+}
+
+/// Instrumented FLASH-D: applies a [`SkipCriterion`] and counts how often
+/// the output update simplifies. Returns `(output, stats)`.
+pub fn attention_instrumented(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n: usize,
+    d: usize,
+    scale: f32,
+    crit: SkipCriterion,
+) -> (Vec<f32>, SkipStats) {
+    let mut stats = SkipStats::default();
+    let mut o = vec![0.0f32; d];
+    let mut s_prev = 0.0f64;
+    let mut ln_w = 0.0f64;
+    for i in 0..n {
+        let s = (dot(q, &k[i * d..(i + 1) * d]) * scale) as f64;
+        let vi = &v[i * d..(i + 1) * d];
+        if i == 0 {
+            o.copy_from_slice(vi);
+            ln_w = 0.0;
+            s_prev = s;
+            continue;
+        }
+        stats.total += 1;
+        let s_diff = s - s_prev;
+        let x = s_diff + ln_w;
+        let (lo_hit, hi_hit) = match crit {
+            SkipCriterion::None => (false, false),
+            SkipCriterion::Static => (s_diff <= ACTIVE_LO, s_diff >= ACTIVE_HI),
+            SkipCriterion::Adaptive { lo, hi } => (x <= lo, x >= hi),
+        };
+        if lo_hit {
+            // w ~ 0: output unchanged, v_i never loaded, and the ln unit is
+            // bypassed too — for x <= -6, ln sigmoid(x) = x to within
+            // e^-6, so the carried ln w is just the pass-through of the
+            // already-computed argument. Cheapest possible step.
+            stats.skip_low += 1;
+            ln_w = x;
+            s_prev = s;
+            continue;
+        }
+        if hi_hit {
+            // w ~ 1: output forgets the past, becomes v_i. ln 1 = 0.
+            stats.skip_high += 1;
+            o.copy_from_slice(vi);
+            ln_w = 0.0;
+            s_prev = s;
+            continue;
+        }
+        let w = sigmoid(x) as f32;
+        ln_w = log_sigmoid(x);
+        for j in 0..d {
+            o[j] += (vi[j] - o[j]) * w;
+        }
+        s_prev = s;
+    }
+    (o, stats)
+}
+
+/// Skip statistics straight from a score trace (no values needed) — used by
+/// the Table I harness where the model engine already produced per-step
+/// attention scores.
+pub fn skip_stats_from_scores(scores: &[f32], crit: SkipCriterion) -> SkipStats {
+    let mut stats = SkipStats::default();
+    if scores.is_empty() {
+        return stats;
+    }
+    let mut s_prev = scores[0] as f64;
+    let mut ln_w = 0.0f64;
+    for &sf in &scores[1..] {
+        let s = sf as f64;
+        stats.total += 1;
+        let s_diff = s - s_prev;
+        let x = s_diff + ln_w;
+        let (lo_hit, hi_hit) = match crit {
+            SkipCriterion::None => (false, false),
+            SkipCriterion::Static => (s_diff <= ACTIVE_LO, s_diff >= ACTIVE_HI),
+            SkipCriterion::Adaptive { lo, hi } => (x <= lo, x >= hi),
+        };
+        if lo_hit {
+            stats.skip_low += 1;
+            ln_w = x; // ln sigmoid(x) ~ x on the low tail (pass-through)
+        } else if hi_hit {
+            stats.skip_high += 1;
+            ln_w = 0.0;
+        } else {
+            ln_w = log_sigmoid(x);
+        }
+        s_prev = s;
+    }
+    stats
+}
+
+/// FLASH-D in an arbitrary scalar format with *exact* nonlinearities —
+/// isolates pure quantization effects from PWL-approximation effects.
+pub fn attention_generic<T: Scalar>(q: &[f32], k: &[f32], v: &[f32], n: usize, d: usize, scale: f32) -> Vec<f32> {
+    let mut o: Vec<T> = vec![T::zero(); d];
+    let mut s_prev = T::zero();
+    let mut ln_w = T::zero();
+    for i in 0..n {
+        let s = T::from_f64((dot(q, &k[i * d..(i + 1) * d]) * scale) as f64);
+        let w = if i == 0 {
+            ln_w = T::zero();
+            T::one()
+        } else {
+            let x = s.sub(s_prev).add(ln_w);
+            let w = x.sigmoid();
+            ln_w = if w.to_f64() <= 0.0 { T::from_f64(x.to_f64()) } else { w.ln() };
+            w
+        };
+        for j in 0..d {
+            let vi = T::from_f64(v[i * d + j] as f64);
+            o[j] = o[j].add(vi.sub(o[j]).mul(w)); // Eq. (12)
+        }
+        s_prev = s;
+    }
+    o.iter().map(|x| x.to_f64() as f32).collect()
+}
+
+/// The fully hardware-faithful FLASH-D: reduced-precision format `T` AND
+/// 8-segment PWL sigmoid/ln units (the datapath of Fig. 3).
+pub fn attention_pwl<T: Scalar>(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n: usize,
+    d: usize,
+    scale: f32,
+    sig: &SigmoidPwl,
+    ln: &LnPwl,
+) -> Vec<f32> {
+    let mut o: Vec<T> = vec![T::zero(); d];
+    let mut s_prev = T::zero();
+    let mut ln_w = T::zero();
+    for i in 0..n {
+        let s = T::from_f64((dot(q, &k[i * d..(i + 1) * d]) * scale) as f64);
+        let w = if i == 0 {
+            ln_w = T::zero();
+            T::one()
+        } else {
+            let x = s.sub(s_prev).add(ln_w);
+            let xf = x.to_f64();
+            if xf <= crate::pwl::SIGMOID_LO {
+                // saturated low: skip the update entirely (paper §III-C);
+                // ln sigmoid(x) ~ x passes through as the carried ln w
+                ln_w = x;
+                s_prev = s;
+                continue;
+            }
+            if xf >= crate::pwl::SIGMOID_HI {
+                // saturated high: output := v_i
+                for j in 0..d {
+                    o[j] = T::from_f64(v[i * d + j] as f64);
+                }
+                ln_w = T::zero();
+                s_prev = s;
+                continue;
+            }
+            let w = sig.eval(x);
+            ln_w = ln.eval(w);
+            w
+        };
+        for j in 0..d {
+            let vi = T::from_f64(v[i * d + j] as f64);
+            o[j] = o[j].add(vi.sub(o[j]).mul(w));
+        }
+        s_prev = s;
+    }
+    o.iter().map(|x| x.to_f64() as f32).collect()
+}
+
+/// Per-step trace of the FLASH-D recursion for one query: the sigmoid
+/// argument stream feeding the hardware activity model.
+#[derive(Clone, Debug, Default)]
+pub struct FlashDTrace {
+    /// attention scores s_i
+    pub scores: Vec<f32>,
+    /// sigmoid arguments x_i = s_i - s_{i-1} + ln w_{i-1} (x_0 unused)
+    pub args: Vec<f32>,
+    /// weights w_i
+    pub weights: Vec<f32>,
+}
+
+/// Run FLASH-D and capture its internal trace.
+pub fn attention_traced(q: &[f32], k: &[f32], v: &[f32], n: usize, d: usize, scale: f32) -> (Vec<f32>, FlashDTrace) {
+    let mut tr = FlashDTrace::default();
+    let mut o = vec![0.0f32; d];
+    let mut s_prev = 0.0f64;
+    let mut ln_w = 0.0f64;
+    for i in 0..n {
+        let s = (dot(q, &k[i * d..(i + 1) * d]) * scale) as f64;
+        let (x, w) = if i == 0 {
+            ln_w = 0.0;
+            (0.0, 1.0)
+        } else {
+            let x = s - s_prev + ln_w;
+            let w = sigmoid(x);
+            ln_w = log_sigmoid(x);
+            (x, w)
+        };
+        tr.scores.push(s as f32);
+        tr.args.push(x as f32);
+        tr.weights.push(w as f32);
+        let wf = w as f32;
+        let vi = &v[i * d..(i + 1) * d];
+        for j in 0..d {
+            o[j] += (vi[j] - o[j]) * wf;
+        }
+        s_prev = s;
+    }
+    (o, tr)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{flash2, max_abs_diff, naive};
+    use crate::numerics::{Bf16, Fp8E4M3};
+    use crate::util::rng::Rng;
+
+    fn problem(seed: u64, n: usize, d: usize, std: f32) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        (rng.normal_vec(d, std), rng.normal_vec(n * d, std), rng.normal_vec(n * d, 1.0))
+    }
+
+    #[test]
+    fn weight_function_matches_fig2_anchor_points() {
+        // w_{i-1}=0.99: essentially the plain sigmoid.
+        assert!((weight(0.0, 0.99) - sigmoid(0.99f64.ln())).abs() < 1e-12);
+        assert!((weight(0.0, 0.99) - 0.4975).abs() < 0.01);
+        // As w_prev decreases the curve shifts right: need larger s_diff
+        // for the same w.
+        let w_at = |wp: f64| weight(3.0, wp);
+        assert!(w_at(0.99) > w_at(0.5));
+        assert!(w_at(0.5) > w_at(0.1));
+        assert!(w_at(0.1) > w_at(0.01));
+        // All curves live in (0,1).
+        for &wp in &[0.99, 0.5, 0.1, 0.01] {
+            for i in -100..=140 {
+                let w = weight(i as f64 / 10.0, wp);
+                assert!(w > 0.0 && w < 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn second_step_reproduces_papers_worked_example() {
+        // Paper §III-C: w2 = e^{s2}/(e^{s1}+e^{s2}).
+        let (s1, s2) = (1.3f64, -0.4f64);
+        let w2 = weight(s2 - s1, 1.0);
+        let direct = s2.exp() / (s1.exp() + s2.exp());
+        assert!((w2 - direct).abs() < 1e-12);
+    }
+
+    #[test]
+    fn matches_naive_various_sizes() {
+        for &(n, d) in &[(1usize, 8usize), (2, 4), (65, 16), (512, 32)] {
+            let (q, k, v) = problem(n as u64 * 7 + d as u64, n, d, 0.9);
+            let a = attention(&q, &k, &v, n, d, 0.4);
+            let b = naive::attention(&q, &k, &v, n, d, 0.4);
+            assert!(max_abs_diff(&a, &b) < 3e-5, "n={n} d={d}: {}", max_abs_diff(&a, &b));
+        }
+    }
+
+    #[test]
+    fn stable_without_max_subtraction() {
+        // Scores of magnitude O(1000): naive exp would overflow; FLASH-D
+        // never exponentiates anything outside the sigmoid's active region.
+        let (q, k, v) = problem(3, 64, 16, 9.0); // scores ~ O(1000)
+        let a = attention(&q, &k, &v, 64, 16, 1.0);
+        assert!(a.iter().all(|x| x.is_finite()));
+        let b = naive::attention(&q, &k, &v, 64, 16, 1.0);
+        assert!(max_abs_diff(&a, &b) < 1e-4);
+    }
+
+    #[test]
+    fn instrumented_none_matches_exact() {
+        let (q, k, v) = problem(5, 128, 16, 1.0);
+        let exact = attention(&q, &k, &v, 128, 16, 0.25);
+        let (got, stats) = attention_instrumented(&q, &k, &v, 128, 16, 0.25, SkipCriterion::None);
+        assert_eq!(stats.skipped(), 0);
+        assert_eq!(stats.total, 127);
+        assert!(max_abs_diff(&exact, &got) < 1e-6);
+    }
+
+    #[test]
+    fn static_skip_changes_output_negligibly() {
+        // Score std ~2 (realistic trained-attention scale — cf. the
+        // Table I study): the static criterion fires on the low tail and
+        // the output barely moves.
+        //
+        // NOTE the static rule's skip-high branch is *pessimistic by
+        // design*: it tests s_i - s_{i-1} alone, ignoring ln w_{i-1}. On
+        // adversarial synthetic traces (score std >> trained-model scale)
+        // a +11 jump can coincide with a deeply negative ln w and clobber
+        // the output; the paper accepts this because the criterion is
+        // validated on real LLM score distributions where it never bites
+        // (their Table I / llama2.c check, our model::engine tests). The
+        // ablation bench quantifies the criterion's error/skip trade-off.
+        let (q, k, v) = problem(6, 256, 16, 0.7);
+        let exact = attention(&q, &k, &v, 256, 16, 1.0);
+        let (got, stats) = attention_instrumented(&q, &k, &v, 256, 16, 1.0, SkipCriterion::Static);
+        assert!(max_abs_diff(&exact, &got) < 2e-2, "{}", max_abs_diff(&exact, &got));
+        assert!(stats.total == 255);
+    }
+
+    #[test]
+    fn skip_fires_on_engineered_sequences() {
+        // Monotone steeply increasing scores: every diff >= 11 -> skip_high.
+        let d = 2;
+        let n = 8;
+        let q = vec![1.0, 0.0];
+        let mut k = Vec::new();
+        let mut v = Vec::new();
+        for i in 0..n {
+            k.extend([i as f32 * 12.0, 0.0]);
+            v.extend([i as f32, 1.0]);
+        }
+        let (o, stats) = attention_instrumented(&q, &k, &v, n, d, 1.0, SkipCriterion::Static);
+        assert_eq!(stats.skip_high, (n - 1) as u64);
+        // output = last value vector
+        assert!((o[0] - (n - 1) as f32).abs() < 1e-6);
+
+        // Steeply decreasing: every diff <= -6 -> skip_low, o stays v_0.
+        let mut k2 = Vec::new();
+        for i in 0..n {
+            k2.extend([-(i as f32) * 7.0, 0.0]);
+        }
+        let (o2, st2) = attention_instrumented(&q, &k2, &v, n, d, 1.0, SkipCriterion::Static);
+        assert_eq!(st2.skip_low, (n - 1) as u64);
+        assert!((o2[0] - 0.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn adaptive_skips_at_least_as_much_as_static_on_smooth_traces() {
+        // ln w_{i-1} <= 0 pushes x below s_diff, so the adaptive low test
+        // fires whenever the static one does (with equal thresholds).
+        let (q, k, v) = problem(7, 512, 16, 2.5);
+        let (_, s_static) = attention_instrumented(&q, &k, &v, 512, 16, 1.0, SkipCriterion::Static);
+        let (_, s_adapt) = attention_instrumented(
+            &q, &k, &v, 512, 16, 1.0,
+            SkipCriterion::Adaptive { lo: ACTIVE_LO, hi: ACTIVE_HI },
+        );
+        assert!(s_adapt.skip_low >= s_static.skip_low);
+    }
+
+    #[test]
+    fn score_trace_stats_match_instrumented() {
+        let (q, k, v) = problem(8, 300, 8, 2.0);
+        let (_, tr) = attention_traced(&q, &k, &v, 300, 8, 1.0);
+        let from_trace = skip_stats_from_scores(&tr.scores, SkipCriterion::Static);
+        let (_, direct) = attention_instrumented(&q, &k, &v, 300, 8, 1.0, SkipCriterion::Static);
+        assert_eq!(from_trace, direct);
+    }
+
+    #[test]
+    fn generic_f32_matches_exact() {
+        let (q, k, v) = problem(9, 96, 8, 1.0);
+        let a = attention(&q, &k, &v, 96, 8, 0.35);
+        let b = attention_generic::<f32>(&q, &k, &v, 96, 8, 0.35);
+        assert!(max_abs_diff(&a, &b) < 1e-5);
+    }
+
+    #[test]
+    fn bf16_flashd_close_to_bf16_flash2() {
+        // Both datapaths at bf16 should agree with each other to within
+        // format precision — the paper's "same replies from llama2.c" check.
+        let (q, k, v) = problem(10, 128, 16, 1.0);
+        let a = attention_generic::<Bf16>(&q, &k, &v, 128, 16, 0.25);
+        let b = flash2::attention_generic::<Bf16>(&q, &k, &v, 128, 16, 0.25);
+        assert!(max_abs_diff(&a, &b) < 0.08, "{}", max_abs_diff(&a, &b));
+    }
+
+    #[test]
+    fn pwl_variant_tracks_exact_bf16() {
+        let sig = SigmoidPwl::new();
+        let ln = LnPwl::new();
+        let (q, k, v) = problem(11, 128, 16, 1.0);
+        let gold = naive::attention(&q, &k, &v, 128, 16, 0.25);
+        let got = attention_pwl::<Bf16>(&q, &k, &v, 128, 16, 0.25, &sig, &ln);
+        assert!(got.iter().all(|x| x.is_finite()));
+        // 8-segment PWL nonlinearities drift the recursion state; the paper
+        // validates this operating point at the *reply* level (llama2.c),
+        // not bitwise — we bound the numeric drift and check argmax-level
+        // agreement in model::engine tests.
+        assert!(max_abs_diff(&gold, &got) < 0.6, "{}", max_abs_diff(&gold, &got));
+    }
+
+    #[test]
+    fn pwl_variant_fp8_finite() {
+        let sig = SigmoidPwl::new();
+        let ln = LnPwl::new();
+        let (q, k, v) = problem(12, 64, 8, 0.7);
+        let got = attention_pwl::<Fp8E4M3>(&q, &k, &v, 64, 8, 0.35, &sig, &ln);
+        assert!(got.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn traced_weights_in_unit_interval_and_first_is_one() {
+        let (q, k, v) = problem(13, 64, 8, 1.5);
+        let (_, tr) = attention_traced(&q, &k, &v, 64, 8, 1.0);
+        assert_eq!(tr.weights[0], 1.0);
+        for &w in &tr.weights {
+            assert!((0.0..=1.0).contains(&w));
+        }
+        assert_eq!(tr.scores.len(), 64);
+    }
+}

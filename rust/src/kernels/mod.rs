@@ -1,0 +1,106 @@
+//! Software reference implementations of the four attention formulations
+//! the paper discusses, all over the same flat-slice data layout:
+//!
+//! * [`naive`]  — safe-softmax attention (mathematical ground truth),
+//! * [`flash1`] — Alg. 1, baseline FlashAttention (incremental division),
+//! * [`flash2`] — Alg. 2, FlashAttention2 (lazy division) — the baseline
+//!   the paper's hardware comparison is against,
+//! * [`flashd`] — Alg. 3, the paper's contribution (division hidden in the
+//!   sigmoid), plus instrumented / reduced-precision / PWL variants.
+//!
+//! Layout convention: `k` and `v` are row-major `(n, d)` flat slices; `q`
+//! is a single query of length `d`. Multi-query helpers take `(nq, d)`.
+
+pub mod flash1;
+pub mod flash2;
+pub mod flashd;
+pub mod naive;
+
+/// Dot product of two length-`d` slices.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f32;
+    for i in 0..a.len() {
+        acc += a[i] * b[i];
+    }
+    acc
+}
+
+/// Maximum absolute difference between two vectors.
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+/// A bundle of Q/K/V for one attention head, in the flat layout all
+/// kernels consume.
+#[derive(Clone, Debug)]
+pub struct AttnProblem {
+    pub nq: usize,
+    pub nkv: usize,
+    pub d: usize,
+    pub q: Vec<f32>,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub scale: f32,
+}
+
+impl AttnProblem {
+    /// Random Gaussian problem (queries/keys scaled so scores are O(score_std)).
+    pub fn random(rng: &mut crate::util::rng::Rng, nq: usize, nkv: usize, d: usize, score_std: f32) -> Self {
+        let qk_std = (score_std / (d as f32).sqrt()).sqrt();
+        AttnProblem {
+            nq,
+            nkv,
+            d,
+            q: rng.normal_vec(nq * d, qk_std),
+            k: rng.normal_vec(nkv * d, qk_std),
+            v: rng.normal_vec(nkv * d, 1.0),
+            scale: 1.0,
+        }
+    }
+
+    pub fn q_row(&self, i: usize) -> &[f32] {
+        &self.q[i * self.d..(i + 1) * self.d]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// The paper's headline equivalence: all four formulations compute the
+    /// same function.
+    #[test]
+    fn all_four_formulations_agree() {
+        let mut rng = Rng::new(0xF1A5D);
+        for &(n, d) in &[(1usize, 4usize), (3, 8), (64, 16), (257, 32)] {
+            let p = AttnProblem::random(&mut rng, 1, n, d, 4.0);
+            let gold = naive::attention(&p.q, &p.k, &p.v, n, d, p.scale);
+            let f1 = flash1::attention(&p.q, &p.k, &p.v, n, d, p.scale);
+            let f2 = flash2::attention(&p.q, &p.k, &p.v, n, d, p.scale);
+            let fd = flashd::attention(&p.q, &p.k, &p.v, n, d, p.scale);
+            assert!(max_abs_diff(&gold, &f1) < 2e-5, "flash1 n={n} d={d}");
+            assert!(max_abs_diff(&gold, &f2) < 2e-5, "flash2 n={n} d={d}");
+            assert!(max_abs_diff(&gold, &fd) < 2e-5, "flashd n={n} d={d}");
+        }
+    }
+
+    #[test]
+    fn dot_basic() {
+        assert_eq!(dot(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]), 32.0);
+        assert_eq!(dot(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn random_problem_score_scale() {
+        let mut rng = Rng::new(1);
+        let p = AttnProblem::random(&mut rng, 1, 512, 32, 4.0);
+        let scores: Vec<f32> = (0..p.nkv)
+            .map(|i| dot(&p.q[0..p.d], &p.k[i * p.d..(i + 1) * p.d]))
+            .collect();
+        let std = crate::util::stddev(&scores.iter().map(|&x| x as f64).collect::<Vec<_>>());
+        assert!(std > 1.0 && std < 16.0, "score std {std}");
+    }
+}

@@ -1,0 +1,120 @@
+//! Safe-softmax attention — the mathematical ground truth every other
+//! kernel is validated against (paper §II-A).
+
+use super::dot;
+
+/// Single-query attention: `q` is `(d,)`, `k`/`v` are `(n, d)` flat.
+pub fn attention(q: &[f32], k: &[f32], v: &[f32], n: usize, d: usize, scale: f32) -> Vec<f32> {
+    assert_eq!(q.len(), d);
+    assert_eq!(k.len(), n * d);
+    assert_eq!(v.len(), n * d);
+    let mut scores = Vec::with_capacity(n);
+    let mut m = f32::NEG_INFINITY;
+    for i in 0..n {
+        let s = dot(q, &k[i * d..(i + 1) * d]) * scale;
+        m = m.max(s);
+        scores.push(s);
+    }
+    // safe softmax: subtract the max before exponentiating
+    let mut denom = 0.0f32;
+    for s in scores.iter_mut() {
+        *s = (*s - m).exp();
+        denom += *s;
+    }
+    let mut out = vec![0.0f32; d];
+    for i in 0..n {
+        let w = scores[i] / denom;
+        let vi = &v[i * d..(i + 1) * d];
+        for j in 0..d {
+            out[j] += w * vi[j];
+        }
+    }
+    out
+}
+
+/// Multi-query attention; `q` is `(nq, d)` flat, output `(nq, d)` flat.
+pub fn attention_multi(q: &[f32], k: &[f32], v: &[f32], nq: usize, nkv: usize, d: usize, scale: f32) -> Vec<f32> {
+    let mut out = Vec::with_capacity(nq * d);
+    for iq in 0..nq {
+        out.extend(attention(&q[iq * d..(iq + 1) * d], k, v, nkv, d, scale));
+    }
+    out
+}
+
+/// Causal multi-query attention for `nq == nkv` (token i attends to 0..=i).
+pub fn attention_causal(q: &[f32], k: &[f32], v: &[f32], n: usize, d: usize, scale: f32) -> Vec<f32> {
+    let mut out = Vec::with_capacity(n * d);
+    for iq in 0..n {
+        let nkv = iq + 1;
+        out.extend(attention(&q[iq * d..(iq + 1) * d], &k[..nkv * d], &v[..nkv * d], nkv, d, scale));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_key_returns_value() {
+        let q = [1.0, 0.0];
+        let k = [0.3, 0.4];
+        let v = [5.0, -7.0];
+        assert_eq!(attention(&q, &k, &v, 1, 2, 1.0), vec![5.0, -7.0]);
+    }
+
+    #[test]
+    fn uniform_scores_average_values() {
+        // orthogonal q -> all scores equal -> output = mean of values
+        let q = [0.0, 0.0];
+        let k = [1.0, 0.0, 0.0, 1.0];
+        let v = [2.0, 0.0, 4.0, 6.0];
+        let out = attention(&q, &k, &v, 2, 2, 1.0);
+        assert!((out[0] - 3.0).abs() < 1e-6);
+        assert!((out[1] - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn dominant_score_selects_value() {
+        let q = [10.0];
+        let k = [10.0, -10.0];
+        let v = [1.0, -1.0];
+        let out = attention(&q, &k, &v, 2, 1, 1.0);
+        assert!((out[0] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn huge_scores_stay_finite() {
+        let q = [300.0, 300.0];
+        let k = [300.0, 300.0, -300.0, 300.0];
+        let v = [1.0, 2.0, 3.0, 4.0];
+        let out = attention(&q, &k, &v, 2, 2, 1.0);
+        assert!(out.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn causal_last_row_matches_full() {
+        let mut rng = crate::util::rng::Rng::new(2);
+        let n = 16;
+        let d = 8;
+        let q = rng.normal_vec(n * d, 0.5);
+        let k = rng.normal_vec(n * d, 0.5);
+        let v = rng.normal_vec(n * d, 1.0);
+        let causal = attention_causal(&q, &k, &v, n, d, 1.0);
+        let last_full = attention(&q[(n - 1) * d..], &k, &v, n, d, 1.0);
+        for j in 0..d {
+            assert!((causal[(n - 1) * d + j] - last_full[j]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn scale_changes_sharpness() {
+        let q = [1.0];
+        let k = [1.0, -1.0];
+        let v = [1.0, 0.0];
+        let soft = attention(&q, &k, &v, 2, 1, 0.1)[0];
+        let sharp = attention(&q, &k, &v, 2, 1, 10.0)[0];
+        assert!(sharp > soft);
+        assert!(sharp > 0.99 && soft < 0.6);
+    }
+}

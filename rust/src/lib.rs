@@ -1,0 +1,28 @@
+//! # FLASH-D — FlashAttention with Hidden Softmax Division
+//!
+//! Rust reproduction of *FLASH-D* (Alexandridis, Titopoulos,
+//! Dimitrakopoulos, 2025): a mathematically equivalent reformulation of the
+//! FlashAttention forward pass that hides the softmax division inside a
+//! sigmoid evaluation, removes the running max / sum-of-exponents state, and
+//! enables skipping output updates when consecutive attention-score
+//! differences saturate the sigmoid.
+//!
+//! The crate is the Layer-3 side of a three-layer stack:
+//!  * Layer 1 (build time): Pallas kernels in `python/compile/kernels/`,
+//!  * Layer 2 (build time): the JAX transformer in `python/compile/model.py`,
+//!  * Layer 3 (this crate): PJRT runtime, serving coordinator, training
+//!    driver, software kernels, and the 28 nm hardware cost model used to
+//!    reproduce the paper's figures.
+//!
+//! See DESIGN.md for the system inventory and the experiment index.
+
+pub mod bench_harness;
+pub mod coordinator;
+pub mod hw;
+pub mod kernels;
+pub mod model;
+pub mod numerics;
+pub mod pwl;
+pub mod runtime;
+pub mod train;
+pub mod util;

@@ -1,0 +1,201 @@
+//! `flashd` — the FLASH-D coordinator CLI.
+//!
+//! Subcommands:
+//!   serve      run the attention-serving coordinator on a synthetic workload
+//!   train      train a zoo model through the AOT train_step artifact
+//!   generate   decode text with a trained model (Rust engine, FLASH-D)
+//!   table1     reproduce Table I (skip percentages)
+//!   fig2       reproduce Fig. 2 (weight function curves)
+//!   fig4       reproduce Fig. 4 (area comparison)
+//!   fig5       reproduce Fig. 5 (power comparison)
+//!   info       list artifacts and models
+
+use flashd::bench_harness::{table1, traces, workload};
+use flashd::coordinator::{Coordinator, CoordinatorConfig};
+use flashd::hw::{area, power, CostDb, Format};
+use flashd::kernels::flashd::weight;
+use flashd::model::engine::Engine;
+use flashd::model::tokenizer::ByteTokenizer;
+use flashd::train::{train, TrainOptions};
+use flashd::util::cli::Args;
+
+const HELP: &str = "flashd — FLASH-D attention coordinator
+
+USAGE: flashd <command> [--options]
+
+COMMANDS:
+  info                               list artifacts + models
+  serve    [--sessions N] [--decode N] [--variant flashd|flash2]
+  train    [--model NAME] [--steps N] [--seed N] [--no-save]
+  generate [--model NAME] [--prompt TEXT] [--tokens N]
+  table1   [--prompts N] [--tokens N]
+  fig2 | fig4 | fig5                 regenerate paper figures
+  help                               this text
+
+Artifacts default to ./artifacts (override with FLASHD_ARTIFACTS).";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().cloned().unwrap_or_else(|| "help".into());
+    let args = Args::parse(argv.into_iter().skip(1), &["no-save", "quiet"]);
+    let dir = flashd::runtime::default_artifact_dir();
+
+    let result = match cmd.as_str() {
+        "info" => cmd_info(&dir),
+        "serve" => cmd_serve(&dir, &args),
+        "train" => cmd_train(&dir, &args),
+        "generate" => cmd_generate(&dir, &args),
+        "table1" => cmd_table1(&dir, &args),
+        "fig2" => cmd_fig2(),
+        "fig4" => cmd_fig4(),
+        "fig5" => cmd_fig5(&dir),
+        _ => {
+            println!("{HELP}");
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_info(dir: &std::path::Path) -> anyhow::Result<()> {
+    let man = flashd::runtime::Manifest::load(dir)?;
+    println!("artifacts ({}):", man.artifacts.len());
+    for (name, a) in &man.artifacts {
+        println!("  {:<34} kind={:<10} inputs={} outputs={}", name, a.kind, a.inputs.len(), a.n_outputs);
+    }
+    println!("models ({}):", man.models.len());
+    for (name, m) in &man.models {
+        println!(
+            "  {:<12} layers={} d_model={} heads={} params={}",
+            name, m.n_layers, m.d_model, m.n_heads,
+            flashd::util::fmt_thousands(m.n_params as f64)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(dir: &std::path::Path, args: &Args) -> anyhow::Result<()> {
+    let sessions = args.get_usize("sessions", 4);
+    let decode = args.get_usize("decode", 16);
+    let variant = match args.get_or("variant", "flashd") {
+        "flash2" => flashd::coordinator::Variant::Flash2,
+        _ => flashd::coordinator::Variant::FlashD,
+    };
+    let cfg = CoordinatorConfig { artifact_dir: dir.to_path_buf(), ..Default::default() };
+    let coord = Coordinator::start(cfg)?;
+    let spec = workload::WorkloadSpec { sessions, decode_steps: decode, variant, ..Default::default() };
+    println!("serving {} sessions x {} decode steps ({:?}) ...", sessions, decode, variant);
+    let t = std::time::Instant::now();
+    for s in 0..sessions as u64 {
+        for req in workload::session_requests(&spec, s, s * 1000) {
+            let resp = coord.submit_blocking(req);
+            if let Err(e) = resp.output {
+                anyhow::bail!("request failed: {e}");
+            }
+        }
+    }
+    let wall = t.elapsed();
+    let snap = coord.metrics.snapshot();
+    println!("{}", snap.render());
+    println!(
+        "wall {:.2}s  ({:.1} req/s)",
+        wall.as_secs_f64(),
+        snap.responses as f64 / wall.as_secs_f64()
+    );
+    coord.shutdown();
+    Ok(())
+}
+
+fn cmd_train(dir: &std::path::Path, args: &Args) -> anyhow::Result<()> {
+    let opts = TrainOptions {
+        model: args.get_or("model", "phi-tiny").to_string(),
+        steps: args.get_usize("steps", 300),
+        seed: args.get_u64("seed", 0),
+        log_every: args.get_usize("log-every", 20),
+        save: !args.flag("no-save"),
+        quiet: args.flag("quiet"),
+    };
+    let report = train(dir, &opts)?;
+    println!(
+        "trained {}: loss {:.4} -> {:.4} over {} steps ({:.0} tok/s, {:.1}s)",
+        report.model, report.first_loss, report.final_loss, report.steps,
+        report.tokens_per_s, report.wall_s
+    );
+    Ok(())
+}
+
+fn cmd_generate(dir: &std::path::Path, args: &Args) -> anyhow::Result<()> {
+    let model = args.get_or("model", "phi-tiny");
+    let prompt = args.get_or("prompt", "question: why do people wear coats in winter? answer:");
+    let n = args.get_usize("tokens", 48);
+    let mut engine = Engine::from_artifacts(dir, model)?;
+    engine.criterion = flashd::kernels::flashd::SkipCriterion::Static;
+    let tok = ByteTokenizer;
+    let ids = tok.encode(prompt);
+    let (out, stats) = engine.greedy_decode_fast(&ids, n);
+    println!("{}", tok.decode(&out));
+    println!(
+        "\n[skips: {:.2}% of {} output updates ({} low / {} high)]",
+        stats.skip.percent(), stats.skip.total, stats.skip.skip_low, stats.skip.skip_high
+    );
+    Ok(())
+}
+
+fn cmd_table1(dir: &std::path::Path, args: &Args) -> anyhow::Result<()> {
+    let opts = table1::Table1Options {
+        prompts_per_suite: args.get_usize("prompts", 6),
+        decode_tokens: args.get_usize("tokens", 16),
+        ..Default::default()
+    };
+    let cells = table1::run_all(dir, &opts)?;
+    println!("{}", table1::render_table(&cells));
+    std::fs::create_dir_all("reports").ok();
+    std::fs::write("reports/table1.csv", table1::to_csv(&cells))?;
+    println!("wrote reports/table1.csv");
+    Ok(())
+}
+
+fn cmd_fig2() -> anyhow::Result<()> {
+    let mut csv = String::from("s_diff,w_prev_0.99,w_prev_0.5,w_prev_0.1,w_prev_0.01\n");
+    println!("Fig. 2: w_i = sigmoid(s_diff + ln w_prev)");
+    for i in -100..=140 {
+        let x = i as f64 / 10.0;
+        let row: Vec<f64> = [0.99, 0.5, 0.1, 0.01].iter().map(|&wp| weight(x, wp)).collect();
+        csv.push_str(&format!("{x},{},{},{},{}\n", row[0], row[1], row[2], row[3]));
+    }
+    std::fs::create_dir_all("reports").ok();
+    std::fs::write("reports/fig2.csv", csv)?;
+    println!("wrote reports/fig2.csv");
+    Ok(())
+}
+
+fn cmd_fig4() -> anyhow::Result<()> {
+    let db = CostDb::tsmc28();
+    let rows = area::fig4_rows(&db);
+    println!("{}", area::render_table(&rows));
+    std::fs::create_dir_all("reports").ok();
+    std::fs::write("reports/fig4.csv", area::to_csv(&rows))?;
+    println!("wrote reports/fig4.csv");
+    Ok(())
+}
+
+fn cmd_fig5(dir: &std::path::Path) -> anyhow::Result<()> {
+    let db = CostDb::tsmc28();
+    let dir = dir.to_path_buf();
+    let rows = power::fig5_rows(
+        &|fmt| match fmt {
+            Format::BF16 => traces::measured_activity::<flashd::numerics::Bf16>(&dir, 2),
+            Format::FP8_E4M3 => traces::measured_activity::<flashd::numerics::Fp8E4M3>(&dir, 2),
+            Format::FP32 => traces::measured_activity::<f32>(&dir, 2),
+        },
+        &db,
+    );
+    println!("{}", power::render_table(&rows));
+    std::fs::create_dir_all("reports").ok();
+    std::fs::write("reports/fig5.csv", power::to_csv(&rows))?;
+    println!("wrote reports/fig5.csv");
+    Ok(())
+}

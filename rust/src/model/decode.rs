@@ -1,0 +1,238 @@
+//! KV-cached incremental decoding — the §Perf optimization of the engine
+//! hot path. `Engine::greedy_decode` recomputes the full window forward for
+//! every generated token (O(n · L · full-forward)); a [`DecodeSession`]
+//! carries per-layer KV caches so each new token costs one projection set,
+//! one FLASH-D attention *row* per head, and one MLP row.
+//!
+//! Numerically identical to the full forward (same FLASH-D recursion, same
+//! QK-norm), verified in tests and in `EXPERIMENTS.md` §Perf.
+
+use crate::kernels::flashd::{self, SkipCriterion};
+use crate::model::engine::{Engine, ForwardStats};
+
+/// Per-layer attention cache: normalized keys + values, per head,
+/// contiguous (len, d_head) each.
+struct LayerCache {
+    /// per head: (cap, dh) flat, prefix `len` valid
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+}
+
+/// A streaming decode session over an [`Engine`].
+pub struct DecodeSession<'a> {
+    engine: &'a Engine,
+    layers: Vec<LayerCache>,
+    pub pos: usize,
+    pub stats: ForwardStats,
+    criterion: SkipCriterion,
+}
+
+fn rms_inv(row: &[f32]) -> f32 {
+    let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / row.len() as f32;
+    1.0 / (ms + 1e-6).sqrt()
+}
+
+fn vecmat(x: &[f32], w: &[f32], k: usize, n: usize) -> Vec<f32> {
+    // (1,k) @ (k,n)
+    let mut out = vec![0.0f32; n];
+    for (kk, &xv) in x.iter().enumerate().take(k) {
+        if xv == 0.0 {
+            continue;
+        }
+        let row = &w[kk * n..(kk + 1) * n];
+        for j in 0..n {
+            out[j] += xv * row[j];
+        }
+    }
+    out
+}
+
+impl<'a> DecodeSession<'a> {
+    pub fn new(engine: &'a Engine) -> DecodeSession<'a> {
+        let nl = engine.info.n_layers;
+        let nh = engine.info.n_heads;
+        let layers = (0..nl)
+            .map(|_| LayerCache {
+                k: vec![Vec::new(); nh],
+                v: vec![Vec::new(); nh],
+            })
+            .collect();
+        DecodeSession {
+            engine,
+            layers,
+            pos: 0,
+            stats: ForwardStats::default(),
+            criterion: engine.criterion,
+        }
+    }
+
+    /// Remaining capacity before the positional table runs out.
+    pub fn remaining(&self) -> usize {
+        self.engine.info.seq_len - self.pos
+    }
+
+    /// Feed one token; returns the logits row (vocab,) for predicting the
+    /// next token.
+    pub fn push_token(&mut self, token: i32) -> Vec<f32> {
+        let info = &self.engine.info;
+        assert!(self.pos < info.seq_len, "positional capacity exhausted");
+        let dm = info.d_model;
+        let nh = info.n_heads;
+        let dh = info.d_head();
+        let scale = info.qk_gain as f32 * (dh as f32).powf(-0.5);
+
+        let tok_emb = &self.engine.param("tok_emb").data;
+        let pos_emb = &self.engine.param("pos_emb").data;
+        let t = token.clamp(0, info.vocab_size as i32 - 1) as usize;
+        let mut x: Vec<f32> = (0..dm)
+            .map(|j| tok_emb[t * dm + j] + pos_emb[self.pos * dm + j])
+            .collect();
+
+        for layer in 0..info.n_layers {
+            let pfx = format!("l{layer}");
+            // attention
+            let g1 = &self.engine.param(&format!("{pfx}.ln1")).data;
+            let inv = rms_inv(&x);
+            let h: Vec<f32> = x.iter().zip(g1).map(|(v, g)| v * inv * g).collect();
+            let q = vecmat(&h, &self.engine.param(&format!("{pfx}.wq")).data, dm, dm);
+            let k = vecmat(&h, &self.engine.param(&format!("{pfx}.wk")).data, dm, dm);
+            let v = vecmat(&h, &self.engine.param(&format!("{pfx}.wv")).data, dm, dm);
+
+            let mut attn = vec![0.0f32; dm];
+            let cache = &mut self.layers[layer];
+            for head in 0..nh {
+                let mut qh = q[head * dh..(head + 1) * dh].to_vec();
+                let mut kh = k[head * dh..(head + 1) * dh].to_vec();
+                // QK-norm on the new row only (cache already stores
+                // normalized keys)
+                let qi = rms_inv(&qh);
+                qh.iter_mut().for_each(|v| *v *= qi);
+                let ki = rms_inv(&kh);
+                kh.iter_mut().for_each(|v| *v *= ki);
+
+                cache.k[head].extend_from_slice(&kh);
+                cache.v[head].extend_from_slice(&v[head * dh..(head + 1) * dh]);
+                let n = self.pos + 1;
+                let (o, st) = flashd::attention_instrumented(
+                    &qh,
+                    &cache.k[head],
+                    &cache.v[head],
+                    n,
+                    dh,
+                    scale,
+                    self.criterion,
+                );
+                self.stats.skip.merge(&st);
+                self.stats.rows += 1;
+                attn[head * dh..(head + 1) * dh].copy_from_slice(&o);
+            }
+            let proj = vecmat(&attn, &self.engine.param(&format!("{pfx}.wo")).data, dm, dm);
+            for j in 0..dm {
+                x[j] += proj[j];
+            }
+            // MLP
+            let g2 = &self.engine.param(&format!("{pfx}.ln2")).data;
+            let inv = rms_inv(&x);
+            let h2: Vec<f32> = x.iter().zip(g2).map(|(v, g)| v * inv * g).collect();
+            let dff = info.d_ff;
+            let mut gate = vecmat(&h2, &self.engine.param(&format!("{pfx}.w_gate")).data, dm, dff);
+            let up = vecmat(&h2, &self.engine.param(&format!("{pfx}.w_up")).data, dm, dff);
+            for j in 0..dff {
+                let g = gate[j];
+                gate[j] = g / (1.0 + (-g).exp()) * up[j];
+            }
+            let down = vecmat(&gate, &self.engine.param(&format!("{pfx}.w_down")).data, dff, dm);
+            for j in 0..dm {
+                x[j] += down[j];
+            }
+        }
+
+        // final norm + tied logits
+        let gf = &self.engine.param("ln_f").data;
+        let inv = rms_inv(&x);
+        let xf: Vec<f32> = x.iter().zip(gf).map(|(v, g)| v * inv * g).collect();
+        let vocab = info.vocab_size;
+        let mut logits = vec![0.0f32; vocab];
+        for tt in 0..vocab {
+            logits[tt] = crate::kernels::dot(&xf, &tok_emb[tt * dm..(tt + 1) * dm]);
+        }
+        self.pos += 1;
+        logits
+    }
+}
+
+impl Engine {
+    /// Start a KV-cached decode session.
+    pub fn start_session(&self) -> DecodeSession<'_> {
+        DecodeSession::new(self)
+    }
+
+    /// Fast greedy decode via the KV cache (same function as
+    /// [`Engine::greedy_decode`], ~O(window) faster per token).
+    pub fn greedy_decode_fast(&self, prompt: &[i32], n: usize) -> (Vec<i32>, ForwardStats) {
+        let mut toks = prompt.to_vec();
+        let mut sess = self.start_session();
+        let mut last_logits = Vec::new();
+        // clamp prompt into the positional window (keep the tail)
+        let start = toks.len().saturating_sub(self.info.seq_len);
+        for &t in &toks[start..] {
+            last_logits = sess.push_token(t);
+        }
+        for _ in 0..n {
+            if sess.remaining() == 0 {
+                break;
+            }
+            let next = crate::model::sampler::greedy(&last_logits);
+            toks.push(next);
+            last_logits = sess.push_token(next);
+        }
+        (toks, sess.stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::engine::test_support::tiny_engine;
+
+    #[test]
+    fn incremental_logits_match_full_forward() {
+        let e = tiny_engine(21);
+        let toks: Vec<i32> = (0..12).map(|i| (i * 5 + 2) % 32).collect();
+        let (full, _) = e.forward(&toks);
+        let v = e.info.vocab_size;
+        let mut sess = e.start_session();
+        for (i, &t) in toks.iter().enumerate() {
+            let row = sess.push_token(t);
+            let want = &full[i * v..(i + 1) * v];
+            let diff = crate::kernels::max_abs_diff(&row, want);
+            assert!(diff < 2e-4, "position {i}: {diff}");
+        }
+    }
+
+    #[test]
+    fn fast_greedy_matches_slow_greedy() {
+        let e = tiny_engine(22);
+        let prompt = [3i32, 1, 4, 1, 5];
+        let (slow, _) = e.greedy_decode(&prompt, 8);
+        let (fast, _) = e.greedy_decode_fast(&prompt, 8);
+        assert_eq!(slow, fast);
+    }
+
+    #[test]
+    fn skip_stats_accumulate() {
+        let e = tiny_engine(23);
+        let (_, stats) = e.greedy_decode_fast(&[1, 2, 3], 6);
+        // rows = layers * heads * tokens_pushed
+        assert_eq!(stats.rows, (2 * 2 * (3 + 6)) as u64);
+    }
+
+    #[test]
+    fn capacity_guard() {
+        let e = tiny_engine(24);
+        let long: Vec<i32> = (0..e.info.seq_len as i32).collect();
+        let (out, _) = e.greedy_decode_fast(&long, 10);
+        // window full: no room to extend
+        assert_eq!(out.len(), e.info.seq_len);
+    }
+}

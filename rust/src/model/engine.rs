@@ -1,0 +1,444 @@
+//! The pure-Rust transformer forward pass with instrumented FLASH-D
+//! attention. Mirrors `python/compile/model.py` exactly: same parameter
+//! ABI (manifest `param_spec` order/names), RMSNorm(eps=1e-6), SwiGLU MLP,
+//! learned positional embeddings, tied output embedding.
+//!
+//! Correctness is cross-validated against the AOT `model_fwd_*` artifact in
+//! `rust/tests/e2e_runtime.rs` — the same weights must produce the same
+//! logits through the PJRT path and through this engine.
+
+use crate::kernels::flashd::{self, SkipCriterion, SkipStats};
+use crate::kernels::AttnProblem;
+use crate::model::weights::NamedTensor;
+use crate::runtime::ModelInfo;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+
+/// Aggregated statistics from one forward pass.
+#[derive(Clone, Debug, Default)]
+pub struct ForwardStats {
+    /// FLASH-D skip statistics across all layers/heads/rows.
+    pub skip: SkipStats,
+    /// Total attention rows evaluated.
+    pub rows: u64,
+}
+
+impl ForwardStats {
+    pub fn merge(&mut self, other: &ForwardStats) {
+        self.skip.merge(&other.skip);
+        self.rows += other.rows;
+    }
+}
+
+/// The inference engine for one zoo model.
+pub struct Engine {
+    pub info: ModelInfo,
+    params: HashMap<String, NamedTensor>,
+    /// Skip criterion applied by the instrumented attention.
+    pub criterion: SkipCriterion,
+}
+
+fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+    out
+}
+
+fn rmsnorm(x: &[f32], g: &[f32], rows: usize, d: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; rows * d];
+    for r in 0..rows {
+        let row = &x[r * d..(r + 1) * d];
+        let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let inv = 1.0 / (ms + 1e-6).sqrt();
+        for j in 0..d {
+            out[r * d + j] = row[j] * inv * g[j];
+        }
+    }
+    out
+}
+
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// Gain-free RMS normalization of each row (QK-norm), in place.
+fn qk_normalize(x: &mut [f32], rows: usize, d: usize) {
+    for r in 0..rows {
+        let row = &mut x[r * d..(r + 1) * d];
+        let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let inv = 1.0 / (ms + 1e-6).sqrt();
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+impl Engine {
+    /// Build from a model description + its weight tensors, verifying the
+    /// parameter ABI.
+    pub fn new(info: ModelInfo, tensors: Vec<NamedTensor>) -> Result<Engine> {
+        if tensors.len() != info.param_spec.len() {
+            return Err(anyhow!(
+                "weight count {} != spec {}",
+                tensors.len(),
+                info.param_spec.len()
+            ));
+        }
+        let mut params = HashMap::new();
+        for (t, (name, shape)) in tensors.into_iter().zip(&info.param_spec) {
+            if &t.name != name || &t.shape != shape {
+                return Err(anyhow!(
+                    "ABI mismatch: got {}{:?}, spec wants {}{:?}",
+                    t.name, t.shape, name, shape
+                ));
+            }
+            params.insert(t.name.clone(), t);
+        }
+        Ok(Engine { info, params, criterion: SkipCriterion::Static })
+    }
+
+    /// Load a zoo model from the artifact directory (weights default to the
+    /// trained file `weights_<name>.fdw` if present, else the init file).
+    pub fn from_artifacts(dir: &std::path::Path, name: &str) -> Result<Engine> {
+        let man = crate::runtime::Manifest::load(dir)?;
+        let info = man
+            .models
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown model '{name}'"))?
+            .clone();
+        let trained = dir.join(format!("weights_{name}.fdw"));
+        let path = if trained.exists() { trained } else { dir.join(&info.init_weights) };
+        let tensors = crate::model::weights::read_fdw(&path)?;
+        Engine::new(info, tensors)
+    }
+
+    fn p(&self, name: &str) -> &NamedTensor {
+        &self.params[name]
+    }
+
+    /// Parameter access for sibling modules (decode session).
+    pub(crate) fn param(&self, name: &str) -> &NamedTensor {
+        &self.params[name]
+    }
+
+    /// Forward pass: logits (L, vocab) for a token window (L <= seq_len).
+    pub fn forward(&self, tokens: &[i32]) -> (Vec<f32>, ForwardStats) {
+        let (logits, stats, _) = self.forward_inner(tokens, false);
+        (logits, stats)
+    }
+
+    /// Forward pass that also captures per-layer/head attention problems
+    /// (the stimulus source for the hardware power model).
+    pub fn forward_capture(&self, tokens: &[i32]) -> (Vec<f32>, ForwardStats, Vec<AttnProblem>) {
+        self.forward_inner(tokens, true)
+    }
+
+    fn forward_inner(&self, tokens: &[i32], capture: bool) -> (Vec<f32>, ForwardStats, Vec<AttnProblem>) {
+        let info = &self.info;
+        let l = tokens.len();
+        assert!(l >= 1 && l <= info.seq_len, "window {l} vs seq_len {}", info.seq_len);
+        let dm = info.d_model;
+        let nh = info.n_heads;
+        let dh = info.d_head();
+        // QK-norm attention: score = qk_gain * (q^ . k^) / sqrt(dh)
+        let scale = info.qk_gain as f32 * (dh as f32).powf(-0.5);
+
+        let tok_emb = &self.p("tok_emb").data;
+        let pos_emb = &self.p("pos_emb").data;
+        let mut x = vec![0.0f32; l * dm];
+        for (i, &t) in tokens.iter().enumerate() {
+            let t = t.clamp(0, info.vocab_size as i32 - 1) as usize;
+            for j in 0..dm {
+                x[i * dm + j] = tok_emb[t * dm + j] + pos_emb[i * dm + j];
+            }
+        }
+
+        let mut stats = ForwardStats::default();
+        let mut problems = Vec::new();
+
+        for layer in 0..info.n_layers {
+            let pfx = format!("l{layer}");
+            // --- attention ---
+            let h = rmsnorm(&x, &self.p(&format!("{pfx}.ln1")).data, l, dm);
+            let q = matmul(&h, &self.p(&format!("{pfx}.wq")).data, l, dm, dm);
+            let k = matmul(&h, &self.p(&format!("{pfx}.wk")).data, l, dm, dm);
+            let v = matmul(&h, &self.p(&format!("{pfx}.wv")).data, l, dm, dm);
+            let mut attn_out = vec![0.0f32; l * dm];
+            for head in 0..nh {
+                // contiguous (L, dh) per head
+                let mut qh = vec![0.0f32; l * dh];
+                let mut kh = vec![0.0f32; l * dh];
+                let mut vh = vec![0.0f32; l * dh];
+                for r in 0..l {
+                    let src = r * dm + head * dh;
+                    qh[r * dh..(r + 1) * dh].copy_from_slice(&q[src..src + dh]);
+                    kh[r * dh..(r + 1) * dh].copy_from_slice(&k[src..src + dh]);
+                    vh[r * dh..(r + 1) * dh].copy_from_slice(&v[src..src + dh]);
+                }
+                // gain-free QK-RMSNorm over the head dimension
+                qk_normalize(&mut qh, l, dh);
+                qk_normalize(&mut kh, l, dh);
+                if capture {
+                    problems.push(AttnProblem {
+                        nq: l,
+                        nkv: l,
+                        d: dh,
+                        q: qh.clone(),
+                        k: kh.clone(),
+                        v: vh.clone(),
+                        scale,
+                    });
+                }
+                // causal rows via instrumented FLASH-D
+                for r in 0..l {
+                    let nkv = r + 1;
+                    let (o, st) = flashd::attention_instrumented(
+                        &qh[r * dh..(r + 1) * dh],
+                        &kh[..nkv * dh],
+                        &vh[..nkv * dh],
+                        nkv,
+                        dh,
+                        scale,
+                        self.criterion,
+                    );
+                    stats.skip.merge(&st);
+                    stats.rows += 1;
+                    attn_out[r * dm + head * dh..r * dm + (head + 1) * dh].copy_from_slice(&o);
+                }
+            }
+            let proj = matmul(&attn_out, &self.p(&format!("{pfx}.wo")).data, l, dm, dm);
+            for i in 0..x.len() {
+                x[i] += proj[i];
+            }
+            // --- SwiGLU MLP ---
+            let h2 = rmsnorm(&x, &self.p(&format!("{pfx}.ln2")).data, l, dm);
+            let dff = info.d_ff;
+            let mut gate = matmul(&h2, &self.p(&format!("{pfx}.w_gate")).data, l, dm, dff);
+            let up = matmul(&h2, &self.p(&format!("{pfx}.w_up")).data, l, dm, dff);
+            for i in 0..gate.len() {
+                gate[i] = silu(gate[i]) * up[i];
+            }
+            let down = matmul(&gate, &self.p(&format!("{pfx}.w_down")).data, l, dff, dm);
+            for i in 0..x.len() {
+                x[i] += down[i];
+            }
+        }
+
+        // final norm + tied logits: (L, dm) @ (vocab, dm)^T
+        let xf = rmsnorm(&x, &self.p("ln_f").data, l, dm);
+        let vocab = info.vocab_size;
+        let mut logits = vec![0.0f32; l * vocab];
+        for r in 0..l {
+            let row = &xf[r * dm..(r + 1) * dm];
+            for t in 0..vocab {
+                let emb = &tok_emb[t * dm..(t + 1) * dm];
+                logits[r * vocab + t] = crate::kernels::dot(row, emb);
+            }
+        }
+        (logits, stats, problems)
+    }
+
+    /// Mean next-token negative log-likelihood of a window (teacher-forced).
+    pub fn score(&self, tokens: &[i32]) -> (f64, ForwardStats) {
+        let (logits, stats) = self.forward(tokens);
+        let v = self.info.vocab_size;
+        let l = tokens.len();
+        let mut nll = 0.0f64;
+        for r in 0..l - 1 {
+            let row = &logits[r * v..(r + 1) * v];
+            let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+            let logz: f32 = m + row.iter().map(|&x| (x - m).exp()).sum::<f32>().ln();
+            let gold = tokens[r + 1].clamp(0, v as i32 - 1) as usize;
+            nll += (logz - row[gold]) as f64;
+        }
+        (nll / (l - 1).max(1) as f64, stats)
+    }
+
+    /// Greedy decode: extend `prompt` by `n` tokens (window-clipped).
+    pub fn greedy_decode(&self, prompt: &[i32], n: usize) -> (Vec<i32>, ForwardStats) {
+        let mut toks = prompt.to_vec();
+        let mut stats = ForwardStats::default();
+        let v = self.info.vocab_size;
+        for _ in 0..n {
+            let start = toks.len().saturating_sub(self.info.seq_len);
+            let window = &toks[start..];
+            let (logits, st) = self.forward(window);
+            stats.merge(&st);
+            let last = &logits[(window.len() - 1) * v..window.len() * v];
+            let argmax = last
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i as i32)
+                .unwrap_or(0);
+            toks.push(argmax);
+        }
+        (toks, stats)
+    }
+}
+
+/// Shared fixtures for sibling-module tests.
+#[cfg(test)]
+pub(crate) mod test_support {
+    use super::*;
+    use crate::runtime::ModelInfo;
+    use crate::util::rng::Rng;
+
+    pub(crate) fn tiny_info() -> ModelInfo {
+        let (vocab, seq, dm, nh, nl, dff) = (32usize, 16usize, 16usize, 2usize, 2usize, 24usize);
+        let mut spec = vec![
+            ("tok_emb".to_string(), vec![vocab, dm]),
+            ("pos_emb".to_string(), vec![seq, dm]),
+        ];
+        for i in 0..nl {
+            for (n, s) in [
+                ("ln1", vec![dm]),
+                ("wq", vec![dm, dm]),
+                ("wk", vec![dm, dm]),
+                ("wv", vec![dm, dm]),
+                ("wo", vec![dm, dm]),
+                ("ln2", vec![dm]),
+                ("w_gate", vec![dm, dff]),
+                ("w_up", vec![dm, dff]),
+                ("w_down", vec![dff, dm]),
+            ] {
+                spec.push((format!("l{i}.{n}"), s));
+            }
+        }
+        spec.push(("ln_f".to_string(), vec![dm]));
+        let n_params = spec.iter().map(|(_, s)| s.iter().product::<usize>()).sum();
+        ModelInfo {
+            name: "test".into(),
+            vocab_size: vocab,
+            seq_len: seq,
+            d_model: dm,
+            n_heads: nh,
+            n_layers: nl,
+            d_ff: dff,
+            block_q: 8,
+            block_k: 8,
+            qk_gain: 2.75,
+            n_params,
+            param_spec: spec,
+            init_weights: String::new(),
+            train_lr: 1e-3,
+            train_batch: 2,
+        }
+    }
+
+    pub(crate) fn tiny_engine(seed: u64) -> Engine {
+        let info = tiny_info();
+        let mut rng = Rng::new(seed);
+        let tensors = info
+            .param_spec
+            .iter()
+            .map(|(name, shape)| {
+                let n: usize = shape.iter().product();
+                let data = if name.contains("ln") {
+                    vec![1.0; n]
+                } else {
+                    rng.normal_vec(n, 0.08)
+                };
+                NamedTensor { name: name.clone(), shape: shape.clone(), data }
+            })
+            .collect();
+        Engine::new(info, tensors).unwrap()
+    }
+
+    #[test]
+    fn forward_shapes_and_finite() {
+        let e = tiny_engine(1);
+        let toks: Vec<i32> = (0..12).map(|i| i % 32).collect();
+        let (logits, stats) = e.forward(&toks);
+        assert_eq!(logits.len(), 12 * 32);
+        assert!(logits.iter().all(|x| x.is_finite()));
+        // rows = layers * heads * L
+        assert_eq!(stats.rows, 2 * 2 * 12);
+    }
+
+    #[test]
+    fn causality_future_token_does_not_change_past() {
+        let e = tiny_engine(2);
+        let mut a: Vec<i32> = (0..10).map(|i| (i * 3) % 32).collect();
+        let la = e.forward(&a).0;
+        a[9] = 31;
+        let lb = e.forward(&a).0;
+        for i in 0..9 * 32 {
+            assert!((la[i] - lb[i]).abs() < 1e-5, "position {} changed", i / 32);
+        }
+    }
+
+    #[test]
+    fn abi_mismatch_detected() {
+        let info = tiny_info();
+        let mut tensors: Vec<NamedTensor> = info
+            .param_spec
+            .iter()
+            .map(|(name, shape)| NamedTensor {
+                name: name.clone(),
+                shape: shape.clone(),
+                data: vec![0.0; shape.iter().product()],
+            })
+            .collect();
+        tensors.swap(0, 1);
+        assert!(Engine::new(info, tensors).is_err());
+    }
+
+    #[test]
+    fn score_near_uniform_for_random_weights() {
+        let e = tiny_engine(3);
+        let toks: Vec<i32> = (0..16).map(|i| (i * 7) % 32).collect();
+        let (nll, _) = e.score(&toks);
+        assert!((nll - (32f64).ln()).abs() < 1.0, "nll {nll}");
+    }
+
+    #[test]
+    fn greedy_decode_deterministic_and_extends() {
+        let e = tiny_engine(4);
+        let prompt = [1i32, 2, 3];
+        let (a, stats) = e.greedy_decode(&prompt, 5);
+        let (b, _) = e.greedy_decode(&prompt, 5);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 8);
+        assert!(stats.rows > 0);
+    }
+
+    #[test]
+    fn capture_yields_layer_head_problems() {
+        let e = tiny_engine(5);
+        let toks: Vec<i32> = (0..8).collect();
+        let (_, _, problems) = e.forward_capture(&toks);
+        assert_eq!(problems.len(), 2 * 2);
+        for p in &problems {
+            assert_eq!(p.nq, 8);
+            assert_eq!(p.d, 8);
+        }
+    }
+
+    #[test]
+    fn skip_criterion_none_vs_static_same_decode() {
+        // On a trained-scale random model the static skips must not change
+        // the greedy decode (the paper's llama2.c "same replies" check).
+        let mut e = tiny_engine(6);
+        let prompt: Vec<i32> = (0..6).map(|i| (i * 5) % 32).collect();
+        e.criterion = SkipCriterion::Static;
+        let (a, _) = e.greedy_decode(&prompt, 6);
+        e.criterion = SkipCriterion::None;
+        let (b, _) = e.greedy_decode(&prompt, 6);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,18 @@
+//! Pure-Rust transformer inference engine with instrumented FLASH-D
+//! attention — the Table I measurement vehicle (the paper integrated its
+//! kernel into HuggingFace models; we integrate ours into the models
+//! trained end-to-end through the three-layer stack).
+//!
+//! The engine mirrors `python/compile/model.py` exactly (same parameter
+//! ABI, RMSNorm/SwiGLU/tied-embedding architecture) so weights trained via
+//! the AOT `train_step` artifact load directly.
+
+pub mod decode;
+pub mod engine;
+pub mod sampler;
+pub mod tokenizer;
+pub mod weights;
+
+pub use engine::{Engine, ForwardStats};
+pub use tokenizer::ByteTokenizer;
+pub use weights::{read_fdw, write_fdw, NamedTensor};

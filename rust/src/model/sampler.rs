@@ -1,0 +1,81 @@
+//! Sampling strategies over engine logits.
+
+use crate::util::rng::Rng;
+
+/// Pick the argmax token.
+pub fn greedy(logits: &[f32]) -> i32 {
+    logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i as i32)
+        .unwrap_or(0)
+}
+
+/// Temperature sampling (temperature 0 degrades to greedy).
+pub fn sample(logits: &[f32], temperature: f64, rng: &mut Rng) -> i32 {
+    if temperature <= 1e-6 {
+        return greedy(logits);
+    }
+    let m = logits.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b)) as f64;
+    let weights: Vec<f64> = logits
+        .iter()
+        .map(|&x| ((x as f64 - m) / temperature).exp())
+        .collect();
+    rng.categorical(&weights) as i32
+}
+
+/// Top-k filtering + temperature sampling.
+pub fn sample_topk(logits: &[f32], k: usize, temperature: f64, rng: &mut Rng) -> i32 {
+    if k == 0 || k >= logits.len() {
+        return sample(logits, temperature, rng);
+    }
+    let mut idx: Vec<usize> = (0..logits.len()).collect();
+    idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+    let keep = &idx[..k];
+    let m = logits[keep[0]] as f64;
+    let weights: Vec<f64> = keep
+        .iter()
+        .map(|&i| ((logits[i] as f64 - m) / temperature.max(1e-6)).exp())
+        .collect();
+    keep[rng.categorical(&weights)] as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_max() {
+        assert_eq!(greedy(&[0.1, 3.0, -1.0]), 1);
+        assert_eq!(greedy(&[5.0]), 0);
+    }
+
+    #[test]
+    fn zero_temperature_is_greedy() {
+        let mut rng = Rng::new(1);
+        assert_eq!(sample(&[0.0, 9.0, 1.0], 0.0, &mut rng), 1);
+    }
+
+    #[test]
+    fn sampling_respects_distribution() {
+        let mut rng = Rng::new(2);
+        let logits = [0.0f32, 2.0, 0.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..5000 {
+            counts[sample(&logits, 1.0, &mut rng) as usize] += 1;
+        }
+        assert!(counts[1] > counts[0] * 3);
+        assert!(counts[0] > 0 && counts[2] > 0);
+    }
+
+    #[test]
+    fn topk_excludes_tail() {
+        let mut rng = Rng::new(3);
+        let logits = [1.0f32, 0.9, -10.0, -11.0];
+        for _ in 0..200 {
+            let t = sample_topk(&logits, 2, 1.0, &mut rng);
+            assert!(t == 0 || t == 1);
+        }
+    }
+}

@@ -1,0 +1,64 @@
+//! Byte-level tokenizer (vocab 256) — the zoo models are byte-level so no
+//! external vocabulary files are needed; any UTF-8 text round-trips.
+
+/// Stateless byte tokenizer.
+#[derive(Copy, Clone, Debug, Default)]
+pub struct ByteTokenizer;
+
+impl ByteTokenizer {
+    pub const VOCAB: usize = 256;
+
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        text.as_bytes().iter().map(|&b| b as i32).collect()
+    }
+
+    /// Decode, replacing invalid UTF-8 with the replacement character.
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let bytes: Vec<u8> = ids.iter().map(|&i| (i.clamp(0, 255)) as u8).collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    /// Encode into a fixed window: right-truncate, left-pad with spaces.
+    pub fn encode_window(&self, text: &str, window: usize) -> Vec<i32> {
+        let mut ids = self.encode(text);
+        if ids.len() > window {
+            ids.truncate(window);
+        }
+        while ids.len() < window {
+            ids.insert(0, b' ' as i32);
+        }
+        ids
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ascii_roundtrip() {
+        let t = ByteTokenizer;
+        let ids = t.encode("hello, FLASH-D!");
+        assert_eq!(t.decode(&ids), "hello, FLASH-D!");
+        assert!(ids.iter().all(|&i| (0..256).contains(&i)));
+    }
+
+    #[test]
+    fn window_pads_and_truncates() {
+        let t = ByteTokenizer;
+        let w = t.encode_window("abc", 5);
+        assert_eq!(w.len(), 5);
+        assert_eq!(&w[2..], &[97, 98, 99]);
+        assert_eq!(w[0], 32);
+        let w = t.encode_window("abcdefgh", 4);
+        assert_eq!(t.decode(&w), "abcd");
+    }
+
+    #[test]
+    fn out_of_range_ids_clamped() {
+        let t = ByteTokenizer;
+        // 300 clamps to byte 0xFF (invalid UTF-8 alone -> replacement char),
+        // -5 clamps to 0, 65 is 'A'.
+        assert_eq!(t.decode(&[300, -5, 65]), "\u{fffd}\0A");
+    }
+}

@@ -1,0 +1,160 @@
+//! FDW1 binary weight files — the flat-tensor ABI shared with
+//! `python/compile/aot.py::write_fdw`.
+//!
+//! layout:  b"FDW1" | u32 n | n x ( u16 name_len | name | u8 ndim |
+//!          ndim x u32 dim | f32-LE data )
+
+use anyhow::{anyhow, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// A named f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NamedTensor {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl NamedTensor {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Read an FDW1 file.
+pub fn read_fdw(path: impl AsRef<Path>) -> Result<Vec<NamedTensor>> {
+    let mut f = std::fs::File::open(path.as_ref())
+        .map_err(|e| anyhow!("open {}: {e}", path.as_ref().display()))?;
+    let mut buf = Vec::new();
+    f.read_to_end(&mut buf)?;
+    parse_fdw(&buf)
+}
+
+pub fn parse_fdw(buf: &[u8]) -> Result<Vec<NamedTensor>> {
+    if buf.len() < 8 || &buf[0..4] != b"FDW1" {
+        return Err(anyhow!("not an FDW1 file"));
+    }
+    let n = u32::from_le_bytes(buf[4..8].try_into().unwrap()) as usize;
+    let mut off = 8usize;
+    let mut out = Vec::with_capacity(n);
+    let need = |off: usize, len: usize, total: usize| -> Result<()> {
+        if off + len > total {
+            Err(anyhow!("truncated FDW1 at byte {off}"))
+        } else {
+            Ok(())
+        }
+    };
+    for _ in 0..n {
+        need(off, 2, buf.len())?;
+        let nl = u16::from_le_bytes(buf[off..off + 2].try_into().unwrap()) as usize;
+        off += 2;
+        need(off, nl, buf.len())?;
+        let name = String::from_utf8(buf[off..off + nl].to_vec())
+            .map_err(|_| anyhow!("bad tensor name"))?;
+        off += nl;
+        need(off, 1, buf.len())?;
+        let ndim = buf[off] as usize;
+        off += 1;
+        need(off, 4 * ndim, buf.len())?;
+        let mut shape = Vec::with_capacity(ndim);
+        for i in 0..ndim {
+            shape.push(u32::from_le_bytes(buf[off + 4 * i..off + 4 * i + 4].try_into().unwrap()) as usize);
+        }
+        off += 4 * ndim;
+        let cnt: usize = if ndim == 0 { 1 } else { shape.iter().product() };
+        need(off, 4 * cnt, buf.len())?;
+        let mut data = Vec::with_capacity(cnt);
+        for i in 0..cnt {
+            data.push(f32::from_le_bytes(buf[off + 4 * i..off + 4 * i + 4].try_into().unwrap()));
+        }
+        off += 4 * cnt;
+        out.push(NamedTensor { name, shape, data });
+    }
+    if off != buf.len() {
+        return Err(anyhow!("trailing bytes in FDW1 file"));
+    }
+    Ok(out)
+}
+
+/// Write an FDW1 file.
+pub fn write_fdw(path: impl AsRef<Path>, tensors: &[NamedTensor]) -> Result<()> {
+    let mut out: Vec<u8> = Vec::new();
+    out.extend_from_slice(b"FDW1");
+    out.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
+    for t in tensors {
+        if t.numel() != t.data.len() {
+            return Err(anyhow!("tensor {}: shape/data mismatch", t.name));
+        }
+        let nb = t.name.as_bytes();
+        out.extend_from_slice(&(nb.len() as u16).to_le_bytes());
+        out.extend_from_slice(nb);
+        out.push(t.shape.len() as u8);
+        for d in &t.shape {
+            out.extend_from_slice(&(*d as u32).to_le_bytes());
+        }
+        for x in &t.data {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    let mut f = std::fs::File::create(path.as_ref())
+        .map_err(|e| anyhow!("create {}: {e}", path.as_ref().display()))?;
+    f.write_all(&out)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let tensors = vec![
+            NamedTensor { name: "a".into(), shape: vec![2, 3], data: (0..6).map(|x| x as f32).collect() },
+            NamedTensor { name: "l0.wq".into(), shape: vec![4], data: vec![1.5, -2.5, 0.0, 3.25] },
+        ];
+        let dir = std::env::temp_dir().join("flashd_fdw_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("w.fdw");
+        write_fdw(&path, &tensors).unwrap();
+        let back = read_fdw(&path).unwrap();
+        assert_eq!(back, tensors);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse_fdw(b"NOPE").is_err());
+        assert!(parse_fdw(b"FDW1\x01\x00\x00\x00").is_err()); // truncated
+        // trailing bytes
+        let tensors = vec![NamedTensor { name: "x".into(), shape: vec![1], data: vec![1.0] }];
+        let dir = std::env::temp_dir().join("flashd_fdw_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("w.fdw");
+        write_fdw(&path, &tensors).unwrap();
+        let mut buf = std::fs::read(&path).unwrap();
+        buf.push(0);
+        assert!(parse_fdw(&buf).is_err());
+    }
+
+    #[test]
+    fn shape_data_mismatch_rejected_on_write() {
+        let t = NamedTensor { name: "bad".into(), shape: vec![3], data: vec![1.0] };
+        let path = std::env::temp_dir().join("flashd_fdw_bad.fdw");
+        assert!(write_fdw(path, &[t]).is_err());
+    }
+
+    /// The python-written init weights parse (when artifacts exist).
+    #[test]
+    fn reads_python_written_file() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let path = dir.join("init_phi-tiny.fdw");
+        if !path.exists() {
+            return;
+        }
+        let tensors = read_fdw(&path).unwrap();
+        assert!(!tensors.is_empty());
+        assert_eq!(tensors[0].name, "tok_emb");
+        assert_eq!(tensors[0].shape, vec![256, 128]);
+        assert!(tensors.iter().all(|t| t.numel() == t.data.len()));
+    }
+}

@@ -1,0 +1,132 @@
+//! BFloat16: 1 sign, 8 exponent, 7 mantissa bits — the top 16 bits of an
+//! IEEE-754 binary32 value. Conversion uses round-to-nearest-even, matching
+//! both TPU hardware and the paper's BFloat16 datapath.
+
+/// A bfloat16 value stored as its raw 16 bits.
+#[derive(Copy, Clone, PartialEq, PartialOrd, Debug, Default)]
+pub struct Bf16(pub u16);
+
+impl Bf16 {
+    pub const ZERO: Bf16 = Bf16(0);
+    pub const ONE: Bf16 = Bf16(0x3F80);
+    pub const INFINITY: Bf16 = Bf16(0x7F80);
+    pub const NEG_INFINITY: Bf16 = Bf16(0xFF80);
+    /// Largest finite magnitude (~3.39e38).
+    pub const MAX: Bf16 = Bf16(0x7F7F);
+
+    /// Convert from f32 with round-to-nearest-even on the dropped 16 bits.
+    #[inline]
+    pub fn from_f32(x: f32) -> Bf16 {
+        let bits = x.to_bits();
+        if x.is_nan() {
+            // quiet NaN, preserve sign
+            return Bf16(((bits >> 16) as u16) | 0x0040);
+        }
+        let round_bit = 0x0000_8000u32;
+        let lower = bits & 0xFFFF;
+        let mut upper = (bits >> 16) as u16;
+        // round-to-nearest-even: round up if lower > half, or exactly half
+        // and the kept LSB is odd.
+        if lower > round_bit || (lower == round_bit && (upper & 1) == 1) {
+            upper = upper.wrapping_add(1); // may carry into exponent -> inf (correct)
+        }
+        Bf16(upper)
+    }
+
+    #[inline]
+    pub fn to_f32(self) -> f32 {
+        f32::from_bits((self.0 as u32) << 16)
+    }
+
+    #[inline]
+    pub fn to_bits(self) -> u16 {
+        self.0
+    }
+
+    #[inline]
+    pub fn from_bits(b: u16) -> Bf16 {
+        Bf16(b)
+    }
+
+    pub fn is_nan(self) -> bool {
+        (self.0 & 0x7F80) == 0x7F80 && (self.0 & 0x007F) != 0
+    }
+
+    pub fn is_infinite(self) -> bool {
+        (self.0 & 0x7FFF) == 0x7F80
+    }
+
+    /// Machine epsilon for bf16 (2^-7).
+    pub fn epsilon() -> f32 {
+        2.0_f32.powi(-7)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_small_integers_roundtrip() {
+        for i in -256..=256 {
+            let x = i as f32;
+            assert_eq!(Bf16::from_f32(x).to_f32(), x, "{i}");
+        }
+    }
+
+    #[test]
+    fn one_and_zero_bits() {
+        assert_eq!(Bf16::from_f32(1.0), Bf16::ONE);
+        assert_eq!(Bf16::from_f32(0.0), Bf16::ZERO);
+        assert_eq!(Bf16::from_f32(-0.0).to_bits(), 0x8000);
+    }
+
+    #[test]
+    fn round_to_nearest_even() {
+        // 1.0 + 2^-8 is exactly halfway between bf16(1.0) and the next
+        // representable value; RNE keeps the even mantissa (1.0).
+        let halfway = f32::from_bits(0x3F80_8000);
+        assert_eq!(Bf16::from_f32(halfway).to_bits(), 0x3F80);
+        // Just above halfway must round up.
+        let above = f32::from_bits(0x3F80_8001);
+        assert_eq!(Bf16::from_f32(above).to_bits(), 0x3F81);
+        // Halfway with odd kept-LSB rounds up to even.
+        let halfway_odd = f32::from_bits(0x3F81_8000);
+        assert_eq!(Bf16::from_f32(halfway_odd).to_bits(), 0x3F82);
+    }
+
+    #[test]
+    fn overflow_to_infinity() {
+        let big = f32::MAX; // rounds up past bf16 max -> inf
+        assert!(Bf16::from_f32(big).is_infinite());
+        assert!(Bf16::from_f32(-f32::MAX).to_f32().is_infinite());
+    }
+
+    #[test]
+    fn nan_propagates() {
+        assert!(Bf16::from_f32(f32::NAN).is_nan());
+        assert!(Bf16::from_f32(f32::NAN).to_f32().is_nan());
+    }
+
+    #[test]
+    fn relative_error_bounded_by_epsilon() {
+        let mut worst = 0.0f32;
+        for i in 0..10_000 {
+            let x = (i as f32 + 0.5) * 0.037 - 185.0;
+            if x == 0.0 {
+                continue;
+            }
+            let err = ((Bf16::from_f32(x).to_f32() - x) / x).abs();
+            worst = worst.max(err);
+        }
+        assert!(worst <= Bf16::epsilon() * 0.5 + 1e-7, "worst {worst}");
+    }
+
+    #[test]
+    fn ordering_matches_f32_for_positives() {
+        let vals = [0.1f32, 0.5, 1.0, 3.25, 100.0, 1e10];
+        for w in vals.windows(2) {
+            assert!(Bf16::from_f32(w[0]) < Bf16::from_f32(w[1]));
+        }
+    }
+}

@@ -1,0 +1,226 @@
+//! FP8-E4M3 per the OCP / Micikevicius et al. "FP8 formats for deep
+//! learning" spec (the paper's second datapath format):
+//!   1 sign, 4 exponent (bias 7), 3 mantissa bits,
+//!   NO infinities, NaN at S.1111.111 (0x7F / 0xFF),
+//!   max finite = 448, min normal = 2^-6, min subnormal = 2^-9.
+//! Conversion from f32 uses round-to-nearest-even with saturation to the
+//! max finite value (the standard ML-accelerator convention).
+
+/// An FP8-E4M3 value stored as its raw 8 bits.
+#[derive(Copy, Clone, PartialEq, Debug, Default)]
+pub struct Fp8E4M3(pub u8);
+
+const EXP_BIAS: i32 = 7;
+const MAX_FINITE: f32 = 448.0;
+const NAN_BITS: u8 = 0x7F;
+
+impl Fp8E4M3 {
+    pub const ZERO: Fp8E4M3 = Fp8E4M3(0);
+    pub const ONE: Fp8E4M3 = Fp8E4M3(0x38); // exp=7 -> 2^0, mant=0
+    pub const MAX: Fp8E4M3 = Fp8E4M3(0x7E); // 448.0
+
+    pub fn from_f32(x: f32) -> Fp8E4M3 {
+        if x.is_nan() {
+            return Fp8E4M3(NAN_BITS);
+        }
+        let sign = if x.is_sign_negative() { 0x80u8 } else { 0 };
+        let a = x.abs();
+        if a == 0.0 {
+            return Fp8E4M3(sign);
+        }
+        // Saturate (E4M3 has no inf).
+        if a >= MAX_FINITE * (1.0 + 1.0 / 32.0) {
+            // beyond the rounding boundary of max finite -> saturate
+            return Fp8E4M3(sign | 0x7E);
+        }
+
+        // Decompose to exponent/mantissa at f64 precision for exact RNE.
+        let af = a as f64;
+        let e = af.log2().floor() as i32;
+        let e = e.clamp(-9, 8);
+        // Normal range: e in [-6, 8]; subnormal below.
+        let (exp_field, scale) = if e < -6 {
+            (0u8, 2f64.powi(-6 - 3)) // subnormal ulp = 2^-9
+        } else {
+            (0u8, 0.0) // placeholder; handled below
+        };
+        let _ = (exp_field, scale);
+
+        let bits = if e < -6 {
+            // subnormal: value = mant * 2^-9, mant in 0..8
+            let ulp = 2f64.powi(-9);
+            let mut mant = (af / ulp).round_ties_even() as u32;
+            if mant >= 8 {
+                // rounded up into the normal range
+                0x08u8 // exp=1, mant=0 => 2^-6
+            } else if mant == 0 {
+                mant = 0;
+                mant as u8
+            } else {
+                mant as u8
+            }
+        } else {
+            // normal: value = (1 + m/8) * 2^e
+            let mut e2 = e;
+            let mut frac = af / 2f64.powi(e2);
+            if frac >= 2.0 {
+                e2 += 1;
+                frac /= 2.0;
+            }
+            let mut mant = ((frac - 1.0) * 8.0).round_ties_even() as i32;
+            if mant >= 8 {
+                mant = 0;
+                e2 += 1;
+            }
+            if e2 > 8 {
+                return Fp8E4M3(sign | 0x7E); // saturate
+            }
+            let exp_field = (e2 + EXP_BIAS) as u8;
+            if exp_field == 0x0F && mant == 7 {
+                // would encode NaN; saturate to max finite instead
+                return Fp8E4M3(sign | 0x7E);
+            }
+            (exp_field << 3) | mant as u8
+        };
+        Fp8E4M3(sign | bits)
+    }
+
+    pub fn to_f32(self) -> f32 {
+        let sign = if self.0 & 0x80 != 0 { -1.0f32 } else { 1.0 };
+        let exp = ((self.0 >> 3) & 0x0F) as i32;
+        let mant = (self.0 & 0x07) as i32;
+        if exp == 0x0F && mant == 0x07 {
+            return f32::NAN;
+        }
+        if exp == 0 {
+            // subnormal: mant * 2^-9
+            sign * mant as f32 * 2f32.powi(-9)
+        } else {
+            sign * (1.0 + mant as f32 / 8.0) * 2f32.powi(exp - EXP_BIAS)
+        }
+    }
+
+    #[inline]
+    pub fn to_bits(self) -> u8 {
+        self.0
+    }
+
+    #[inline]
+    pub fn from_bits(b: u8) -> Fp8E4M3 {
+        Fp8E4M3(b)
+    }
+
+    pub fn is_nan(self) -> bool {
+        (self.0 & 0x7F) == NAN_BITS
+    }
+}
+
+impl PartialOrd for Fp8E4M3 {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        self.to_f32().partial_cmp(&other.to_f32())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_constants() {
+        assert_eq!(Fp8E4M3::ONE.to_f32(), 1.0);
+        assert_eq!(Fp8E4M3::MAX.to_f32(), 448.0);
+        assert_eq!(Fp8E4M3::ZERO.to_f32(), 0.0);
+        assert!(Fp8E4M3(0x7F).is_nan());
+        assert!(Fp8E4M3(0xFF).is_nan());
+    }
+
+    #[test]
+    fn all_256_codes_roundtrip_through_f32() {
+        for b in 0u16..=255 {
+            let v = Fp8E4M3(b as u8);
+            if v.is_nan() {
+                assert!(v.to_f32().is_nan());
+                continue;
+            }
+            let back = Fp8E4M3::from_f32(v.to_f32());
+            assert_eq!(back.to_f32(), v.to_f32(), "code {b:#04x}");
+        }
+    }
+
+    #[test]
+    fn exact_values() {
+        // From the OCP E4M3 table.
+        assert_eq!(Fp8E4M3::from_f32(0.5).to_f32(), 0.5);
+        assert_eq!(Fp8E4M3::from_f32(1.5).to_f32(), 1.5);
+        assert_eq!(Fp8E4M3::from_f32(240.0).to_f32(), 240.0);
+        assert_eq!(Fp8E4M3::from_f32(0.015625).to_f32(), 0.015625); // 2^-6 min normal
+        assert_eq!(Fp8E4M3::from_f32(0.001953125).to_f32(), 0.001953125); // 2^-9 min subnormal
+    }
+
+    #[test]
+    fn saturates_instead_of_inf() {
+        assert_eq!(Fp8E4M3::from_f32(1e9).to_f32(), 448.0);
+        assert_eq!(Fp8E4M3::from_f32(-1e9).to_f32(), -448.0);
+        assert_eq!(Fp8E4M3::from_f32(f32::INFINITY).to_f32(), 448.0);
+        assert!(!Fp8E4M3::from_f32(1e9).is_nan());
+    }
+
+    #[test]
+    fn nan_from_f32_nan() {
+        assert!(Fp8E4M3::from_f32(f32::NAN).is_nan());
+    }
+
+    #[test]
+    fn subnormals() {
+        // 3 * 2^-9
+        let v = 3.0 * 2f32.powi(-9);
+        assert_eq!(Fp8E4M3::from_f32(v).to_f32(), v);
+        // tiny underflows to zero
+        assert_eq!(Fp8E4M3::from_f32(1e-6).to_f32(), 0.0);
+        // halfway between 0 and min subnormal: RNE -> 0 (even)
+        assert_eq!(Fp8E4M3::from_f32(2f32.powi(-10)).to_f32(), 0.0);
+    }
+
+    #[test]
+    fn round_to_nearest_even_normals() {
+        // Between 1.0 (mant 0) and 1.125 (mant 1): halfway = 1.0625 -> even (1.0)
+        assert_eq!(Fp8E4M3::from_f32(1.0625).to_f32(), 1.0);
+        // Between 1.125 and 1.25: halfway = 1.1875 -> even (1.25, mant 2)
+        assert_eq!(Fp8E4M3::from_f32(1.1875).to_f32(), 1.25);
+        // just above halfway rounds up
+        assert_eq!(Fp8E4M3::from_f32(1.07).to_f32(), 1.125);
+    }
+
+    #[test]
+    fn mantissa_rollover_carries_exponent() {
+        // 1.96875 is within half-ulp of 2.0: must carry to exponent.
+        assert_eq!(Fp8E4M3::from_f32(1.97).to_f32(), 2.0);
+    }
+
+    #[test]
+    fn values_near_448_dont_become_nan() {
+        assert_eq!(Fp8E4M3::from_f32(460.0).to_f32(), 448.0);
+        assert_eq!(Fp8E4M3::from_f32(447.0).to_f32(), 448.0);
+    }
+
+    #[test]
+    fn relative_error_bounded() {
+        let mut worst = 0.0f32;
+        for i in 1..4000 {
+            let x = i as f32 * 0.1;
+            if x > 448.0 {
+                break;
+            }
+            let err = ((Fp8E4M3::from_f32(x).to_f32() - x) / x).abs();
+            worst = worst.max(err);
+        }
+        // half-ulp of 3 mantissa bits = 2^-4 = 0.0625
+        assert!(worst <= 0.0625 + 1e-6, "worst {worst}");
+    }
+
+    #[test]
+    fn ordering() {
+        assert!(Fp8E4M3::from_f32(-1.0) < Fp8E4M3::from_f32(0.5));
+        assert!(Fp8E4M3::from_f32(2.0) < Fp8E4M3::from_f32(3.0));
+    }
+}

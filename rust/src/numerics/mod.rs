@@ -1,0 +1,170 @@
+//! Reduced-precision floating-point emulation for the hardware study.
+//!
+//! The paper evaluates its datapaths in BFloat16 and FP8-E4M3. The image has
+//! no half/float8 crates, so both formats are implemented from scratch with
+//! round-to-nearest-even conversion. Arithmetic is performed as
+//! convert -> f32 op -> convert, which models a hardware unit that keeps the
+//! operand format at its interfaces (the paper's datapaths likewise compute
+//! internal products at higher precision before renormalizing).
+
+pub mod bf16;
+pub mod fp8;
+
+pub use bf16::Bf16;
+pub use fp8::Fp8E4M3;
+
+/// A scalar number format the attention kernels can run in. This is the
+/// seam that lets the same Rust kernel code execute in f64/f32 (for
+//  correctness) and BF16/FP8 (for hardware-faithful numerics + activity
+/// traces).
+pub trait Scalar: Copy + Clone + PartialOrd + std::fmt::Debug {
+    const NAME: &'static str;
+    /// Bits in the storage format (used by the hardware cost model).
+    const BITS: u32;
+
+    fn from_f64(x: f64) -> Self;
+    fn to_f64(self) -> f64;
+
+    fn zero() -> Self {
+        Self::from_f64(0.0)
+    }
+    fn one() -> Self {
+        Self::from_f64(1.0)
+    }
+
+    fn add(self, rhs: Self) -> Self {
+        Self::from_f64(self.to_f64() + rhs.to_f64())
+    }
+    fn sub(self, rhs: Self) -> Self {
+        Self::from_f64(self.to_f64() - rhs.to_f64())
+    }
+    fn mul(self, rhs: Self) -> Self {
+        Self::from_f64(self.to_f64() * rhs.to_f64())
+    }
+    fn div(self, rhs: Self) -> Self {
+        Self::from_f64(self.to_f64() / rhs.to_f64())
+    }
+    fn max(self, rhs: Self) -> Self {
+        if self.to_f64() >= rhs.to_f64() { self } else { rhs }
+    }
+    fn exp(self) -> Self {
+        Self::from_f64(self.to_f64().exp())
+    }
+    fn ln(self) -> Self {
+        Self::from_f64(self.to_f64().ln())
+    }
+    fn sigmoid(self) -> Self {
+        let x = self.to_f64();
+        let y = if x >= 0.0 {
+            1.0 / (1.0 + (-x).exp())
+        } else {
+            let e = x.exp();
+            e / (1.0 + e)
+        };
+        Self::from_f64(y)
+    }
+
+    /// Raw storage bits, for switching-activity estimation.
+    fn bits(self) -> u64;
+}
+
+impl Scalar for f64 {
+    const NAME: &'static str = "f64";
+    const BITS: u32 = 64;
+    fn from_f64(x: f64) -> Self {
+        x
+    }
+    fn to_f64(self) -> f64 {
+        self
+    }
+    fn bits(self) -> u64 {
+        self.to_bits()
+    }
+}
+
+impl Scalar for f32 {
+    const NAME: &'static str = "f32";
+    const BITS: u32 = 32;
+    fn from_f64(x: f64) -> Self {
+        x as f32
+    }
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+    fn bits(self) -> u64 {
+        self.to_bits() as u64
+    }
+}
+
+impl Scalar for Bf16 {
+    const NAME: &'static str = "bf16";
+    const BITS: u32 = 16;
+    fn from_f64(x: f64) -> Self {
+        Bf16::from_f32(x as f32)
+    }
+    fn to_f64(self) -> f64 {
+        self.to_f32() as f64
+    }
+    fn bits(self) -> u64 {
+        self.to_bits() as u64
+    }
+}
+
+impl Scalar for Fp8E4M3 {
+    const NAME: &'static str = "fp8_e4m3";
+    const BITS: u32 = 8;
+    fn from_f64(x: f64) -> Self {
+        Fp8E4M3::from_f32(x as f32)
+    }
+    fn to_f64(self) -> f64 {
+        self.to_f32() as f64
+    }
+    fn bits(self) -> u64 {
+        self.to_bits() as u64
+    }
+}
+
+/// Hamming distance between the storage bits of two consecutive values —
+/// the toggling proxy used by the power model.
+pub fn toggle_count<T: Scalar>(a: T, b: T) -> u32 {
+    (a.bits() ^ b.bits()).count_ones()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_roundtrip_identity_formats() {
+        for &x in &[0.0, 1.0, -2.5, 1e-3, 12345.678] {
+            assert_eq!(f64::from_f64(x).to_f64(), x);
+            assert_eq!(f32::from_f64(x).to_f64(), x as f32 as f64);
+        }
+    }
+
+    #[test]
+    fn generic_ops_match_f64() {
+        let a = f64::from_f64(1.5);
+        let b = f64::from_f64(2.25);
+        assert_eq!(a.add(b), 3.75);
+        assert_eq!(a.mul(b), 3.375);
+        assert_eq!(b.sub(a), 0.75);
+        assert_eq!(b.div(a), 1.5);
+        assert_eq!(a.max(b), 2.25);
+    }
+
+    #[test]
+    fn sigmoid_stable_tails() {
+        assert!(f64::from_f64(1000.0).sigmoid().to_f64() > 0.999999);
+        assert!(f64::from_f64(-1000.0).sigmoid().to_f64() < 1e-12);
+        let mid = f64::from_f64(0.0).sigmoid().to_f64();
+        assert!((mid - 0.5).abs() < 1e-15);
+    }
+
+    #[test]
+    fn toggle_count_counts_bits() {
+        assert_eq!(toggle_count(0.0f32, 0.0f32), 0);
+        let t = toggle_count(1.0f32, -1.0f32);
+        assert_eq!(t, 1); // sign bit only
+    }
+}

@@ -1,0 +1,251 @@
+//! Continuous piece-wise-linear least-squares fitting with optimal-ish knot
+//! placement (equi-curvature rule). Plays the role of the `pwlf` Python
+//! library cited by the paper.
+
+/// A continuous PWL function defined by knot abscissae and ordinates.
+#[derive(Clone, Debug)]
+pub struct Pwl {
+    pub knots: Vec<f64>,
+    pub vals: Vec<f64>,
+}
+
+impl Pwl {
+    pub fn segments(&self) -> usize {
+        self.knots.len() - 1
+    }
+
+    /// Evaluate with saturation outside [knots[0], knots[last]].
+    pub fn eval(&self, x: f64) -> f64 {
+        let k = &self.knots;
+        let n = k.len();
+        if x <= k[0] {
+            return self.vals[0];
+        }
+        if x >= k[n - 1] {
+            return self.vals[n - 1];
+        }
+        // binary search for the segment
+        let mut lo = 0usize;
+        let mut hi = n - 1;
+        while hi - lo > 1 {
+            let mid = (lo + hi) / 2;
+            if k[mid] <= x {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        let t = (x - k[lo]) / (k[lo + 1] - k[lo]);
+        self.vals[lo] + t * (self.vals[lo + 1] - self.vals[lo])
+    }
+
+    /// Slope/intercept pairs per segment — what the hardware stores in its
+    /// coefficient ROM.
+    pub fn coefficients(&self) -> Vec<(f64, f64)> {
+        (0..self.segments())
+            .map(|i| {
+                let a = (self.vals[i + 1] - self.vals[i]) / (self.knots[i + 1] - self.knots[i]);
+                let b = self.vals[i] - a * self.knots[i];
+                (a, b)
+            })
+            .collect()
+    }
+
+    pub fn max_error_against(&self, f: impl Fn(f64) -> f64, grid: usize) -> f64 {
+        let (lo, hi) = (self.knots[0], *self.knots.last().unwrap());
+        let mut worst: f64 = 0.0;
+        for i in 0..=grid {
+            let x = lo + (hi - lo) * i as f64 / grid as f64;
+            worst = worst.max((self.eval(x) - f(x)).abs());
+        }
+        worst
+    }
+}
+
+/// Least-squares fit of the knot ordinates for FIXED knot abscissae, using
+/// the continuous hat-function basis over a dense sample grid.
+fn fit_ordinates(f: &dyn Fn(f64) -> f64, knots: &[f64], grid: usize) -> Vec<f64> {
+    let n = knots.len();
+    let (lo, hi) = (knots[0], knots[n - 1]);
+    // Normal equations A^T A c = A^T y. The hat basis makes A^T A
+    // tridiagonal; build it densely (n <= ~16) and solve by Gaussian
+    // elimination.
+    let mut ata = vec![vec![0.0f64; n]; n];
+    let mut aty = vec![0.0f64; n];
+    for g in 0..=grid {
+        let x = lo + (hi - lo) * g as f64 / grid as f64;
+        let y = f(x);
+        // Find segment (linear scan ok at fit time).
+        let mut seg = 0;
+        while seg + 2 < n && knots[seg + 1] <= x {
+            seg += 1;
+        }
+        let t = (x - knots[seg]) / (knots[seg + 1] - knots[seg]);
+        let (i, j, wi, wj) = (seg, seg + 1, 1.0 - t, t);
+        ata[i][i] += wi * wi;
+        ata[i][j] += wi * wj;
+        ata[j][i] += wi * wj;
+        ata[j][j] += wj * wj;
+        aty[i] += wi * y;
+        aty[j] += wj * y;
+    }
+    solve_dense(&mut ata, &mut aty);
+    aty
+}
+
+/// In-place Gaussian elimination with partial pivoting; solution left in b.
+fn solve_dense(a: &mut [Vec<f64>], b: &mut [f64]) {
+    let n = b.len();
+    for col in 0..n {
+        // pivot
+        let mut piv = col;
+        for r in col + 1..n {
+            if a[r][col].abs() > a[piv][col].abs() {
+                piv = r;
+            }
+        }
+        a.swap(col, piv);
+        b.swap(col, piv);
+        let d = a[col][col];
+        assert!(d.abs() > 1e-300, "singular PWL normal equations");
+        for r in col + 1..n {
+            let factor = a[r][col] / d;
+            if factor == 0.0 {
+                continue;
+            }
+            for c in col..n {
+                a[r][c] -= factor * a[col][c];
+            }
+            b[r] -= factor * b[col];
+        }
+    }
+    for col in (0..n).rev() {
+        let mut acc = b[col];
+        for c in col + 1..n {
+            acc -= a[col][c] * b[c];
+        }
+        b[col] = acc / a[col][col];
+    }
+}
+
+/// Fit with uniformly spaced knots.
+pub fn fit_uniform(f: impl Fn(f64) -> f64 + Copy, lo: f64, hi: f64, nseg: usize, grid: usize) -> Pwl {
+    let knots: Vec<f64> = (0..=nseg).map(|i| lo + (hi - lo) * i as f64 / nseg as f64).collect();
+    let vals = fit_ordinates(&f, &knots, grid);
+    Pwl { knots, vals }
+}
+
+/// Fit with knots placed by the equi-curvature rule: knot density ∝ |f''|^½,
+/// the asymptotically optimal distribution for piecewise-linear
+/// approximation error.
+pub fn fit_adaptive(f: impl Fn(f64) -> f64 + Copy, lo: f64, hi: f64, nseg: usize, grid: usize) -> Pwl {
+    let h = (hi - lo) / grid as f64;
+    // |f''|^(1/2) via central differences, with a floor so flat regions
+    // still receive some knots.
+    let mut density = Vec::with_capacity(grid + 1);
+    for i in 0..=grid {
+        let x = lo + h * i as f64;
+        let xm = (x - h).max(lo);
+        let xp = (x + h).min(hi);
+        let d2 = (f(xp) - 2.0 * f(x) + f(xm)) / (h * h);
+        density.push(d2.abs().sqrt().max(1e-4));
+    }
+    // cumulative integral of the density
+    let mut cum = vec![0.0f64; grid + 1];
+    for i in 1..=grid {
+        cum[i] = cum[i - 1] + 0.5 * (density[i] + density[i - 1]) * h;
+    }
+    let total = cum[grid];
+    // invert: find x where cum = k/nseg * total
+    let mut knots = vec![lo];
+    let mut idx = 0usize;
+    for kseg in 1..nseg {
+        let target = total * kseg as f64 / nseg as f64;
+        while idx < grid && cum[idx + 1] < target {
+            idx += 1;
+        }
+        let t = if cum[idx + 1] > cum[idx] {
+            (target - cum[idx]) / (cum[idx + 1] - cum[idx])
+        } else {
+            0.0
+        };
+        knots.push(lo + h * (idx as f64 + t));
+    }
+    knots.push(hi);
+    // guard against degenerate (coincident) knots
+    for i in 1..knots.len() {
+        if knots[i] <= knots[i - 1] {
+            knots[i] = knots[i - 1] + 1e-9 * (hi - lo);
+        }
+    }
+    let vals = fit_ordinates(&f, &knots, grid);
+    Pwl { knots, vals }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fits_a_line_exactly() {
+        let p = fit_uniform(|x| 3.0 * x - 2.0, -1.0, 4.0, 8, 500);
+        for i in 0..=50 {
+            let x = -1.0 + 5.0 * i as f64 / 50.0;
+            assert!((p.eval(x) - (3.0 * x - 2.0)).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn adaptive_beats_uniform_on_ln() {
+        let lo = 0.0025;
+        let u = fit_uniform(f64::ln, lo, 1.0, 8, 4000);
+        let a = fit_adaptive(f64::ln, lo, 1.0, 8, 4000);
+        let eu = u.max_error_against(f64::ln, 10_000);
+        let ea = a.max_error_against(f64::ln, 10_000);
+        assert!(ea < eu, "adaptive {ea} vs uniform {eu}");
+        assert!(ea < 0.25, "{ea}");
+    }
+
+    #[test]
+    fn saturation_outside_domain() {
+        let p = fit_uniform(|x| x * x, 0.0, 1.0, 4, 200);
+        assert_eq!(p.eval(-5.0), p.vals[0]);
+        assert_eq!(p.eval(9.0), *p.vals.last().unwrap());
+    }
+
+    #[test]
+    fn coefficients_reconstruct_eval() {
+        let p = fit_adaptive(f64::exp, -1.0, 1.0, 6, 1000);
+        let coefs = p.coefficients();
+        for i in 0..p.segments() {
+            let xm = 0.5 * (p.knots[i] + p.knots[i + 1]);
+            let (a, b) = coefs[i];
+            assert!((a * xm + b - p.eval(xm)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn eval_is_continuous_at_knots() {
+        let p = fit_adaptive(|x| (3.0 * x).sin(), 0.0, 3.0, 8, 2000);
+        for i in 1..p.knots.len() - 1 {
+            let k = p.knots[i];
+            let eps = 1e-9;
+            assert!((p.eval(k - eps) - p.eval(k + eps)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn solver_handles_permuted_system() {
+        let mut a = vec![
+            vec![0.0, 2.0, 1.0],
+            vec![1.0, 0.0, 0.0],
+            vec![0.0, 1.0, 3.0],
+        ];
+        let mut b = vec![5.0, 1.0, 10.0];
+        solve_dense(&mut a, &mut b);
+        // x = 1; 2y + z = 5; y + 3z = 10 -> y = 1, z = 3
+        assert!((b[0] - 1.0).abs() < 1e-12);
+        assert!((b[1] - 1.0).abs() < 1e-12);
+        assert!((b[2] - 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,229 @@
+//! Piece-wise linear (PWL) function approximation — the in-Rust equivalent
+//! of the paper's use of the `pwlf` Python library (§IV-B): both non-linear
+//! units in the FLASH-D datapath (sigmoid on the active region [-6, 11] and
+//! natural log on (0, 1)) are implemented as 8-segment PWL approximations.
+//!
+//! Fitting: knots are placed by the equi-curvature rule (density ∝ |f''|^½,
+//! the asymptotically optimal placement for piecewise-linear interpolation),
+//! then the knot ordinates are least-squares fitted over a dense grid with
+//! the continuous hat-function basis. Evaluation saturates outside the
+//! domain — exactly the saturation behaviour the paper exploits for its
+//! skip criterion.
+
+pub mod fit;
+
+pub use fit::{fit_adaptive, fit_uniform, Pwl};
+
+use crate::numerics::Scalar;
+
+/// Number of segments used by the paper for both units.
+pub const SEGMENTS: usize = 8;
+
+/// The sigmoid active region from the paper (§III-C / Fig. 2).
+pub const SIGMOID_LO: f64 = -6.0;
+pub const SIGMOID_HI: f64 = 11.0;
+
+/// ln() input domain: the previous weight w ∈ (0, 1). The smallest weight
+/// the clamped recursion can produce is sigmoid(-6).
+pub const LN_LO: f64 = 0.0024726231566347743; // sigmoid(-6)
+pub const LN_HI: f64 = 1.0;
+
+fn sigmoid(x: f64) -> f64 {
+    if x >= 0.0 {
+        1.0 / (1.0 + (-x).exp())
+    } else {
+        let e = x.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// The hardware sigmoid unit: 8-segment PWL over [-6, 11], saturating to
+/// (near) 0 / 1 outside — Fig. 3's σ block.
+#[derive(Clone, Debug)]
+pub struct SigmoidPwl {
+    pwl: Pwl,
+}
+
+impl SigmoidPwl {
+    pub fn new() -> SigmoidPwl {
+        SigmoidPwl { pwl: fit_adaptive(sigmoid, SIGMOID_LO, SIGMOID_HI, SEGMENTS, 4096) }
+    }
+
+    /// Evaluate in format T: the multiply-add runs at the format's
+    /// precision, modelling the hardware unit's internal rounding.
+    pub fn eval<T: Scalar>(&self, x: T) -> T {
+        T::from_f64(self.pwl.eval(x.to_f64()).clamp(0.0, 1.0))
+    }
+
+    pub fn eval_f64(&self, x: f64) -> f64 {
+        self.pwl.eval(x).clamp(0.0, 1.0)
+    }
+
+    pub fn max_error(&self) -> f64 {
+        self.pwl.max_error_against(sigmoid, 20_000)
+    }
+
+    pub fn table(&self) -> &Pwl {
+        &self.pwl
+    }
+}
+
+impl Default for SigmoidPwl {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// The hardware natural-log unit: 8-segment PWL over [sigmoid(-6), 1].
+/// "we require one that consistently returns a negative result that follows
+/// the value of the previous weight" (§IV-B) — outputs clamp to <= 0.
+#[derive(Clone, Debug)]
+pub struct LnPwl {
+    pwl: Pwl,
+}
+
+impl LnPwl {
+    pub fn new() -> LnPwl {
+        LnPwl { pwl: fit_adaptive(f64::ln, LN_LO, LN_HI, SEGMENTS, 4096) }
+    }
+
+    pub fn eval<T: Scalar>(&self, x: T) -> T {
+        T::from_f64(self.pwl.eval(x.to_f64()).min(0.0))
+    }
+
+    pub fn eval_f64(&self, x: f64) -> f64 {
+        self.pwl.eval(x).min(0.0)
+    }
+
+    pub fn max_error(&self) -> f64 {
+        self.pwl.max_error_against(f64::ln, 20_000)
+    }
+
+    pub fn table(&self) -> &Pwl {
+        &self.pwl
+    }
+}
+
+impl Default for LnPwl {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// The FlashAttention2 baseline's exponential unit: PWL after range
+/// reduction (cf. [19] in the paper). exp(x) = 2^k * exp(r) with
+/// r ∈ [-ln2/2, ln2/2); the PWL covers exp(r) and the 2^k is an exponent
+/// add (free in FP hardware).
+#[derive(Clone, Debug)]
+pub struct ExpPwl {
+    pwl: Pwl,
+}
+
+impl ExpPwl {
+    pub fn new() -> ExpPwl {
+        let half_ln2 = std::f64::consts::LN_2 / 2.0;
+        ExpPwl { pwl: fit_adaptive(f64::exp, -half_ln2, half_ln2, SEGMENTS, 4096) }
+    }
+
+    pub fn eval_f64(&self, x: f64) -> f64 {
+        // Range-reduce: x = k*ln2 + r.
+        let k = (x / std::f64::consts::LN_2).round();
+        let r = x - k * std::f64::consts::LN_2;
+        let m = self.pwl.eval(r);
+        let k = k.clamp(-1022.0, 1023.0) as i32;
+        m * 2f64.powi(k)
+    }
+
+    pub fn eval<T: Scalar>(&self, x: T) -> T {
+        T::from_f64(self.eval_f64(x.to_f64()))
+    }
+
+    pub fn max_rel_error(&self) -> f64 {
+        let mut worst: f64 = 0.0;
+        for i in 0..20_000 {
+            let x = -20.0 + 25.0 * i as f64 / 20_000.0;
+            let got = self.eval_f64(x);
+            let want = x.exp();
+            worst = worst.max(((got - want) / want).abs());
+        }
+        worst
+    }
+}
+
+impl Default for ExpPwl {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numerics::{Bf16, Fp8E4M3};
+
+    #[test]
+    fn sigmoid_pwl_accuracy() {
+        let s = SigmoidPwl::new();
+        // 8 optimized segments over a 17-wide domain: ~1% max error.
+        assert!(s.max_error() < 0.015, "max err {}", s.max_error());
+    }
+
+    #[test]
+    fn sigmoid_pwl_saturates() {
+        let s = SigmoidPwl::new();
+        assert!(s.eval_f64(-100.0) <= sigmoid(SIGMOID_LO) + 0.01);
+        assert!(s.eval_f64(100.0) >= sigmoid(SIGMOID_HI) - 0.01);
+        assert!(s.eval_f64(-1e30) >= 0.0 && s.eval_f64(1e30) <= 1.0);
+    }
+
+    #[test]
+    fn sigmoid_pwl_monotone_on_grid() {
+        let s = SigmoidPwl::new();
+        let mut prev = -1.0;
+        for i in 0..=1000 {
+            let x = SIGMOID_LO + (SIGMOID_HI - SIGMOID_LO) * i as f64 / 1000.0;
+            let y = s.eval_f64(x);
+            assert!(y >= prev - 1e-12, "not monotone at {x}");
+            prev = y;
+        }
+    }
+
+    #[test]
+    fn ln_pwl_accuracy_and_sign() {
+        let l = LnPwl::new();
+        // worst error concentrates near the steep end; bounded per DESIGN §6
+        assert!(l.max_error() < 0.25, "max err {}", l.max_error());
+        for i in 1..=100 {
+            let x = LN_LO + (LN_HI - LN_LO) * i as f64 / 100.0;
+            assert!(l.eval_f64(x) <= 0.0, "ln must stay negative, x={x}");
+        }
+        // good accuracy in the common region w in [0.2, 1]
+        for i in 0..=100 {
+            let x = 0.2 + 0.8 * i as f64 / 100.0;
+            assert!((l.eval_f64(x) - x.ln()).abs() < 0.08, "x={x}");
+        }
+    }
+
+    #[test]
+    fn exp_pwl_range_reduction() {
+        let e = ExpPwl::new();
+        assert!(e.max_rel_error() < 0.005, "rel err {}", e.max_rel_error());
+        assert!((e.eval_f64(0.0) - 1.0).abs() < 0.005);
+        assert!((e.eval_f64(-10.0) - (-10.0f64).exp()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn eval_in_reduced_formats() {
+        let s = SigmoidPwl::new();
+        let y16 = s.eval(Bf16::from_f32(1.0)).to_f32();
+        assert!((y16 as f64 - sigmoid(1.0)).abs() < 0.02, "{y16}");
+        let y8 = s.eval(Fp8E4M3::from_f32(1.0)).to_f32();
+        assert!((y8 as f64 - sigmoid(1.0)).abs() < 0.08, "{y8}");
+    }
+
+    #[test]
+    fn segment_count_is_papers_eight() {
+        assert_eq!(SigmoidPwl::new().table().segments(), SEGMENTS);
+        assert_eq!(LnPwl::new().table().segments(), SEGMENTS);
+    }
+}

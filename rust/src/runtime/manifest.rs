@@ -1,0 +1,305 @@
+//! Typed view of `artifacts/manifest.json` — the contract between
+//! `python/compile/aot.py` (producer) and the Rust runtime (consumer).
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Shape + dtype of one executable input.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One lowered HLO artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub inputs: Vec<TensorSpec>,
+    pub n_outputs: usize,
+    /// attention artifacts: kernel variant ("flashd" / "flash2")
+    pub variant: Option<String>,
+    pub causal: bool,
+    pub heads: usize,
+    pub seq: usize,
+    pub head_dim: usize,
+    /// model artifacts: zoo name
+    pub model: Option<String>,
+    pub batch: usize,
+}
+
+/// One model in the zoo: configuration + the flat parameter ABI.
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    pub name: String,
+    pub vocab_size: usize,
+    pub seq_len: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub block_q: usize,
+    pub block_k: usize,
+    /// QK-norm attention temperature (score = qk_gain * q^.k^ / sqrt(dh)).
+    pub qk_gain: f64,
+    pub n_params: usize,
+    /// (name, shape) in the exact order of the train/forward ABI.
+    pub param_spec: Vec<(String, Vec<usize>)>,
+    pub init_weights: String,
+    pub train_lr: f64,
+    pub train_batch: usize,
+}
+
+impl ModelInfo {
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub artifacts: BTreeMap<String, ArtifactInfo>,
+    pub models: BTreeMap<String, ModelInfo>,
+}
+
+fn shape_of(j: &Json) -> Result<Vec<usize>> {
+    Ok(j.as_arr()
+        .ok_or_else(|| anyhow!("shape not an array"))?
+        .iter()
+        .map(|x| x.as_usize().unwrap_or(0))
+        .collect())
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow!("read {}: {e}", path.display()))?;
+        Manifest::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let root = Json::parse(text).map_err(|e| anyhow!("manifest json: {e}"))?;
+        let mut man = Manifest::default();
+
+        let arts = root
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing 'artifacts'"))?;
+        for (name, a) in arts {
+            let inputs = a
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("artifact {name}: no inputs"))?
+                .iter()
+                .map(|i| {
+                    Ok(TensorSpec {
+                        shape: shape_of(i.get("shape").ok_or_else(|| anyhow!("no shape"))?)?,
+                        dtype: i
+                            .get("dtype")
+                            .and_then(Json::as_str)
+                            .unwrap_or("float32")
+                            .to_string(),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            man.artifacts.insert(
+                name.clone(),
+                ArtifactInfo {
+                    name: name.clone(),
+                    file: a
+                        .get("file")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("artifact {name}: no file"))?
+                        .to_string(),
+                    kind: a.get("kind").and_then(Json::as_str).unwrap_or("").to_string(),
+                    inputs,
+                    n_outputs: a.get("n_outputs").and_then(Json::as_usize).unwrap_or(1),
+                    variant: a.get("variant").and_then(Json::as_str).map(String::from),
+                    causal: a.get("causal").and_then(Json::as_bool).unwrap_or(false),
+                    heads: a.get("heads").and_then(Json::as_usize).unwrap_or(0),
+                    seq: a.get("seq").and_then(Json::as_usize).unwrap_or(0),
+                    head_dim: a.get("head_dim").and_then(Json::as_usize).unwrap_or(0),
+                    model: a.get("model").and_then(Json::as_str).map(String::from),
+                    batch: a.get("batch").and_then(Json::as_usize).unwrap_or(1),
+                },
+            );
+        }
+
+        if let Some(models) = root.get("models").and_then(Json::as_obj) {
+            for (name, m) in models {
+                let cfg = m.get("config").ok_or_else(|| anyhow!("model {name}: no config"))?;
+                let g = |k: &str| -> Result<usize> {
+                    cfg.get(k)
+                        .and_then(Json::as_usize)
+                        .ok_or_else(|| anyhow!("model {name}: config missing {k}"))
+                };
+                let spec = m
+                    .get("param_spec")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("model {name}: no param_spec"))?
+                    .iter()
+                    .map(|e| {
+                        Ok((
+                            e.get("name")
+                                .and_then(Json::as_str)
+                                .ok_or_else(|| anyhow!("param name"))?
+                                .to_string(),
+                            shape_of(e.get("shape").ok_or_else(|| anyhow!("param shape"))?)?,
+                        ))
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                man.models.insert(
+                    name.clone(),
+                    ModelInfo {
+                        name: name.clone(),
+                        vocab_size: g("vocab_size")?,
+                        seq_len: g("seq_len")?,
+                        d_model: g("d_model")?,
+                        n_heads: g("n_heads")?,
+                        n_layers: g("n_layers")?,
+                        d_ff: g("d_ff")?,
+                        block_q: g("block_q")?,
+                        block_k: g("block_k")?,
+                        qk_gain: cfg.get("qk_gain").and_then(Json::as_f64).unwrap_or(1.0),
+                        n_params: m.get("n_params").and_then(Json::as_usize).unwrap_or(0),
+                        param_spec: spec,
+                        init_weights: m
+                            .get("init_weights")
+                            .and_then(Json::as_str)
+                            .unwrap_or("")
+                            .to_string(),
+                        train_lr: m
+                            .get("train")
+                            .and_then(|t| t.get("lr"))
+                            .and_then(Json::as_f64)
+                            .unwrap_or(3e-3),
+                        train_batch: m
+                            .get("train")
+                            .and_then(|t| t.get("batch"))
+                            .and_then(Json::as_usize)
+                            .unwrap_or(8),
+                    },
+                );
+            }
+        }
+        Ok(man)
+    }
+
+    /// Resolve the attention artifact for a shape + variant + causality.
+    pub fn find_attention(&self, variant: &str, heads: usize, seq: usize, head_dim: usize, causal: bool) -> Option<&ArtifactInfo> {
+        self.artifacts.values().find(|a| {
+            a.kind == "attention"
+                && a.variant.as_deref() == Some(variant)
+                && a.heads == heads
+                && a.seq == seq
+                && a.head_dim == head_dim
+                && a.causal == causal
+        })
+    }
+
+    /// All attention shapes available for a variant.
+    pub fn attention_shapes(&self, variant: &str, causal: bool) -> Vec<(usize, usize, usize)> {
+        let mut v: Vec<_> = self
+            .artifacts
+            .values()
+            .filter(|a| a.kind == "attention" && a.variant.as_deref() == Some(variant) && a.causal == causal)
+            .map(|a| (a.heads, a.seq, a.head_dim))
+            .collect();
+        v.sort();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "artifacts": {
+        "attn_flashd_h4_l128_d32": {
+          "file": "attn_flashd_h4_l128_d32.hlo.txt",
+          "kind": "attention", "variant": "flashd", "causal": false,
+          "heads": 4, "seq": 128, "head_dim": 32,
+          "inputs": [
+            {"shape": [4,128,32], "dtype": "float32"},
+            {"shape": [4,128,32], "dtype": "float32"},
+            {"shape": [4,128,32], "dtype": "float32"}],
+          "n_outputs": 1
+        }
+      },
+      "models": {
+        "phi-tiny": {
+          "config": {"vocab_size":256,"seq_len":128,"d_model":128,
+                     "n_heads":4,"n_layers":4,"d_ff":344,
+                     "block_q":32,"block_k":32},
+          "n_params": 840832,
+          "param_spec": [{"name":"tok_emb","shape":[256,128]}],
+          "init_weights": "init_phi-tiny.fdw",
+          "train": {"lr": 0.003, "batch": 8}
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let a = &m.artifacts["attn_flashd_h4_l128_d32"];
+        assert_eq!(a.heads, 4);
+        assert_eq!(a.inputs.len(), 3);
+        assert_eq!(a.inputs[0].shape, vec![4, 128, 32]);
+        assert_eq!(a.inputs[0].numel(), 4 * 128 * 32);
+        assert!(!a.causal);
+        let mo = &m.models["phi-tiny"];
+        assert_eq!(mo.d_model, 128);
+        assert_eq!(mo.d_head(), 32);
+        assert_eq!(mo.param_spec[0].0, "tok_emb");
+        assert!((mo.train_lr - 0.003).abs() < 1e-12);
+    }
+
+    #[test]
+    fn find_attention_matches() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.find_attention("flashd", 4, 128, 32, false).is_some());
+        assert!(m.find_attention("flashd", 4, 128, 32, true).is_none());
+        assert!(m.find_attention("flash2", 4, 128, 32, false).is_none());
+        assert_eq!(m.attention_shapes("flashd", false), vec![(4, 128, 32)]);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse("not json").is_err());
+    }
+
+    /// The real manifest (if built) parses and is self-consistent.
+    #[test]
+    fn real_manifest_if_present() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(!m.artifacts.is_empty());
+        for (name, a) in &m.artifacts {
+            assert!(dir.join(&a.file).exists(), "{name}: missing {}", a.file);
+        }
+        for (name, mo) in &m.models {
+            let total: usize = mo.param_spec.iter().map(|(_, s)| s.iter().product::<usize>()).sum();
+            assert_eq!(total, mo.n_params, "{name} param count");
+            assert!(dir.join(&mo.init_weights).exists());
+        }
+    }
+}

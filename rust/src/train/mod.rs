@@ -1,0 +1,160 @@
+//! The Rust training driver: runs the AOT-lowered `train_step_<model>`
+//! artifact in a loop, carrying parameters and AdamW state across steps.
+//! This is the end-to-end proof that all three layers compose — the JAX
+//! train step (with the differentiable FLASH-D attention inside) executes
+//! under the Rust event loop with Python long gone.
+
+pub mod data;
+
+use crate::model::weights::NamedTensor;
+use crate::runtime::{lit_i32, lit_i32_scalar, to_vec_f32, Runtime};
+use anyhow::{anyhow, Result};
+use std::path::Path;
+use std::time::Instant;
+
+/// Training run configuration.
+#[derive(Clone, Debug)]
+pub struct TrainOptions {
+    pub model: String,
+    pub steps: usize,
+    pub seed: u64,
+    pub log_every: usize,
+    /// Write weights_<model>.fdw into the artifact dir at the end.
+    pub save: bool,
+    pub quiet: bool,
+}
+
+impl Default for TrainOptions {
+    fn default() -> Self {
+        TrainOptions {
+            model: "phi-tiny".into(),
+            steps: 300,
+            seed: 0,
+            log_every: 20,
+            save: true,
+            quiet: false,
+        }
+    }
+}
+
+/// Outcome of a training run.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub model: String,
+    pub steps: usize,
+    /// (step, loss) samples at log_every cadence plus first/last.
+    pub losses: Vec<(usize, f32)>,
+    pub first_loss: f32,
+    pub final_loss: f32,
+    pub tokens_per_s: f64,
+    pub wall_s: f64,
+}
+
+/// Run training through the PJRT train_step artifact.
+pub fn train(dir: &Path, opts: &TrainOptions) -> Result<TrainReport> {
+    let rt = Runtime::open(dir)?;
+    let info = rt
+        .manifest
+        .models
+        .get(&opts.model)
+        .ok_or_else(|| anyhow!("unknown model '{}'", opts.model))?
+        .clone();
+    let artifact = format!("train_step_{}", opts.model);
+    if !rt.manifest.artifacts.contains_key(&artifact) {
+        return Err(anyhow!("missing artifact {artifact}"));
+    }
+    let batch = rt.manifest.artifacts[&artifact].batch;
+    let seq = info.seq_len;
+
+    // Initial parameters + zeroed AdamW moments.
+    let init = crate::model::weights::read_fdw(dir.join(&info.init_weights))?;
+    if init.len() != info.param_spec.len() {
+        return Err(anyhow!("init weights/spec mismatch"));
+    }
+    let mut params: Vec<xla::Literal> = Vec::with_capacity(init.len());
+    let mut m_state: Vec<xla::Literal> = Vec::with_capacity(init.len());
+    let mut v_state: Vec<xla::Literal> = Vec::with_capacity(init.len());
+    for t in &init {
+        params.push(crate::runtime::lit_f32(&t.data, &t.shape)?);
+        let zeros = vec![0.0f32; t.numel()];
+        m_state.push(crate::runtime::lit_f32(&zeros, &t.shape)?);
+        v_state.push(crate::runtime::lit_f32(&zeros, &t.shape)?);
+    }
+
+    // Token stream from the synthetic corpus.
+    let mut sampler = data::BatchSampler::new(opts.seed, batch, seq);
+
+    let started = Instant::now();
+    let mut losses = Vec::new();
+    let mut first_loss = f32::NAN;
+    let mut final_loss = f32::NAN;
+    let n = info.param_spec.len();
+
+    for step in 0..opts.steps {
+        let tokens = sampler.next_batch();
+        let mut inputs: Vec<xla::Literal> = Vec::with_capacity(3 * n + 2);
+        // Order must match aot.py::tstep: params, m, v, step, tokens.
+        inputs.extend(params.drain(..));
+        inputs.extend(m_state.drain(..));
+        inputs.extend(v_state.drain(..));
+        inputs.push(lit_i32_scalar(step as i32));
+        inputs.push(lit_i32(&tokens, &[batch, seq])?);
+
+        let mut out = rt.execute(&artifact, &inputs)?;
+        let loss_lit = out.pop().ok_or_else(|| anyhow!("missing loss output"))?;
+        let loss = to_vec_f32(&loss_lit)?[0];
+        if !loss.is_finite() {
+            return Err(anyhow!("loss diverged at step {step}: {loss}"));
+        }
+        v_state = out.split_off(2 * n);
+        m_state = out.split_off(n);
+        params = out;
+
+        if step == 0 {
+            first_loss = loss;
+        }
+        final_loss = loss;
+        if step % opts.log_every == 0 || step + 1 == opts.steps {
+            losses.push((step, loss));
+            if !opts.quiet {
+                let tps = ((step + 1) * batch * seq) as f64 / started.elapsed().as_secs_f64();
+                println!(
+                    "[train {}] step {:>4}  loss {:.4}  ({:.0} tok/s)",
+                    opts.model, step, loss, tps
+                );
+            }
+        }
+    }
+
+    let wall_s = started.elapsed().as_secs_f64();
+    let report = TrainReport {
+        model: opts.model.clone(),
+        steps: opts.steps,
+        losses,
+        first_loss,
+        final_loss,
+        tokens_per_s: (opts.steps * batch * seq) as f64 / wall_s,
+        wall_s,
+    };
+
+    if opts.save {
+        let tensors: Vec<NamedTensor> = info
+            .param_spec
+            .iter()
+            .zip(&params)
+            .map(|((name, shape), lit)| {
+                Ok(NamedTensor {
+                    name: name.clone(),
+                    shape: shape.clone(),
+                    data: to_vec_f32(lit)?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let out = dir.join(format!("weights_{}.fdw", opts.model));
+        crate::model::weights::write_fdw(&out, &tensors)?;
+        if !opts.quiet {
+            println!("[train {}] saved {}", opts.model, out.display());
+        }
+    }
+    Ok(report)
+}

@@ -1,0 +1,190 @@
+//! Criterion-like micro/bench harness — replaces criterion (not in the
+//! offline vendor set). Used by the `cargo bench` targets (harness = false).
+//!
+//! Features: warmup, adaptive iteration count targeting a fixed measurement
+//! time, mean/stddev/percentile reporting, throughput annotation, and CSV
+//! report emission under `reports/`.
+
+use std::fmt::Write as _;
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+pub use std::hint::black_box as bb;
+
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub stddev_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub throughput: Option<(f64, &'static str)>,
+}
+
+impl Stats {
+    pub fn report_line(&self) -> String {
+        let mut s = format!(
+            "{:<44} {:>12}  ±{:>9}  p95 {:>12}  ({} iters)",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.stddev_ns),
+            fmt_ns(self.p95_ns),
+            self.iters
+        );
+        if let Some((items, unit)) = self.throughput {
+            let per_sec = items / (self.mean_ns / 1e9);
+            let _ = write!(s, "  {:>12.2} {}/s", per_sec, unit);
+        }
+        s
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// A bench suite: collects results, prints criterion-style lines, and can
+/// dump a CSV into reports/.
+pub struct Bench {
+    pub suite: String,
+    pub results: Vec<Stats>,
+    pub measure_time: Duration,
+    pub warmup_time: Duration,
+}
+
+impl Bench {
+    pub fn new(suite: &str) -> Bench {
+        // Respect a quick mode for CI-ish runs: FLASHD_BENCH_FAST=1.
+        let fast = std::env::var("FLASHD_BENCH_FAST").is_ok();
+        Bench {
+            suite: suite.to_string(),
+            results: Vec::new(),
+            measure_time: if fast { Duration::from_millis(200) } else { Duration::from_secs(2) },
+            warmup_time: if fast { Duration::from_millis(50) } else { Duration::from_millis(500) },
+        }
+    }
+
+    /// Benchmark a closure; returns its mean ns/iter.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> f64 {
+        self.bench_with_throughput(name, None, &mut f)
+    }
+
+    /// Benchmark annotated with a throughput quantity (e.g. tokens, rows).
+    pub fn bench_throughput<F: FnMut()>(
+        &mut self,
+        name: &str,
+        items: f64,
+        unit: &'static str,
+        mut f: F,
+    ) -> f64 {
+        self.bench_with_throughput(name, Some((items, unit)), &mut f)
+    }
+
+    fn bench_with_throughput(
+        &mut self,
+        name: &str,
+        throughput: Option<(f64, &'static str)>,
+        f: &mut dyn FnMut(),
+    ) -> f64 {
+        // Warmup + estimate per-iter cost.
+        let wstart = Instant::now();
+        let mut witers = 0u64;
+        while wstart.elapsed() < self.warmup_time || witers < 3 {
+            f();
+            witers += 1;
+            if witers > 1_000_000 {
+                break;
+            }
+        }
+        let per_iter = wstart.elapsed().as_nanos() as f64 / witers as f64;
+
+        // Pick a batch size so one sample is ~1/50 of measure time.
+        let target_sample_ns = self.measure_time.as_nanos() as f64 / 50.0;
+        let batch = ((target_sample_ns / per_iter.max(1.0)).ceil() as u64).max(1);
+
+        let mut samples = Vec::new();
+        let mstart = Instant::now();
+        let mut total_iters = 0u64;
+        while mstart.elapsed() < self.measure_time || samples.len() < 5 {
+            let t = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            samples.push(t.elapsed().as_nanos() as f64 / batch as f64);
+            total_iters += batch;
+            if samples.len() > 10_000 {
+                break;
+            }
+        }
+
+        let mean = crate::util::mean(&samples);
+        let stats = Stats {
+            name: name.to_string(),
+            iters: total_iters,
+            mean_ns: mean,
+            stddev_ns: crate::util::stddev(&samples),
+            p50_ns: crate::util::percentile(&samples, 50.0),
+            p95_ns: crate::util::percentile(&samples, 95.0),
+            throughput,
+        };
+        println!("{}", stats.report_line());
+        self.results.push(stats);
+        mean
+    }
+
+    /// Write all collected results as CSV under reports/.
+    pub fn write_csv(&self) {
+        std::fs::create_dir_all("reports").ok();
+        let mut csv = String::from("name,iters,mean_ns,stddev_ns,p50_ns,p95_ns\n");
+        for r in &self.results {
+            let _ = writeln!(
+                csv,
+                "{},{},{:.1},{:.1},{:.1},{:.1}",
+                r.name, r.iters, r.mean_ns, r.stddev_ns, r.p50_ns, r.p95_ns
+            );
+        }
+        let path = format!("reports/bench_{}.csv", self.suite);
+        std::fs::write(&path, csv).ok();
+        println!("-- wrote {path}");
+    }
+}
+
+/// Time a single invocation (for coarse end-to-end steps).
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, Duration) {
+    let t = Instant::now();
+    let out = black_box(f());
+    (out, t.elapsed())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        std::env::set_var("FLASHD_BENCH_FAST", "1");
+        let mut b = Bench::new("selftest");
+        let mut acc = 0u64;
+        let mean = b.bench("noop-ish", || {
+            acc = bb(acc.wrapping_add(1));
+        });
+        assert!(mean > 0.0 && mean < 1e6, "mean {mean}");
+        assert_eq!(b.results.len(), 1);
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, d) = time_once(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(d.as_nanos() < 1_000_000_000);
+    }
+}

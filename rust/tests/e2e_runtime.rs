@@ -1,0 +1,174 @@
+//! End-to-end runtime tests: the compiled AOT artifacts execute under the
+//! Rust PJRT client and agree with the Rust golden kernels / engine.
+//!
+//! These tests require `make artifacts` to have run; they are skipped
+//! (with a notice) if the artifact directory is missing.
+
+use flashd::kernels::{self, max_abs_diff};
+use flashd::model::engine::Engine;
+use flashd::runtime::{lit_f32, lit_i32, lit_i32_scalar, to_vec_f32, Runtime};
+use flashd::util::rng::Rng;
+
+fn artifact_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn attention_artifact_matches_rust_golden_kernel() {
+    let Some(dir) = artifact_dir() else { return };
+    let rt = Runtime::open(&dir).unwrap();
+    let (h, l, d) = (4usize, 128usize, 32usize);
+    let name = "attn_flashd_h4_l128_d32";
+    assert!(rt.manifest.artifacts.contains_key(name), "missing {name}");
+
+    let mut rng = Rng::new(42);
+    let q = rng.normal_vec(h * l * d, 0.5);
+    let k = rng.normal_vec(h * l * d, 0.5);
+    let v = rng.normal_vec(h * l * d, 1.0);
+    let inputs = [
+        lit_f32(&q, &[h, l, d]).unwrap(),
+        lit_f32(&k, &[h, l, d]).unwrap(),
+        lit_f32(&v, &[h, l, d]).unwrap(),
+        lit_i32(&[l as i32], &[1, 1]).unwrap(),
+    ];
+    let out = rt.execute(name, &inputs).unwrap();
+    let got = to_vec_f32(&out[0]).unwrap();
+    assert_eq!(got.len(), h * l * d);
+
+    // golden: per-head multi-query attention with the compiled 1/sqrt(d)
+    let scale = (d as f32).powf(-0.5);
+    for hh in 0..h {
+        let off = hh * l * d;
+        let want = kernels::naive::attention_multi(
+            &q[off..off + l * d], &k[off..off + l * d], &v[off..off + l * d], l, l, d, scale,
+        );
+        let diff = max_abs_diff(&got[off..off + l * d], &want);
+        assert!(diff < 2e-4, "head {hh}: {diff}");
+    }
+}
+
+#[test]
+fn flashd_and_flash2_artifacts_agree() {
+    let Some(dir) = artifact_dir() else { return };
+    let rt = Runtime::open(&dir).unwrap();
+    let (h, l, d) = (4usize, 128usize, 32usize);
+    let mut rng = Rng::new(7);
+    let q = rng.normal_vec(h * l * d, 0.5);
+    let k = rng.normal_vec(h * l * d, 0.5);
+    let v = rng.normal_vec(h * l * d, 1.0);
+    let inputs = [
+        lit_f32(&q, &[h, l, d]).unwrap(),
+        lit_f32(&k, &[h, l, d]).unwrap(),
+        lit_f32(&v, &[h, l, d]).unwrap(),
+        lit_i32(&[100i32], &[1, 1]).unwrap(), // also exercise kv_len mask
+    ];
+    let a = to_vec_f32(&rt.execute("attn_flashd_h4_l128_d32", &inputs).unwrap()[0]).unwrap();
+    let b = to_vec_f32(&rt.execute("attn_flash2_h4_l128_d32", &inputs).unwrap()[0]).unwrap();
+    let diff = max_abs_diff(&a, &b);
+    assert!(diff < 2e-4, "variants disagree: {diff}");
+}
+
+#[test]
+fn kv_len_mask_matches_truncated_problem() {
+    let Some(dir) = artifact_dir() else { return };
+    let rt = Runtime::open(&dir).unwrap();
+    let (h, l, d) = (4usize, 128usize, 32usize);
+    let kv_len = 57usize;
+    let mut rng = Rng::new(9);
+    let q = rng.normal_vec(h * l * d, 0.5);
+    let k = rng.normal_vec(h * l * d, 0.5);
+    let v = rng.normal_vec(h * l * d, 1.0);
+    let inputs = [
+        lit_f32(&q, &[h, l, d]).unwrap(),
+        lit_f32(&k, &[h, l, d]).unwrap(),
+        lit_f32(&v, &[h, l, d]).unwrap(),
+        lit_i32(&[kv_len as i32], &[1, 1]).unwrap(),
+    ];
+    let got = to_vec_f32(&rt.execute("attn_flashd_h4_l128_d32", &inputs).unwrap()[0]).unwrap();
+    let scale = (d as f32).powf(-0.5);
+    for hh in 0..h {
+        let off = hh * l * d;
+        let want = kernels::naive::attention_multi(
+            &q[off..off + l * d],
+            &k[off..off + kv_len * d],
+            &v[off..off + kv_len * d],
+            l,
+            kv_len,
+            d,
+            scale,
+        );
+        let diff = max_abs_diff(&got[off..off + l * d], &want);
+        assert!(diff < 2e-4, "head {hh}: {diff}");
+    }
+}
+
+#[test]
+fn rust_engine_matches_model_fwd_artifact() {
+    let Some(dir) = artifact_dir() else { return };
+    let rt = Runtime::open(&dir).unwrap();
+    let name = "phi-tiny";
+    let art = format!("model_fwd_{name}");
+    if !rt.manifest.artifacts.contains_key(&art) {
+        eprintln!("SKIP: {art} not lowered");
+        return;
+    }
+    let info = rt.manifest.models[name].clone();
+    // use the INIT weights so this test is independent of training
+    let tensors = flashd::model::weights::read_fdw(dir.join(&info.init_weights)).unwrap();
+
+    // PJRT path
+    let mut inputs: Vec<xla::Literal> = tensors
+        .iter()
+        .map(|t| lit_f32(&t.data, &t.shape).unwrap())
+        .collect();
+    let tokens: Vec<i32> = (0..info.seq_len as i32).map(|i| (i * 13 + 5) % 251).collect();
+    inputs.push(lit_i32(&tokens, &[1, info.seq_len]).unwrap());
+    let out = rt.execute(&art, &inputs).unwrap();
+    let pjrt_logits = to_vec_f32(&out[0]).unwrap();
+    assert_eq!(pjrt_logits.len(), info.seq_len * info.vocab_size);
+
+    // Rust engine path (exact FLASH-D, no skipping)
+    let mut engine = Engine::new(info.clone(), tensors).unwrap();
+    engine.criterion = flashd::kernels::flashd::SkipCriterion::None;
+    let (rust_logits, _) = engine.forward(&tokens);
+
+    let diff = max_abs_diff(&pjrt_logits, &rust_logits);
+    assert!(diff < 5e-3, "engine vs artifact logits differ: {diff}");
+}
+
+#[test]
+fn train_step_artifact_reduces_loss() {
+    let Some(dir) = artifact_dir() else { return };
+    let opts = flashd::train::TrainOptions {
+        model: "phi-tiny".into(),
+        steps: 6,
+        seed: 123,
+        log_every: 100,
+        save: false,
+        quiet: true,
+    };
+    let report = flashd::train::train(&dir, &opts).unwrap();
+    assert!(report.first_loss.is_finite() && report.final_loss.is_finite());
+    // byte-level vocab 256: initial loss near ln(256) ~ 5.55
+    assert!((report.first_loss - 5.55).abs() < 1.2, "first {}", report.first_loss);
+    assert!(
+        report.final_loss < report.first_loss,
+        "{} -> {}",
+        report.first_loss,
+        report.final_loss
+    );
+}
+
+#[test]
+fn scalar_step_literal_roundtrip() {
+    let Some(dir) = artifact_dir() else { return };
+    let _rt = Runtime::open(&dir).unwrap();
+    let lit = lit_i32_scalar(41);
+    assert_eq!(lit.to_vec::<i32>().unwrap(), vec![41]);
+}

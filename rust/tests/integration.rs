@@ -1,0 +1,215 @@
+//! Cross-module integration tests that don't need PJRT artifacts: the
+//! coordinator over the NaiveEngine, the hardware model fed by real engine
+//! traces, and the Table I machinery over a synthetic model.
+
+use flashd::bench_harness::suites::{Suite, ALL_SUITES};
+use flashd::bench_harness::table1;
+use flashd::coordinator::request::{RequestKind, ShapeSig, Variant};
+use flashd::coordinator::server::{Coordinator, CoordinatorConfig, NaiveEngine};
+use flashd::coordinator::router::Router;
+use flashd::hw::{activity, power, CostDb, Design, Format};
+use flashd::kernels::flashd::SkipCriterion;
+use flashd::model::engine::Engine;
+use flashd::model::tokenizer::ByteTokenizer;
+use flashd::model::weights::NamedTensor;
+use flashd::runtime::{Manifest, ModelInfo};
+use flashd::util::rng::Rng;
+use std::time::Instant;
+
+fn synthetic_model(seed: u64) -> Engine {
+    let (vocab, seq, dm, nh, nl, dff) = (64usize, 32usize, 32usize, 2usize, 2usize, 48usize);
+    let mut spec = vec![
+        ("tok_emb".to_string(), vec![vocab, dm]),
+        ("pos_emb".to_string(), vec![seq, dm]),
+    ];
+    for i in 0..nl {
+        for (n, s) in [
+            ("ln1", vec![dm]),
+            ("wq", vec![dm, dm]),
+            ("wk", vec![dm, dm]),
+            ("wv", vec![dm, dm]),
+            ("wo", vec![dm, dm]),
+            ("ln2", vec![dm]),
+            ("w_gate", vec![dm, dff]),
+            ("w_up", vec![dm, dff]),
+            ("w_down", vec![dff, dm]),
+        ] {
+            spec.push((format!("l{i}.{n}"), s));
+        }
+    }
+    spec.push(("ln_f".to_string(), vec![dm]));
+    let n_params = spec.iter().map(|(_, s)| s.iter().product::<usize>()).sum();
+    let info = ModelInfo {
+        name: format!("synthetic-{seed}"),
+        vocab_size: vocab,
+        seq_len: seq,
+        d_model: dm,
+        n_heads: nh,
+        n_layers: nl,
+        d_ff: dff,
+        block_q: 8,
+        block_k: 8,
+        qk_gain: 2.75,
+        n_params,
+        param_spec: spec.clone(),
+        init_weights: String::new(),
+        train_lr: 1e-3,
+        train_batch: 2,
+    };
+    let mut rng = Rng::new(seed);
+    let tensors = spec
+        .iter()
+        .map(|(name, shape)| {
+            let n: usize = shape.iter().product();
+            let data = if name.contains("ln") { vec![1.0; n] } else { rng.normal_vec(n, 0.09) };
+            NamedTensor { name: name.clone(), shape: shape.clone(), data }
+        })
+        .collect();
+    Engine::new(info, tensors).unwrap()
+}
+
+#[test]
+fn table1_pipeline_over_synthetic_model() {
+    let mut engine = synthetic_model(5);
+    let opts = table1::Table1Options {
+        prompts_per_suite: 2,
+        decode_tokens: 4,
+        seed: 3,
+        criterion: SkipCriterion::Static,
+    };
+    let cells = table1::run_model(&mut engine, &opts);
+    assert_eq!(cells.len(), ALL_SUITES.len());
+    for c in &cells {
+        assert!(c.total > 0, "{}: no updates measured", c.suite);
+        assert!(c.skip_pct >= 0.0 && c.skip_pct <= 100.0);
+        assert_eq!(c.skip_low + c.skip_high, (c.skip_pct / 100.0 * c.total as f64).round() as u64);
+    }
+    let rendered = table1::render_table(&cells);
+    for s in ALL_SUITES {
+        assert!(rendered.contains(s.name()));
+    }
+}
+
+#[test]
+fn engine_traces_drive_power_model_end_to_end() {
+    let engine = synthetic_model(8);
+    let tok = ByteTokenizer;
+    let prompt = Suite::Gsm8k.prompts(1, 1).remove(0);
+    let ids = tok.encode_window(&prompt, engine.info.seq_len);
+    let (_, _, problems) = engine.forward_capture(&ids);
+    assert_eq!(problems.len(), engine.info.n_layers * engine.info.n_heads);
+
+    let act = activity::measure::<flashd::numerics::Bf16>(&problems);
+    assert!(act.alpha_kv > 0.0 && act.alpha_kv <= 1.0);
+
+    let db = CostDb::tsmc28();
+    for &d in &[16usize, 64] {
+        let fa2 = power::block_power_mw(Design::FlashAttention2, d, Format::BF16, &act, &db);
+        let fd = power::block_power_mw(Design::FlashD, d, Format::BF16, &act, &db);
+        assert!(fd < fa2, "d={d}: {fd} !< {fa2}");
+    }
+}
+
+#[test]
+fn coordinator_full_session_lifecycle_against_reference() {
+    // Router over a synthetic manifest; NaiveEngine (rust FLASH-D kernel).
+    let router = Router::from_manifest(
+        &Manifest::parse(
+            r#"{"artifacts": {
+          "x": {"file":"x","kind":"attention","variant":"flashd","causal":false,
+            "heads":2,"seq":64,"head_dim":8,"inputs":[],"n_outputs":1}
+        }}"#,
+        )
+        .unwrap(),
+    );
+    let cfg = CoordinatorConfig {
+        batch_window: std::time::Duration::from_micros(20),
+        ..Default::default()
+    };
+    let coord = Coordinator::start_with(cfg, move || Ok(NaiveEngine { router })).unwrap();
+
+    let sig = ShapeSig { heads: 2, head_dim: 8 };
+    let mut rng = Rng::new(77);
+    let hd = 16usize;
+
+    // prefill 10 pairs
+    let pk = rng.normal_vec(hd * 10, 0.6);
+    let pv = rng.normal_vec(hd * 10, 1.0);
+    let resp = coord.submit_blocking(flashd::coordinator::AttentionRequest {
+        id: 1,
+        kind: RequestKind::Prefill { session: 3 },
+        variant: Variant::FlashD,
+        sig,
+        q: rng.normal_vec(hd, 0.6),
+        nq: 1,
+        k: pk.clone(),
+        v: pv.clone(),
+        nkv: 10,
+        submitted_at: Instant::now(),
+    });
+    assert!(resp.output.is_ok());
+
+    // 20 sequential decode steps; verify the last against a from-scratch
+    // reference over the accumulated KV.
+    let mut all_k = pk;
+    let mut all_v = pv;
+    let mut last_q = Vec::new();
+    let mut last_out = Vec::new();
+    for step in 0..20u64 {
+        let q = rng.normal_vec(hd, 0.6);
+        let k = rng.normal_vec(hd, 0.6);
+        let v = rng.normal_vec(hd, 1.0);
+        // maintain reference copies (heads-major layout)
+        let old_n = all_k.len() / hd;
+        let mut nk = vec![0.0f32; (old_n + 1) * hd];
+        let mut nv = vec![0.0f32; (old_n + 1) * hd];
+        for h in 0..2 {
+            let d = 8;
+            let src = h * old_n * d;
+            let dst = h * (old_n + 1) * d;
+            nk[dst..dst + old_n * d].copy_from_slice(&all_k[src..src + old_n * d]);
+            nv[dst..dst + old_n * d].copy_from_slice(&all_v[src..src + old_n * d]);
+            nk[dst + old_n * d..dst + (old_n + 1) * d].copy_from_slice(&k[h * d..(h + 1) * d]);
+            nv[dst + old_n * d..dst + (old_n + 1) * d].copy_from_slice(&v[h * d..(h + 1) * d]);
+        }
+        all_k = nk;
+        all_v = nv;
+
+        let resp = coord.submit_blocking(flashd::coordinator::AttentionRequest {
+            id: 10 + step,
+            kind: RequestKind::Decode { session: 3 },
+            variant: Variant::FlashD,
+            sig,
+            q: q.clone(),
+            nq: 1,
+            k,
+            v,
+            nkv: 1,
+            submitted_at: Instant::now(),
+        });
+        last_q = q;
+        last_out = resp.output.expect("decode ok");
+    }
+
+    let n = all_k.len() / hd;
+    let scale = (8f32).powf(-0.5);
+    for h in 0..2 {
+        let d = 8;
+        let ks = &all_k[h * n * d..(h + 1) * n * d];
+        let vs = &all_v[h * n * d..(h + 1) * n * d];
+        let want = flashd::kernels::naive::attention(&last_q[h * d..(h + 1) * d], ks, vs, n, d, scale);
+        let got = &last_out[h * d..(h + 1) * d];
+        let diff = flashd::kernels::max_abs_diff(got, &want);
+        assert!(diff < 1e-4, "head {h}: {diff}");
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn suites_cover_table1_columns() {
+    let names: Vec<&str> = ALL_SUITES.iter().map(|s| s.name()).collect();
+    assert_eq!(
+        names,
+        vec!["CSQA", "GSM8K", "QASC", "MMLU", "Date", "ObjectTracking"]
+    );
+}

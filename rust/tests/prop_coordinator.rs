@@ -1,0 +1,203 @@
+//! Property-based tests of the coordinator invariants: routing, batching,
+//! and KV-session state management (the L3 proptest coverage DESIGN.md
+//! calls out).
+
+use flashd::coordinator::batcher::{form_batches, BatchPolicy};
+use flashd::coordinator::kv_cache::SessionStore;
+use flashd::coordinator::request::{AttentionRequest, RequestKind, ShapeSig, Variant};
+use flashd::coordinator::router::Router;
+use flashd::coordinator::scheduler::{Policy, Scheduler};
+use flashd::prop_assert;
+use flashd::runtime::Manifest;
+use flashd::util::prop::forall;
+use std::time::Instant;
+
+fn mk_request(g: &mut flashd::util::prop::Gen, id: u64) -> AttentionRequest {
+    let decode = g.bool();
+    let session = g.usize_in(0, 3) as u64;
+    let sig = ShapeSig { heads: 1, head_dim: 4 };
+    let (kind, nq, nkv) = if decode {
+        (RequestKind::Decode { session }, 1usize, 1usize)
+    } else if g.bool() {
+        (RequestKind::Prefill { session }, 1, g.usize_in(1, 8))
+    } else {
+        (RequestKind::Stateless, g.usize_in(1, 4), g.usize_in(1, 8))
+    };
+    let variant = if g.bool() { Variant::FlashD } else { Variant::Flash2 };
+    AttentionRequest {
+        id,
+        kind,
+        variant,
+        sig,
+        q: vec![0.1; 4 * nq],
+        nq,
+        k: vec![0.1; 4 * nkv],
+        v: vec![0.1; 4 * nkv],
+        nkv,
+        submitted_at: Instant::now(),
+    }
+}
+
+#[test]
+fn prop_batcher_partitions_exactly() {
+    forall("batcher-partition", 150, |g| {
+        let n = g.usize_in(0, 24);
+        let reqs: Vec<AttentionRequest> = (0..n).map(|i| mk_request(g, i as u64)).collect();
+        let max_batch = g.usize_in(1, 6);
+        let batches = form_batches(&reqs, &BatchPolicy { max_batch });
+
+        // every index in exactly one batch
+        let mut seen = vec![0usize; n];
+        for b in &batches {
+            prop_assert!(g, b.members.len() <= max_batch, "batch over max");
+            prop_assert!(g, !b.members.is_empty(), "empty batch");
+            for &i in &b.members {
+                prop_assert!(g, i < n, "index out of range");
+                seen[i] += 1;
+            }
+            // multi-member batches: all decode, same (session, variant, sig)
+            if b.members.len() > 1 {
+                let first = &reqs[b.members[0]];
+                for &i in &b.members {
+                    let r = &reqs[i];
+                    prop_assert!(g, r.is_decode(), "non-decode in multi batch");
+                    prop_assert!(
+                        g,
+                        r.session() == first.session()
+                            && r.variant == first.variant
+                            && r.sig == first.sig,
+                        "mixed batch"
+                    );
+                }
+            }
+        }
+        prop_assert!(g, seen.iter().all(|&c| c == 1), "partition broken: {seen:?}");
+        true
+    });
+}
+
+#[test]
+fn prop_scheduler_conserves_requests() {
+    forall("scheduler-conservation", 120, |g| {
+        let cap = g.usize_in(1, 16);
+        let policy = if g.bool() { Policy::Fifo } else { Policy::DecodeFirst };
+        let mut s = Scheduler::new(cap, policy);
+        let n = g.usize_in(0, 30);
+        let mut accepted = 0u64;
+        for i in 0..n {
+            if s.submit(mk_request(g, i as u64)).is_ok() {
+                accepted += 1;
+            }
+        }
+        prop_assert!(g, s.len() as u64 == accepted, "len != accepted");
+        prop_assert!(g, accepted <= cap as u64, "over capacity");
+        let drained = s.drain(usize::MAX);
+        prop_assert!(g, drained.len() as u64 == accepted, "drain lost requests");
+        prop_assert!(g, s.is_empty(), "queue not empty after full drain");
+        // no duplicate ids
+        let mut ids: Vec<u64> = drained.iter().map(|r| r.id).collect();
+        ids.sort();
+        ids.dedup();
+        prop_assert!(g, ids.len() == drained.len(), "duplicated request");
+        true
+    });
+}
+
+#[test]
+fn prop_session_store_invariants_under_random_ops() {
+    forall("kv-store-invariants", 100, |g| {
+        let budget = g.usize_in(1, 8) * 256; // bytes
+        let mut store = SessionStore::new(budget);
+        let ops = g.usize_in(1, 60);
+        for _ in 0..ops {
+            let sid = g.usize_in(0, 5) as u64;
+            match g.usize_in(0, 3) {
+                0 => {
+                    // create: 1 head, dim 2, random cap
+                    let cap = g.usize_in(1, 8);
+                    let _ = store.create(sid, 1, 2, cap);
+                }
+                1 => {
+                    if let Some(c) = store.get_mut(sid) {
+                        let n = 1usize;
+                        let _ = c.append(&vec![0.5; 2 * n], &vec![0.5; 2 * n], n);
+                    }
+                }
+                2 => store.remove(sid),
+                _ => {
+                    let _ = store.get(sid);
+                }
+            }
+            if let Err(e) = store.check_invariants() {
+                prop_assert!(g, false, "invariant broken: {e}");
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_router_choice_is_minimal_and_sufficient() {
+    let manifest = Manifest::parse(
+        r#"{"artifacts": {
+        "a64": {"file":"a","kind":"attention","variant":"flashd","causal":false,
+          "heads":2,"seq":64,"head_dim":8,"inputs":[],"n_outputs":1},
+        "a128": {"file":"b","kind":"attention","variant":"flashd","causal":false,
+          "heads":2,"seq":128,"head_dim":8,"inputs":[],"n_outputs":1},
+        "a256": {"file":"c","kind":"attention","variant":"flashd","causal":false,
+          "heads":2,"seq":256,"head_dim":8,"inputs":[],"n_outputs":1}
+      }}"#,
+    )
+    .unwrap();
+    let router = Router::from_manifest(&manifest);
+    let sig = ShapeSig { heads: 2, head_dim: 8 };
+    forall("router-minimal", 200, |g| {
+        let nq = g.usize_in(1, 300);
+        let nkv = g.usize_in(1, 300);
+        match router.route(Variant::FlashD, sig, nq, nkv) {
+            Ok(r) => {
+                prop_assert!(g, r.kv_slots >= nkv, "kv doesn't fit");
+                prop_assert!(g, r.q_slots >= nq, "q doesn't fit");
+                // minimality: the next smaller compiled seq must not fit
+                let need = nq.max(nkv);
+                let smaller = [64usize, 128, 256]
+                    .iter()
+                    .filter(|&&s| s < r.kv_slots)
+                    .max()
+                    .copied();
+                if let Some(s) = smaller {
+                    prop_assert!(g, s < need, "route not minimal: {s} would fit {need}");
+                }
+            }
+            Err(_) => {
+                prop_assert!(g, nq.max(nkv) > 256, "spurious routing failure nq={nq} nkv={nkv}");
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_kv_append_preserves_prior_content() {
+    forall("kv-append-prefix", 100, |g| {
+        let cap = g.usize_in(2, 12);
+        let mut c = flashd::coordinator::kv_cache::KvCache::new(1, 2, cap);
+        let mut history: Vec<(f32, f32)> = Vec::new();
+        let n_ops = g.usize_in(1, cap);
+        for i in 0..n_ops {
+            let kv = (i as f32 + 0.25, i as f32 * 2.0);
+            c.append(&[kv.0, kv.1], &[kv.1, kv.0], 1).unwrap();
+            history.push(kv);
+            // all earlier entries still intact
+            for (j, (a, b)) in history.iter().enumerate() {
+                prop_assert!(
+                    g,
+                    c.k[j * 2] == *a && c.k[j * 2 + 1] == *b,
+                    "slot {j} corrupted after append {i}"
+                );
+            }
+        }
+        prop_assert!(g, c.len == n_ops, "len mismatch");
+        true
+    });
+}

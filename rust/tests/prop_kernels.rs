@@ -1,0 +1,210 @@
+//! Property-based tests over the attention kernels (proptest-style, using
+//! the in-tree `util::prop` driver): the algebraic identities the paper's
+//! derivation rests on must hold for arbitrary random problems.
+
+use flashd::kernels::flashd::{log_sigmoid, sigmoid, weight, SkipCriterion};
+use flashd::kernels::flashd as fd;
+use flashd::kernels::{flash1, flash2, max_abs_diff, naive};
+use flashd::numerics::{Bf16, Fp8E4M3, Scalar};
+use flashd::prop_assert;
+use flashd::util::prop::forall;
+
+#[test]
+fn prop_all_formulations_equal_softmax() {
+    forall("formulations-equal", 120, |g| {
+        let n = g.usize_in(1, 96);
+        let d = *g.choose(&[2usize, 4, 8, 16]);
+        let std = g.f64_in(0.2, 2.5) as f32;
+        let q = g.vec_normal(d, std);
+        let k = g.vec_normal(n * d, std);
+        let v = g.vec_normal(n * d, 1.0);
+        let scale = g.f64_in(0.1, 1.5) as f32;
+        let gold = naive::attention(&q, &k, &v, n, d, scale);
+        let f1 = flash1::attention(&q, &k, &v, n, d, scale);
+        let f2 = flash2::attention(&q, &k, &v, n, d, scale);
+        let fd = fd::attention(&q, &k, &v, n, d, scale);
+        prop_assert!(g, max_abs_diff(&gold, &f1) < 5e-5, "flash1 diverged n={n} d={d}");
+        prop_assert!(g, max_abs_diff(&gold, &f2) < 5e-5, "flash2 diverged n={n} d={d}");
+        prop_assert!(g, max_abs_diff(&gold, &fd) < 5e-5, "flashd diverged n={n} d={d}");
+        true
+    });
+}
+
+#[test]
+fn prop_output_is_convex_combination() {
+    // o_i is a convex combination of value vectors: each output coordinate
+    // lies within [min_j v_j, max_j v_j].
+    forall("convex-combination", 120, |g| {
+        let n = g.usize_in(1, 64);
+        let d = g.usize_in(1, 8);
+        let q = g.vec_normal(d, 1.0);
+        let k = g.vec_normal(n * d, 1.0);
+        let v = g.vec_normal(n * d, 1.0);
+        let out = fd::attention(&q, &k, &v, n, d, 1.0);
+        for j in 0..d {
+            let lo = (0..n).map(|i| v[i * d + j]).fold(f32::MAX, f32::min);
+            let hi = (0..n).map(|i| v[i * d + j]).fold(f32::MIN, f32::max);
+            prop_assert!(
+                g,
+                out[j] >= lo - 1e-4 && out[j] <= hi + 1e-4,
+                "coord {j}: {} outside [{lo}, {hi}]",
+                out[j]
+            );
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_lse_identity_exact() {
+    // Direct check of Eq. (8) unrolled: s_i - ln w_i == logsumexp(s_1..s_i).
+    // This is the disguised sum-of-exponents the sigmoid carries.
+    forall("lse-exact", 150, |g| {
+        let n = g.usize_in(1, 30);
+        let scores: Vec<f64> = (0..n).map(|_| g.f64_in(-10.0, 10.0)).collect();
+        let mut ln_w = 0.0f64;
+        for i in 0..n {
+            if i > 0 {
+                let x = scores[i] - scores[i - 1] + ln_w;
+                let w = sigmoid(x);
+                prop_assert!(g, w > 0.0 && w < 1.0, "w out of (0,1): {w}");
+                ln_w = log_sigmoid(x);
+            }
+            let m = scores[..=i].iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let lse = m + scores[..=i].iter().map(|s| (s - m).exp()).sum::<f64>().ln();
+            let carried = scores[i] - ln_w;
+            prop_assert!(
+                g,
+                (carried - lse).abs() < 1e-9,
+                "step {i}: carried {carried} vs lse {lse}"
+            );
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_weight_function_monotone_in_both_args() {
+    forall("weight-monotone", 200, |g| {
+        let s = g.f64_in(-12.0, 12.0);
+        let ds = g.f64_in(0.01, 3.0);
+        let wp = g.f64_in(0.001, 0.99);
+        let dw = g.f64_in(0.0005, 0.009);
+        prop_assert!(g, weight(s + ds, wp) >= weight(s, wp), "not monotone in s_diff");
+        prop_assert!(g, weight(s, wp + dw) >= weight(s, wp), "not monotone in w_prev");
+        true
+    });
+}
+
+#[test]
+fn prop_skip_low_is_sound() {
+    // Skip-low is mathematically sound: its weight is below sigmoid(-6),
+    // so each skipped update moves the output by < sigma(-6) * |v - o|.
+    forall("skip-low-sound", 80, |g| {
+        let n = g.usize_in(4, 128);
+        let d = *g.choose(&[4usize, 8]);
+        let q = g.vec_normal(d, 1.2);
+        let k = g.vec_normal(n * d, 1.2);
+        let v = g.vec_normal(n * d, 1.0);
+        let exact = fd::attention(&q, &k, &v, n, d, 1.0);
+        let (lo_only, stats) = fd::attention_instrumented(
+            &q, &k, &v, n, d, 1.0,
+            // low-tail-only criterion: hi = +infinity never fires
+            SkipCriterion::Adaptive { lo: -6.0, hi: f64::INFINITY },
+        );
+        prop_assert!(g, stats.skip_high == 0, "hi must never fire");
+        // |v - o| is bounded by ~max|v| spread; use an 8-sigma allowance.
+        let per_skip_bound = 8.0 * sigmoid(-6.0) as f32;
+        let bound = (stats.skip_low as f32 + 1.0) * per_skip_bound + 1e-3;
+        let err = max_abs_diff(&exact, &lo_only);
+        prop_assert!(g, err <= bound, "err {err} > bound {bound} (skips {})", stats.skip_low);
+        true
+    });
+}
+
+#[test]
+fn prop_reduced_precision_bounded_degradation() {
+    forall("precision-order", 40, |g| {
+        let n = g.usize_in(8, 64);
+        let d = 8usize;
+        let q = g.vec_normal(d, 0.7);
+        let k = g.vec_normal(n * d, 0.7);
+        let v = g.vec_normal(n * d, 0.7);
+        let gold = naive::attention(&q, &k, &v, n, d, 0.35);
+        let b16 = fd::attention_generic::<Bf16>(&q, &k, &v, n, d, 0.35);
+        let f8 = fd::attention_generic::<Fp8E4M3>(&q, &k, &v, n, d, 0.35);
+        prop_assert!(g, b16.iter().all(|x| x.is_finite()), "bf16 nan");
+        prop_assert!(g, f8.iter().all(|x| x.is_finite()), "fp8 nan");
+        let e16 = max_abs_diff(&gold, &b16);
+        let e8 = max_abs_diff(&gold, &f8);
+        prop_assert!(g, e16 < 0.15, "bf16 err {e16}");
+        prop_assert!(g, e8 < 0.8, "fp8 err {e8}");
+        true
+    });
+}
+
+#[test]
+fn prop_format_roundtrip_monotone() {
+    // Scalar format conversion preserves ordering (needed by the running
+    // comparisons inside the kernels).
+    forall("format-monotone", 300, |g| {
+        let a = g.f64_in(-400.0, 400.0);
+        let b = g.f64_in(-400.0, 400.0);
+        let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+        let l16 = Bf16::from_f64(lo).to_f64();
+        let h16 = Bf16::from_f64(hi).to_f64();
+        prop_assert!(g, l16 <= h16, "bf16 order broken: {lo} {hi}");
+        let l8 = Fp8E4M3::from_f64(lo).to_f64();
+        let h8 = Fp8E4M3::from_f64(hi).to_f64();
+        prop_assert!(g, l8 <= h8, "fp8 order broken: {lo} {hi}");
+        true
+    });
+}
+
+#[test]
+fn prop_flash2_multi_equals_singles() {
+    forall("multi-consistency", 60, |g| {
+        let nq = g.usize_in(1, 6);
+        let nkv = g.usize_in(1, 48);
+        let d = 8usize;
+        let q = g.vec_normal(nq * d, 1.0);
+        let k = g.vec_normal(nkv * d, 1.0);
+        let v = g.vec_normal(nkv * d, 1.0);
+        let multi = flash2::attention_multi(&q, &k, &v, nq, nkv, d, 0.5);
+        for iq in 0..nq {
+            let single = flash2::attention(&q[iq * d..(iq + 1) * d], &k, &v, nkv, d, 0.5);
+            prop_assert!(
+                g,
+                max_abs_diff(&multi[iq * d..(iq + 1) * d], &single) < 1e-6,
+                "query {iq} differs"
+            );
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_permuting_kv_pairs_preserves_attention() {
+    // Softmax attention is permutation-invariant over KV pairs; FLASH-D's
+    // order-dependent recursion must still compute the same function.
+    forall("kv-permutation", 60, |g| {
+        let n = g.usize_in(2, 40);
+        let d = 4usize;
+        let q = g.vec_normal(d, 1.0);
+        let k = g.vec_normal(n * d, 1.0);
+        let v = g.vec_normal(n * d, 1.0);
+        let base = fd::attention(&q, &k, &v, n, d, 1.0);
+        // rotate the pairs by a random shift
+        let shift = g.usize_in(1, n - 1);
+        let mut k2 = vec![0.0f32; n * d];
+        let mut v2 = vec![0.0f32; n * d];
+        for i in 0..n {
+            let j = (i + shift) % n;
+            k2[i * d..(i + 1) * d].copy_from_slice(&k[j * d..(j + 1) * d]);
+            v2[i * d..(i + 1) * d].copy_from_slice(&v[j * d..(j + 1) * d]);
+        }
+        let rot = fd::attention(&q, &k2, &v2, n, d, 1.0);
+        prop_assert!(g, max_abs_diff(&base, &rot) < 5e-5, "order dependence detected");
+        true
+    });
+}

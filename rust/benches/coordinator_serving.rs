@@ -1,21 +1,50 @@
 //! Coordinator serving benchmark: end-to-end request latency and
 //! throughput through the full stack (router -> batcher -> KV cache ->
-//! PJRT FLASH-D artifact), including the batching-vs-sequential ablation.
+//! FLASH-D kernel), including the batching-vs-sequential ablation.
+//!
+//! Uses the PJRT artifact engine when artifacts are built; otherwise falls
+//! back to the pure-Rust tiled kernel engine (`Coordinator::start_naive`),
+//! so the serving path is measurable in artifact-free environments too.
 
 use flashd::bench_harness::workload::{session_requests, stateless_request, WorkloadSpec};
+use flashd::coordinator::router::Router;
 use flashd::coordinator::{Coordinator, CoordinatorConfig, Variant};
+use flashd::runtime::Manifest;
 use std::time::Instant;
+
+/// Synthetic router covering the default workload signature (4 heads,
+/// head_dim 32) at a few context capacities.
+fn synthetic_router() -> Router {
+    Router::from_manifest(
+        &Manifest::parse(
+            r#"{"artifacts": {
+          "attn_flashd_h4_l128_d32": {"file":"x","kind":"attention","variant":"flashd","causal":false,
+            "heads":4,"seq":128,"head_dim":32,"inputs":[],"n_outputs":1},
+          "attn_flashd_h4_l256_d32": {"file":"y","kind":"attention","variant":"flashd","causal":false,
+            "heads":4,"seq":256,"head_dim":32,"inputs":[],"n_outputs":1},
+          "attn_flash2_h4_l256_d32": {"file":"z","kind":"attention","variant":"flash2","causal":false,
+            "heads":4,"seq":256,"head_dim":32,"inputs":[],"n_outputs":1}
+        }}"#,
+        )
+        .expect("synthetic manifest"),
+    )
+}
 
 fn main() {
     let dir = flashd::runtime::default_artifact_dir();
-    if !dir.join("manifest.json").exists() {
-        eprintln!("artifacts missing; run `make artifacts`");
-        std::process::exit(1);
-    }
     let fast = std::env::var("FLASHD_BENCH_FAST").is_ok();
 
-    println!("=== coordinator serving (PJRT FLASH-D engine) ===\n");
-    let coord = Coordinator::start(CoordinatorConfig::default()).expect("start coordinator");
+    // The PJRT engine needs BOTH compiled artifacts and the pjrt_backend
+    // cfg; the default build stubs the runtime, so fall back to the
+    // tiled-kernel NaiveEngine in every other configuration.
+    let coord = if cfg!(pjrt_backend) && dir.join("manifest.json").exists() {
+        println!("=== coordinator serving (PJRT FLASH-D engine) ===\n");
+        Coordinator::start(CoordinatorConfig::default()).expect("start coordinator")
+    } else {
+        println!("=== coordinator serving (tiled-kernel NaiveEngine; no PJRT backend/artifacts) ===\n");
+        Coordinator::start_naive(CoordinatorConfig::default(), synthetic_router())
+            .expect("start coordinator")
+    };
 
     // -- stateless prefill-style requests, varying context --------------
     for &nkv in &[32usize, 128, 256] {

@@ -1,10 +1,13 @@
 //! Kernel throughput: the four software attention formulations head to
-//! head (f32), the reduced-precision + PWL hardware-faithful paths, and
-//! the end-to-end PJRT artifact latency of FLASH-D vs FlashAttention2 —
-//! the software analogue of the paper's "no performance penalty" claim.
+//! head (f32), the tiled + batched FLASH-D engine (tile and 1/2/4/8-thread
+//! sweeps, emitted to the machine-readable `BENCH_kernels.json`), the
+//! reduced-precision + PWL hardware-faithful paths, and the end-to-end
+//! PJRT artifact latency of FLASH-D vs FlashAttention2 — the software
+//! analogue of the paper's "no performance penalty" claim.
 
+use flashd::bench_harness::suites::{SWEEP_SHAPES, SWEEP_THREADS, SWEEP_TILES};
 use flashd::kernels::flashd as fd;
-use flashd::kernels::{flash1, flash2, naive, AttnProblem};
+use flashd::kernels::{batch, flash1, flash2, naive, tiled, AttnProblem, KernelConfig, RowJob};
 use flashd::numerics::{Bf16, Fp8E4M3};
 use flashd::pwl::{LnPwl, SigmoidPwl};
 use flashd::util::bench::{bb, Bench};
@@ -36,6 +39,77 @@ fn main() {
                 fd::SkipCriterion::Static,
             ));
         });
+    }
+
+    println!("\n=== tiled vs scalar FLASH-D (single thread) ===");
+    for &(n, d) in &SWEEP_SHAPES {
+        let p = AttnProblem::random(&mut rng, 1, n, d, 2.0);
+        let pairs = n as f64;
+        let scalar_ns = b.bench_throughput(&format!("flashd scalar     n={n} d={d}"), pairs, "pair", || {
+            bb(fd::attention(&p.q, &p.k, &p.v, n, d, 1.0));
+        });
+        let mut best_tiled = f64::INFINITY;
+        for &tile in &SWEEP_TILES {
+            let t = b.bench_throughput(
+                &format!("flashd tiled B={tile:<3} n={n} d={d}"),
+                pairs,
+                "pair",
+                || {
+                    bb(tiled::attention_tiled(&p.q, &p.k, &p.v, n, d, 1.0, tile));
+                },
+            );
+            best_tiled = best_tiled.min(t);
+        }
+        b.bench_throughput(&format!("flashd tiled+skip n={n} d={d}"), pairs, "pair", || {
+            bb(tiled::attention_tiled_instrumented(
+                &p.q, &p.k, &p.v, n, d, 1.0,
+                tiled::DEFAULT_TILE,
+                fd::SkipCriterion::Static,
+            ));
+        });
+        println!(
+            "-- tiled/scalar speedup at n={n} d={d}: {:.2}x (best tile)",
+            scalar_ns / best_tiled
+        );
+    }
+
+    println!("\n=== batched driver thread sweep ===");
+    for &(n, d) in &SWEEP_SHAPES {
+        // A realistic multi-head block: 32 independent query rows sharing
+        // one (n, d) KV context.
+        let rows = 32usize;
+        let p = AttnProblem::random(&mut rng, rows, n, d, 2.0);
+        let jobs: Vec<RowJob> = (0..rows)
+            .map(|r| RowJob {
+                q: &p.q[r * d..(r + 1) * d],
+                k: &p.k,
+                v: &p.v,
+                n,
+                d,
+                scale: 1.0,
+            })
+            .collect();
+        let mut t1 = f64::NAN;
+        for &threads in &SWEEP_THREADS {
+            let cfg = KernelConfig {
+                tile: tiled::DEFAULT_TILE,
+                threads,
+                skip: fd::SkipCriterion::None,
+            };
+            let t = b.bench_throughput(
+                &format!("batch rows=32 T={threads} n={n} d={d}"),
+                (rows * n) as f64,
+                "pair",
+                || {
+                    bb(batch::run_rows(&cfg, &jobs));
+                },
+            );
+            if threads == 1 {
+                t1 = t;
+            } else {
+                println!("-- scaling at T={threads}: {:.2}x over T=1", t1 / t);
+            }
+        }
     }
 
     println!("\n=== hardware-faithful paths (reduced precision + PWL) ===");
@@ -82,4 +156,6 @@ fn main() {
     }
 
     b.write_csv();
+    // The committed perf-trajectory file (schema: util::bench::Bench::to_json).
+    b.write_json("BENCH_kernels.json");
 }

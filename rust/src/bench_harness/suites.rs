@@ -156,6 +156,20 @@ fn tracking(rng: &mut Rng) -> String {
     )
 }
 
+/// The tiled/threaded kernel sweep grid consumed by
+/// `benches/kernel_throughput.rs` and emitted into `BENCH_kernels.json`:
+/// every shape × tile at one thread (tiled-vs-scalar), plus every shape ×
+/// thread count at the default tile (batched-driver scaling).
+///
+/// Tile sizes swept for the tiled-vs-scalar comparison.
+pub const SWEEP_TILES: [usize; 3] = [16, 32, 64];
+
+/// Thread counts swept on the batched driver.
+pub const SWEEP_THREADS: [usize; 4] = [1, 2, 4, 8];
+
+/// Problem shapes swept; (2048, 64) is the acceptance headline point.
+pub const SWEEP_SHAPES: [(usize, usize); 2] = [(512, 64), (2048, 64)];
+
 /// Build a training corpus of roughly `target_bytes` by concatenating
 /// prompts from all suites (the zoo models train on this mixture).
 pub fn training_corpus(target_bytes: usize, seed: u64) -> String {
@@ -201,6 +215,15 @@ mod tests {
             let p = gsm8k(&mut rng);
             assert!(p.contains("now") || p.contains("total"), "{p}");
         }
+    }
+
+    #[test]
+    fn sweep_constants_cover_the_acceptance_point() {
+        // the acceptance headline point (n=2048, d=64) with a 1-thread entry
+        assert!(SWEEP_SHAPES.contains(&(2048, 64)));
+        assert!(SWEEP_THREADS.contains(&1));
+        assert!(SWEEP_TILES.iter().all(|&t| t >= 1));
+        assert!(SWEEP_THREADS.windows(2).all(|w| w[0] < w[1]));
     }
 
     #[test]

@@ -4,6 +4,15 @@
 //! For each zoo model the engine decodes/scores prompts from all six
 //! suites with the instrumented FLASH-D attention and the paper's static
 //! [-6, 11] criterion, counting how often the output update simplifies.
+//!
+//! NOTE (PR 1): the engine now runs the tiled kernel, whose block-skip
+//! fast path generalizes the static low rule from score differences to
+//! the telescoped full sigmoid argument (`kernels::tiled` docs). Counts
+//! here therefore reflect the updates the tiled engine actually skipped —
+//! at least as many as the paper's per-step static rule, and mildly
+//! dependent on the tile length. For the strict per-step static numbers
+//! use `flashd::attention_instrumented` / `flashd::skip_stats_from_scores`
+//! (the hw activity model still does).
 
 use crate::bench_harness::suites::ALL_SUITES;
 use crate::kernels::flashd::SkipCriterion;

@@ -12,6 +12,7 @@ use super::metrics::Metrics;
 use super::request::{AttentionRequest, AttentionResponse, RequestKind};
 use super::router::{Route, Router};
 use super::scheduler::{Policy, Rejected, Scheduler};
+use crate::kernels::batch::{run_rows_into, KernelConfig, RowJob};
 use crate::runtime::{lit_f32, lit_i32, to_vec_f32, Runtime};
 use anyhow::{anyhow, Result};
 use std::sync::atomic::Ordering;
@@ -58,34 +59,53 @@ impl AttnEngine for PjrtEngine {
     }
 }
 
-/// Test/bench engine: the Rust golden kernel (no PJRT). Serves the same
-/// shapes as the given router and applies the artifacts' 1/sqrt(d) scale.
+/// Test/bench engine: the Rust tiled FLASH-D kernel driven through the
+/// batched multi-thread driver (no PJRT). Serves the same shapes as the
+/// given router and applies the artifacts' 1/sqrt(d) scale.
 pub struct NaiveEngine {
     pub router: Router,
+    /// Tile/thread/skip knobs for the kernel path (serving defaults to the
+    /// exact kernel: `SkipCriterion::None`).
+    pub kernel: KernelConfig,
+}
+
+impl NaiveEngine {
+    pub fn new(router: Router) -> NaiveEngine {
+        NaiveEngine { router, kernel: KernelConfig::default() }
+    }
+
+    pub fn with_kernel(router: Router, kernel: KernelConfig) -> NaiveEngine {
+        NaiveEngine { router, kernel }
+    }
 }
 
 impl AttnEngine for NaiveEngine {
     fn execute(&self, route: &Route, q: &[f32], k: &[f32], v: &[f32], kv_len: usize) -> Result<Vec<f32>> {
         let (h, lq, lkv, d) = (route.heads, route.q_slots, route.kv_slots, route.head_dim);
         let scale = (d as f32).powf(-0.5);
-        let mut out = vec![0.0f32; h * lq * d];
+        // One job per (head, query row); the batched driver partitions the
+        // block across worker threads with deterministic output ordering.
+        let mut jobs = Vec::with_capacity(h * lq);
         for hh in 0..h {
             let koff = hh * lkv * d;
             let kslice = &k[koff..koff + kv_len * d];
             let vslice = &v[koff..koff + kv_len * d];
             for iq in 0..lq {
                 let qoff = (hh * lq + iq) * d;
-                let o = crate::kernels::flashd::attention(
-                    &q[qoff..qoff + d],
-                    kslice,
-                    vslice,
-                    kv_len,
+                jobs.push(RowJob {
+                    q: &q[qoff..qoff + d],
+                    k: kslice,
+                    v: vslice,
+                    n: kv_len,
                     d,
                     scale,
-                );
-                out[qoff..qoff + d].copy_from_slice(&o);
+                });
             }
         }
+        // jobs are in (head, query) order, so the flat driver writes the
+        // response layout directly
+        let mut out = vec![0.0f32; h * lq * d];
+        run_rows_into(&self.kernel, &jobs, d, &mut out);
         Ok(out)
     }
 
@@ -106,6 +126,10 @@ pub struct CoordinatorConfig {
     /// How long the engine waits for more arrivals before dispatching a
     /// non-full batch.
     pub batch_window: Duration,
+    /// Tile/thread/skip knobs for the software kernel path (honored by
+    /// [`NaiveEngine`]-backed coordinators via [`Coordinator::start_naive`];
+    /// the PJRT path executes whole compiled blocks and ignores it).
+    pub kernel: KernelConfig,
 }
 
 impl Default for CoordinatorConfig {
@@ -117,6 +141,7 @@ impl Default for CoordinatorConfig {
             batch: BatchPolicy::default(),
             kv_budget_bytes: 256 << 20,
             batch_window: Duration::from_micros(200),
+            kernel: KernelConfig::default(),
         }
     }
 }
@@ -140,6 +165,13 @@ impl Coordinator {
         Coordinator::start_with(cfg, move || {
             PjrtEngine::open(&dir).map_err(|e| anyhow!("engine startup: {e}"))
         })
+    }
+
+    /// Start with the pure-Rust tiled kernel engine over the given router,
+    /// honoring `cfg.kernel` — the no-PJRT serving path.
+    pub fn start_naive(cfg: CoordinatorConfig, router: Router) -> Result<Coordinator> {
+        let kernel = cfg.kernel;
+        Coordinator::start_with(cfg, move || Ok(NaiveEngine::with_kernel(router, kernel)))
     }
 
     /// Start with an arbitrary engine factory (constructed *inside* the
@@ -477,9 +509,10 @@ mod tests {
     fn start_naive() -> Coordinator {
         let cfg = CoordinatorConfig {
             batch_window: Duration::from_micros(10),
+            kernel: KernelConfig { tile: 8, threads: 2, ..KernelConfig::default() },
             ..CoordinatorConfig::default()
         };
-        Coordinator::start_with(cfg, || Ok(NaiveEngine { router: test_router() })).unwrap()
+        Coordinator::start_naive(cfg, test_router()).unwrap()
     }
 
     fn rand_req(id: u64, kind: RequestKind, nq: usize, nkv: usize, seed: u64) -> AttentionRequest {

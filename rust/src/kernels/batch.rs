@@ -1,0 +1,392 @@
+//! Batched multi-query/multi-head attention driver over the tiled FLASH-D
+//! kernel.
+//!
+//! A forward pass (or a serving batch) decomposes into many *independent*
+//! attention rows — one per (layer, head, query). [`run_rows`] partitions a
+//! flat list of such rows into contiguous chunks and executes them on
+//! `std::thread::scope` workers:
+//!
+//! * **Deterministic output ordering** — worker `w` owns jobs
+//!   `[w*chunk, (w+1)*chunk)` and writes each result into the output slot
+//!   of the same index (disjoint `split_at_mut` regions, no locks), so the
+//!   result is bitwise identical for every thread count.
+//! * **Exact skip accounting** — each worker fills its own
+//!   [`SkipStats`]; the parts are merged in worker order afterwards
+//!   (u64 sums, order-independent anyway).
+//! * **Small-problem guard** — thread spawning is skipped when the total
+//!   work is too small to amortize it, so single-token decode steps don't
+//!   pay ~10 µs of spawn latency per layer.
+//!
+//! [`KernelConfig`] bundles the three knobs every caller threads through:
+//! KV tile length, worker count, and the skip criterion.
+
+use super::flashd::{SkipCriterion, SkipStats};
+use super::tiled::{self, DEFAULT_TILE};
+
+/// Tuning knobs for the tiled/batched kernel engine, threaded through
+/// `model::engine`, `model::decode`, and `coordinator::server`.
+#[derive(Copy, Clone, Debug, PartialEq)]
+pub struct KernelConfig {
+    /// KV tile length (keys per block) for the tiled kernel.
+    pub tile: usize,
+    /// Maximum worker threads for [`run_rows`] (1 = fully serial).
+    pub threads: usize,
+    /// Saturation-skip criterion applied per row.
+    pub skip: SkipCriterion,
+}
+
+impl Default for KernelConfig {
+    fn default() -> Self {
+        KernelConfig {
+            tile: DEFAULT_TILE,
+            threads: default_threads(),
+            skip: SkipCriterion::None,
+        }
+    }
+}
+
+/// Default worker count: the machine's parallelism, capped so tiny models
+/// don't drown in spawn overhead.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(8)
+}
+
+/// One independent attention row: a single query over an `(n, d)` KV
+/// prefix. All slices borrow from the caller.
+#[derive(Copy, Clone, Debug)]
+pub struct RowJob<'a> {
+    pub q: &'a [f32],
+    pub k: &'a [f32],
+    pub v: &'a [f32],
+    pub n: usize,
+    pub d: usize,
+    pub scale: f32,
+}
+
+/// Minimum per-thread work (in `n * d` multiply-accumulate units) before a
+/// worker thread is worth spawning.
+const MIN_WORK_PER_THREAD: usize = 1 << 15;
+
+/// Contiguous cost-balanced partition: returns per-worker chunk lengths
+/// (summing to `costs.len()`). Each worker takes jobs until it reaches an
+/// even share of the remaining cost — important for causal workloads,
+/// where job cost grows linearly with row index and equal-count chunks
+/// would leave the tail worker with ~2x the mean work. Deterministic in
+/// `(costs, workers)`.
+fn partition_by_cost(costs: &[usize], workers: usize) -> Vec<usize> {
+    let total: usize = costs.iter().sum();
+    let mut takes = Vec::with_capacity(workers);
+    let mut idx = 0usize;
+    let mut spent = 0usize;
+    for w in 0..workers {
+        if idx >= costs.len() {
+            break;
+        }
+        let left = workers - w;
+        if left == 1 {
+            takes.push(costs.len() - idx);
+            idx = costs.len();
+            break;
+        }
+        let target = (total - spent).div_ceil(left);
+        let mut take = 0usize;
+        let mut cost = 0usize;
+        while idx + take < costs.len() && (take == 0 || cost < target) {
+            cost += costs[idx + take];
+            take += 1;
+        }
+        idx += take;
+        spent += cost;
+        takes.push(take);
+    }
+    takes
+}
+
+fn run_chunk(cfg: &KernelConfig, jobs: &[RowJob<'_>], out: &mut [Vec<f32>], stats: &mut SkipStats) {
+    for (slot, job) in out.iter_mut().zip(jobs) {
+        let (o, st) = tiled::attention_tiled_instrumented(
+            job.q, job.k, job.v, job.n, job.d, job.scale, cfg.tile, cfg.skip,
+        );
+        stats.merge(&st);
+        *slot = o;
+    }
+}
+
+fn run_chunk_into(cfg: &KernelConfig, jobs: &[RowJob<'_>], d: usize, out: &mut [f32], stats: &mut SkipStats) {
+    for (slot, job) in out.chunks_exact_mut(d).zip(jobs) {
+        let st = tiled::attention_tiled_into(
+            job.q, job.k, job.v, job.n, job.d, job.scale, cfg.tile, cfg.skip, slot,
+        );
+        stats.merge(&st);
+    }
+}
+
+/// Shared driver: size the worker pool from total work, partition jobs into
+/// contiguous cost-balanced chunks, and run `chunk_fn` on each chunk with
+/// its `take * per` output slots, serially or on scoped threads. All
+/// decisions depend only on `(cfg, jobs)`, so results are bitwise identical
+/// for every thread count.
+fn run_partitioned<'j, T, F>(
+    cfg: &KernelConfig,
+    jobs: &[RowJob<'j>],
+    out: &mut [T],
+    per: usize,
+    chunk_fn: F,
+) -> SkipStats
+where
+    T: Send,
+    F: Fn(&[RowJob<'j>], &mut [T], &mut SkipStats) + Sync,
+{
+    let mut stats = SkipStats::default();
+    if jobs.is_empty() {
+        return stats;
+    }
+
+    let work: usize = jobs.iter().map(|j| j.n * j.d).sum();
+    let by_work = (work / MIN_WORK_PER_THREAD).max(1);
+    let threads = cfg.threads.max(1).min(jobs.len()).min(by_work);
+
+    if threads <= 1 {
+        chunk_fn(jobs, out, &mut stats);
+        return stats;
+    }
+
+    let costs: Vec<usize> = jobs.iter().map(|j| j.n * j.d).collect();
+    let takes = partition_by_cost(&costs, threads);
+    let mut stat_parts = vec![SkipStats::default(); takes.len()];
+    std::thread::scope(|scope| {
+        let chunk_fn = &chunk_fn;
+        let mut rem_jobs = jobs;
+        let mut rem_out = out;
+        for (part, &take) in stat_parts.iter_mut().zip(&takes) {
+            let (job_chunk, jobs_rest) = rem_jobs.split_at(take);
+            let (out_chunk, out_rest) = rem_out.split_at_mut(take * per);
+            rem_jobs = jobs_rest;
+            rem_out = out_rest;
+            scope.spawn(move || chunk_fn(job_chunk, out_chunk, part));
+        }
+    });
+    for part in &stat_parts {
+        stats.merge(part);
+    }
+    stats
+}
+
+/// Execute every job and return `(outputs, stats)`, with `outputs[i]` the
+/// result of `jobs[i]`. Bitwise identical for every `cfg.threads` value.
+pub fn run_rows(cfg: &KernelConfig, jobs: &[RowJob<'_>]) -> (Vec<Vec<f32>>, SkipStats) {
+    let mut outputs: Vec<Vec<f32>> = vec![Vec::new(); jobs.len()];
+    let stats = run_partitioned(cfg, jobs, &mut outputs, 1, |jc, oc, st| {
+        run_chunk(cfg, jc, oc, st)
+    });
+    (outputs, stats)
+}
+
+/// Flat-output variant of [`run_rows`] for the uniform-`d` hot paths
+/// (decode steps, serving blocks, per-layer forward): writes job `i`'s
+/// output row into `out[i * d..(i + 1) * d]` with no per-row allocation.
+/// Same determinism guarantee as [`run_rows`].
+pub fn run_rows_into(cfg: &KernelConfig, jobs: &[RowJob<'_>], d: usize, out: &mut [f32]) -> SkipStats {
+    assert_eq!(out.len(), jobs.len() * d, "output buffer must be jobs.len() * d");
+    debug_assert!(jobs.iter().all(|j| j.d == d));
+    run_partitioned(cfg, jobs, out, d, |jc, oc, st| {
+        run_chunk_into(cfg, jc, d, oc, st)
+    })
+}
+
+/// Causal per-head convenience: for each head buffer `(qh, kh, vh)` of `l`
+/// rows × `d` columns, row `r` attends over the `r + 1` KV prefix. Returns
+/// a flat output with row `(head * l + r)` at `[(head * l + r) * d..][..d]`
+/// plus merged stats — the shape `model::engine::forward` consumes.
+pub fn run_causal_heads(
+    cfg: &KernelConfig,
+    heads: &[(Vec<f32>, Vec<f32>, Vec<f32>)],
+    l: usize,
+    d: usize,
+    scale: f32,
+) -> (Vec<f32>, SkipStats) {
+    let mut jobs = Vec::with_capacity(heads.len() * l);
+    for (qh, kh, vh) in heads {
+        for r in 0..l {
+            jobs.push(RowJob {
+                q: &qh[r * d..(r + 1) * d],
+                k: &kh[..(r + 1) * d],
+                v: &vh[..(r + 1) * d],
+                n: r + 1,
+                d,
+                scale,
+            });
+        }
+    }
+    let mut out = vec![0.0f32; jobs.len() * d];
+    let stats = run_rows_into(cfg, &jobs, d, &mut out);
+    (out, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::flashd;
+    use crate::util::rng::Rng;
+
+    fn jobs_fixture(seed: u64, rows: usize, n: usize, d: usize) -> Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let mut rng = Rng::new(seed);
+        (0..rows)
+            .map(|_| {
+                (
+                    rng.normal_vec(d, 0.8),
+                    rng.normal_vec(n * d, 0.8),
+                    rng.normal_vec(n * d, 1.0),
+                )
+            })
+            .collect()
+    }
+
+    fn as_jobs<'a>(
+        data: &'a [(Vec<f32>, Vec<f32>, Vec<f32>)],
+        n: usize,
+        d: usize,
+    ) -> Vec<RowJob<'a>> {
+        data.iter()
+            .map(|(q, k, v)| RowJob { q, k, v, n, d, scale: 0.5 })
+            .collect()
+    }
+
+    #[test]
+    fn identical_across_thread_counts() {
+        let (n, d) = (257usize, 32usize);
+        let data = jobs_fixture(1, 13, n, d);
+        let jobs = as_jobs(&data, n, d);
+        let base_cfg = KernelConfig { tile: 16, threads: 1, skip: SkipCriterion::Static };
+        let (want, want_st) = run_rows(&base_cfg, &jobs);
+        for threads in [2usize, 3, 4, 8] {
+            let cfg = KernelConfig { threads, ..base_cfg };
+            let (got, got_st) = run_rows(&cfg, &jobs);
+            assert_eq!(got, want, "threads={threads}");
+            assert_eq!(got_st, want_st, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn matches_scalar_kernel_rowwise() {
+        let (n, d) = (120usize, 16usize);
+        let data = jobs_fixture(2, 6, n, d);
+        let jobs = as_jobs(&data, n, d);
+        let cfg = KernelConfig { tile: 32, threads: 4, skip: SkipCriterion::None };
+        let (outs, stats) = run_rows(&cfg, &jobs);
+        assert_eq!(stats.skipped(), 0);
+        assert_eq!(stats.total, 6 * (n as u64 - 1));
+        for (i, (q, k, v)) in data.iter().enumerate() {
+            let want = flashd::attention(q, k, v, n, d, 0.5);
+            assert_eq!(outs[i], want, "row {i}");
+        }
+    }
+
+    #[test]
+    fn empty_and_single_job() {
+        let cfg = KernelConfig::default();
+        let (outs, stats) = run_rows(&cfg, &[]);
+        assert!(outs.is_empty());
+        assert_eq!(stats.total, 0);
+
+        let data = jobs_fixture(3, 1, 9, 8);
+        let jobs = as_jobs(&data, 9, 8);
+        let (outs, _) = run_rows(&cfg, &jobs);
+        assert_eq!(outs.len(), 1);
+        assert_eq!(outs[0].len(), 8);
+    }
+
+    #[test]
+    fn causal_heads_matches_manual_rows() {
+        let (l, d) = (12usize, 8usize);
+        let mut rng = Rng::new(4);
+        let heads: Vec<_> = (0..3)
+            .map(|_| {
+                (
+                    rng.normal_vec(l * d, 0.7),
+                    rng.normal_vec(l * d, 0.7),
+                    rng.normal_vec(l * d, 1.0),
+                )
+            })
+            .collect();
+        let cfg = KernelConfig { tile: 4, threads: 2, skip: SkipCriterion::Static };
+        let (outs, stats) = run_causal_heads(&cfg, &heads, l, d, 0.35);
+        assert_eq!(outs.len(), 3 * l * d);
+        // rows per head: each row r contributes r weight-update steps
+        assert_eq!(stats.total, 3 * (l as u64) * (l as u64 - 1) / 2);
+        for (h, (qh, kh, vh)) in heads.iter().enumerate() {
+            for r in 0..l {
+                let (want, _) = tiled::attention_tiled_instrumented(
+                    &qh[r * d..(r + 1) * d],
+                    &kh[..(r + 1) * d],
+                    &vh[..(r + 1) * d],
+                    r + 1,
+                    d,
+                    0.35,
+                    4,
+                    SkipCriterion::Static,
+                );
+                let got = &outs[(h * l + r) * d..(h * l + r + 1) * d];
+                assert_eq!(got, &want[..], "head {h} row {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn run_rows_into_matches_run_rows() {
+        let (n, d) = (90usize, 16usize);
+        let data = jobs_fixture(7, 9, n, d);
+        let jobs = as_jobs(&data, n, d);
+        for threads in [1usize, 3, 8] {
+            let cfg = KernelConfig { tile: 16, threads, skip: SkipCriterion::Static };
+            let (vec_outs, vec_st) = run_rows(&cfg, &jobs);
+            let mut flat = vec![0.0f32; jobs.len() * d];
+            let flat_st = run_rows_into(&cfg, &jobs, d, &mut flat);
+            assert_eq!(flat_st, vec_st, "threads={threads}");
+            assert_eq!(flat, vec_outs.concat(), "threads={threads}");
+        }
+        // empty input
+        let mut empty: Vec<f32> = Vec::new();
+        let st = run_rows_into(&KernelConfig::default(), &[], d, &mut empty);
+        assert_eq!(st.total, 0);
+    }
+
+    #[test]
+    fn partition_by_cost_is_exact_and_balanced() {
+        // covers every job exactly once
+        let costs: Vec<usize> = (1..=40).collect(); // linearly growing (causal shape)
+        for workers in [1usize, 2, 3, 4, 8] {
+            let takes = partition_by_cost(&costs, workers);
+            assert!(takes.len() <= workers);
+            assert_eq!(takes.iter().sum::<usize>(), costs.len(), "workers={workers}");
+            assert!(takes.iter().all(|&t| t > 0));
+            // balance: no chunk carries more than ~1.6x the ideal share
+            let total: usize = costs.iter().sum();
+            let ideal = total as f64 / workers as f64;
+            let mut idx = 0;
+            for &t in &takes {
+                let c: usize = costs[idx..idx + t].iter().sum();
+                idx += t;
+                assert!(
+                    (c as f64) < 1.6 * ideal + *costs.iter().max().unwrap() as f64,
+                    "workers={workers}: chunk cost {c} vs ideal {ideal}"
+                );
+            }
+        }
+        // degenerate inputs
+        assert_eq!(partition_by_cost(&[], 4), Vec::<usize>::new());
+        assert_eq!(partition_by_cost(&[0, 0, 0], 2).iter().sum::<usize>(), 3);
+        assert_eq!(partition_by_cost(&[5], 8), vec![1]);
+    }
+
+    #[test]
+    fn default_config_is_sane() {
+        let cfg = KernelConfig::default();
+        assert!(cfg.tile >= 1);
+        assert!(cfg.threads >= 1 && cfg.threads <= 8);
+        assert_eq!(cfg.skip, SkipCriterion::None);
+    }
+}

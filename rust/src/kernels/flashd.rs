@@ -16,7 +16,7 @@
 //! output update (value load + FMA) can be **skipped** — the effect Table I
 //! quantifies.
 
-use super::dot;
+use super::{axpy_blend, dot};
 use crate::numerics::Scalar;
 use crate::pwl::{LnPwl, SigmoidPwl};
 
@@ -69,10 +69,7 @@ pub fn attention(q: &[f32], k: &[f32], v: &[f32], n: usize, d: usize, scale: f32
             ln_w = log_sigmoid(x);
             sigmoid(x)
         } as f32;
-        let vi = &v[i * d..(i + 1) * d];
-        for j in 0..d {
-            o[j] += (vi[j] - o[j]) * w; // Eq. (12): sub + mul + add
-        }
+        axpy_blend(&mut o, &v[i * d..(i + 1) * d], w); // Eq. (12): sub + mul + add
         s_prev = s;
     }
     o
@@ -183,9 +180,7 @@ pub fn attention_instrumented(
         }
         let w = sigmoid(x) as f32;
         ln_w = log_sigmoid(x);
-        for j in 0..d {
-            o[j] += (vi[j] - o[j]) * w;
-        }
+        axpy_blend(&mut o, vi, w);
         s_prev = s;
     }
     (o, stats)
@@ -336,10 +331,7 @@ pub fn attention_traced(q: &[f32], k: &[f32], v: &[f32], n: usize, d: usize, sca
         tr.args.push(x as f32);
         tr.weights.push(w as f32);
         let wf = w as f32;
-        let vi = &v[i * d..(i + 1) * d];
-        for j in 0..d {
-            o[j] += (vi[j] - o[j]) * wf;
-        }
+        axpy_blend(&mut o, &v[i * d..(i + 1) * d], wf);
         s_prev = s;
     }
     (o, tr)

@@ -10,21 +10,92 @@
 //!
 //! Layout convention: `k` and `v` are row-major `(n, d)` flat slices; `q`
 //! is a single query of length `d`. Multi-query helpers take `(nq, d)`.
+//!
+//! ## The tiled + batched engine
+//!
+//! The scalar kernels above are the one-key-at-a-time references. The
+//! production hot path is two layers on top of them:
+//!
+//! * [`tiled`] — a tile-granular FLASH-D kernel. KV is walked in blocks of
+//!   `Bc` keys with the carried state `(s_prev, ln_w, o)` crossing tile
+//!   boundaries unchanged — the FLASH-D recursion has no per-tile epilogue,
+//!   which is exactly the tiled-computation property §III of the paper
+//!   proves is preserved. Per tile the kernel (1) scores all keys through
+//!   the shared unrolled [`dot`], (2) applies a **block-skip fast path**:
+//!   because skip-low passes `ln w` through as the raw sigmoid argument,
+//!   the argument telescopes across consecutive skipped steps
+//!   (`x_t = s_t - s_entry + ln_w_entry`), so a single comparison of the
+//!   tile's score maximum against the saturation threshold proves the whole
+//!   tile contributes nothing to the output — its value loads and Eq. 12
+//!   updates are skipped entirely; (3) otherwise falls back to the exact
+//!   per-step recursion using [`axpy_blend`]. With
+//!   [`flashd::SkipCriterion::None`] the tiled kernel is bit-identical to
+//!   [`flashd::attention`] for every tile size.
+//! * [`batch`] — a multi-query/multi-head driver ([`batch::run_rows`]) that
+//!   partitions independent attention rows across `std::thread::scope`
+//!   workers with deterministic output ordering and exact [`flashd::SkipStats`]
+//!   aggregation. [`batch::KernelConfig`] (`tile`, `threads`, `skip`) is the
+//!   knob bundle threaded through `model::engine`, `model::decode`, and the
+//!   serving coordinator so every layer runs the same kernel path.
+//!
+//! Data layout note: jobs reference disjoint `(n, d)` row-major K/V slices;
+//! outputs land at the job's index, so multi-threaded runs are bitwise
+//! reproducible and independent of the thread count.
 
+pub mod batch;
 pub mod flash1;
 pub mod flash2;
 pub mod flashd;
 pub mod naive;
+pub mod tiled;
+
+pub use batch::{run_rows, run_rows_into, KernelConfig, RowJob};
 
 /// Dot product of two length-`d` slices.
+///
+/// Eight-wide unrolled accumulation over `chunks_exact` so the compiler
+/// drops bounds checks and vectorizes; shared by every kernel (scalar and
+/// tiled) so all formulations see the same summation order.
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
-    let mut acc = 0.0f32;
-    for i in 0..a.len() {
-        acc += a[i] * b[i];
+    let n8 = a.len() & !7;
+    let mut acc = [0.0f32; 8];
+    for (x, y) in a[..n8].chunks_exact(8).zip(b[..n8].chunks_exact(8)) {
+        acc[0] += x[0] * y[0];
+        acc[1] += x[1] * y[1];
+        acc[2] += x[2] * y[2];
+        acc[3] += x[3] * y[3];
+        acc[4] += x[4] * y[4];
+        acc[5] += x[5] * y[5];
+        acc[6] += x[6] * y[6];
+        acc[7] += x[7] * y[7];
     }
-    acc
+    let mut tail = 0.0f32;
+    for (x, y) in a[n8..].iter().zip(&b[n8..]) {
+        tail += x * y;
+    }
+    ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7])) + tail
+}
+
+/// The fused Eq. 12 output update `o[j] += (v[j] - o[j]) * w`, four-wide
+/// unrolled over `chunks_exact` — the single vector op FLASH-D performs per
+/// active KV step, shared by the scalar and tiled kernels.
+#[inline]
+pub fn axpy_blend(o: &mut [f32], v: &[f32], w: f32) {
+    debug_assert_eq!(o.len(), v.len());
+    let n4 = o.len() & !3;
+    let (o4, o_tail) = o.split_at_mut(n4);
+    let (v4, v_tail) = v.split_at(n4);
+    for (oc, vc) in o4.chunks_exact_mut(4).zip(v4.chunks_exact(4)) {
+        oc[0] += (vc[0] - oc[0]) * w;
+        oc[1] += (vc[1] - oc[1]) * w;
+        oc[2] += (vc[2] - oc[2]) * w;
+        oc[3] += (vc[3] - oc[3]) * w;
+    }
+    for (oo, vv) in o_tail.iter_mut().zip(v_tail) {
+        *oo += (*vv - *oo) * w;
+    }
 }
 
 /// Maximum absolute difference between two vectors.
@@ -91,6 +162,46 @@ mod tests {
     fn dot_basic() {
         assert_eq!(dot(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]), 32.0);
         assert_eq!(dot(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn dot_matches_scalar_reference_all_lengths() {
+        let mut rng = Rng::new(99);
+        for len in 0..40usize {
+            let a = rng.normal_vec(len, 1.0);
+            let b = rng.normal_vec(len, 1.0);
+            let reference: f64 = a.iter().zip(&b).map(|(x, y)| (*x as f64) * (*y as f64)).sum();
+            let got = dot(&a, &b) as f64;
+            assert!((got - reference).abs() < 1e-4 * (1.0 + reference.abs()), "len={len}");
+        }
+    }
+
+    #[test]
+    fn axpy_blend_matches_scalar_update_all_lengths() {
+        let mut rng = Rng::new(100);
+        for len in 0..33usize {
+            let mut o = rng.normal_vec(len, 1.0);
+            let v = rng.normal_vec(len, 1.0);
+            let w = 0.37f32;
+            let mut want = o.clone();
+            for j in 0..len {
+                want[j] += (v[j] - want[j]) * w;
+            }
+            axpy_blend(&mut o, &v, w);
+            assert_eq!(o, want, "len={len}");
+        }
+    }
+
+    #[test]
+    fn axpy_blend_endpoints() {
+        // w = 0 leaves o untouched; w = 1 replaces o by v.
+        let mut o = vec![1.0f32, -2.0, 3.0, 4.0, 5.0];
+        let v = vec![9.0f32, 8.0, 7.0, 6.0, 5.0];
+        let before = o.clone();
+        axpy_blend(&mut o, &v, 0.0);
+        assert_eq!(o, before);
+        axpy_blend(&mut o, &v, 1.0);
+        assert_eq!(o, v);
     }
 
     #[test]

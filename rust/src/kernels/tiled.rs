@@ -1,0 +1,352 @@
+//! Tile-granular FLASH-D: the cache-blocked production kernel.
+//!
+//! KV is walked in blocks of `Bc` keys ("tiles") with an explicit carried
+//! state `(s_prev, ln_w, o)`. Because FLASH-D has no running maximum, no
+//! sum-of-exponents and no division, the state crosses tile boundaries
+//! completely unchanged — there is no per-tile rescaling epilogue. This is
+//! the tiled-computation property §III of the paper proves is preserved,
+//! realized in software.
+//!
+//! Per tile the kernel does three things:
+//!
+//! 1. **Score pass** — every key in the tile goes through the shared
+//!    unrolled [`dot`], producing the tile's score vector and its maximum
+//!    in one streaming sweep over K (V is not touched yet).
+//! 2. **Block-skip fast path** (§III-C generalized from steps to tiles) —
+//!    the skip-low rule passes the sigmoid argument through as the carried
+//!    `ln w`, so across consecutively skipped steps the argument
+//!    *telescopes*: `x_t = s_t - s_entry + ln_w_entry`. A single
+//!    comparison `s_max - s_prev + ln_w <= lo` therefore proves every
+//!    argument in the tile saturates low, i.e. the whole tile's weights
+//!    vanish and its value loads + Eq. 12 updates can be skipped
+//!    entirely. The cheap scalar chain is still replayed (and re-verified
+//!    step by step, so floating-point edge cases cannot diverge from the
+//!    per-step kernel) to carry `(s_prev, ln_w)` forward bit-exactly.
+//! 3. **Fallback** — the exact per-step recursion of
+//!    [`flashd::attention_instrumented`], using [`axpy_blend`] for the
+//!    Eq. 12 update.
+//!
+//! Equivalences (enforced by unit + property tests):
+//! * `SkipCriterion::None`   → bit-identical to [`flashd::attention`] for
+//!   every tile size (the fast path never fires; the per-step sequence of
+//!   float ops is the same).
+//! * `SkipCriterion::Adaptive` → bit-identical to
+//!   [`flashd::attention_instrumented`], output *and* [`SkipStats`]: the
+//!   fast path fires exactly when every step in the tile would have taken
+//!   the per-step adaptive skip-low branch.
+//! * `SkipCriterion::Static` → the tile test upgrades the static low rule
+//!   (score difference alone) to the telescoped full-argument test, which
+//!   is sound — the weights truly saturate — and skips at least as often;
+//!   `SkipStats::total` stays exact, and the output stays within the
+//!   static-skip error envelope.
+
+use super::flashd::{log_sigmoid, sigmoid, SkipCriterion, SkipStats, ACTIVE_HI, ACTIVE_LO};
+use super::{axpy_blend, dot};
+
+/// Default KV tile length (keys per block). 32 keys × d=64 × 4 B ≈ 8 KiB
+/// of K plus 8 KiB of V per tile — comfortably L1-resident.
+pub const DEFAULT_TILE: usize = 32;
+
+/// Largest tile held in a stack-resident score buffer; bigger tiles fall
+/// back to one heap allocation.
+const STACK_TILE: usize = 64;
+
+/// Tiled single-query FLASH-D with exact nonlinearities and no skipping.
+/// Bit-identical to [`super::flashd::attention`] for every `tile >= 1`.
+pub fn attention_tiled(q: &[f32], k: &[f32], v: &[f32], n: usize, d: usize, scale: f32, tile: usize) -> Vec<f32> {
+    attention_tiled_instrumented(q, k, v, n, d, scale, tile, SkipCriterion::None).0
+}
+
+/// Tiled single-query FLASH-D with a [`SkipCriterion`] and exact
+/// [`SkipStats`] accounting. See the module docs for the per-criterion
+/// equivalence guarantees.
+#[allow(clippy::too_many_arguments)]
+pub fn attention_tiled_instrumented(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n: usize,
+    d: usize,
+    scale: f32,
+    tile: usize,
+    crit: SkipCriterion,
+) -> (Vec<f32>, SkipStats) {
+    let mut o = vec![0.0f32; d];
+    let stats = attention_tiled_into(q, k, v, n, d, scale, tile, crit, &mut o);
+    (o, stats)
+}
+
+/// Allocation-free core: writes the output row into the caller-provided
+/// `o` (length `d`, fully overwritten) — the form the batched driver's
+/// flat-output path uses on decode/serving hot paths.
+#[allow(clippy::too_many_arguments)]
+pub fn attention_tiled_into(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n: usize,
+    d: usize,
+    scale: f32,
+    tile: usize,
+    crit: SkipCriterion,
+    o: &mut [f32],
+) -> SkipStats {
+    assert!(n > 0, "empty KV context");
+    assert!(tile > 0, "tile must be >= 1");
+    assert_eq!(o.len(), d);
+    debug_assert_eq!(q.len(), d);
+    debug_assert!(k.len() >= n * d && v.len() >= n * d);
+
+    let mut stats = SkipStats::default();
+
+    // Step 0 (w_1 = 1): output becomes v_0, no weight-update counted —
+    // mirrors `attention_instrumented`.
+    let s0 = (dot(q, &k[..d]) * scale) as f64;
+    o.copy_from_slice(&v[..d]);
+    let mut s_prev = s0;
+    let mut ln_w = 0.0f64;
+
+    // The tile-skip threshold on the *full* sigmoid argument. The static
+    // criterion's step rule tests the score difference alone; at tile
+    // granularity the telescoped argument test (threshold ACTIVE_LO) is the
+    // sound generalization — it subsumes every static skip-low step because
+    // ln w <= 0 only pushes the argument lower.
+    let tile_lo = match crit {
+        SkipCriterion::None => f64::NEG_INFINITY,
+        SkipCriterion::Static => ACTIVE_LO,
+        SkipCriterion::Adaptive { lo, .. } => lo,
+    };
+
+    // Score scratch: stack-resident for every swept tile size, one heap
+    // allocation only for oversized tiles (the single-token decode path
+    // hits this function once per (layer, head, token), so per-call heap
+    // traffic matters).
+    let mut stack_buf = [0.0f64; STACK_TILE];
+    let mut heap_buf: Vec<f64> = Vec::new();
+    let scores: &mut [f64] = if tile <= STACK_TILE {
+        &mut stack_buf[..tile]
+    } else {
+        heap_buf.resize(tile, 0.0);
+        &mut heap_buf
+    };
+    let mut i = 1usize;
+    while i < n {
+        let t_len = tile.min(n - i);
+
+        // --- 1. score pass: dot every key in the tile, track the max ---
+        let mut s_max = f64::NEG_INFINITY;
+        for (t, srow) in scores[..t_len].iter_mut().enumerate() {
+            let row = i + t;
+            let s = (dot(q, &k[row * d..(row + 1) * d]) * scale) as f64;
+            *srow = s;
+            if s > s_max {
+                s_max = s;
+            }
+        }
+
+        // --- 2. block-skip fast path -----------------------------------
+        // The telescoped bound proves saturation for the whole tile; the
+        // scalar chain below re-verifies it step by step so the committed
+        // state (and stats) are bit-identical to the per-step kernel even
+        // in floating-point corner cases.
+        if s_max - s_prev + ln_w <= tile_lo {
+            let mut sp = s_prev;
+            let mut lw = ln_w;
+            let mut all_low = true;
+            for &s in &scores[..t_len] {
+                let x = s - sp + lw;
+                if x > tile_lo {
+                    all_low = false;
+                    break;
+                }
+                lw = x; // skip-low pass-through: ln sigmoid(x) ~ x
+                sp = s;
+            }
+            if all_low {
+                // Whole tile saturates low: no value loads, no output
+                // updates, state carried by the scalar chain alone.
+                stats.total += t_len as u64;
+                stats.skip_low += t_len as u64;
+                s_prev = sp;
+                ln_w = lw;
+                i += t_len;
+                continue;
+            }
+        }
+
+        // --- 3. fallback: exact per-step recursion ----------------------
+        for (t, &s) in scores[..t_len].iter().enumerate() {
+            let row = i + t;
+            let vi = &v[row * d..(row + 1) * d];
+            stats.total += 1;
+            let s_diff = s - s_prev;
+            let x = s_diff + ln_w;
+            let (lo_hit, hi_hit) = match crit {
+                SkipCriterion::None => (false, false),
+                SkipCriterion::Static => (s_diff <= ACTIVE_LO, s_diff >= ACTIVE_HI),
+                SkipCriterion::Adaptive { lo, hi } => (x <= lo, x >= hi),
+            };
+            if lo_hit {
+                stats.skip_low += 1;
+                ln_w = x;
+                s_prev = s;
+                continue;
+            }
+            if hi_hit {
+                stats.skip_high += 1;
+                o.copy_from_slice(vi);
+                ln_w = 0.0;
+                s_prev = s;
+                continue;
+            }
+            let w = sigmoid(x) as f32;
+            ln_w = log_sigmoid(x);
+            axpy_blend(o, vi, w);
+            s_prev = s;
+        }
+        i += t_len;
+    }
+    stats
+}
+
+/// Multi-query tiled FLASH-D: independent `(nq, d)` queries over a shared
+/// KV context (the per-head serving shape).
+#[allow(clippy::too_many_arguments)]
+pub fn attention_tiled_multi(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    nq: usize,
+    nkv: usize,
+    d: usize,
+    scale: f32,
+    tile: usize,
+) -> Vec<f32> {
+    let mut out = Vec::with_capacity(nq * d);
+    for iq in 0..nq {
+        out.extend(attention_tiled(&q[iq * d..(iq + 1) * d], k, v, nkv, d, scale, tile));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::flashd;
+    use crate::kernels::{max_abs_diff, naive};
+    use crate::util::rng::Rng;
+
+    fn problem(seed: u64, n: usize, d: usize, std: f32) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        (rng.normal_vec(d, std), rng.normal_vec(n * d, std), rng.normal_vec(n * d, 1.0))
+    }
+
+    #[test]
+    fn none_bitmatches_scalar_flashd_across_tiles() {
+        for &(n, d) in &[(1usize, 8usize), (5, 4), (64, 16), (257, 32), (300, 64)] {
+            let (q, k, v) = problem(n as u64 * 31 + d as u64, n, d, 0.9);
+            let gold = flashd::attention(&q, &k, &v, n, d, 0.4);
+            for tile in [1usize, 7, 16, 64, n] {
+                let got = attention_tiled(&q, &k, &v, n, d, 0.4, tile);
+                assert_eq!(got, gold, "n={n} d={d} tile={tile}");
+            }
+        }
+    }
+
+    #[test]
+    fn none_matches_naive() {
+        for &(n, d) in &[(2usize, 4usize), (65, 16), (512, 32)] {
+            let (q, k, v) = problem(n as u64 * 13 + d as u64, n, d, 0.9);
+            let a = attention_tiled(&q, &k, &v, n, d, 0.4, DEFAULT_TILE);
+            let b = naive::attention(&q, &k, &v, n, d, 0.4);
+            assert!(max_abs_diff(&a, &b) < 3e-5, "n={n} d={d}: {}", max_abs_diff(&a, &b));
+        }
+    }
+
+    #[test]
+    fn adaptive_bitmatches_per_step_instrumented() {
+        let crit = SkipCriterion::Adaptive { lo: ACTIVE_LO, hi: ACTIVE_HI };
+        for &std in &[0.7f32, 2.0, 4.0] {
+            let (q, k, v) = problem(1000 + (std * 10.0) as u64, 400, 16, std);
+            let (want_o, want_st) = flashd::attention_instrumented(&q, &k, &v, 400, 16, 1.0, crit);
+            for tile in [1usize, 8, 32, 100, 400] {
+                let (got_o, got_st) =
+                    attention_tiled_instrumented(&q, &k, &v, 400, 16, 1.0, tile, crit);
+                assert_eq!(got_o, want_o, "std={std} tile={tile}");
+                assert_eq!(got_st, want_st, "std={std} tile={tile}");
+            }
+        }
+    }
+
+    #[test]
+    fn static_totals_exact_and_error_bounded() {
+        // Realistic trained-attention score scale (cf. the Table I study).
+        let (q, k, v) = problem(6, 512, 16, 0.7);
+        let exact = flashd::attention(&q, &k, &v, 512, 16, 1.0);
+        let (_, step_stats) =
+            flashd::attention_instrumented(&q, &k, &v, 512, 16, 1.0, SkipCriterion::Static);
+        for tile in [4usize, 16, 64] {
+            let (got, st) =
+                attention_tiled_instrumented(&q, &k, &v, 512, 16, 1.0, tile, SkipCriterion::Static);
+            assert_eq!(st.total, step_stats.total, "tile={tile}");
+            assert_eq!(st.total, 511);
+            assert!(
+                max_abs_diff(&exact, &got) < 2e-2,
+                "tile={tile}: {}",
+                max_abs_diff(&exact, &got)
+            );
+        }
+    }
+
+    #[test]
+    fn block_skip_fires_on_engineered_decreasing_scores() {
+        // Steeply decreasing scores: after the first key every step
+        // saturates low, so with tile=4 whole tiles skip and the output
+        // stays exactly v_0.
+        let d = 8usize;
+        let n = 33usize;
+        let mut rng = Rng::new(9);
+        let q: Vec<f32> = {
+            let mut x = vec![0.0f32; d];
+            x[0] = 1.0;
+            x
+        };
+        let mut k = Vec::new();
+        for i in 0..n {
+            let mut row = vec![0.0f32; d];
+            row[0] = -(i as f32) * 8.0;
+            k.extend(row);
+        }
+        let v = rng.normal_vec(n * d, 1.0);
+        let (o, st) =
+            attention_tiled_instrumented(&q, &k, &v, n, d, 1.0, 4, SkipCriterion::Static);
+        assert_eq!(st.skip_low, (n - 1) as u64);
+        assert_eq!(st.total, (n - 1) as u64);
+        assert_eq!(o, v[..d].to_vec());
+    }
+
+    #[test]
+    fn multi_matches_per_query() {
+        let mut rng = Rng::new(77);
+        let (nq, nkv, d) = (4usize, 100usize, 16usize);
+        let q = rng.normal_vec(nq * d, 0.8);
+        let k = rng.normal_vec(nkv * d, 0.8);
+        let v = rng.normal_vec(nkv * d, 1.0);
+        let multi = attention_tiled_multi(&q, &k, &v, nq, nkv, d, 0.3, 16);
+        for iq in 0..nq {
+            let single = attention_tiled(&q[iq * d..(iq + 1) * d], &k, &v, nkv, d, 0.3, 16);
+            assert_eq!(&multi[iq * d..(iq + 1) * d], &single[..]);
+        }
+    }
+
+    #[test]
+    fn stable_without_max_subtraction() {
+        // Scores of magnitude O(1000): the tiled path inherits FLASH-D's
+        // inherent stability (nothing outside the sigmoid is exponentiated).
+        let (q, k, v) = problem(3, 64, 16, 9.0);
+        let a = attention_tiled(&q, &k, &v, 64, 16, 1.0, 8);
+        assert!(a.iter().all(|x| x.is_finite()));
+        let b = naive::attention(&q, &k, &v, 64, 16, 1.0);
+        assert!(max_abs_diff(&a, &b) < 1e-4);
+    }
+}

@@ -7,7 +7,7 @@
 //! Numerically identical to the full forward (same FLASH-D recursion, same
 //! QK-norm), verified in tests and in `EXPERIMENTS.md` §Perf.
 
-use crate::kernels::flashd::{self, SkipCriterion};
+use crate::kernels::batch::{self, KernelConfig, RowJob};
 use crate::model::engine::{Engine, ForwardStats};
 
 /// Per-layer attention cache: normalized keys + values, per head,
@@ -24,7 +24,9 @@ pub struct DecodeSession<'a> {
     layers: Vec<LayerCache>,
     pub pos: usize,
     pub stats: ForwardStats,
-    criterion: SkipCriterion,
+    /// Effective kernel config, snapshotted from [`Engine::kernel_config`]
+    /// (so its `skip` already carries the engine's criterion).
+    kernel: KernelConfig,
 }
 
 fn rms_inv(row: &[f32]) -> f32 {
@@ -62,7 +64,7 @@ impl<'a> DecodeSession<'a> {
             layers,
             pos: 0,
             stats: ForwardStats::default(),
-            criterion: engine.criterion,
+            kernel: engine.kernel_config(),
         }
     }
 
@@ -100,6 +102,9 @@ impl<'a> DecodeSession<'a> {
 
             let mut attn = vec![0.0f32; dm];
             let cache = &mut self.layers[layer];
+            // Append the new (normalized) K/V row per head, then run all
+            // heads' attention rows through the batched tiled driver.
+            let mut qhs: Vec<Vec<f32>> = Vec::with_capacity(nh);
             for head in 0..nh {
                 let mut qh = q[head * dh..(head + 1) * dh].to_vec();
                 let mut kh = k[head * dh..(head + 1) * dh].to_vec();
@@ -112,20 +117,27 @@ impl<'a> DecodeSession<'a> {
 
                 cache.k[head].extend_from_slice(&kh);
                 cache.v[head].extend_from_slice(&v[head * dh..(head + 1) * dh]);
-                let n = self.pos + 1;
-                let (o, st) = flashd::attention_instrumented(
-                    &qh,
-                    &cache.k[head],
-                    &cache.v[head],
-                    n,
-                    dh,
-                    scale,
-                    self.criterion,
-                );
-                self.stats.skip.merge(&st);
-                self.stats.rows += 1;
-                attn[head * dh..(head + 1) * dh].copy_from_slice(&o);
+                qhs.push(qh);
             }
+            let n = self.pos + 1;
+            let kcfg = self.kernel;
+            // head-ordered jobs write straight into the (nh * dh) attention
+            // row — no per-head output allocation
+            let st = {
+                let jobs: Vec<RowJob<'_>> = (0..nh)
+                    .map(|head| RowJob {
+                        q: &qhs[head],
+                        k: &cache.k[head],
+                        v: &cache.v[head],
+                        n,
+                        d: dh,
+                        scale,
+                    })
+                    .collect();
+                batch::run_rows_into(&kcfg, &jobs, dh, &mut attn)
+            };
+            self.stats.skip.merge(&st);
+            self.stats.rows += nh as u64;
             let proj = vecmat(&attn, &self.engine.param(&format!("{pfx}.wo")).data, dm, dm);
             for j in 0..dm {
                 x[j] += proj[j];

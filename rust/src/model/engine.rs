@@ -7,7 +7,8 @@
 //! `rust/tests/e2e_runtime.rs` — the same weights must produce the same
 //! logits through the PJRT path and through this engine.
 
-use crate::kernels::flashd::{self, SkipCriterion, SkipStats};
+use crate::kernels::batch::{self, KernelConfig};
+use crate::kernels::flashd::{SkipCriterion, SkipStats};
 use crate::kernels::AttnProblem;
 use crate::model::weights::NamedTensor;
 use crate::runtime::ModelInfo;
@@ -34,8 +35,15 @@ impl ForwardStats {
 pub struct Engine {
     pub info: ModelInfo,
     params: HashMap<String, NamedTensor>,
-    /// Skip criterion applied by the instrumented attention.
+    /// Skip criterion applied by the instrumented attention — the single
+    /// skip knob (the CLI, Table I harness, and tests set this; the kernel
+    /// driver's tile/thread tuning lives behind
+    /// [`Engine::set_kernel_tuning`]).
     pub criterion: SkipCriterion,
+    /// Tile/thread tuning for the batched kernel driver. Private so the
+    /// engine has exactly one skip knob: `criterion` is substituted into
+    /// the config by [`Engine::kernel_config`].
+    kernel: KernelConfig,
 }
 
 fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
@@ -108,7 +116,26 @@ impl Engine {
             }
             params.insert(t.name.clone(), t);
         }
-        Ok(Engine { info, params, criterion: SkipCriterion::Static })
+        Ok(Engine {
+            info,
+            params,
+            criterion: SkipCriterion::Static,
+            kernel: KernelConfig::default(),
+        })
+    }
+
+    /// The effective kernel configuration (tile/threads from the private
+    /// tuning, skip from `criterion`).
+    pub fn kernel_config(&self) -> KernelConfig {
+        KernelConfig { skip: self.criterion, ..self.kernel }
+    }
+
+    /// Tune the batched kernel driver (KV tile length and worker threads).
+    /// The skip criterion is NOT part of this — set [`Engine::criterion`].
+    pub fn set_kernel_tuning(&mut self, tile: usize, threads: usize) {
+        assert!(tile >= 1 && threads >= 1);
+        self.kernel.tile = tile;
+        self.kernel.threads = threads;
     }
 
     /// Load a zoo model from the artifact directory (weights default to the
@@ -178,8 +205,12 @@ impl Engine {
             let k = matmul(&h, &self.p(&format!("{pfx}.wk")).data, l, dm, dm);
             let v = matmul(&h, &self.p(&format!("{pfx}.wv")).data, l, dm, dm);
             let mut attn_out = vec![0.0f32; l * dm];
+            // Split into contiguous (L, dh) per-head buffers, then hand every
+            // causal (head, row) pair to the batched tiled-kernel driver in
+            // one shot — the work partitions across worker threads with
+            // deterministic output ordering.
+            let mut head_bufs: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = Vec::with_capacity(nh);
             for head in 0..nh {
-                // contiguous (L, dh) per head
                 let mut qh = vec![0.0f32; l * dh];
                 let mut kh = vec![0.0f32; l * dh];
                 let mut vh = vec![0.0f32; l * dh];
@@ -203,21 +234,16 @@ impl Engine {
                         scale,
                     });
                 }
-                // causal rows via instrumented FLASH-D
+                head_bufs.push((qh, kh, vh));
+            }
+            let (outs, skip) = batch::run_causal_heads(&self.kernel_config(), &head_bufs, l, dh, scale);
+            stats.skip.merge(&skip);
+            stats.rows += (nh * l) as u64;
+            for head in 0..nh {
                 for r in 0..l {
-                    let nkv = r + 1;
-                    let (o, st) = flashd::attention_instrumented(
-                        &qh[r * dh..(r + 1) * dh],
-                        &kh[..nkv * dh],
-                        &vh[..nkv * dh],
-                        nkv,
-                        dh,
-                        scale,
-                        self.criterion,
-                    );
-                    stats.skip.merge(&st);
-                    stats.rows += 1;
-                    attn_out[r * dm + head * dh..r * dm + (head + 1) * dh].copy_from_slice(&o);
+                    let src = (head * l + r) * dh;
+                    attn_out[r * dm + head * dh..r * dm + (head + 1) * dh]
+                        .copy_from_slice(&outs[src..src + dh]);
                 }
             }
             let proj = matmul(&attn_out, &self.p(&format!("{pfx}.wo")).data, l, dm, dm);

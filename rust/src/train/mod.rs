@@ -7,7 +7,7 @@
 pub mod data;
 
 use crate::model::weights::NamedTensor;
-use crate::runtime::{lit_i32, lit_i32_scalar, to_vec_f32, Runtime};
+use crate::runtime::{lit_i32, lit_i32_scalar, to_vec_f32, Literal, Runtime};
 use anyhow::{anyhow, Result};
 use std::path::Path;
 use std::time::Instant;
@@ -71,9 +71,9 @@ pub fn train(dir: &Path, opts: &TrainOptions) -> Result<TrainReport> {
     if init.len() != info.param_spec.len() {
         return Err(anyhow!("init weights/spec mismatch"));
     }
-    let mut params: Vec<xla::Literal> = Vec::with_capacity(init.len());
-    let mut m_state: Vec<xla::Literal> = Vec::with_capacity(init.len());
-    let mut v_state: Vec<xla::Literal> = Vec::with_capacity(init.len());
+    let mut params: Vec<Literal> = Vec::with_capacity(init.len());
+    let mut m_state: Vec<Literal> = Vec::with_capacity(init.len());
+    let mut v_state: Vec<Literal> = Vec::with_capacity(init.len());
     for t in &init {
         params.push(crate::runtime::lit_f32(&t.data, &t.shape)?);
         let zeros = vec![0.0f32; t.numel()];
@@ -92,7 +92,7 @@ pub fn train(dir: &Path, opts: &TrainOptions) -> Result<TrainReport> {
 
     for step in 0..opts.steps {
         let tokens = sampler.next_batch();
-        let mut inputs: Vec<xla::Literal> = Vec::with_capacity(3 * n + 2);
+        let mut inputs: Vec<Literal> = Vec::with_capacity(3 * n + 2);
         // Order must match aot.py::tstep: params, m, v, step, tokens.
         inputs.extend(params.drain(..));
         inputs.extend(m_state.drain(..));

@@ -141,7 +141,7 @@ impl Bench {
         mean
     }
 
-    /// Write all collected results as CSV under reports/.
+    /// Write all collected results as CSV (plus a JSON twin) under reports/.
     pub fn write_csv(&self) {
         std::fs::create_dir_all("reports").ok();
         let mut csv = String::from("name,iters,mean_ns,stddev_ns,p50_ns,p95_ns\n");
@@ -154,6 +154,44 @@ impl Bench {
         }
         let path = format!("reports/bench_{}.csv", self.suite);
         std::fs::write(&path, csv).ok();
+        println!("-- wrote {path}");
+        self.write_json(&format!("reports/bench_{}.json", self.suite));
+    }
+
+    /// Machine-readable results: name, ns/iter, spread, and throughput.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::{arr, num, obj, s};
+        let results = self
+            .results
+            .iter()
+            .map(|r| {
+                let mut pairs = vec![
+                    ("name", s(&r.name)),
+                    ("iters", num(r.iters as f64)),
+                    ("ns_per_iter", num(r.mean_ns)),
+                    ("stddev_ns", num(r.stddev_ns)),
+                    ("p50_ns", num(r.p50_ns)),
+                    ("p95_ns", num(r.p95_ns)),
+                ];
+                if let Some((items, unit)) = r.throughput {
+                    pairs.push(("throughput_per_s", num(items / (r.mean_ns / 1e9))));
+                    pairs.push(("throughput_unit", s(unit)));
+                }
+                obj(pairs)
+            })
+            .collect();
+        obj(vec![("suite", s(&self.suite)), ("results", arr(results))])
+    }
+
+    /// Write [`Bench::to_json`] to an arbitrary path (e.g. the committed
+    /// `BENCH_kernels.json` perf-trajectory file).
+    pub fn write_json(&self, path: &str) {
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent).ok();
+            }
+        }
+        std::fs::write(path, self.to_json().to_string()).ok();
         println!("-- wrote {path}");
     }
 }
@@ -186,5 +224,30 @@ mod tests {
         let (v, d) = time_once(|| 41 + 1);
         assert_eq!(v, 42);
         assert!(d.as_nanos() < 1_000_000_000);
+    }
+
+    #[test]
+    fn json_report_is_parseable_and_complete() {
+        let mut b = Bench::new("jsontest");
+        // shrink windows directly — avoid mutating process-global env in a
+        // concurrently-running test harness
+        b.measure_time = Duration::from_millis(40);
+        b.warmup_time = Duration::from_millis(5);
+        b.bench_throughput("with-tp", 100.0, "row", || {
+            bb(1 + 1);
+        });
+        b.bench("no-tp", || {
+            bb(2 + 2);
+        });
+        let text = b.to_json().to_string();
+        let parsed = crate::util::json::Json::parse(&text).unwrap();
+        assert_eq!(parsed.get("suite").unwrap().as_str(), Some("jsontest"));
+        let rs = parsed.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(rs.len(), 2);
+        assert_eq!(rs[0].get("name").unwrap().as_str(), Some("with-tp"));
+        assert!(rs[0].get("ns_per_iter").unwrap().as_f64().unwrap() > 0.0);
+        assert!(rs[0].get("throughput_per_s").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(rs[0].get("throughput_unit").unwrap().as_str(), Some("row"));
+        assert!(rs[1].get("throughput_per_s").is_none());
     }
 }

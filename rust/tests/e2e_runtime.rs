@@ -10,6 +10,10 @@ use flashd::runtime::{lit_f32, lit_i32, lit_i32_scalar, to_vec_f32, Runtime};
 use flashd::util::rng::Rng;
 
 fn artifact_dir() -> Option<std::path::PathBuf> {
+    if !cfg!(pjrt_backend) {
+        eprintln!("SKIP: PJRT backend not compiled in (build with RUSTFLAGS=\"--cfg pjrt_backend\")");
+        return None;
+    }
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if dir.join("manifest.json").exists() {
         Some(dir)
@@ -123,7 +127,7 @@ fn rust_engine_matches_model_fwd_artifact() {
     let tensors = flashd::model::weights::read_fdw(dir.join(&info.init_weights)).unwrap();
 
     // PJRT path
-    let mut inputs: Vec<xla::Literal> = tensors
+    let mut inputs: Vec<flashd::runtime::Literal> = tensors
         .iter()
         .map(|t| lit_f32(&t.data, &t.shape).unwrap())
         .collect();

@@ -126,7 +126,7 @@ fn coordinator_full_session_lifecycle_against_reference() {
         batch_window: std::time::Duration::from_micros(20),
         ..Default::default()
     };
-    let coord = Coordinator::start_with(cfg, move || Ok(NaiveEngine { router })).unwrap();
+    let coord = Coordinator::start_with(cfg, move || Ok(NaiveEngine::new(router))).unwrap();
 
     let sig = ShapeSig { heads: 2, head_dim: 8 };
     let mut rng = Rng::new(77);

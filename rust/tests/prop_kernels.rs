@@ -2,9 +2,9 @@
 //! the in-tree `util::prop` driver): the algebraic identities the paper's
 //! derivation rests on must hold for arbitrary random problems.
 
-use flashd::kernels::flashd::{log_sigmoid, sigmoid, weight, SkipCriterion};
+use flashd::kernels::flashd::{log_sigmoid, sigmoid, weight, SkipCriterion, ACTIVE_HI, ACTIVE_LO};
 use flashd::kernels::flashd as fd;
-use flashd::kernels::{flash1, flash2, max_abs_diff, naive};
+use flashd::kernels::{batch, flash1, flash2, max_abs_diff, naive, tiled, KernelConfig, RowJob};
 use flashd::numerics::{Bf16, Fp8E4M3, Scalar};
 use flashd::prop_assert;
 use flashd::util::prop::forall;
@@ -178,6 +178,129 @@ fn prop_flash2_multi_equals_singles() {
                 max_abs_diff(&multi[iq * d..(iq + 1) * d], &single) < 1e-6,
                 "query {iq} differs"
             );
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_tiled_bitmatches_scalar_flashd() {
+    // The tiled kernel with no skipping is the SAME sequence of float ops
+    // as Alg. 3, so the outputs must be bit-identical for every tile size.
+    forall("tiled-bitmatch", 80, |g| {
+        let n = g.usize_in(1, 160);
+        let d = *g.choose(&[2usize, 4, 8, 16, 64]);
+        let std = g.f64_in(0.3, 2.5) as f32;
+        let q = g.vec_normal(d, std);
+        let k = g.vec_normal(n * d, std);
+        let v = g.vec_normal(n * d, 1.0);
+        let scale = g.f64_in(0.1, 1.2) as f32;
+        let gold = fd::attention(&q, &k, &v, n, d, scale);
+        for tile in [1usize, 7, 16, 64, n] {
+            let got = tiled::attention_tiled(&q, &k, &v, n, d, scale, tile);
+            prop_assert!(g, got == gold, "tile={tile} n={n} d={d} not bit-identical");
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_tiled_adaptive_bitmatches_per_step() {
+    // The tile-level fast path fires exactly when every step in the tile
+    // would take the per-step adaptive skip-low branch, so output AND
+    // SkipStats must be bit-identical to the per-step instrumented kernel.
+    forall("tiled-adaptive-exact", 60, |g| {
+        let n = g.usize_in(2, 200);
+        let d = *g.choose(&[4usize, 8, 16]);
+        let std = g.f64_in(0.5, 4.0) as f32;
+        let q = g.vec_normal(d, std);
+        let k = g.vec_normal(n * d, std);
+        let v = g.vec_normal(n * d, 1.0);
+        let crit = SkipCriterion::Adaptive { lo: ACTIVE_LO, hi: ACTIVE_HI };
+        let (want_o, want_st) = fd::attention_instrumented(&q, &k, &v, n, d, 1.0, crit);
+        for tile in [1usize, 7, 16, 64, n] {
+            let (got_o, got_st) =
+                tiled::attention_tiled_instrumented(&q, &k, &v, n, d, 1.0, tile, crit);
+            prop_assert!(g, got_o == want_o, "tile={tile}: output differs");
+            prop_assert!(g, got_st == want_st, "tile={tile}: stats differ");
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_tiled_static_totals_exact_and_error_bounded() {
+    // Block-skip under the static criterion: SkipStats totals stay exact
+    // at every tile granularity and the output stays inside the 2e-2
+    // static-skip error envelope on realistic score scales.
+    forall("tiled-static-envelope", 50, |g| {
+        let n = g.usize_in(8, 256);
+        let d = *g.choose(&[8usize, 16]);
+        let std = g.f64_in(0.4, 1.2) as f32; // trained-attention scale
+        let q = g.vec_normal(d, std);
+        let k = g.vec_normal(n * d, std);
+        let v = g.vec_normal(n * d, 1.0);
+        let exact = fd::attention(&q, &k, &v, n, d, 1.0);
+        let (_, step_st) =
+            fd::attention_instrumented(&q, &k, &v, n, d, 1.0, SkipCriterion::Static);
+        for tile in [1usize, 7, 16, 64, n] {
+            let (got, st) = tiled::attention_tiled_instrumented(
+                &q, &k, &v, n, d, 1.0, tile,
+                SkipCriterion::Static,
+            );
+            prop_assert!(
+                g,
+                st.total == step_st.total && st.total == (n as u64 - 1),
+                "tile={tile}: total {} != {}",
+                st.total,
+                step_st.total
+            );
+            let err = max_abs_diff(&exact, &got);
+            prop_assert!(g, err < 2e-2, "tile={tile}: err {err}");
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_batched_driver_thread_invariant() {
+    // run_rows must return bitwise-identical outputs and stats for every
+    // thread count, in job order.
+    forall("batch-thread-invariant", 30, |g| {
+        let rows = g.usize_in(1, 10);
+        let n = g.usize_in(1, 128);
+        let d = *g.choose(&[8usize, 16]);
+        let data: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = (0..rows)
+            .map(|_| {
+                (
+                    g.vec_normal(d, 0.8),
+                    g.vec_normal(n * d, 0.8),
+                    g.vec_normal(n * d, 1.0),
+                )
+            })
+            .collect();
+        let jobs: Vec<RowJob> = data
+            .iter()
+            .map(|(q, k, v)| RowJob { q, k, v, n, d, scale: 0.5 })
+            .collect();
+        let mk = |threads: usize| KernelConfig {
+            tile: 16,
+            threads,
+            skip: SkipCriterion::Static,
+        };
+        let (want, want_st) = batch::run_rows(&mk(1), &jobs);
+        // serial reference: jobs in order through the tiled kernel
+        for (i, (q, k, v)) in data.iter().enumerate() {
+            let (o, _) = tiled::attention_tiled_instrumented(
+                q, k, v, n, d, 0.5, 16,
+                SkipCriterion::Static,
+            );
+            prop_assert!(g, want[i] == o, "row {i} out of order");
+        }
+        for threads in [2usize, 4, 8] {
+            let (got, got_st) = batch::run_rows(&mk(threads), &jobs);
+            prop_assert!(g, got == want, "threads={threads}: outputs differ");
+            prop_assert!(g, got_st == want_st, "threads={threads}: stats differ");
         }
         true
     });

@@ -1,0 +1,192 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The build image has no crates.io access, so this path dependency provides
+//! exactly the API surface the workspace uses: [`Error`], [`Result`], the
+//! [`anyhow!`] / [`bail!`] / [`ensure!`] macros, and the [`Context`]
+//! extension trait. Error values are stringly-typed (message + context
+//! chain); `{}` displays the outermost context, `{:#}` and `{:?}` display
+//! the full outermost-to-root chain, matching anyhow's formatting contract
+//! closely enough for CLI/error-path output.
+
+use std::fmt;
+
+/// A stringly-typed error with a context chain.
+///
+/// Like the real `anyhow::Error`, this type deliberately does NOT implement
+/// `std::error::Error`; that is what makes the blanket
+/// `impl<E: std::error::Error> From<E> for Error` coherent.
+pub struct Error {
+    /// chain[0] is the root cause; the last entry is the outermost context.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Attach an outer context layer.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.push(context.to_string());
+        self
+    }
+
+    /// The root-cause message.
+    pub fn root_cause(&self) -> &str {
+        &self.chain[0]
+    }
+
+    fn write_chain(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, part) in self.chain.iter().rev().enumerate() {
+            if i > 0 {
+                write!(f, ": ")?;
+            }
+            write!(f, "{part}")?;
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            self.write_chain(f)
+        } else {
+            write!(f, "{}", self.chain.last().expect("non-empty chain"))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        self.write_chain(f)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Result<T>`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context()` / `.with_context()` to results whose
+/// error type converts into [`Error`] (std errors and `Error` itself).
+pub trait Context<T>: Sized {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or any displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error.
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::core::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !$cond {
+            return ::core::result::Result::Err($crate::anyhow!(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !$cond {
+            return ::core::result::Result::Err($crate::anyhow!($($t)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read("/definitely/not/a/real/path/3141592653")?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(!e.root_cause().is_empty());
+    }
+
+    #[test]
+    fn context_chains_and_formats() {
+        let e = io_fail().context("loading weights").unwrap_err();
+        assert_eq!(format!("{e}"), "loading weights");
+        let full = format!("{e:#}");
+        assert!(full.starts_with("loading weights: "), "{full}");
+        assert_eq!(format!("{e:?}"), full);
+    }
+
+    #[test]
+    fn with_context_is_lazy() {
+        let mut called = false;
+        let ok: Result<u32> = Ok(7);
+        let v = ok
+            .with_context(|| {
+                called = true;
+                "ctx"
+            })
+            .unwrap();
+        assert_eq!(v, 7);
+        assert!(!called);
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let name = "x7";
+        let e = anyhow!("unknown artifact '{name}'");
+        assert_eq!(format!("{e}"), "unknown artifact 'x7'");
+        let e = anyhow!("parse {}: {}", 3, "bad");
+        assert_eq!(format!("{e}"), "parse 3: bad");
+        let owned: String = "oops".into();
+        let e = anyhow!(owned);
+        assert_eq!(format!("{e}"), "oops");
+
+        fn bails(flag: bool) -> Result<u32> {
+            ensure!(flag, "flag was {flag}");
+            bail!("unreachable {}", 1);
+        }
+        assert_eq!(format!("{}", bails(false).unwrap_err()), "flag was false");
+        assert_eq!(format!("{}", bails(true).unwrap_err()), "unreachable 1");
+    }
+}

@@ -1,13 +1,15 @@
 //! Kernel throughput: the four software attention formulations head to
 //! head (f32), the tiled + batched FLASH-D engine (tile and 1/2/4/8-thread
 //! sweeps, emitted to the machine-readable `BENCH_kernels.json`), the
-//! reduced-precision + PWL hardware-faithful paths, and the end-to-end
-//! PJRT artifact latency of FLASH-D vs FlashAttention2 — the software
-//! analogue of the paper's "no performance penalty" claim.
+//! query-blocked vs per-query multi-query sweep (the KV-bandwidth
+//! amortization headline), the reduced-precision + PWL hardware-faithful
+//! paths, and the end-to-end PJRT artifact latency of FLASH-D vs
+//! FlashAttention2 — the software analogue of the paper's "no performance
+//! penalty" claim.
 
-use flashd::bench_harness::suites::{SWEEP_SHAPES, SWEEP_THREADS, SWEEP_TILES};
+use flashd::bench_harness::suites::{SWEEP_NQ, SWEEP_SHAPES, SWEEP_THREADS, SWEEP_TILES};
 use flashd::kernels::flashd as fd;
-use flashd::kernels::{batch, flash1, flash2, naive, tiled, AttnProblem, KernelConfig, RowJob};
+use flashd::kernels::{batch, flash1, flash2, naive, tiled, AttnProblem, BlockJob, KernelConfig, RowJob};
 use flashd::numerics::{Bf16, Fp8E4M3};
 use flashd::pwl::{LnPwl, SigmoidPwl};
 use flashd::util::bench::{bb, Bench};
@@ -67,10 +69,70 @@ fn main() {
                 fd::SkipCriterion::Static,
             ));
         });
-        println!(
-            "-- tiled/scalar speedup at n={n} d={d}: {:.2}x (best tile)",
-            scalar_ns / best_tiled
-        );
+        b.note(&format!("tiled_over_scalar_n{n}_d{d}"), scalar_ns / best_tiled);
+    }
+
+    println!("\n=== query-blocked vs per-query multi-query (prefill shape) ===");
+    {
+        let (nkv, d) = (2048usize, 64usize);
+        for &nq in &SWEEP_NQ {
+            let p = AttnProblem::random(&mut rng, nq, nkv, d, 2.0);
+            let pairs = (nq * nkv) as f64;
+            // per-query baseline: every query streams the whole KV (the
+            // PR 1 multi-query path)
+            let per_query = b.bench_throughput(
+                &format!("multi per-query nq={nq:<3} nkv={nkv} d={d}"),
+                pairs,
+                "pair",
+                || {
+                    for iq in 0..nq {
+                        bb(tiled::attention_tiled(
+                            p.q_row(iq), &p.k, &p.v, nkv, d, 1.0,
+                            tiled::DEFAULT_TILE,
+                        ));
+                    }
+                },
+            );
+            // query-blocked: each KV tile streams once per DEFAULT_BLOCK_Q
+            // queries (bit-identical outputs, single thread)
+            let blocked = b.bench_throughput(
+                &format!("multi qblock    nq={nq:<3} nkv={nkv} d={d}"),
+                pairs,
+                "pair",
+                || {
+                    bb(tiled::attention_tiled_multi(
+                        &p.q, &p.k, &p.v, nq, nkv, d, 1.0,
+                        tiled::DEFAULT_TILE,
+                    ));
+                },
+            );
+            println!("-- blocked/per-query speedup at nq={nq}: {:.2}x", per_query / blocked);
+            if nq == 512 {
+                // the PR 2 acceptance headline ratio
+                b.note("qblock_over_perquery_nq512_nkv2048_d64", per_query / blocked);
+            }
+            // grouped multi-thread driver over the same block (the serving
+            // prefill path end to end)
+            if nq >= 64 {
+                let cfg = KernelConfig::default();
+                let block = BlockJob {
+                    q: &p.q, k: &p.k, v: &p.v,
+                    nq, n: nkv, d,
+                    scale: 1.0,
+                    causal: false,
+                };
+                let mut out = vec![0.0f32; nq * d];
+                let mut scratch = batch::BatchScratch::new();
+                b.bench_throughput(
+                    &format!("multi qblock+mt nq={nq:<3} nkv={nkv} d={d}"),
+                    pairs,
+                    "pair",
+                    || {
+                        bb(batch::run_blocks_into_with(&cfg, &[block], d, &mut out, &mut scratch));
+                    },
+                );
+            }
+        }
     }
 
     println!("\n=== batched driver thread sweep ===");
@@ -91,10 +153,15 @@ fn main() {
             .collect();
         let mut t1 = f64::NAN;
         for &threads in &SWEEP_THREADS {
+            // block_q = 1 keeps this a pure thread-scaling measurement:
+            // the 32 rows share one KV buffer, and grouping them into
+            // query blocks would cap the partition at rows/block_q chunks
+            // (the blocking effect has its own sweep section below).
             let cfg = KernelConfig {
                 tile: tiled::DEFAULT_TILE,
                 threads,
                 skip: fd::SkipCriterion::None,
+                block_q: 1,
             };
             let t = b.bench_throughput(
                 &format!("batch rows=32 T={threads} n={n} d={d}"),

@@ -156,10 +156,11 @@ fn tracking(rng: &mut Rng) -> String {
     )
 }
 
-/// The tiled/threaded kernel sweep grid consumed by
+/// The tiled/blocked/threaded kernel sweep grid consumed by
 /// `benches/kernel_throughput.rs` and emitted into `BENCH_kernels.json`:
-/// every shape × tile at one thread (tiled-vs-scalar), plus every shape ×
-/// thread count at the default tile (batched-driver scaling).
+/// every shape × tile at one thread (tiled-vs-scalar), every shape ×
+/// thread count at the default tile (batched-driver scaling), and every
+/// query count at the prefill shape (query-blocked vs per-query).
 ///
 /// Tile sizes swept for the tiled-vs-scalar comparison.
 pub const SWEEP_TILES: [usize; 3] = [16, 32, 64];
@@ -169,6 +170,11 @@ pub const SWEEP_THREADS: [usize; 4] = [1, 2, 4, 8];
 
 /// Problem shapes swept; (2048, 64) is the acceptance headline point.
 pub const SWEEP_SHAPES: [(usize, usize); 2] = [(512, 64), (2048, 64)];
+
+/// Query counts swept for the query-blocked vs per-query comparison at
+/// the prefill shape (nkv=2048, d=64); nq=512 is the acceptance headline
+/// point (blocked/per-query throughput ratio).
+pub const SWEEP_NQ: [usize; 4] = [1, 8, 64, 512];
 
 /// Build a training corpus of roughly `target_bytes` by concatenating
 /// prompts from all suites (the zoo models train on this mixture).
@@ -224,6 +230,10 @@ mod tests {
         assert!(SWEEP_THREADS.contains(&1));
         assert!(SWEEP_TILES.iter().all(|&t| t >= 1));
         assert!(SWEEP_THREADS.windows(2).all(|w| w[0] < w[1]));
+        // the blocked-vs-per-query headline point (nq=512) plus the
+        // per-query anchor nq=1
+        assert!(SWEEP_NQ.contains(&512) && SWEEP_NQ.contains(&1));
+        assert!(SWEEP_NQ.windows(2).all(|w| w[0] < w[1]));
     }
 
     #[test]

@@ -12,9 +12,10 @@ use super::metrics::Metrics;
 use super::request::{AttentionRequest, AttentionResponse, RequestKind};
 use super::router::{Route, Router};
 use super::scheduler::{Policy, Rejected, Scheduler};
-use crate::kernels::batch::{run_rows_into, KernelConfig, RowJob};
+use crate::kernels::batch::{run_blocks_into_with, BatchScratch, BlockJob, KernelConfig};
 use crate::runtime::{lit_f32, lit_i32, to_vec_f32, Runtime};
 use anyhow::{anyhow, Result};
+use std::cell::RefCell;
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
@@ -59,23 +60,28 @@ impl AttnEngine for PjrtEngine {
     }
 }
 
-/// Test/bench engine: the Rust tiled FLASH-D kernel driven through the
+/// Test/bench engine: the query-blocked FLASH-D kernel driven through the
 /// batched multi-thread driver (no PJRT). Serves the same shapes as the
 /// given router and applies the artifacts' 1/sqrt(d) scale.
 pub struct NaiveEngine {
     pub router: Router,
-    /// Tile/thread/skip knobs for the kernel path (serving defaults to the
-    /// exact kernel: `SkipCriterion::None`).
+    /// Tile/block/thread/skip knobs for the kernel path (serving defaults
+    /// to the exact kernel: `SkipCriterion::None`).
     pub kernel: KernelConfig,
+    /// Reusable kernel scratch. The engine lives on one engine thread and
+    /// `execute` takes `&self`, so interior mutability is enough; the
+    /// kernel's score/state buffers are reused across batches (per batch
+    /// only the output buffer and the small block/item plans allocate).
+    scratch: RefCell<BatchScratch>,
 }
 
 impl NaiveEngine {
     pub fn new(router: Router) -> NaiveEngine {
-        NaiveEngine { router, kernel: KernelConfig::default() }
+        NaiveEngine::with_kernel(router, KernelConfig::default())
     }
 
     pub fn with_kernel(router: Router, kernel: KernelConfig) -> NaiveEngine {
-        NaiveEngine { router, kernel }
+        NaiveEngine { router, kernel, scratch: RefCell::new(BatchScratch::new()) }
     }
 }
 
@@ -83,29 +89,28 @@ impl AttnEngine for NaiveEngine {
     fn execute(&self, route: &Route, q: &[f32], k: &[f32], v: &[f32], kv_len: usize) -> Result<Vec<f32>> {
         let (h, lq, lkv, d) = (route.heads, route.q_slots, route.kv_slots, route.head_dim);
         let scale = (d as f32).powf(-0.5);
-        // One job per (head, query row); the batched driver partitions the
-        // block across worker threads with deterministic output ordering.
-        let mut jobs = Vec::with_capacity(h * lq);
+        // One query block per head: all lq rows of a head share its KV
+        // prefix, so the query-blocked kernel streams each KV tile once
+        // per block instead of once per row. The driver splits blocks
+        // across worker threads with deterministic output ordering.
+        let mut blocks = Vec::with_capacity(h);
         for hh in 0..h {
             let koff = hh * lkv * d;
-            let kslice = &k[koff..koff + kv_len * d];
-            let vslice = &v[koff..koff + kv_len * d];
-            for iq in 0..lq {
-                let qoff = (hh * lq + iq) * d;
-                jobs.push(RowJob {
-                    q: &q[qoff..qoff + d],
-                    k: kslice,
-                    v: vslice,
-                    n: kv_len,
-                    d,
-                    scale,
-                });
-            }
+            blocks.push(BlockJob {
+                q: &q[hh * lq * d..(hh + 1) * lq * d],
+                k: &k[koff..koff + kv_len * d],
+                v: &v[koff..koff + kv_len * d],
+                nq: lq,
+                n: kv_len,
+                d,
+                scale,
+                causal: false,
+            });
         }
-        // jobs are in (head, query) order, so the flat driver writes the
+        // blocks are in (head, query) order, so the flat driver writes the
         // response layout directly
         let mut out = vec![0.0f32; h * lq * d];
-        run_rows_into(&self.kernel, &jobs, d, &mut out);
+        run_blocks_into_with(&self.kernel, &blocks, d, &mut out, &mut self.scratch.borrow_mut());
         Ok(out)
     }
 

@@ -1,26 +1,44 @@
-//! Batched multi-query/multi-head attention driver over the tiled FLASH-D
-//! kernel.
+//! Batched multi-query/multi-head attention driver over the tiled and
+//! query-blocked FLASH-D kernels.
 //!
 //! A forward pass (or a serving batch) decomposes into many *independent*
-//! attention rows — one per (layer, head, query). [`run_rows`] partitions a
-//! flat list of such rows into contiguous chunks and executes them on
-//! `std::thread::scope` workers:
+//! attention rows — one per (layer, head, query). Since PR 2 the driver
+//! thinks in **query blocks** ([`BlockJob`]): `nq` contiguous queries
+//! sharing one KV context run through [`super::qblock`] so each KV tile is
+//! streamed from memory once per block instead of once per query. Row-level
+//! callers keep the [`RowJob`] API — [`run_rows`]/[`run_rows_into`] contain
+//! a grouping pass that coalesces adjacent rows sharing a KV prefix
+//! (identical `(k, v, n)`, or a causal `n, n+1, n+2, …` staircase over the
+//! same buffers) into blocks automatically. Because the blocked kernel is
+//! bit-identical per query to the single-query tiled kernel, grouping never
+//! changes a result or a statistic.
 //!
-//! * **Deterministic output ordering** — worker `w` owns jobs
-//!   `[w*chunk, (w+1)*chunk)` and writes each result into the output slot
-//!   of the same index (disjoint `split_at_mut` regions, no locks), so the
-//!   result is bitwise identical for every thread count.
-//! * **Exact skip accounting** — each worker fills its own
-//!   [`SkipStats`]; the parts are merged in worker order afterwards
-//!   (u64 sums, order-independent anyway).
+//! Work is partitioned across `std::thread::scope` workers:
+//!
+//! * **Deterministic output ordering** — blocks are partitioned into
+//!   contiguous chunks by cost (now in `nq * n * d` units); each worker
+//!   writes its results into the output slots of the same indices
+//!   (disjoint `split_at_mut` regions, no locks), so the result is bitwise
+//!   identical for every thread count.
+//! * **Exact skip accounting** — each worker fills its own [`SkipStats`];
+//!   the parts are merged in worker order afterwards (u64 sums,
+//!   order-independent anyway).
 //! * **Small-problem guard** — thread spawning is skipped when the total
 //!   work is too small to amortize it, so single-token decode steps don't
 //!   pay ~10 µs of spawn latency per layer.
+//! * **Reusable per-worker scratch** — score/state/gather buffers live in
+//!   a [`BatchScratch`] (either caller-owned via the `_with` variants, as
+//!   on the decode and serving hot paths, or per-call otherwise), so the
+//!   kernels allocate nothing after warm-up; the driver's remaining
+//!   per-call allocations are the small job-count-sized bookkeeping
+//!   lists, not KV-sized buffers.
 //!
-//! [`KernelConfig`] bundles the three knobs every caller threads through:
-//! KV tile length, worker count, and the skip criterion.
+//! [`KernelConfig`] bundles the knobs every caller threads through:
+//! KV tile length, query block length, worker count, and the skip
+//! criterion.
 
 use super::flashd::{SkipCriterion, SkipStats};
+use super::qblock::{self, QScratch, DEFAULT_BLOCK_Q};
 use super::tiled::{self, DEFAULT_TILE};
 
 /// Tuning knobs for the tiled/batched kernel engine, threaded through
@@ -29,6 +47,9 @@ use super::tiled::{self, DEFAULT_TILE};
 pub struct KernelConfig {
     /// KV tile length (keys per block) for the tiled kernel.
     pub tile: usize,
+    /// Query block length: how many queries share one KV-tile stream in
+    /// the query-blocked kernel (1 = per-query, PR 1 behavior).
+    pub block_q: usize,
     /// Maximum worker threads for [`run_rows`] (1 = fully serial).
     pub threads: usize,
     /// Saturation-skip criterion applied per row.
@@ -39,6 +60,7 @@ impl Default for KernelConfig {
     fn default() -> Self {
         KernelConfig {
             tile: DEFAULT_TILE,
+            block_q: DEFAULT_BLOCK_Q,
             threads: default_threads(),
             skip: SkipCriterion::None,
         }
@@ -64,6 +86,208 @@ pub struct RowJob<'a> {
     pub n: usize,
     pub d: usize,
     pub scale: f32,
+}
+
+/// A block of `nq` contiguous queries (`(nq, d)` row-major in `q`) sharing
+/// one KV context — the unit the query-blocked kernel executes. With
+/// `causal = true` query `iq` attends the first `n - nq + 1 + iq` keys
+/// (the last query attends all `n`; requires `n >= nq`); otherwise every
+/// query attends all `n`.
+#[derive(Copy, Clone, Debug)]
+pub struct BlockJob<'a> {
+    pub q: &'a [f32],
+    pub k: &'a [f32],
+    pub v: &'a [f32],
+    pub nq: usize,
+    pub n: usize,
+    pub d: usize,
+    pub scale: f32,
+    pub causal: bool,
+}
+
+/// Per-worker scratch: query-block kernel scratch, single-row score
+/// buffer, and gather/output staging for the row-grouping path.
+#[derive(Debug, Default)]
+struct WorkerScratch {
+    qs: QScratch,
+    row_scores: Vec<f64>,
+    qbuf: Vec<f32>,
+    obuf: Vec<f32>,
+}
+
+/// Reusable scratch for the batched driver: one [`WorkerScratch`] slot per
+/// worker thread. Hold one per session/engine and pass it to the `_with`
+/// entry points so the kernels themselves allocate nothing after warm-up
+/// (the driver still builds small per-call bookkeeping lists — the item
+/// plan and, on the threaded path, cost/stat vectors — whose size is the
+/// job count, not the KV length).
+#[derive(Debug, Default)]
+pub struct BatchScratch {
+    slots: Vec<WorkerScratch>,
+}
+
+impl BatchScratch {
+    pub fn new() -> BatchScratch {
+        BatchScratch::default()
+    }
+
+    fn ensure(&mut self, workers: usize) {
+        while self.slots.len() < workers {
+            self.slots.push(WorkerScratch::default());
+        }
+    }
+}
+
+/// Internal unit of kernel work: either a contiguous query block (`q` set)
+/// or a coalesced run of row jobs (`q == None`; queries live in
+/// `jobs[row0 .. row0 + nq]` and are gathered into worker scratch at
+/// execution time — grouping never assumes the rows' query slices are
+/// adjacent in memory).
+#[derive(Copy, Clone, Debug)]
+struct Item<'a> {
+    q: Option<&'a [f32]>,
+    row0: usize,
+    k: &'a [f32],
+    v: &'a [f32],
+    nq: usize,
+    n: usize,
+    d: usize,
+    scale: f32,
+    causal: bool,
+}
+
+impl<'a> Item<'a> {
+    /// Work estimate in multiply-accumulate units (`sum_iq n_iq * d`).
+    fn cost(&self) -> usize {
+        if self.causal {
+            // per-query lengths n0 ..= n with n0 = n - nq + 1: arithmetic
+            // series, nq * (n0 + n) is always even
+            let n0 = self.n - self.nq + 1;
+            self.nq * (n0 + self.n) / 2 * self.d
+        } else {
+            self.nq * self.n * self.d
+        }
+    }
+
+    /// The single query row of an `nq == 1` item.
+    fn single_query(&self, jobs: &[RowJob<'a>]) -> &'a [f32] {
+        match self.q {
+            Some(q) => &q[..self.d],
+            None => &jobs[self.row0].q[..self.d],
+        }
+    }
+
+    /// The `(nq, d)` query rows, gathering from `jobs` into `qbuf` when
+    /// the item came from the row-grouping pass.
+    fn queries<'b>(&self, jobs: &[RowJob<'a>], qbuf: &'b mut Vec<f32>) -> &'b [f32]
+    where
+        'a: 'b,
+    {
+        if let Some(q) = self.q {
+            return &q[..self.nq * self.d];
+        }
+        qbuf.clear();
+        for j in 0..self.nq {
+            qbuf.extend_from_slice(&jobs[self.row0 + j].q[..self.d]);
+        }
+        &qbuf[..]
+    }
+}
+
+fn same_slice(a: &[f32], b: &[f32]) -> bool {
+    std::ptr::eq(a.as_ptr(), b.as_ptr()) && a.len() == b.len()
+}
+
+/// Grouping pass: coalesce adjacent row jobs into query blocks of at most
+/// `max_bq`. Two consecutive rows join the same block when they share the
+/// exact KV slices (same `(k, v, n, d, scale)` — the serving-batch shape)
+/// or form a causal staircase (`n` increasing by 1 over the same K/V
+/// buffers — the prefill shape). Grouping is a pure performance decision:
+/// the blocked kernel is bit-identical per query, so any grouping yields
+/// identical outputs and stats.
+fn coalesce<'a>(jobs: &[RowJob<'a>], max_bq: usize) -> Vec<Item<'a>> {
+    let max_bq = max_bq.max(1);
+    let mut items = Vec::new();
+    let mut i = 0usize;
+    while i < jobs.len() {
+        let mut nq = 1usize;
+        let mut causal = false;
+        while nq < max_bq && i + nq < jobs.len() {
+            let p = &jobs[i + nq - 1];
+            let nx = &jobs[i + nq];
+            if nx.d != p.d || nx.scale != p.scale {
+                break;
+            }
+            let shared = !causal && same_slice(p.k, nx.k) && same_slice(p.v, nx.v) && nx.n == p.n;
+            let stair = (causal || nq == 1)
+                && std::ptr::eq(p.k.as_ptr(), nx.k.as_ptr())
+                && std::ptr::eq(p.v.as_ptr(), nx.v.as_ptr())
+                && nx.n == p.n + 1
+                && nx.k.len() >= nx.n * nx.d
+                && nx.v.len() >= nx.n * nx.d;
+            if shared {
+                nq += 1;
+            } else if stair {
+                causal = true;
+                nq += 1;
+            } else {
+                break;
+            }
+        }
+        let last = &jobs[i + nq - 1];
+        items.push(Item {
+            q: None,
+            row0: i,
+            // the last row's K/V cover every query's prefix in both modes
+            k: last.k,
+            v: last.v,
+            nq,
+            n: last.n,
+            d: last.d,
+            scale: last.scale,
+            causal,
+        });
+        i += nq;
+    }
+    items
+}
+
+/// Expand explicit blocks into execution items, splitting any block wider
+/// than the configured query block length.
+fn items_of_blocks<'a>(blocks: &[BlockJob<'a>], cfg: &KernelConfig) -> Vec<Item<'a>> {
+    let max_bq = cfg.block_q.max(1);
+    let mut items = Vec::new();
+    for b in blocks {
+        push_block_items(b, max_bq, &mut items);
+    }
+    items
+}
+
+/// Split a [`BlockJob`] into items of at most `max_bq` queries. Causal
+/// sub-blocks keep the global staircase: sub-block queries `a..e` of a
+/// causal block attend `n - nq + 1 + iq` keys for their global index `iq`.
+fn push_block_items<'a>(b: &BlockJob<'a>, max_bq: usize, items: &mut Vec<Item<'a>>) {
+    assert!(b.nq >= 1, "empty BlockJob");
+    assert!(b.n >= 1, "BlockJob with empty KV context");
+    if b.causal {
+        assert!(b.n >= b.nq, "causal BlockJob needs n >= nq (got n={}, nq={})", b.n, b.nq);
+    }
+    let mut a = 0usize;
+    while a < b.nq {
+        let e = (a + max_bq).min(b.nq);
+        items.push(Item {
+            q: Some(&b.q[a * b.d..e * b.d]),
+            row0: 0,
+            k: b.k,
+            v: b.v,
+            nq: e - a,
+            n: if b.causal { b.n - (b.nq - e) } else { b.n },
+            d: b.d,
+            scale: b.scale,
+            causal: b.causal,
+        });
+        a = e;
+    }
 }
 
 /// Minimum per-thread work (in `n * d` multiply-accumulate units) before a
@@ -105,68 +329,128 @@ fn partition_by_cost(costs: &[usize], workers: usize) -> Vec<usize> {
     takes
 }
 
-fn run_chunk(cfg: &KernelConfig, jobs: &[RowJob<'_>], out: &mut [Vec<f32>], stats: &mut SkipStats) {
-    for (slot, job) in out.iter_mut().zip(jobs) {
-        let (o, st) = tiled::attention_tiled_instrumented(
-            job.q, job.k, job.v, job.n, job.d, job.scale, cfg.tile, cfg.skip,
-        );
-        stats.merge(&st);
-        *slot = o;
-    }
-}
-
-fn run_chunk_into(cfg: &KernelConfig, jobs: &[RowJob<'_>], d: usize, out: &mut [f32], stats: &mut SkipStats) {
-    for (slot, job) in out.chunks_exact_mut(d).zip(jobs) {
-        let st = tiled::attention_tiled_into(
-            job.q, job.k, job.v, job.n, job.d, job.scale, cfg.tile, cfg.skip, slot,
-        );
-        stats.merge(&st);
-    }
-}
-
-/// Shared driver: size the worker pool from total work, partition jobs into
-/// contiguous cost-balanced chunks, and run `chunk_fn` on each chunk with
-/// its `take * per` output slots, serially or on scoped threads. All
-/// decisions depend only on `(cfg, jobs)`, so results are bitwise identical
-/// for every thread count.
-fn run_partitioned<'j, T, F>(
+/// Execute one chunk of items into a flat `f32` output (each item owns the
+/// next `nq * d` floats). `nq == 1` items run the single-query tiled
+/// kernel with the worker's score scratch; larger items run the
+/// query-blocked kernel.
+fn run_chunk_into(
     cfg: &KernelConfig,
-    jobs: &[RowJob<'j>],
+    jobs: &[RowJob<'_>],
+    items: &[Item<'_>],
+    d: usize,
+    out: &mut [f32],
+    ws: &mut WorkerScratch,
+    stats: &mut SkipStats,
+) {
+    let WorkerScratch { qs, row_scores, qbuf, .. } = ws;
+    let mut off = 0usize;
+    for it in items {
+        let slot = &mut out[off..off + it.nq * d];
+        off += it.nq * d;
+        let st = if it.nq == 1 {
+            tiled::attention_tiled_into_with(
+                it.single_query(jobs),
+                it.k, it.v, it.n, it.d, it.scale, cfg.tile, cfg.skip, slot, row_scores,
+            )
+        } else {
+            let q = it.queries(jobs, qbuf);
+            qblock::attention_qblock_into(
+                q, it.k, it.v, it.nq, it.n, it.d, it.scale, cfg.tile, cfg.skip, it.causal,
+                qs, slot,
+            )
+        };
+        stats.merge(&st);
+    }
+}
+
+/// Execute one chunk of items into per-query `Vec<f32>` output slots.
+fn run_chunk(
+    cfg: &KernelConfig,
+    jobs: &[RowJob<'_>],
+    items: &[Item<'_>],
+    out: &mut [Vec<f32>],
+    ws: &mut WorkerScratch,
+    stats: &mut SkipStats,
+) {
+    let WorkerScratch { qs, row_scores, qbuf, obuf } = ws;
+    let mut slot = 0usize;
+    for it in items {
+        if it.nq == 1 {
+            let mut o = vec![0.0f32; it.d];
+            let st = tiled::attention_tiled_into_with(
+                it.single_query(jobs),
+                it.k, it.v, it.n, it.d, it.scale, cfg.tile, cfg.skip, &mut o, row_scores,
+            );
+            stats.merge(&st);
+            out[slot] = o;
+        } else {
+            let q = it.queries(jobs, qbuf);
+            obuf.clear();
+            obuf.resize(it.nq * it.d, 0.0);
+            let st = qblock::attention_qblock_into(
+                q, it.k, it.v, it.nq, it.n, it.d, it.scale, cfg.tile, cfg.skip, it.causal,
+                qs, &mut obuf[..],
+            );
+            stats.merge(&st);
+            for (j, row) in obuf[..it.nq * it.d].chunks_exact(it.d).enumerate() {
+                out[slot + j] = row.to_vec();
+            }
+        }
+        slot += it.nq;
+    }
+}
+
+/// Shared driver: size the worker pool from total work, partition items
+/// into contiguous cost-balanced chunks, and run `chunk_fn` on each chunk
+/// with its `sum(nq) * per` output slots and its own scratch slot,
+/// serially or on scoped threads. All decisions depend only on
+/// `(cfg, items)`, so results are bitwise identical for every thread
+/// count.
+fn run_items<'j, T, F>(
+    cfg: &KernelConfig,
+    items: &[Item<'j>],
     out: &mut [T],
     per: usize,
+    scratch: &mut BatchScratch,
     chunk_fn: F,
 ) -> SkipStats
 where
     T: Send,
-    F: Fn(&[RowJob<'j>], &mut [T], &mut SkipStats) + Sync,
+    F: Fn(&[Item<'j>], &mut [T], &mut WorkerScratch, &mut SkipStats) + Sync,
 {
     let mut stats = SkipStats::default();
-    if jobs.is_empty() {
+    if items.is_empty() {
         return stats;
     }
 
-    let work: usize = jobs.iter().map(|j| j.n * j.d).sum();
+    let work: usize = items.iter().map(Item::cost).sum();
     let by_work = (work / MIN_WORK_PER_THREAD).max(1);
-    let threads = cfg.threads.max(1).min(jobs.len()).min(by_work);
+    let threads = cfg.threads.max(1).min(items.len()).min(by_work);
+    scratch.ensure(threads);
 
     if threads <= 1 {
-        chunk_fn(jobs, out, &mut stats);
+        chunk_fn(items, out, &mut scratch.slots[0], &mut stats);
         return stats;
     }
 
-    let costs: Vec<usize> = jobs.iter().map(|j| j.n * j.d).collect();
+    let costs: Vec<usize> = items.iter().map(Item::cost).collect();
     let takes = partition_by_cost(&costs, threads);
     let mut stat_parts = vec![SkipStats::default(); takes.len()];
     std::thread::scope(|scope| {
         let chunk_fn = &chunk_fn;
-        let mut rem_jobs = jobs;
+        let mut rem_items = items;
         let mut rem_out = out;
+        let mut rem_slots = &mut scratch.slots[..];
         for (part, &take) in stat_parts.iter_mut().zip(&takes) {
-            let (job_chunk, jobs_rest) = rem_jobs.split_at(take);
-            let (out_chunk, out_rest) = rem_out.split_at_mut(take * per);
-            rem_jobs = jobs_rest;
+            let (item_chunk, items_rest) = rem_items.split_at(take);
+            let units: usize = item_chunk.iter().map(|it| it.nq).sum::<usize>() * per;
+            let (out_chunk, out_rest) = rem_out.split_at_mut(units);
+            let (slot_chunk, slots_rest) = rem_slots.split_at_mut(1);
+            rem_items = items_rest;
             rem_out = out_rest;
-            scope.spawn(move || chunk_fn(job_chunk, out_chunk, part));
+            rem_slots = slots_rest;
+            let ws = &mut slot_chunk[0];
+            scope.spawn(move || chunk_fn(item_chunk, out_chunk, ws, part));
         }
     });
     for part in &stat_parts {
@@ -176,11 +460,15 @@ where
 }
 
 /// Execute every job and return `(outputs, stats)`, with `outputs[i]` the
-/// result of `jobs[i]`. Bitwise identical for every `cfg.threads` value.
+/// result of `jobs[i]`. Adjacent jobs sharing a KV prefix are coalesced
+/// into query blocks (see [`coalesce`]); results are bitwise identical to
+/// the ungrouped per-row kernel and for every `cfg.threads` value.
 pub fn run_rows(cfg: &KernelConfig, jobs: &[RowJob<'_>]) -> (Vec<Vec<f32>>, SkipStats) {
     let mut outputs: Vec<Vec<f32>> = vec![Vec::new(); jobs.len()];
-    let stats = run_partitioned(cfg, jobs, &mut outputs, 1, |jc, oc, st| {
-        run_chunk(cfg, jc, oc, st)
+    let items = coalesce(jobs, cfg.block_q);
+    let mut scratch = BatchScratch::new();
+    let stats = run_items(cfg, &items, &mut outputs, 1, &mut scratch, |ic, oc, ws, st| {
+        run_chunk(cfg, jobs, ic, oc, ws, st)
     });
     (outputs, stats)
 }
@@ -190,17 +478,74 @@ pub fn run_rows(cfg: &KernelConfig, jobs: &[RowJob<'_>]) -> (Vec<Vec<f32>>, Skip
 /// output row into `out[i * d..(i + 1) * d]` with no per-row allocation.
 /// Same determinism guarantee as [`run_rows`].
 pub fn run_rows_into(cfg: &KernelConfig, jobs: &[RowJob<'_>], d: usize, out: &mut [f32]) -> SkipStats {
+    run_rows_into_with(cfg, jobs, d, out, &mut BatchScratch::new())
+}
+
+/// [`run_rows_into`] with caller-owned scratch: the kernel-side score,
+/// state, and gather buffers are reused across calls (in particular the
+/// `tile > 64` score buffer no longer reallocates once per call) — the
+/// form the decode session uses once per (layer, token). Only the small
+/// per-call item plan is still allocated.
+pub fn run_rows_into_with(
+    cfg: &KernelConfig,
+    jobs: &[RowJob<'_>],
+    d: usize,
+    out: &mut [f32],
+    scratch: &mut BatchScratch,
+) -> SkipStats {
     assert_eq!(out.len(), jobs.len() * d, "output buffer must be jobs.len() * d");
     debug_assert!(jobs.iter().all(|j| j.d == d));
-    run_partitioned(cfg, jobs, out, d, |jc, oc, st| {
-        run_chunk_into(cfg, jc, d, oc, st)
+    let items = coalesce(jobs, cfg.block_q);
+    run_items(cfg, &items, out, d, scratch, |ic, oc, ws, st| {
+        run_chunk_into(cfg, jobs, ic, d, oc, ws, st)
+    })
+}
+
+/// Execute explicit query blocks, returning one `Vec<f32>` per query row
+/// in block order. Blocks larger than `cfg.block_q` are split on query
+/// boundaries (bit-identical either way).
+pub fn run_blocks(cfg: &KernelConfig, blocks: &[BlockJob<'_>]) -> (Vec<Vec<f32>>, SkipStats) {
+    let total_q: usize = blocks.iter().map(|b| b.nq).sum();
+    let mut outputs: Vec<Vec<f32>> = vec![Vec::new(); total_q];
+    let items = items_of_blocks(blocks, cfg);
+    let mut scratch = BatchScratch::new();
+    let stats = run_items(cfg, &items, &mut outputs, 1, &mut scratch, |ic, oc, ws, st| {
+        run_chunk(cfg, &[], ic, oc, ws, st)
+    });
+    (outputs, stats)
+}
+
+/// Flat-output block driver: block `b`'s query `iq` lands at the
+/// `(sum of earlier blocks' nq) + iq`-th `d`-row of `out`. The serving
+/// engine's hot path.
+pub fn run_blocks_into(cfg: &KernelConfig, blocks: &[BlockJob<'_>], d: usize, out: &mut [f32]) -> SkipStats {
+    run_blocks_into_with(cfg, blocks, d, out, &mut BatchScratch::new())
+}
+
+/// [`run_blocks_into`] with caller-owned scratch (kernel buffers reused
+/// across calls; only the per-call item plan is allocated).
+pub fn run_blocks_into_with(
+    cfg: &KernelConfig,
+    blocks: &[BlockJob<'_>],
+    d: usize,
+    out: &mut [f32],
+    scratch: &mut BatchScratch,
+) -> SkipStats {
+    let total_q: usize = blocks.iter().map(|b| b.nq).sum();
+    assert_eq!(out.len(), total_q * d, "output buffer must be sum(nq) * d");
+    debug_assert!(blocks.iter().all(|b| b.d == d));
+    let items = items_of_blocks(blocks, cfg);
+    run_items(cfg, &items, out, d, scratch, |ic, oc, ws, st| {
+        run_chunk_into(cfg, &[], ic, d, oc, ws, st)
     })
 }
 
 /// Causal per-head convenience: for each head buffer `(qh, kh, vh)` of `l`
 /// rows × `d` columns, row `r` attends over the `r + 1` KV prefix. Returns
 /// a flat output with row `(head * l + r)` at `[(head * l + r) * d..][..d]`
-/// plus merged stats — the shape `model::engine::forward` consumes.
+/// plus merged stats — the shape `model::engine::forward` consumes. Each
+/// head is one causal [`BlockJob`], so prefill KV tiles stream once per
+/// query block instead of once per row.
 pub fn run_causal_heads(
     cfg: &KernelConfig,
     heads: &[(Vec<f32>, Vec<f32>, Vec<f32>)],
@@ -208,21 +553,23 @@ pub fn run_causal_heads(
     d: usize,
     scale: f32,
 ) -> (Vec<f32>, SkipStats) {
-    let mut jobs = Vec::with_capacity(heads.len() * l);
-    for (qh, kh, vh) in heads {
-        for r in 0..l {
-            jobs.push(RowJob {
-                q: &qh[r * d..(r + 1) * d],
-                k: &kh[..(r + 1) * d],
-                v: &vh[..(r + 1) * d],
-                n: r + 1,
+    let mut blocks = Vec::with_capacity(heads.len());
+    if l > 0 {
+        for (qh, kh, vh) in heads {
+            blocks.push(BlockJob {
+                q: &qh[..l * d],
+                k: &kh[..l * d],
+                v: &vh[..l * d],
+                nq: l,
+                n: l,
                 d,
                 scale,
+                causal: true,
             });
         }
     }
-    let mut out = vec![0.0f32; jobs.len() * d];
-    let stats = run_rows_into(cfg, &jobs, d, &mut out);
+    let mut out = vec![0.0f32; heads.len() * l * d];
+    let stats = run_blocks_into(cfg, &blocks, d, &mut out);
     (out, stats)
 }
 
@@ -260,7 +607,12 @@ mod tests {
         let (n, d) = (257usize, 32usize);
         let data = jobs_fixture(1, 13, n, d);
         let jobs = as_jobs(&data, n, d);
-        let base_cfg = KernelConfig { tile: 16, threads: 1, skip: SkipCriterion::Static };
+        let base_cfg = KernelConfig {
+            tile: 16,
+            threads: 1,
+            skip: SkipCriterion::Static,
+            ..KernelConfig::default()
+        };
         let (want, want_st) = run_rows(&base_cfg, &jobs);
         for threads in [2usize, 3, 4, 8] {
             let cfg = KernelConfig { threads, ..base_cfg };
@@ -275,7 +627,7 @@ mod tests {
         let (n, d) = (120usize, 16usize);
         let data = jobs_fixture(2, 6, n, d);
         let jobs = as_jobs(&data, n, d);
-        let cfg = KernelConfig { tile: 32, threads: 4, skip: SkipCriterion::None };
+        let cfg = KernelConfig { tile: 32, threads: 4, ..KernelConfig::default() };
         let (outs, stats) = run_rows(&cfg, &jobs);
         assert_eq!(stats.skipped(), 0);
         assert_eq!(stats.total, 6 * (n as u64 - 1));
@@ -312,7 +664,7 @@ mod tests {
                 )
             })
             .collect();
-        let cfg = KernelConfig { tile: 4, threads: 2, skip: SkipCriterion::Static };
+        let cfg = KernelConfig { tile: 4, threads: 2, block_q: 5, skip: SkipCriterion::Static };
         let (outs, stats) = run_causal_heads(&cfg, &heads, l, d, 0.35);
         assert_eq!(outs.len(), 3 * l * d);
         // rows per head: each row r contributes r weight-update steps
@@ -341,7 +693,12 @@ mod tests {
         let data = jobs_fixture(7, 9, n, d);
         let jobs = as_jobs(&data, n, d);
         for threads in [1usize, 3, 8] {
-            let cfg = KernelConfig { tile: 16, threads, skip: SkipCriterion::Static };
+            let cfg = KernelConfig {
+                tile: 16,
+                threads,
+                skip: SkipCriterion::Static,
+                ..KernelConfig::default()
+            };
             let (vec_outs, vec_st) = run_rows(&cfg, &jobs);
             let mut flat = vec![0.0f32; jobs.len() * d];
             let flat_st = run_rows_into(&cfg, &jobs, d, &mut flat);
@@ -352,6 +709,79 @@ mod tests {
         let mut empty: Vec<f32> = Vec::new();
         let st = run_rows_into(&KernelConfig::default(), &[], d, &mut empty);
         assert_eq!(st.total, 0);
+    }
+
+    #[test]
+    fn grouping_coalesces_shared_and_causal_runs() {
+        let (n, d) = (40usize, 8usize);
+        let mut rng = Rng::new(11);
+        let k = rng.normal_vec(n * d, 0.8);
+        let v = rng.normal_vec(n * d, 1.0);
+        let q = rng.normal_vec(10 * d, 0.8);
+        // 6 rows sharing the full KV, then 4 causal staircase rows
+        let mut jobs: Vec<RowJob> = (0..6)
+            .map(|i| RowJob { q: &q[i * d..(i + 1) * d], k: &k, v: &v, n, d, scale: 0.5 })
+            .collect();
+        for (j, i) in (6..10).enumerate() {
+            let nn = 20 + j;
+            jobs.push(RowJob {
+                q: &q[i * d..(i + 1) * d],
+                k: &k[..nn * d],
+                v: &v[..nn * d],
+                n: nn,
+                d,
+                scale: 0.5,
+            });
+        }
+        let items = coalesce(&jobs, 16);
+        assert_eq!(items.len(), 2, "expected one shared + one causal block");
+        assert!(!items[0].causal && items[0].nq == 6 && items[0].n == n);
+        assert!(items[1].causal && items[1].nq == 4 && items[1].n == 23);
+        // block_q caps group length
+        let items4 = coalesce(&jobs, 4);
+        assert_eq!(items4.iter().map(|it| it.nq).sum::<usize>(), 10);
+        assert!(items4.iter().all(|it| it.nq <= 4));
+        // and the grouped driver still matches the per-row kernel bitwise
+        let cfg = KernelConfig { tile: 8, threads: 2, ..KernelConfig::default() };
+        let (outs, _) = run_rows(&cfg, &jobs);
+        for (i, j) in jobs.iter().enumerate() {
+            let want = tiled::attention_tiled(j.q, j.k, j.v, j.n, j.d, j.scale, 8);
+            assert_eq!(outs[i], want, "row {i}");
+        }
+    }
+
+    #[test]
+    fn run_blocks_matches_rows_and_splits_oversize() {
+        let (nq, n, d) = (23usize, 64usize, 16usize);
+        let mut rng = Rng::new(12);
+        let q = rng.normal_vec(nq * d, 0.8);
+        let k = rng.normal_vec(n * d, 0.8);
+        let v = rng.normal_vec(n * d, 1.0);
+        let block = BlockJob { q: &q, k: &k, v: &v, nq, n, d, scale: 0.4, causal: false };
+        for threads in [1usize, 4] {
+            let cfg = KernelConfig { tile: 16, block_q: 8, threads, skip: SkipCriterion::Static };
+            let mut flat = vec![0.0f32; nq * d];
+            let st = run_blocks_into(&cfg, &[block], d, &mut flat);
+            let (vecs, vst) = run_blocks(&cfg, &[block]);
+            assert_eq!(flat, vecs.concat(), "threads={threads}");
+            assert_eq!(st, vst, "threads={threads}");
+            let mut want_st = SkipStats::default();
+            for iq in 0..nq {
+                let (want, wst) = tiled::attention_tiled_instrumented(
+                    &q[iq * d..(iq + 1) * d],
+                    &k,
+                    &v,
+                    n,
+                    d,
+                    0.4,
+                    16,
+                    SkipCriterion::Static,
+                );
+                assert_eq!(&flat[iq * d..(iq + 1) * d], &want[..], "query {iq}");
+                want_st.merge(&wst);
+            }
+            assert_eq!(st, want_st, "threads={threads}");
+        }
     }
 
     #[test]
@@ -383,9 +813,29 @@ mod tests {
     }
 
     #[test]
+    fn causal_item_cost_is_exact_series_sum() {
+        let it = Item {
+            q: None,
+            row0: 0,
+            k: &[],
+            v: &[],
+            nq: 4,
+            n: 10,
+            d: 2,
+            scale: 1.0,
+            causal: true,
+        };
+        // lengths 7, 8, 9, 10 -> 34 rows * d=2
+        assert_eq!(it.cost(), 34 * 2);
+        let sh = Item { causal: false, ..it };
+        assert_eq!(sh.cost(), 4 * 10 * 2);
+    }
+
+    #[test]
     fn default_config_is_sane() {
         let cfg = KernelConfig::default();
         assert!(cfg.tile >= 1);
+        assert!(cfg.block_q >= 1);
         assert!(cfg.threads >= 1 && cfg.threads <= 8);
         assert_eq!(cfg.skip, SkipCriterion::None);
     }

@@ -11,10 +11,10 @@
 //! Layout convention: `k` and `v` are row-major `(n, d)` flat slices; `q`
 //! is a single query of length `d`. Multi-query helpers take `(nq, d)`.
 //!
-//! ## The tiled + batched engine
+//! ## The tiled + query-blocked + batched engine
 //!
 //! The scalar kernels above are the one-key-at-a-time references. The
-//! production hot path is two layers on top of them:
+//! production hot path is three layers on top of them:
 //!
 //! * [`tiled`] — a tile-granular FLASH-D kernel. KV is walked in blocks of
 //!   `Bc` keys with the carried state `(s_prev, ln_w, o)` crossing tile
@@ -31,15 +31,29 @@
 //!   per-step recursion using [`axpy_blend`]. With
 //!   [`flashd::SkipCriterion::None`] the tiled kernel is bit-identical to
 //!   [`flashd::attention`] for every tile size.
-//! * [`batch`] — a multi-query/multi-head driver ([`batch::run_rows`]) that
-//!   partitions independent attention rows across `std::thread::scope`
-//!   workers with deterministic output ordering and exact [`flashd::SkipStats`]
-//!   aggregation. [`batch::KernelConfig`] (`tile`, `threads`, `skip`) is the
-//!   knob bundle threaded through `model::engine`, `model::decode`, and the
-//!   serving coordinator so every layer runs the same kernel path.
+//! * [`qblock`] — the query-blocked kernel: `Bq` queries run against each
+//!   KV tile in a single pass with `Bq` independent carried states, so a
+//!   KV tile is streamed from memory once per query *block* instead of
+//!   once per query. Because FLASH-D has no cross-query reduction, the
+//!   per-query op sequence is untouched by blocking and every query's
+//!   output and [`flashd::SkipStats`] are bit-identical to the
+//!   single-query tiled kernel (see the [`qblock`] module docs). The
+//!   per-query block-skip mask also supports causal "staircase" blocks
+//!   (nested prefixes) for prefill.
+//! * [`batch`] — a multi-query/multi-head driver that coalesces
+//!   independent attention rows into query blocks ([`batch::BlockJob`],
+//!   [`batch::run_blocks_into`], with a row-grouping pass behind
+//!   [`batch::run_rows`]) and partitions the blocks across
+//!   `std::thread::scope` workers with deterministic output ordering,
+//!   cost-balanced chunks (in `nq * n * d` units), reusable per-worker
+//!   scratch ([`batch::BatchScratch`]), and exact [`flashd::SkipStats`]
+//!   aggregation. [`batch::KernelConfig`] (`tile`, `block_q`, `threads`,
+//!   `skip`) is the knob bundle threaded through `model::engine`,
+//!   `model::decode`, and the serving coordinator so every layer runs the
+//!   same kernel path.
 //!
-//! Data layout note: jobs reference disjoint `(n, d)` row-major K/V slices;
-//! outputs land at the job's index, so multi-threaded runs are bitwise
+//! Data layout note: jobs reference `(n, d)` row-major K/V slices; outputs
+//! land at the job's index, so multi-threaded runs are bitwise
 //! reproducible and independent of the thread count.
 
 pub mod batch;
@@ -47,9 +61,13 @@ pub mod flash1;
 pub mod flash2;
 pub mod flashd;
 pub mod naive;
+pub mod qblock;
 pub mod tiled;
 
-pub use batch::{run_rows, run_rows_into, KernelConfig, RowJob};
+pub use batch::{
+    run_blocks, run_blocks_into, run_rows, run_rows_into, BatchScratch, BlockJob, KernelConfig,
+    RowJob,
+};
 
 /// Dot product of two length-`d` slices.
 ///

@@ -1,0 +1,397 @@
+//! Query-blocked FLASH-D: amortize KV bandwidth across a block of queries.
+//!
+//! The tiled kernel ([`super::tiled`]) streams the whole K and V once *per
+//! query*: a prefill of `nq` queries reads the KV context `nq` times from
+//! memory. Attention is IO-bound (the FlashAttention observation), so the
+//! fix is classic register/cache blocking over the query dimension: process
+//! `Bq` queries against each `Bc`-key KV tile in a single pass, carrying
+//! `Bq` independent `(s_prev, ln_w, o)` states. Each KV tile is then loaded
+//! from DRAM once per query *block* instead of once per query — a `Bq`-fold
+//! reduction in KV traffic — while the K/V tile stays L1-resident across
+//! the block's inner loops.
+//!
+//! Per KV tile the kernel runs two phases:
+//!
+//! 1. **Score pass** — for every query in the block, every key in the tile
+//!    goes through the shared unrolled [`dot`], packing the tile's scores
+//!    into a `Bq × Bc` scratch (one row per query) and tracking each
+//!    query's tile maximum. Only K is touched; the tile is read from
+//!    memory once and served from cache for the remaining `Bq - 1`
+//!    queries.
+//! 2. **Skip + value pass** — per query, the telescoped block-skip test
+//!    and the exact per-step fallback of the tiled kernel, via the shared
+//!    [`tiled::process_scored_tile`]. Queries whose telescoped argument
+//!    test proves the whole tile saturates low never touch V; the rest
+//!    stream the V tile from cache.
+//!
+//! ## Why per-query state isolation preserves FLASH-D's bit-exactness
+//!
+//! FLASH-D's recursion for one query depends only on that query's own
+//! score sequence and carried `(s_prev, ln_w, o)` — there is no softmax
+//! normalizer shared across queries, no running max, and no cross-query
+//! reduction of any kind. Blocking therefore only *interleaves* the work
+//! of `Bq` independent recursions; it never reorders or fuses the float
+//! ops *within* one query's recursion. Concretely, for every query `iq`:
+//!
+//! * the tile boundaries are the same (`1, 1 + Bc, 1 + 2·Bc, …`, truncated
+//!   at that query's own KV length),
+//! * the score pass performs the same [`dot`]s in the same key order,
+//! * the skip test and per-step fallback are literally the same code
+//!   ([`tiled::process_scored_tile`]) operating on a per-query
+//!   [`tiled::RowState`] no other query can touch.
+//!
+//! Hence the output row and [`SkipStats`] contribution of each query are
+//! bit-identical to running [`tiled::attention_tiled_instrumented`] on
+//! that query alone — for every block size, tile size, and
+//! [`SkipCriterion`] — and all of PR 1's equivalence guarantees (exact
+//! `None`/`Adaptive` bit-match against the per-step kernel, exact `Static`
+//! totals) survive blocking unchanged. Property tests in
+//! `tests/prop_kernels.rs` enforce this per query.
+//!
+//! ## Causal staircase blocks
+//!
+//! For causal prefill the queries of a block attend *nested* prefixes of
+//! the same KV buffer. With `causal = true`, query `iq` of the block
+//! attends the first `n - nq + 1 + iq` keys (so the last query attends all
+//! `n`). The kernel simply masks each query out of tiles beyond its own
+//! prefix — a per-query active length — which keeps the per-query op
+//! sequence identical to the single-query kernel run on that prefix.
+
+use super::flashd::{SkipCriterion, SkipStats};
+use super::tiled::{process_scored_tile, tile_skip_lo, RowState};
+use super::dot;
+
+/// Default query block length. 16 queries × d=64 × 4 B = 4 KiB of Q plus
+/// the `Bq × Bc` f64 score scratch (4 KiB at the default tile) alongside
+/// the ~16 KiB KV tile — the whole working set stays L1-resident while
+/// cutting KV traffic 16-fold.
+pub const DEFAULT_BLOCK_Q: usize = 16;
+
+/// Reusable scratch for the query-blocked kernel: the `Bq × Bc` score
+/// matrix, per-query tile maxima, and per-query carried recursion state.
+/// Grown on demand, never shrunk — hold one per worker/session and every
+/// call after warm-up is allocation-free.
+#[derive(Debug, Default)]
+pub struct QScratch {
+    /// `Bq × Bc` tile scores, row `iq` at `[iq * tile .. iq * tile + t_len]`.
+    scores: Vec<f64>,
+    /// Per-query maximum score within the current tile.
+    s_max: Vec<f64>,
+    /// Per-query carried `(s_prev, ln_w)` state.
+    states: Vec<RowState>,
+}
+
+impl QScratch {
+    pub fn new() -> QScratch {
+        QScratch::default()
+    }
+
+    fn ensure(&mut self, nq: usize, tile: usize) {
+        if self.scores.len() < nq * tile {
+            self.scores.resize(nq * tile, 0.0);
+        }
+        if self.s_max.len() < nq {
+            self.s_max.resize(nq, f64::NEG_INFINITY);
+        }
+        if self.states.len() < nq {
+            self.states.resize(nq, RowState::default());
+        }
+    }
+}
+
+/// Query-blocked FLASH-D over `nq` queries sharing one KV context, writing
+/// the `(nq, d)` output into `out` (fully overwritten). Bit-identical per
+/// query to [`super::tiled::attention_tiled_instrumented`] with the same
+/// `(tile, crit)` — see the module docs for why — and the returned
+/// [`SkipStats`] are the exact sum of the per-query stats.
+///
+/// With `causal = true`, query `iq` attends the first `n - nq + 1 + iq`
+/// keys (requires `n >= nq`); otherwise every query attends all `n`.
+#[allow(clippy::too_many_arguments)]
+pub fn attention_qblock_into(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    nq: usize,
+    n: usize,
+    d: usize,
+    scale: f32,
+    tile: usize,
+    crit: SkipCriterion,
+    causal: bool,
+    scratch: &mut QScratch,
+    out: &mut [f32],
+) -> SkipStats {
+    assert!(nq >= 1, "empty query block");
+    assert!(n > 0, "empty KV context");
+    assert!(tile > 0, "tile must be >= 1");
+    assert_eq!(out.len(), nq * d);
+    if causal {
+        assert!(n >= nq, "causal block needs n >= nq (got n={n}, nq={nq})");
+    }
+    debug_assert!(q.len() >= nq * d);
+    debug_assert!(k.len() >= n * d && v.len() >= n * d);
+
+    scratch.ensure(nq, tile);
+    let QScratch { scores, s_max, states } = scratch;
+
+    let mut stats = SkipStats::default();
+    // Per-query KV length: the causal staircase nests prefixes so the
+    // block's last query attends all n keys. Always >= 1.
+    let n_of = |iq: usize| if causal { n - nq + 1 + iq } else { n };
+
+    // Step 0 (w_1 = 1) for every query: output becomes v_0 — same fixed
+    // first step as the single-query kernel.
+    for iq in 0..nq {
+        let s0 = (dot(&q[iq * d..(iq + 1) * d], &k[..d]) * scale) as f64;
+        out[iq * d..(iq + 1) * d].copy_from_slice(&v[..d]);
+        states[iq] = RowState { s_prev: s0, ln_w: 0.0 };
+    }
+
+    let tile_lo = tile_skip_lo(crit);
+    let mut i = 1usize;
+    while i < n {
+        let t_end = (i + tile).min(n);
+
+        // --- phase 1: score pass, K tile shared across the block --------
+        for iq in 0..nq {
+            let ni = n_of(iq);
+            if ni <= i {
+                continue; // this query's prefix ended before the tile
+            }
+            let e = t_end.min(ni);
+            let qrow = &q[iq * d..(iq + 1) * d];
+            let mut mx = f64::NEG_INFINITY;
+            for (t, slot) in scores[iq * tile..iq * tile + (e - i)].iter_mut().enumerate() {
+                let row = i + t;
+                let s = (dot(qrow, &k[row * d..(row + 1) * d]) * scale) as f64;
+                *slot = s;
+                if s > mx {
+                    mx = s;
+                }
+            }
+            s_max[iq] = mx;
+        }
+
+        // --- phase 2: per-query skip test + fallback, V tile shared -----
+        for iq in 0..nq {
+            let ni = n_of(iq);
+            if ni <= i {
+                continue;
+            }
+            let e = t_end.min(ni);
+            process_scored_tile(
+                &scores[iq * tile..iq * tile + (e - i)],
+                s_max[iq],
+                i,
+                v,
+                d,
+                crit,
+                tile_lo,
+                &mut states[iq],
+                &mut out[iq * d..(iq + 1) * d],
+                &mut stats,
+            );
+        }
+        i = t_end;
+    }
+    stats
+}
+
+/// Allocating convenience wrapper around [`attention_qblock_into`].
+#[allow(clippy::too_many_arguments)]
+pub fn attention_qblock(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    nq: usize,
+    n: usize,
+    d: usize,
+    scale: f32,
+    tile: usize,
+    crit: SkipCriterion,
+    causal: bool,
+) -> (Vec<f32>, SkipStats) {
+    let mut out = vec![0.0f32; nq * d];
+    let mut scratch = QScratch::default();
+    let stats =
+        attention_qblock_into(q, k, v, nq, n, d, scale, tile, crit, causal, &mut scratch, &mut out);
+    (out, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::flashd::{ACTIVE_HI, ACTIVE_LO};
+    use crate::kernels::tiled;
+    use crate::util::rng::Rng;
+
+    fn problem(seed: u64, nq: usize, n: usize, d: usize, std: f32) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        (rng.normal_vec(nq * d, std), rng.normal_vec(n * d, std), rng.normal_vec(n * d, 1.0))
+    }
+
+    #[test]
+    fn shared_bitmatches_tiled_per_query_all_criteria() {
+        let crits = [
+            SkipCriterion::None,
+            SkipCriterion::Static,
+            SkipCriterion::Adaptive { lo: ACTIVE_LO, hi: ACTIVE_HI },
+        ];
+        for &(nq, n, d) in &[(1usize, 40usize, 8usize), (4, 97, 16), (16, 256, 32)] {
+            let (q, k, v) = problem(nq as u64 * 7 + n as u64, nq, n, d, 1.5);
+            for crit in crits {
+                for tile in [1usize, 7, 32, n] {
+                    let (got, got_st) =
+                        attention_qblock(&q, &k, &v, nq, n, d, 0.6, tile, crit, false);
+                    let mut want_st = SkipStats::default();
+                    for iq in 0..nq {
+                        let (o, st) = tiled::attention_tiled_instrumented(
+                            &q[iq * d..(iq + 1) * d],
+                            &k,
+                            &v,
+                            n,
+                            d,
+                            0.6,
+                            tile,
+                            crit,
+                        );
+                        assert_eq!(
+                            &got[iq * d..(iq + 1) * d],
+                            &o[..],
+                            "nq={nq} n={n} tile={tile} crit={crit:?} query {iq}"
+                        );
+                        want_st.merge(&st);
+                    }
+                    assert_eq!(got_st, want_st, "nq={nq} n={n} tile={tile} crit={crit:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn causal_staircase_bitmatches_per_prefix() {
+        let (nq, n, d) = (8usize, 30usize, 8usize);
+        let (q, k, v) = problem(99, nq, n, d, 1.0);
+        for tile in [1usize, 4, 16, 32] {
+            let (got, got_st) =
+                attention_qblock(&q, &k, &v, nq, n, d, 0.5, tile, SkipCriterion::Static, true);
+            let mut want_st = SkipStats::default();
+            for iq in 0..nq {
+                let ni = n - nq + 1 + iq;
+                let (o, st) = tiled::attention_tiled_instrumented(
+                    &q[iq * d..(iq + 1) * d],
+                    &k[..ni * d],
+                    &v[..ni * d],
+                    ni,
+                    d,
+                    0.5,
+                    tile,
+                    SkipCriterion::Static,
+                );
+                assert_eq!(&got[iq * d..(iq + 1) * d], &o[..], "tile={tile} query {iq}");
+                want_st.merge(&st);
+            }
+            assert_eq!(got_st, want_st, "tile={tile}");
+        }
+    }
+
+    #[test]
+    fn causal_full_square_matches_causal_rows() {
+        // n == nq: query iq attends iq + 1 keys — the engine's prefill shape.
+        let (l, d) = (12usize, 8usize);
+        let (q, k, v) = problem(5, l, l, d, 0.9);
+        let (got, _) = attention_qblock(&q, &k, &v, l, l, d, 0.4, 4, SkipCriterion::None, true);
+        for r in 0..l {
+            let want = tiled::attention_tiled(
+                &q[r * d..(r + 1) * d],
+                &k[..(r + 1) * d],
+                &v[..(r + 1) * d],
+                r + 1,
+                d,
+                0.4,
+                4,
+            );
+            assert_eq!(&got[r * d..(r + 1) * d], &want[..], "row {r}");
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_across_shapes_is_clean() {
+        // A warm scratch carrying state from a larger problem must not leak
+        // into a smaller one.
+        let mut scratch = QScratch::new();
+        let (q1, k1, v1) = problem(1, 16, 128, 16, 1.2);
+        let mut out1 = vec![0.0f32; 16 * 16];
+        attention_qblock_into(
+            &q1, &k1, &v1, 16, 128, 16, 1.0, 32,
+            SkipCriterion::Static,
+            false,
+            &mut scratch,
+            &mut out1,
+        );
+        let (q2, k2, v2) = problem(2, 3, 20, 8, 1.2);
+        let mut out2 = vec![0.0f32; 3 * 8];
+        let st = attention_qblock_into(
+            &q2, &k2, &v2, 3, 20, 8, 1.0, 7,
+            SkipCriterion::Static,
+            false,
+            &mut scratch,
+            &mut out2,
+        );
+        let (want, want_st) =
+            attention_qblock(&q2, &k2, &v2, 3, 20, 8, 1.0, 7, SkipCriterion::Static, false);
+        assert_eq!(out2, want);
+        assert_eq!(st, want_st);
+    }
+
+    #[test]
+    fn single_key_context() {
+        // n = 1: output is v_0 for every query, zero weight-update steps.
+        let (nq, d) = (5usize, 8usize);
+        let (q, k, v) = problem(8, nq, 1, d, 1.0);
+        let (got, st) = attention_qblock(&q, &k, &v, nq, 1, d, 1.0, 32, SkipCriterion::None, false);
+        assert_eq!(st.total, 0);
+        for iq in 0..nq {
+            assert_eq!(&got[iq * d..(iq + 1) * d], &v[..d], "query {iq}");
+        }
+    }
+
+    #[test]
+    fn block_skip_fires_per_query_on_engineered_scores() {
+        // Query 0 sees steeply decreasing scores (every tile skips); query 1
+        // sees flat scores (no tile skips). The per-query mask must keep
+        // them independent.
+        let d = 8usize;
+        let n = 33usize;
+        let mut rng = Rng::new(17);
+        let mut q = vec![0.0f32; 2 * d];
+        q[0] = 1.0; // query 0 keys off k[.., 0]
+        q[d + 1] = 1.0; // query 1 keys off k[.., 1] (all zeros -> flat)
+        let mut k = Vec::new();
+        for i in 0..n {
+            let mut row = vec![0.0f32; d];
+            row[0] = -(i as f32) * 8.0;
+            k.extend(row);
+        }
+        let v = rng.normal_vec(n * d, 1.0);
+        let (got, st) =
+            attention_qblock(&q, &k, &v, 2, n, d, 1.0, 4, SkipCriterion::Static, false);
+        // query 0: all n-1 updates skip low, output stays v_0
+        assert_eq!(&got[..d], &v[..d]);
+        assert_eq!(st.total, 2 * (n as u64 - 1));
+        assert!(st.skip_low >= (n as u64 - 1));
+        // query 1 must bit-match its single-query run
+        let (want1, _) = tiled::attention_tiled_instrumented(
+            &q[d..2 * d],
+            &k,
+            &v,
+            n,
+            d,
+            1.0,
+            4,
+            SkipCriterion::Static,
+        );
+        assert_eq!(&got[d..2 * d], &want1[..]);
+    }
+}

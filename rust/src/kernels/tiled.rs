@@ -26,6 +26,11 @@
 //!    [`flashd::attention_instrumented`], using [`axpy_blend`] for the
 //!    Eq. 12 update.
 //!
+//! Steps 2 + 3 live in [`process_scored_tile`], which is shared verbatim
+//! with the query-blocked kernel [`super::qblock`] — the multi-query path
+//! is bit-identical to this kernel per query *by construction*, not by
+//! parallel maintenance of two copies of the recursion.
+//!
 //! Equivalences (enforced by unit + property tests):
 //! * `SkipCriterion::None`   → bit-identical to [`flashd::attention`] for
 //!   every tile size (the fast path never fires; the per-step sequence of
@@ -48,8 +53,114 @@ use super::{axpy_blend, dot};
 pub const DEFAULT_TILE: usize = 32;
 
 /// Largest tile held in a stack-resident score buffer; bigger tiles fall
-/// back to one heap allocation.
+/// back to one heap allocation (avoided entirely on the batched driver's
+/// hot paths, which thread caller-owned scratch through
+/// [`attention_tiled_into_with`]).
 const STACK_TILE: usize = 64;
+
+/// The tile-skip threshold on the *full* sigmoid argument. The static
+/// criterion's step rule tests the score difference alone; at tile
+/// granularity the telescoped argument test (threshold [`ACTIVE_LO`]) is
+/// the sound generalization — it subsumes every static skip-low step
+/// because `ln w <= 0` only pushes the argument lower.
+pub(crate) fn tile_skip_lo(crit: SkipCriterion) -> f64 {
+    match crit {
+        SkipCriterion::None => f64::NEG_INFINITY,
+        SkipCriterion::Static => ACTIVE_LO,
+        SkipCriterion::Adaptive { lo, .. } => lo,
+    }
+}
+
+/// Carried FLASH-D recursion state for one query row. Crosses tile
+/// boundaries unchanged (the §III property); the output row `o` is the
+/// third component of the carried state and lives in the caller's buffer.
+#[derive(Copy, Clone, Debug, Default)]
+pub(crate) struct RowState {
+    pub s_prev: f64,
+    pub ln_w: f64,
+}
+
+/// Steps 2 + 3 of the tiled kernel for one query and one already-scored
+/// tile: the telescoped block-skip fast path, then the exact per-step
+/// recursion fallback. `scores[t]` is the score of absolute KV row
+/// `base + t`; `s_max` is their maximum. Shared by the single-query tiled
+/// kernel and the query-blocked kernel ([`super::qblock`]) so both execute
+/// the identical sequence of float ops per query.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn process_scored_tile(
+    scores: &[f64],
+    s_max: f64,
+    base: usize,
+    v: &[f32],
+    d: usize,
+    crit: SkipCriterion,
+    tile_lo: f64,
+    st: &mut RowState,
+    o: &mut [f32],
+    stats: &mut SkipStats,
+) {
+    let t_len = scores.len();
+
+    // --- block-skip fast path ------------------------------------------
+    // The telescoped bound proves saturation for the whole tile; the
+    // scalar chain below re-verifies it step by step so the committed
+    // state (and stats) are bit-identical to the per-step kernel even in
+    // floating-point corner cases.
+    if s_max - st.s_prev + st.ln_w <= tile_lo {
+        let mut sp = st.s_prev;
+        let mut lw = st.ln_w;
+        let mut all_low = true;
+        for &s in scores {
+            let x = s - sp + lw;
+            if x > tile_lo {
+                all_low = false;
+                break;
+            }
+            lw = x; // skip-low pass-through: ln sigmoid(x) ~ x
+            sp = s;
+        }
+        if all_low {
+            // Whole tile saturates low: no value loads, no output
+            // updates, state carried by the scalar chain alone.
+            stats.total += t_len as u64;
+            stats.skip_low += t_len as u64;
+            st.s_prev = sp;
+            st.ln_w = lw;
+            return;
+        }
+    }
+
+    // --- fallback: exact per-step recursion ----------------------------
+    for (t, &s) in scores.iter().enumerate() {
+        let row = base + t;
+        let vi = &v[row * d..(row + 1) * d];
+        stats.total += 1;
+        let s_diff = s - st.s_prev;
+        let x = s_diff + st.ln_w;
+        let (lo_hit, hi_hit) = match crit {
+            SkipCriterion::None => (false, false),
+            SkipCriterion::Static => (s_diff <= ACTIVE_LO, s_diff >= ACTIVE_HI),
+            SkipCriterion::Adaptive { lo, hi } => (x <= lo, x >= hi),
+        };
+        if lo_hit {
+            stats.skip_low += 1;
+            st.ln_w = x;
+            st.s_prev = s;
+            continue;
+        }
+        if hi_hit {
+            stats.skip_high += 1;
+            o.copy_from_slice(vi);
+            st.ln_w = 0.0;
+            st.s_prev = s;
+            continue;
+        }
+        let w = sigmoid(x) as f32;
+        st.ln_w = log_sigmoid(x);
+        axpy_blend(o, vi, w);
+        st.s_prev = s;
+    }
+}
 
 /// Tiled single-query FLASH-D with exact nonlinearities and no skipping.
 /// Bit-identical to [`super::flashd::attention`] for every `tile >= 1`.
@@ -76,9 +187,63 @@ pub fn attention_tiled_instrumented(
     (o, stats)
 }
 
+/// Shared core behind both `into` variants: `scores` is a scratch slice of
+/// exactly `tile` elements.
+#[allow(clippy::too_many_arguments)]
+fn tiled_core(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n: usize,
+    d: usize,
+    scale: f32,
+    tile: usize,
+    crit: SkipCriterion,
+    scores: &mut [f64],
+    o: &mut [f32],
+) -> SkipStats {
+    assert!(n > 0, "empty KV context");
+    assert!(tile > 0, "tile must be >= 1");
+    assert_eq!(o.len(), d);
+    debug_assert_eq!(q.len(), d);
+    debug_assert!(k.len() >= n * d && v.len() >= n * d);
+    debug_assert_eq!(scores.len(), tile);
+
+    let mut stats = SkipStats::default();
+
+    // Step 0 (w_1 = 1): output becomes v_0, no weight-update counted —
+    // mirrors `attention_instrumented`.
+    let s0 = (dot(q, &k[..d]) * scale) as f64;
+    o.copy_from_slice(&v[..d]);
+    let mut st = RowState { s_prev: s0, ln_w: 0.0 };
+
+    let tile_lo = tile_skip_lo(crit);
+    let mut i = 1usize;
+    while i < n {
+        let t_len = tile.min(n - i);
+
+        // --- score pass: dot every key in the tile, track the max ---
+        let mut s_max = f64::NEG_INFINITY;
+        for (t, srow) in scores[..t_len].iter_mut().enumerate() {
+            let row = i + t;
+            let s = (dot(q, &k[row * d..(row + 1) * d]) * scale) as f64;
+            *srow = s;
+            if s > s_max {
+                s_max = s;
+            }
+        }
+
+        process_scored_tile(&scores[..t_len], s_max, i, v, d, crit, tile_lo, &mut st, o, &mut stats);
+        i += t_len;
+    }
+    stats
+}
+
 /// Allocation-free core: writes the output row into the caller-provided
-/// `o` (length `d`, fully overwritten) — the form the batched driver's
-/// flat-output path uses on decode/serving hot paths.
+/// `o` (length `d`, fully overwritten). Score scratch is stack-resident
+/// for `tile <= 64`; oversized tiles pay one heap allocation — hot-path
+/// callers (the batched driver) use [`attention_tiled_into_with`] instead,
+/// which never allocates after warm-up.
 #[allow(clippy::too_many_arguments)]
 pub fn attention_tiled_into(
     q: &[f32],
@@ -91,36 +256,6 @@ pub fn attention_tiled_into(
     crit: SkipCriterion,
     o: &mut [f32],
 ) -> SkipStats {
-    assert!(n > 0, "empty KV context");
-    assert!(tile > 0, "tile must be >= 1");
-    assert_eq!(o.len(), d);
-    debug_assert_eq!(q.len(), d);
-    debug_assert!(k.len() >= n * d && v.len() >= n * d);
-
-    let mut stats = SkipStats::default();
-
-    // Step 0 (w_1 = 1): output becomes v_0, no weight-update counted —
-    // mirrors `attention_instrumented`.
-    let s0 = (dot(q, &k[..d]) * scale) as f64;
-    o.copy_from_slice(&v[..d]);
-    let mut s_prev = s0;
-    let mut ln_w = 0.0f64;
-
-    // The tile-skip threshold on the *full* sigmoid argument. The static
-    // criterion's step rule tests the score difference alone; at tile
-    // granularity the telescoped argument test (threshold ACTIVE_LO) is the
-    // sound generalization — it subsumes every static skip-low step because
-    // ln w <= 0 only pushes the argument lower.
-    let tile_lo = match crit {
-        SkipCriterion::None => f64::NEG_INFINITY,
-        SkipCriterion::Static => ACTIVE_LO,
-        SkipCriterion::Adaptive { lo, .. } => lo,
-    };
-
-    // Score scratch: stack-resident for every swept tile size, one heap
-    // allocation only for oversized tiles (the single-token decode path
-    // hits this function once per (layer, head, token), so per-call heap
-    // traffic matters).
     let mut stack_buf = [0.0f64; STACK_TILE];
     let mut heap_buf: Vec<f64> = Vec::new();
     let scores: &mut [f64] = if tile <= STACK_TILE {
@@ -129,88 +264,39 @@ pub fn attention_tiled_into(
         heap_buf.resize(tile, 0.0);
         &mut heap_buf
     };
-    let mut i = 1usize;
-    while i < n {
-        let t_len = tile.min(n - i);
+    tiled_core(q, k, v, n, d, scale, tile, crit, scores, o)
+}
 
-        // --- 1. score pass: dot every key in the tile, track the max ---
-        let mut s_max = f64::NEG_INFINITY;
-        for (t, srow) in scores[..t_len].iter_mut().enumerate() {
-            let row = i + t;
-            let s = (dot(q, &k[row * d..(row + 1) * d]) * scale) as f64;
-            *srow = s;
-            if s > s_max {
-                s_max = s;
-            }
-        }
-
-        // --- 2. block-skip fast path -----------------------------------
-        // The telescoped bound proves saturation for the whole tile; the
-        // scalar chain below re-verifies it step by step so the committed
-        // state (and stats) are bit-identical to the per-step kernel even
-        // in floating-point corner cases.
-        if s_max - s_prev + ln_w <= tile_lo {
-            let mut sp = s_prev;
-            let mut lw = ln_w;
-            let mut all_low = true;
-            for &s in &scores[..t_len] {
-                let x = s - sp + lw;
-                if x > tile_lo {
-                    all_low = false;
-                    break;
-                }
-                lw = x; // skip-low pass-through: ln sigmoid(x) ~ x
-                sp = s;
-            }
-            if all_low {
-                // Whole tile saturates low: no value loads, no output
-                // updates, state carried by the scalar chain alone.
-                stats.total += t_len as u64;
-                stats.skip_low += t_len as u64;
-                s_prev = sp;
-                ln_w = lw;
-                i += t_len;
-                continue;
-            }
-        }
-
-        // --- 3. fallback: exact per-step recursion ----------------------
-        for (t, &s) in scores[..t_len].iter().enumerate() {
-            let row = i + t;
-            let vi = &v[row * d..(row + 1) * d];
-            stats.total += 1;
-            let s_diff = s - s_prev;
-            let x = s_diff + ln_w;
-            let (lo_hit, hi_hit) = match crit {
-                SkipCriterion::None => (false, false),
-                SkipCriterion::Static => (s_diff <= ACTIVE_LO, s_diff >= ACTIVE_HI),
-                SkipCriterion::Adaptive { lo, hi } => (x <= lo, x >= hi),
-            };
-            if lo_hit {
-                stats.skip_low += 1;
-                ln_w = x;
-                s_prev = s;
-                continue;
-            }
-            if hi_hit {
-                stats.skip_high += 1;
-                o.copy_from_slice(vi);
-                ln_w = 0.0;
-                s_prev = s;
-                continue;
-            }
-            let w = sigmoid(x) as f32;
-            ln_w = log_sigmoid(x);
-            axpy_blend(o, vi, w);
-            s_prev = s;
-        }
-        i += t_len;
+/// [`attention_tiled_into`] with a caller-owned score scratch: `scores` is
+/// grown to `tile` elements once and reused across calls, so per-call heap
+/// traffic is zero regardless of tile size — the form the batched driver's
+/// per-worker scratch uses on the decode/serving hot paths (previously a
+/// `tile > 64` configuration re-allocated once per (layer, head, token)).
+#[allow(clippy::too_many_arguments)]
+pub fn attention_tiled_into_with(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n: usize,
+    d: usize,
+    scale: f32,
+    tile: usize,
+    crit: SkipCriterion,
+    o: &mut [f32],
+    scores: &mut Vec<f64>,
+) -> SkipStats {
+    if scores.len() < tile {
+        scores.resize(tile, 0.0);
     }
-    stats
+    tiled_core(q, k, v, n, d, scale, tile, crit, &mut scores[..tile], o)
 }
 
 /// Multi-query tiled FLASH-D: independent `(nq, d)` queries over a shared
-/// KV context (the per-head serving shape).
+/// KV context (the per-head serving shape). Since PR 2 this runs the
+/// query-blocked kernel in blocks of [`super::qblock::DEFAULT_BLOCK_Q`]
+/// queries — each KV tile is streamed from memory once per query *block*
+/// instead of once per query — and remains bit-identical per query to
+/// [`attention_tiled`].
 #[allow(clippy::too_many_arguments)]
 pub fn attention_tiled_multi(
     q: &[f32],
@@ -222,9 +308,26 @@ pub fn attention_tiled_multi(
     scale: f32,
     tile: usize,
 ) -> Vec<f32> {
-    let mut out = Vec::with_capacity(nq * d);
-    for iq in 0..nq {
-        out.extend(attention_tiled(&q[iq * d..(iq + 1) * d], k, v, nkv, d, scale, tile));
+    let mut out = vec![0.0f32; nq * d];
+    let mut scratch = super::qblock::QScratch::default();
+    let mut a = 0usize;
+    while a < nq {
+        let e = (a + super::qblock::DEFAULT_BLOCK_Q).min(nq);
+        super::qblock::attention_qblock_into(
+            &q[a * d..e * d],
+            k,
+            v,
+            e - a,
+            nkv,
+            d,
+            scale,
+            tile,
+            SkipCriterion::None,
+            false,
+            &mut scratch,
+            &mut out[a * d..e * d],
+        );
+        a = e;
     }
     out
 }
@@ -326,16 +429,41 @@ mod tests {
     }
 
     #[test]
+    fn into_with_matches_into_and_reuses_scratch() {
+        let (n, d) = (300usize, 16usize);
+        let (q, k, v) = problem(41, n, d, 0.9);
+        let mut scratch: Vec<f64> = Vec::new();
+        for tile in [1usize, 16, 64, 100, 300] {
+            let (want, want_st) =
+                attention_tiled_instrumented(&q, &k, &v, n, d, 0.5, tile, SkipCriterion::Static);
+            let mut got = vec![0.0f32; d];
+            let got_st = attention_tiled_into_with(
+                &q, &k, &v, n, d, 0.5, tile,
+                SkipCriterion::Static,
+                &mut got,
+                &mut scratch,
+            );
+            assert_eq!(got, want, "tile={tile}");
+            assert_eq!(got_st, want_st, "tile={tile}");
+            assert!(scratch.len() >= tile);
+        }
+        // scratch grew to the largest tile and is reused, never shrunk
+        assert_eq!(scratch.len(), 300);
+    }
+
+    #[test]
     fn multi_matches_per_query() {
         let mut rng = Rng::new(77);
-        let (nq, nkv, d) = (4usize, 100usize, 16usize);
+        // nq > DEFAULT_BLOCK_Q so the blocked path spans several blocks
+        let (nq, nkv, d) = (37usize, 100usize, 16usize);
         let q = rng.normal_vec(nq * d, 0.8);
         let k = rng.normal_vec(nkv * d, 0.8);
         let v = rng.normal_vec(nkv * d, 1.0);
         let multi = attention_tiled_multi(&q, &k, &v, nq, nkv, d, 0.3, 16);
+        assert_eq!(multi.len(), nq * d);
         for iq in 0..nq {
             let single = attention_tiled(&q[iq * d..(iq + 1) * d], &k, &v, nkv, d, 0.3, 16);
-            assert_eq!(&multi[iq * d..(iq + 1) * d], &single[..]);
+            assert_eq!(&multi[iq * d..(iq + 1) * d], &single[..], "query {iq}");
         }
     }
 

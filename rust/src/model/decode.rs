@@ -7,7 +7,7 @@
 //! Numerically identical to the full forward (same FLASH-D recursion, same
 //! QK-norm), verified in tests and in `EXPERIMENTS.md` §Perf.
 
-use crate::kernels::batch::{self, KernelConfig, RowJob};
+use crate::kernels::batch::{self, BatchScratch, KernelConfig, RowJob};
 use crate::model::engine::{Engine, ForwardStats};
 
 /// Per-layer attention cache: normalized keys + values, per head,
@@ -27,6 +27,10 @@ pub struct DecodeSession<'a> {
     /// Effective kernel config, snapshotted from [`Engine::kernel_config`]
     /// (so its `skip` already carries the engine's criterion).
     kernel: KernelConfig,
+    /// Session-owned kernel scratch: the kernel's score/state buffers are
+    /// reused across every (layer, token) call instead of being
+    /// reallocated per step.
+    scratch: BatchScratch,
 }
 
 fn rms_inv(row: &[f32]) -> f32 {
@@ -65,6 +69,7 @@ impl<'a> DecodeSession<'a> {
             pos: 0,
             stats: ForwardStats::default(),
             kernel: engine.kernel_config(),
+            scratch: BatchScratch::new(),
         }
     }
 
@@ -122,7 +127,9 @@ impl<'a> DecodeSession<'a> {
             let n = self.pos + 1;
             let kcfg = self.kernel;
             // head-ordered jobs write straight into the (nh * dh) attention
-            // row — no per-head output allocation
+            // row — no per-head output allocation, and the session-owned
+            // scratch keeps the kernel's score/state buffers off the
+            // per-step allocation path
             let st = {
                 let jobs: Vec<RowJob<'_>> = (0..nh)
                     .map(|head| RowJob {
@@ -134,7 +141,7 @@ impl<'a> DecodeSession<'a> {
                         scale,
                     })
                     .collect();
-                batch::run_rows_into(&kcfg, &jobs, dh, &mut attn)
+                batch::run_rows_into_with(&kcfg, &jobs, dh, &mut attn, &mut self.scratch)
             };
             self.stats.skip.merge(&st);
             self.stats.rows += nh as u64;

@@ -138,6 +138,14 @@ impl Engine {
         self.kernel.threads = threads;
     }
 
+    /// Tune the query block length of the query-blocked kernel (how many
+    /// queries share one KV-tile stream; 1 = per-query, the PR 1
+    /// behavior). Results are bit-identical for every value.
+    pub fn set_query_block(&mut self, block_q: usize) {
+        assert!(block_q >= 1);
+        self.kernel.block_q = block_q;
+    }
+
     /// Load a zoo model from the artifact directory (weights default to the
     /// trained file `weights_<name>.fdw` if present, else the init file).
     pub fn from_artifacts(dir: &std::path::Path, name: &str) -> Result<Engine> {
@@ -205,9 +213,10 @@ impl Engine {
             let k = matmul(&h, &self.p(&format!("{pfx}.wk")).data, l, dm, dm);
             let v = matmul(&h, &self.p(&format!("{pfx}.wv")).data, l, dm, dm);
             let mut attn_out = vec![0.0f32; l * dm];
-            // Split into contiguous (L, dh) per-head buffers, then hand every
-            // causal (head, row) pair to the batched tiled-kernel driver in
-            // one shot — the work partitions across worker threads with
+            // Split into contiguous (L, dh) per-head buffers, then submit
+            // each head as one causal query block to the batched driver —
+            // prefill KV tiles stream once per query block (not once per
+            // row), and the work partitions across worker threads with
             // deterministic output ordering.
             let mut head_bufs: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = Vec::with_capacity(nh);
             for head in 0..nh {

@@ -57,6 +57,9 @@ fn fmt_ns(ns: f64) -> String {
 pub struct Bench {
     pub suite: String,
     pub results: Vec<Stats>,
+    /// Derived headline quantities (e.g. speedup ratios between two
+    /// measured entries), emitted under `"derived"` in the JSON report.
+    pub derived: Vec<(String, f64)>,
     pub measure_time: Duration,
     pub warmup_time: Duration,
 }
@@ -68,9 +71,18 @@ impl Bench {
         Bench {
             suite: suite.to_string(),
             results: Vec::new(),
+            derived: Vec::new(),
             measure_time: if fast { Duration::from_millis(200) } else { Duration::from_secs(2) },
             warmup_time: if fast { Duration::from_millis(50) } else { Duration::from_millis(500) },
         }
+    }
+
+    /// Record a derived headline number (printed and emitted under
+    /// `"derived"` in the JSON report) — the perf-trajectory quantities
+    /// (tiled/scalar, blocked/per-query) are tracked this way.
+    pub fn note(&mut self, name: &str, value: f64) {
+        println!("-- derived {name} = {value:.3}");
+        self.derived.push((name.to_string(), value));
     }
 
     /// Benchmark a closure; returns its mean ns/iter.
@@ -180,7 +192,16 @@ impl Bench {
                 obj(pairs)
             })
             .collect();
-        obj(vec![("suite", s(&self.suite)), ("results", arr(results))])
+        let derived = obj(self
+            .derived
+            .iter()
+            .map(|(k, v)| (k.as_str(), num(*v)))
+            .collect());
+        obj(vec![
+            ("suite", s(&self.suite)),
+            ("results", arr(results)),
+            ("derived", derived),
+        ])
     }
 
     /// Write [`Bench::to_json`] to an arbitrary path (e.g. the committed
@@ -239,6 +260,7 @@ mod tests {
         b.bench("no-tp", || {
             bb(2 + 2);
         });
+        b.note("speedup_x", 1.75);
         let text = b.to_json().to_string();
         let parsed = crate::util::json::Json::parse(&text).unwrap();
         assert_eq!(parsed.get("suite").unwrap().as_str(), Some("jsontest"));
@@ -249,5 +271,7 @@ mod tests {
         assert!(rs[0].get("throughput_per_s").unwrap().as_f64().unwrap() > 0.0);
         assert_eq!(rs[0].get("throughput_unit").unwrap().as_str(), Some("row"));
         assert!(rs[1].get("throughput_per_s").is_none());
+        let derived = parsed.get("derived").unwrap();
+        assert_eq!(derived.get("speedup_x").unwrap().as_f64(), Some(1.75));
     }
 }

@@ -2,9 +2,9 @@
 //! the in-tree `util::prop` driver): the algebraic identities the paper's
 //! derivation rests on must hold for arbitrary random problems.
 
-use flashd::kernels::flashd::{log_sigmoid, sigmoid, weight, SkipCriterion, ACTIVE_HI, ACTIVE_LO};
+use flashd::kernels::flashd::{log_sigmoid, sigmoid, weight, SkipCriterion, SkipStats, ACTIVE_HI, ACTIVE_LO};
 use flashd::kernels::flashd as fd;
-use flashd::kernels::{batch, flash1, flash2, max_abs_diff, naive, tiled, KernelConfig, RowJob};
+use flashd::kernels::{batch, flash1, flash2, max_abs_diff, naive, qblock, tiled, KernelConfig, RowJob};
 use flashd::numerics::{Bf16, Fp8E4M3, Scalar};
 use flashd::prop_assert;
 use flashd::util::prop::forall;
@@ -287,6 +287,7 @@ fn prop_batched_driver_thread_invariant() {
             tile: 16,
             threads,
             skip: SkipCriterion::Static,
+            ..KernelConfig::default()
         };
         let (want, want_st) = batch::run_rows(&mk(1), &jobs);
         // serial reference: jobs in order through the tiled kernel
@@ -301,6 +302,142 @@ fn prop_batched_driver_thread_invariant() {
             let (got, got_st) = batch::run_rows(&mk(threads), &jobs);
             prop_assert!(g, got == want, "threads={threads}: outputs differ");
             prop_assert!(g, got_st == want_st, "threads={threads}: stats differ");
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_qblock_bitmatches_tiled_per_query() {
+    // The query-blocked kernel carries one isolated (s_prev, ln_w, o)
+    // state per query, so every query's output AND SkipStats contribution
+    // must be bit-identical to the single-query tiled kernel — for every
+    // block size, tile size, and skip criterion.
+    forall("qblock-bitmatch", 30, |g| {
+        let nq = *g.choose(&[1usize, 2, 7, 16]);
+        let n = g.usize_in(1, 180);
+        let d = *g.choose(&[4usize, 8, 16]);
+        let std = g.f64_in(0.4, 3.0) as f32;
+        let q = g.vec_normal(nq * d, std);
+        let k = g.vec_normal(n * d, std);
+        let v = g.vec_normal(n * d, 1.0);
+        let scale = g.f64_in(0.2, 1.2) as f32;
+        let crits = [
+            SkipCriterion::None,
+            SkipCriterion::Static,
+            SkipCriterion::Adaptive { lo: ACTIVE_LO, hi: ACTIVE_HI },
+        ];
+        for crit in crits {
+            for tile in [1usize, 7, 32, 64] {
+                let (got, got_st) =
+                    qblock::attention_qblock(&q, &k, &v, nq, n, d, scale, tile, crit, false);
+                let mut want_st = SkipStats::default();
+                for iq in 0..nq {
+                    let (o, st) = tiled::attention_tiled_instrumented(
+                        &q[iq * d..(iq + 1) * d],
+                        &k, &v, n, d, scale, tile, crit,
+                    );
+                    prop_assert!(
+                        g,
+                        got[iq * d..(iq + 1) * d] == o[..],
+                        "nq={nq} n={n} tile={tile} crit={crit:?}: query {iq} differs"
+                    );
+                    want_st.merge(&st);
+                }
+                prop_assert!(
+                    g,
+                    got_st == want_st,
+                    "nq={nq} n={n} tile={tile} crit={crit:?}: stats differ"
+                );
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_qblock_causal_staircase_bitmatches_per_prefix() {
+    // Causal blocks: query iq attends the first n - nq + 1 + iq keys.
+    // Masking a query out of later tiles must leave its op sequence
+    // identical to the single-query kernel over its own prefix.
+    forall("qblock-causal-bitmatch", 30, |g| {
+        let nq = *g.choose(&[1usize, 2, 7, 16]);
+        let extra = g.usize_in(0, 100);
+        let n = nq + extra;
+        let d = *g.choose(&[4usize, 8]);
+        let std = g.f64_in(0.4, 2.0) as f32;
+        let q = g.vec_normal(nq * d, std);
+        let k = g.vec_normal(n * d, std);
+        let v = g.vec_normal(n * d, 1.0);
+        let crit = *g.choose(&[SkipCriterion::None, SkipCriterion::Static]);
+        for tile in [1usize, 7, 32] {
+            let (got, got_st) =
+                qblock::attention_qblock(&q, &k, &v, nq, n, d, 0.5, tile, crit, true);
+            let mut want_st = SkipStats::default();
+            for iq in 0..nq {
+                let ni = n - nq + 1 + iq;
+                let (o, st) = tiled::attention_tiled_instrumented(
+                    &q[iq * d..(iq + 1) * d],
+                    &k[..ni * d],
+                    &v[..ni * d],
+                    ni, d, 0.5, tile, crit,
+                );
+                prop_assert!(
+                    g,
+                    got[iq * d..(iq + 1) * d] == o[..],
+                    "nq={nq} n={n} tile={tile}: query {iq} differs"
+                );
+                want_st.merge(&st);
+            }
+            prop_assert!(g, got_st == want_st, "nq={nq} n={n} tile={tile}: stats differ");
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_grouped_rows_bitmatch_and_thread_invariant() {
+    // Rows sharing one KV context (the serving shape) are coalesced into
+    // query blocks by run_rows; outputs and stats must stay bit-identical
+    // to the ungrouped per-row kernel for every block size and thread
+    // count, and run_rows_into must agree with run_rows.
+    forall("grouped-rows-invariant", 20, |g| {
+        let rows = g.usize_in(1, 24);
+        let n = g.usize_in(1, 128);
+        let d = *g.choose(&[8usize, 16]);
+        let k = g.vec_normal(n * d, 0.8);
+        let v = g.vec_normal(n * d, 1.0);
+        let q = g.vec_normal(rows * d, 0.8);
+        let jobs: Vec<RowJob> = (0..rows)
+            .map(|r| RowJob { q: &q[r * d..(r + 1) * d], k: &k, v: &v, n, d, scale: 0.5 })
+            .collect();
+        for block_q in [1usize, 3, 16] {
+            let mk = |threads: usize| KernelConfig {
+                tile: 16,
+                block_q,
+                threads,
+                skip: SkipCriterion::Static,
+            };
+            let (want, want_st) = batch::run_rows(&mk(1), &jobs);
+            for (i, j) in jobs.iter().enumerate() {
+                let (o, _) = tiled::attention_tiled_instrumented(
+                    j.q, j.k, j.v, n, d, 0.5, 16,
+                    SkipCriterion::Static,
+                );
+                prop_assert!(g, want[i] == o, "block_q={block_q}: row {i} differs from tiled");
+            }
+            for threads in [2usize, 4, 8] {
+                let (got, got_st) = batch::run_rows(&mk(threads), &jobs);
+                prop_assert!(g, got == want, "block_q={block_q} threads={threads}: outputs");
+                prop_assert!(g, got_st == want_st, "block_q={block_q} threads={threads}: stats");
+                let mut flat = vec![0.0f32; rows * d];
+                let flat_st = batch::run_rows_into(&mk(threads), &jobs, d, &mut flat);
+                prop_assert!(
+                    g,
+                    flat == want.concat() && flat_st == want_st,
+                    "block_q={block_q} threads={threads}: flat driver differs"
+                );
+            }
         }
         true
     });

@@ -1,6 +1,10 @@
 //! Coordinator serving benchmark: end-to-end request latency and
 //! throughput through the full stack (router -> batcher -> KV cache ->
-//! FLASH-D kernel), including the batching-vs-sequential ablation.
+//! FLASH-D kernel), including the batching-vs-sequential ablation and the
+//! fused-vs-serial cross-session dispatch sweep (whose results merge into
+//! the committed `BENCH_kernels.json` perf-trajectory file under
+//! `serving_*` names, with the `fused_over_serial_sessions8_nkv2048_d64`
+//! headline ratio under `derived`).
 //!
 //! Uses the PJRT artifact engine when artifacts are built; otherwise falls
 //! back to the pure-Rust tiled kernel engine (`Coordinator::start_naive`),
@@ -8,9 +12,109 @@
 
 use flashd::bench_harness::workload::{session_requests, stateless_request, WorkloadSpec};
 use flashd::coordinator::router::Router;
-use flashd::coordinator::{Coordinator, CoordinatorConfig, Variant};
+use flashd::coordinator::{Coordinator, CoordinatorConfig, ShapeSig, Variant};
 use flashd::runtime::Manifest;
+use flashd::util::bench::{Bench, Stats};
+use flashd::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Barrier};
 use std::time::Instant;
+
+/// Router for the fused-dispatch sweep: 2 heads, head_dim 64, one 2048
+/// context capacity (the headline shape).
+fn fused_sweep_router() -> Router {
+    Router::from_manifest(
+        &Manifest::parse(
+            r#"{"artifacts": {
+          "attn_flashd_h2_l2048_d64": {"file":"f","kind":"attention","variant":"flashd","causal":false,
+            "heads":2,"seq":2048,"head_dim":64,"inputs":[],"n_outputs":1}
+        }}"#,
+        )
+        .expect("fused sweep manifest"),
+    )
+}
+
+/// Serve `sessions` concurrent decode streams (one client thread each,
+/// prefilled to ~2048 context) and return the wall-clock seconds of the
+/// decode phase. `fused` selects one-submission-per-cycle dispatch vs the
+/// per-batch serial path.
+fn run_serving_mode(fused: bool, sessions: usize, prefill_len: usize, steps: usize) -> f64 {
+    let spec = WorkloadSpec {
+        sessions,
+        prefill_len,
+        decode_steps: steps,
+        sig: ShapeSig { heads: 2, head_dim: 64 },
+        variant: Variant::FlashD,
+        ..Default::default()
+    };
+    let cfg = CoordinatorConfig { fused, ..Default::default() };
+    let coord = Arc::new(Coordinator::start_naive(cfg, fused_sweep_router()).expect("start"));
+
+    let mut streams: Vec<_> = (0..sessions)
+        .map(|s| session_requests(&spec, s as u64, 1_000_000 * (s as u64 + 1)))
+        .collect();
+    for stream in streams.iter_mut() {
+        let prefill = stream.remove(0);
+        coord.submit_blocking(prefill).output.expect("prefill ok");
+    }
+
+    let barrier = Arc::new(Barrier::new(sessions + 1));
+    let mut handles = Vec::new();
+    for stream in streams {
+        let c = coord.clone();
+        let b = barrier.clone();
+        handles.push(std::thread::spawn(move || {
+            b.wait();
+            for req in stream {
+                c.submit_blocking(req).output.expect("decode ok");
+            }
+        }));
+    }
+    barrier.wait();
+    let t = Instant::now();
+    for h in handles {
+        h.join().expect("client thread");
+    }
+    t.elapsed().as_secs_f64()
+}
+
+/// Merge the serving suite's results and derived ratios into the committed
+/// `BENCH_kernels.json` (idempotently regenerating the `serving_*`
+/// section; the kernel_throughput bench owns the rest of the file).
+fn merge_serving_into_bench_json(serving: &Bench, path: &str) {
+    let mut obj: BTreeMap<String, Json> =
+        match std::fs::read_to_string(path).ok().and_then(|t| Json::parse(&t).ok()) {
+            Some(Json::Obj(m)) => m,
+            _ => BTreeMap::new(),
+        };
+    let serving_json = serving.to_json();
+    let mut results: Vec<Json> = match obj.remove("results") {
+        Some(Json::Arr(v)) => v,
+        _ => Vec::new(),
+    };
+    results.retain(|r| match r.get("name").and_then(Json::as_str) {
+        Some(n) => !n.starts_with("serving_"),
+        None => true,
+    });
+    if let Some(new) = serving_json.get("results").and_then(Json::as_arr) {
+        results.extend(new.iter().cloned());
+    }
+    obj.insert("results".into(), Json::Arr(results));
+    let mut derived: BTreeMap<String, Json> = match obj.remove("derived") {
+        Some(Json::Obj(m)) => m,
+        _ => BTreeMap::new(),
+    };
+    for (k, v) in &serving.derived {
+        derived.insert(k.clone(), Json::Num(*v));
+    }
+    obj.insert("derived".into(), Json::Obj(derived));
+    obj.entry("suite".into())
+        .or_insert_with(|| Json::Str("kernel_throughput+serving".into()));
+    // load-bearing for CI's BENCH_kernels.json validation — fail loudly
+    std::fs::write(path, Json::Obj(obj).to_string())
+        .unwrap_or_else(|e| panic!("writing {path}: {e}"));
+    println!("-- merged serving section into {path}");
+}
 
 /// Synthetic router covering the default workload signature (4 heads,
 /// head_dim 32) at a few context capacities.
@@ -137,11 +241,44 @@ fn main() {
     );
     println!("\nmetrics:\n{}", coord.metrics.snapshot().render());
 
+    // -- fused vs serial cross-session dispatch sweep --------------------
+    // 8 concurrent decode streams over ~2048-token contexts: the serial
+    // path issues one padded submission per batch; the fused path lowers
+    // every drain cycle into one run_blocks submission over borrowed KV.
+    println!("\n=== fused cross-session dispatch vs per-batch serial (8 sessions, nkv 2048, d 64) ===");
+    let mut sb = Bench::new("coordinator_serving");
+    let sessions = 8usize;
+    let steps = if fast { 12 } else { 48 };
+    let prefill_len = 2048 - steps;
+    let serial_s = run_serving_mode(false, sessions, prefill_len, steps);
+    let fused_s = run_serving_mode(true, sessions, prefill_len, steps);
+    let total_decodes = (sessions * steps) as f64;
+    for (name, secs) in [
+        ("serving_decode_serial_sessions8_nkv2048_d64", serial_s),
+        ("serving_decode_fused_sessions8_nkv2048_d64", fused_s),
+    ] {
+        println!("{name:<44} {secs:8.3}s  {:8.0} decodes/s", total_decodes / secs);
+        sb.results.push(Stats {
+            name: name.to_string(),
+            iters: total_decodes as u64,
+            mean_ns: secs * 1e9 / total_decodes,
+            stddev_ns: 0.0,
+            p50_ns: 0.0,
+            p95_ns: 0.0,
+            throughput: Some((1.0, "decode")),
+        });
+    }
+    sb.note("fused_over_serial_sessions8_nkv2048_d64", serial_s / fused_s);
+    merge_serving_into_bench_json(&sb, "BENCH_kernels.json");
+
     std::fs::create_dir_all("reports").ok();
     std::fs::write(
         "reports/coordinator_serving.txt",
         format!(
-            "sequential_s={seq_s:.4}\nconcurrent_s={conc_s:.4}\nmax_batch={max_batch}\n{}\n",
+            "sequential_s={seq_s:.4}\nconcurrent_s={conc_s:.4}\nmax_batch={max_batch}\n\
+             fused_sweep_serial_s={serial_s:.4}\nfused_sweep_fused_s={fused_s:.4}\n\
+             fused_over_serial_sessions8_nkv2048_d64={:.3}\n{}\n",
+            serial_s / fused_s,
             coord.metrics.snapshot().render()
         ),
     )

@@ -6,7 +6,7 @@
 //! Stateless/prefill requests execute alone (their K/V is private), but
 //! a stateless request's own `nq` query rows already fill the block.
 
-use super::request::AttentionRequest;
+use super::request::{AttentionRequest, ShapeSig, Variant};
 
 /// Batch formation parameters.
 #[derive(Clone, Debug)]
@@ -22,12 +22,39 @@ impl Default for BatchPolicy {
     }
 }
 
-/// A formed batch: indices into the pending queue, all mergeable.
+/// A formed batch: indices into the pending queue, all mergeable, plus the
+/// block-lowering annotations the fused dispatcher reads — a batch lowers
+/// to exactly `sig.heads` [`crate::kernels::batch::BlockJob`]s of
+/// `total_q` query rows each, without re-inspecting the member requests.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Batch {
     /// Session shared by all members (None = single stateless request).
     pub session: Option<u64>,
     pub members: Vec<usize>,
+    /// Kernel variant shared by all members.
+    pub variant: Variant,
+    /// Shape signature shared by all members.
+    pub sig: ShapeSig,
+    /// Total query rows across members — the fused query-block height.
+    pub total_q: usize,
+    /// True for (mergeable) decode batches; false for the always-alone
+    /// prefill/stateless batches.
+    pub decode: bool,
+}
+
+/// Row span of each member inside its batch's fused query block: member
+/// `m` owns rows `[spans[m].0, spans[m].0 + spans[m].1)` of every per-head
+/// `BlockJob` the batch lowers to. `nqs` lists the members' query counts
+/// in batch order. Shared by the fused gather/scatter and property tests.
+pub fn member_row_spans(nqs: &[usize]) -> Vec<(usize, usize)> {
+    let mut row = 0usize;
+    nqs.iter()
+        .map(|&nq| {
+            let span = (row, nq);
+            row += nq;
+            span
+        })
+        .collect()
 }
 
 /// Partition `pending` into executable batches, preserving arrival order
@@ -49,10 +76,18 @@ pub fn form_batches(pending: &[AttentionRequest], policy: &BatchPolicy) -> Vec<B
         used[i] = true;
         let r = &pending[i];
         if !r.is_decode() {
-            batches.push(Batch { session: r.session(), members: vec![i] });
+            batches.push(Batch {
+                session: r.session(),
+                members: vec![i],
+                variant: r.variant,
+                sig: r.sig,
+                total_q: r.nq,
+                decode: false,
+            });
             continue;
         }
         let mut members = vec![i];
+        let mut total_q = r.nq;
         for (j, rj) in pending.iter().enumerate().skip(i + 1) {
             if members.len() >= policy.max_batch {
                 break;
@@ -63,9 +98,17 @@ pub fn form_batches(pending: &[AttentionRequest], policy: &BatchPolicy) -> Vec<B
             if rj.session() == r.session() && rj.variant == r.variant && rj.sig == r.sig {
                 used[j] = true;
                 members.push(j);
+                total_q += rj.nq;
             }
         }
-        batches.push(Batch { session: r.session(), members });
+        batches.push(Batch {
+            session: r.session(),
+            members,
+            variant: r.variant,
+            sig: r.sig,
+            total_q,
+            decode: true,
+        });
     }
     batches
 }
@@ -152,5 +195,30 @@ mod tests {
     #[test]
     fn empty_input() {
         assert!(form_batches(&[], &BatchPolicy::default()).is_empty());
+    }
+
+    #[test]
+    fn lowering_annotations_filled() {
+        let mut st = stateless(1);
+        st.nq = 3;
+        st.q = vec![0.0; 6];
+        let pending = vec![st, decode(2, 7), decode(3, 7)];
+        let batches = form_batches(&pending, &BatchPolicy::default());
+        assert_eq!(batches.len(), 2);
+        assert!(!batches[0].decode);
+        assert_eq!(batches[0].total_q, 3);
+        assert_eq!(batches[0].sig, ShapeSig { heads: 1, head_dim: 2 });
+        assert_eq!(batches[0].variant, Variant::FlashD);
+        assert!(batches[1].decode);
+        assert_eq!(batches[1].total_q, 2);
+        assert_eq!(batches[1].session, Some(7));
+    }
+
+    #[test]
+    fn member_row_spans_partition_the_block() {
+        assert_eq!(member_row_spans(&[]), Vec::<(usize, usize)>::new());
+        assert_eq!(member_row_spans(&[4]), vec![(0, 4)]);
+        assert_eq!(member_row_spans(&[1, 1, 1]), vec![(0, 1), (1, 1), (2, 1)]);
+        assert_eq!(member_row_spans(&[2, 5, 1]), vec![(0, 2), (2, 5), (7, 1)]);
     }
 }

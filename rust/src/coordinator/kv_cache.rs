@@ -131,6 +131,26 @@ impl SessionStore {
         self.sessions.get(&id)
     }
 
+    /// Borrow several sessions' caches simultaneously — the fused dispatch
+    /// gather phase: one drain cycle reads many sessions at once, after all
+    /// of the cycle's mutations (creates/appends) are done. Duplicates are
+    /// allowed; a missing id yields `None` in its slot so the caller can
+    /// degrade per session instead of failing the whole cycle.
+    pub fn borrow_many(&self, ids: &[u64]) -> Vec<Option<&KvCache>> {
+        ids.iter().map(|&id| self.get(id)).collect()
+    }
+
+    /// Would creating (or re-creating) session `id` with this geometry
+    /// evict any *other* session to fit the byte budget? The fused
+    /// dispatcher flushes its current fusion group before such a create,
+    /// so caches an earlier batch in the cycle reads can't vanish between
+    /// lowering and kernel submission.
+    pub fn would_evict(&self, id: u64, heads: usize, head_dim: usize, cap: usize) -> bool {
+        let need = 2 * heads * cap * head_dim * std::mem::size_of::<f32>();
+        let freed = self.sessions.get(&id).map(KvCache::bytes).unwrap_or(0);
+        self.bytes - freed + need > self.max_bytes
+    }
+
     pub fn remove(&mut self, id: u64) {
         if let Some(c) = self.sessions.remove(&id) {
             self.bytes -= c.bytes();
@@ -202,6 +222,37 @@ mod tests {
         assert!(s.contains(1) && s.contains(3) && !s.contains(2));
         assert_eq!(s.evictions, 1);
         s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn borrow_many_takes_simultaneous_refs() {
+        let mut s = SessionStore::new(1024);
+        s.create(1, 1, 2, 4).unwrap();
+        s.create(2, 1, 2, 4).unwrap();
+        s.get_mut(1).unwrap().append(&[1., 2.], &[3., 4.], 1).unwrap();
+        s.get_mut(2).unwrap().append(&[5., 6.], &[7., 8.], 1).unwrap();
+        // duplicates and repeats are fine; all refs are alive at once
+        let caches = s.borrow_many(&[1, 2, 1]);
+        assert_eq!(caches.len(), 3);
+        assert_eq!(caches[0].unwrap().k[0], 1.0);
+        assert_eq!(caches[1].unwrap().k[0], 5.0);
+        assert_eq!(caches[2].unwrap().k[0], caches[0].unwrap().k[0]);
+        // a missing id degrades to None in its slot, not a whole failure
+        let partial = s.borrow_many(&[1, 9]);
+        assert!(partial[0].is_some() && partial[1].is_none());
+    }
+
+    #[test]
+    fn would_evict_predicts_create() {
+        // budget fits exactly two sessions of this geometry (64B each)
+        let mut s = SessionStore::new(128);
+        s.create(1, 1, 2, 4).unwrap();
+        assert!(!s.would_evict(2, 1, 2, 4), "second session fits");
+        s.create(2, 1, 2, 4).unwrap();
+        assert!(s.would_evict(3, 1, 2, 4), "third must evict");
+        // re-creating an existing id frees its own bytes first
+        assert!(!s.would_evict(1, 1, 2, 4), "replace never evicts others");
+        assert!(s.would_evict(1, 1, 2, 8), "larger replace does");
     }
 
     #[test]

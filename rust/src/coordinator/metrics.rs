@@ -7,6 +7,10 @@ use std::sync::atomic::{AtomicU64, Ordering};
 pub const BUCKETS_US: [u64; 12] =
     [50, 100, 250, 500, 1_000, 2_500, 5_000, 10_000, 25_000, 50_000, 100_000, u64::MAX];
 
+/// Fused-dispatch histogram buckets (upper bounds): block jobs per drain
+/// cycle and query rows per fused submission.
+pub const FUSE_BUCKETS: [u64; 9] = [1, 2, 4, 8, 16, 32, 64, 128, u64::MAX];
+
 /// Shared, thread-safe metrics sink.
 #[derive(Debug, Default)]
 pub struct Metrics {
@@ -17,8 +21,36 @@ pub struct Metrics {
     pub batched_requests: AtomicU64,
     pub kv_appends: AtomicU64,
     pub queue_rejections: AtomicU64,
+    /// Drain cycles served through the fused cross-session path.
+    pub fused_cycles: AtomicU64,
+    /// Fused kernel submissions (`run_blocks` calls). Equal to
+    /// `fused_cycles` when no cycle ever had to split on a session
+    /// conflict — the acceptance signal that one cycle is one submission.
+    pub fused_submissions: AtomicU64,
+    /// Batches lowered through fused submissions.
+    pub fused_batches: AtomicU64,
+    /// Block jobs submitted (one per (batch, head)).
+    pub fused_jobs: AtomicU64,
+    /// Query rows served through fused submissions.
+    pub fused_rows: AtomicU64,
+    /// FLASH-D weight-update steps executed by fused submissions
+    /// ([`crate::kernels::flashd::SkipStats::total`] sums).
+    pub skip_steps: AtomicU64,
+    /// Saturation-skipped steps (zero under `SkipCriterion::None`).
+    pub skip_skipped: AtomicU64,
     latency_buckets: [AtomicU64; 12],
     latency_sum_us: AtomicU64,
+    jobs_per_cycle_buckets: [AtomicU64; 9],
+    fused_width_buckets: [AtomicU64; 9],
+}
+
+fn bump_bucket(buckets: &[AtomicU64; 9], n: u64) {
+    for (i, ub) in FUSE_BUCKETS.iter().enumerate() {
+        if n <= *ub {
+            buckets[i].fetch_add(1, Ordering::Relaxed);
+            break;
+        }
+    }
 }
 
 impl Metrics {
@@ -36,6 +68,21 @@ impl Metrics {
         }
     }
 
+    /// Record one drain cycle's fused job count (0-job cycles — everything
+    /// rejected in phase A — are not observed).
+    pub fn observe_jobs_per_cycle(&self, jobs: u64) {
+        if jobs > 0 {
+            bump_bucket(&self.jobs_per_cycle_buckets, jobs);
+        }
+    }
+
+    /// Record one fused submission's width in query rows.
+    pub fn observe_fused_width(&self, rows: u64) {
+        if rows > 0 {
+            bump_bucket(&self.fused_width_buckets, rows);
+        }
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         Snapshot {
             requests: self.requests.load(Ordering::Relaxed),
@@ -45,12 +92,17 @@ impl Metrics {
             batched_requests: self.batched_requests.load(Ordering::Relaxed),
             kv_appends: self.kv_appends.load(Ordering::Relaxed),
             queue_rejections: self.queue_rejections.load(Ordering::Relaxed),
-            latency_buckets: self
-                .latency_buckets
-                .iter()
-                .map(|b| b.load(Ordering::Relaxed))
-                .collect(),
+            fused_cycles: self.fused_cycles.load(Ordering::Relaxed),
+            fused_submissions: self.fused_submissions.load(Ordering::Relaxed),
+            fused_batches: self.fused_batches.load(Ordering::Relaxed),
+            fused_jobs: self.fused_jobs.load(Ordering::Relaxed),
+            fused_rows: self.fused_rows.load(Ordering::Relaxed),
+            skip_steps: self.skip_steps.load(Ordering::Relaxed),
+            skip_skipped: self.skip_skipped.load(Ordering::Relaxed),
+            latency_buckets: self.latency_buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
             latency_sum_us: self.latency_sum_us.load(Ordering::Relaxed),
+            jobs_per_cycle_buckets: self.jobs_per_cycle_buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+            fused_width_buckets: self.fused_width_buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
         }
     }
 }
@@ -65,11 +117,28 @@ pub struct Snapshot {
     pub batched_requests: u64,
     pub kv_appends: u64,
     pub queue_rejections: u64,
+    pub fused_cycles: u64,
+    pub fused_submissions: u64,
+    pub fused_batches: u64,
+    pub fused_jobs: u64,
+    pub fused_rows: u64,
+    pub skip_steps: u64,
+    pub skip_skipped: u64,
     pub latency_buckets: Vec<u64>,
     pub latency_sum_us: u64,
+    pub jobs_per_cycle_buckets: Vec<u64>,
+    pub fused_width_buckets: Vec<u64>,
 }
 
 impl Snapshot {
+    /// Mean block jobs per fused drain cycle.
+    pub fn mean_jobs_per_cycle(&self) -> f64 {
+        if self.fused_cycles == 0 {
+            0.0
+        } else {
+            self.fused_jobs as f64 / self.fused_cycles as f64
+        }
+    }
     pub fn mean_latency_us(&self) -> f64 {
         if self.responses == 0 {
             0.0
@@ -111,6 +180,9 @@ impl Snapshot {
         format!(
             "requests={} responses={} errors={} rejections={}\n\
              batches={} mean_batch={:.2} kv_appends={}\n\
+             fused: cycles={} submissions={} batches={} jobs={} rows={} \
+             jobs/cycle={:.2}\n\
+             kernel steps={} skipped={}\n\
              latency: mean={:.0}µs p50<={}µs p95<={}µs p99<={}µs",
             self.requests,
             self.responses,
@@ -119,6 +191,14 @@ impl Snapshot {
             self.batches,
             self.mean_batch_size(),
             self.kv_appends,
+            self.fused_cycles,
+            self.fused_submissions,
+            self.fused_batches,
+            self.fused_jobs,
+            self.fused_rows,
+            self.mean_jobs_per_cycle(),
+            self.skip_steps,
+            self.skip_skipped,
             self.mean_latency_us(),
             fmt_b(self.latency_percentile_us(50.0)),
             fmt_b(self.latency_percentile_us(95.0)),
@@ -169,6 +249,36 @@ mod tests {
         let s = Metrics::new().snapshot();
         assert_eq!(s.mean_latency_us(), 0.0);
         assert_eq!(s.latency_percentile_us(99.0), 0);
+        assert_eq!(s.mean_jobs_per_cycle(), 0.0);
         assert!(s.render().contains("requests=0"));
+        assert!(s.render().contains("fused: cycles=0"));
+    }
+
+    #[test]
+    fn fused_histograms_bucket_correctly() {
+        let m = Metrics::new();
+        m.observe_jobs_per_cycle(0); // not recorded
+        m.observe_jobs_per_cycle(1);
+        m.observe_jobs_per_cycle(2);
+        m.observe_jobs_per_cycle(9);
+        m.observe_jobs_per_cycle(1_000);
+        m.observe_fused_width(64);
+        m.observe_fused_width(65);
+        let s = m.snapshot();
+        assert_eq!(s.jobs_per_cycle_buckets.iter().sum::<u64>(), 4);
+        assert_eq!(s.jobs_per_cycle_buckets[0], 1); // <=1
+        assert_eq!(s.jobs_per_cycle_buckets[1], 1); // <=2
+        assert_eq!(s.jobs_per_cycle_buckets[4], 1); // <=16
+        assert_eq!(s.jobs_per_cycle_buckets[8], 1); // unbounded tail
+        assert_eq!(s.fused_width_buckets[6], 1); // <=64
+        assert_eq!(s.fused_width_buckets[7], 1); // <=128
+    }
+
+    #[test]
+    fn mean_jobs_per_cycle_counts() {
+        let m = Metrics::new();
+        m.fused_cycles.store(2, Ordering::Relaxed);
+        m.fused_jobs.store(10, Ordering::Relaxed);
+        assert_eq!(m.snapshot().mean_jobs_per_cycle(), 5.0);
     }
 }

@@ -26,6 +26,15 @@ pub struct ShapeSig {
     pub head_dim: usize,
 }
 
+impl ShapeSig {
+    /// Flat f32 length of a `(heads, rows, head_dim)` tensor of this
+    /// signature — the payload sizing shared by request validation and the
+    /// fused gather/scatter plumbing.
+    pub fn flat(&self, rows: usize) -> usize {
+        self.heads * rows * self.head_dim
+    }
+}
+
 /// How the request interacts with session state.
 #[derive(Clone, Debug, PartialEq)]
 pub enum RequestKind {
@@ -57,16 +66,15 @@ pub struct AttentionRequest {
 
 impl AttentionRequest {
     pub fn validate(&self) -> Result<(), String> {
-        let hd = self.sig.heads * self.sig.head_dim;
-        if self.q.len() != hd * self.nq {
-            return Err(format!("q len {} != H*nq*D {}", self.q.len(), hd * self.nq));
+        if self.q.len() != self.sig.flat(self.nq) {
+            return Err(format!("q len {} != H*nq*D {}", self.q.len(), self.sig.flat(self.nq)));
         }
-        if self.k.len() != hd * self.nkv || self.v.len() != self.k.len() {
+        if self.k.len() != self.sig.flat(self.nkv) || self.v.len() != self.k.len() {
             return Err(format!(
                 "k/v len {}/{} != H*nkv*D {}",
                 self.k.len(),
                 self.v.len(),
-                hd * self.nkv
+                self.sig.flat(self.nkv)
             ));
         }
         if self.nq == 0 {
@@ -77,6 +85,9 @@ impl AttentionRequest {
                 Err("decode carries exactly one query and one kv pair".into())
             }
             RequestKind::Stateless if self.nkv == 0 => Err("stateless needs kv".into()),
+            // a 0-length context would reach the kernels' n >= 1 assert on
+            // the engine thread — reject it at admission instead
+            RequestKind::Prefill { .. } if self.nkv == 0 => Err("prefill needs kv".into()),
             _ => Ok(()),
         }
     }
@@ -138,6 +149,12 @@ mod tests {
     fn decode_must_be_single_step() {
         assert!(req(RequestKind::Decode { session: 9 }, 1, 1).validate().is_ok());
         assert!(req(RequestKind::Decode { session: 9 }, 2, 1).validate().is_err());
+    }
+
+    #[test]
+    fn empty_context_rejected() {
+        assert!(req(RequestKind::Stateless, 1, 0).validate().is_err());
+        assert!(req(RequestKind::Prefill { session: 2 }, 1, 0).validate().is_err());
     }
 
     #[test]

@@ -77,7 +77,9 @@ impl Router {
         let (seq, name) = seqs
             .iter()
             .find(|(s, _)| *s >= need)
-            .ok_or_else(|| format!("problem size {need} exceeds largest compiled seq {}", seqs.last().map(|(s, _)| *s).unwrap_or(0)))?;
+            .ok_or_else(|| {
+                format!("problem size {need} exceeds largest compiled seq {}", seqs.last().map(|(s, _)| *s).unwrap_or(0))
+            })?;
         Ok(Route {
             artifact: name.clone(),
             heads: sig.heads,

@@ -28,6 +28,10 @@ pub struct Scheduler {
     other: VecDeque<AttentionRequest>,
     pub capacity: usize,
     pub policy: Policy,
+    /// Drain-cycle sizing knob: how many requests one dispatch cycle may
+    /// pull ([`Scheduler::drain_cycle`]). This bounds the width of a fused
+    /// kernel submission (in requests) without capping admission.
+    pub drain_max: usize,
     pub admitted: u64,
     pub rejected: u64,
     seq: u64,
@@ -40,6 +44,7 @@ impl Scheduler {
             other: VecDeque::new(),
             capacity,
             policy,
+            drain_max: capacity,
             admitted: 0,
             rejected: 0,
             seq: 0,
@@ -72,6 +77,13 @@ impl Scheduler {
             self.other.push_back(req);
         }
         Ok(())
+    }
+
+    /// Drain one dispatch cycle: up to [`Scheduler::drain_max`] requests
+    /// in dispatch order. The coordinator lowers everything one call
+    /// returns into a single fused kernel submission.
+    pub fn drain_cycle(&mut self) -> Vec<AttentionRequest> {
+        self.drain(self.drain_max)
     }
 
     /// Drain up to `max` requests in dispatch order.
@@ -172,6 +184,19 @@ mod tests {
         s.submit(req(2, true)).unwrap();
         let order: Vec<u64> = s.drain(10).iter().map(|r| r.id).collect();
         assert_eq!(order, vec![1, 2]);
+    }
+
+    #[test]
+    fn drain_cycle_respects_sizing_knob() {
+        let mut s = Scheduler::new(10, Policy::DecodeFirst);
+        s.drain_max = 3;
+        for i in 0..7 {
+            s.submit(req(i, i % 2 == 0)).unwrap();
+        }
+        assert_eq!(s.drain_cycle().len(), 3);
+        assert_eq!(s.drain_cycle().len(), 3);
+        assert_eq!(s.drain_cycle().len(), 1);
+        assert!(s.is_empty());
     }
 
     #[test]

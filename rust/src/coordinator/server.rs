@@ -5,17 +5,54 @@
 //! `AttnEngine` abstracts the executor so the entire coordination logic is
 //! testable against a pure-Rust engine ([`NaiveEngine`]) without compiled
 //! artifacts; production uses [`PjrtEngine`] over the AOT artifacts.
+//!
+//! # Fused cross-session dispatch
+//!
+//! On engines that support it (the kernel-backed [`NaiveEngine`]), one
+//! drain cycle is ONE kernel submission, not a loop over batches. The
+//! drain-cycle → block-job lowering contract:
+//!
+//! 1. The scheduler drains up to [`CoordinatorConfig::drain_cycle`]
+//!    requests; the batcher partitions them into annotated [`Batch`]es
+//!    (decode fusions, prefills, stateless), in dispatch order.
+//! 2. Each batch is *admitted* in order: its session mutations (prefill
+//!    create, decode appends) are applied and its routing is validated.
+//!    Admission failures answer the batch's members immediately; partial
+//!    mutations are kept, exactly as in serial dispatch.
+//! 3. Admitted batches accumulate into a *fusion group*. A batch that
+//!    conflicts with the group — it touches a session the group already
+//!    reads, or it is a prefill whose session creation could LRU-evict a
+//!    cache while the group still borrows caches — flushes the group
+//!    first, so fused results are bit-identical to serial dispatch.
+//! 4. A flush lowers every batch in the group to one [`BlockJob`] per
+//!    head over its `(total_q, kv_len)` problem — query rows borrowed
+//!    from the requests (gathered into a contiguous block only for
+//!    multi-member decode fusions), K/V borrowed in place from the
+//!    session caches with no copies or padding — and submits the whole
+//!    job list through a single [`AttnEngine::execute_fused`] call on the
+//!    batched driver's thread pool.
+//! 5. The flat output is scattered back into per-member `(heads, nq,
+//!    head_dim)` responses by member row span.
+//!
+//! Because the query-blocked kernel is bit-identical per query to the
+//! per-request tiled kernel, the fused path returns bit-identical outputs
+//! to per-request reference execution — the differential conformance
+//! suite (`tests/conformance_serving.rs`) asserts exactly that.
 
-use super::batcher::{form_batches, Batch, BatchPolicy};
+use super::batcher::{form_batches, member_row_spans, Batch, BatchPolicy};
 use super::kv_cache::SessionStore;
 use super::metrics::Metrics;
-use super::request::{AttentionRequest, AttentionResponse, RequestKind};
+use super::request::{AttentionRequest, AttentionResponse, RequestKind, ShapeSig};
 use super::router::{Route, Router};
 use super::scheduler::{Policy, Rejected, Scheduler};
-use crate::kernels::batch::{run_blocks_into_with, BatchScratch, BlockJob, KernelConfig};
+use crate::kernels::batch::{
+    run_blocks_flat_into_with, run_blocks_into_with, BatchScratch, BlockJob, KernelConfig,
+};
+use crate::kernels::flashd::SkipStats;
 use crate::runtime::{lit_f32, lit_i32, to_vec_f32, Runtime};
 use anyhow::{anyhow, Result};
 use std::cell::RefCell;
+use std::collections::HashSet;
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
@@ -28,6 +65,22 @@ pub trait AttnEngine {
     fn execute(&self, route: &Route, q: &[f32], k: &[f32], v: &[f32], kv_len: usize) -> Result<Vec<f32>>;
     /// The router snapshot this engine can serve.
     fn router(&self) -> Router;
+
+    /// Whether [`AttnEngine::execute_fused`] is available. Engines over
+    /// fixed-shape compiled artifacts (PJRT) cannot execute arbitrary job
+    /// lists and keep the per-batch serial path.
+    fn supports_fused(&self) -> bool {
+        false
+    }
+
+    /// Fused dispatch: execute a whole drain cycle's lowered block jobs
+    /// as ONE kernel submission. `out` is the flat concatenation of job
+    /// outputs (job `i` owns the next `nq_i * d_i` floats). Only called
+    /// when [`AttnEngine::supports_fused`] returns true.
+    fn execute_fused(&self, jobs: &[BlockJob<'_>], out: &mut [f32]) -> Result<SkipStats> {
+        let _ = (jobs, out);
+        Err(anyhow!("engine does not support fused dispatch"))
+    }
 }
 
 /// Production engine: compiled AOT artifacts via PJRT.
@@ -117,6 +170,14 @@ impl AttnEngine for NaiveEngine {
     fn router(&self) -> Router {
         self.router.clone()
     }
+
+    fn supports_fused(&self) -> bool {
+        true
+    }
+
+    fn execute_fused(&self, jobs: &[BlockJob<'_>], out: &mut [f32]) -> Result<SkipStats> {
+        Ok(run_blocks_flat_into_with(&self.kernel, jobs, out, &mut self.scratch.borrow_mut()))
+    }
 }
 
 /// Coordinator configuration.
@@ -135,6 +196,14 @@ pub struct CoordinatorConfig {
     /// [`NaiveEngine`]-backed coordinators via [`Coordinator::start_naive`];
     /// the PJRT path executes whole compiled blocks and ignores it).
     pub kernel: KernelConfig,
+    /// Fused cross-session dispatch: lower a whole drain cycle into one
+    /// kernel submission when the engine supports it. `false` restores
+    /// per-batch serial dispatch (bit-identical outputs, more
+    /// submissions) — the conformance suite runs both.
+    pub fused: bool,
+    /// Drain-cycle sizing knob: how many requests one dispatch cycle may
+    /// pull from the scheduler, bounding the width of a fused submission.
+    pub drain_cycle: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -147,6 +216,8 @@ impl Default for CoordinatorConfig {
             kv_budget_bytes: 256 << 20,
             batch_window: Duration::from_micros(200),
             kernel: KernelConfig::default(),
+            fused: true,
+            drain_cycle: 256,
         }
     }
 }
@@ -206,9 +277,7 @@ impl Coordinator {
                 engine_loop(engine, rx, cfg, m2);
             })
             .expect("spawn engine thread");
-        ready_rx
-            .recv()
-            .map_err(|_| anyhow!("engine thread died during startup"))??;
+        ready_rx.recv().map_err(|_| anyhow!("engine thread died during startup"))??;
         Ok(Coordinator { tx, metrics, handle: Some(handle) })
     }
 
@@ -259,10 +328,11 @@ struct Pending {
 
 fn engine_loop<E: AttnEngine>(engine: E, rx: Receiver<Msg>, cfg: CoordinatorConfig, metrics: Arc<Metrics>) {
     let router = engine.router();
+    let fused = cfg.fused && engine.supports_fused();
     let mut sessions = SessionStore::new(cfg.kv_budget_bytes);
     let mut sched = Scheduler::new(cfg.queue_capacity, cfg.policy);
-    let mut replies: std::collections::HashMap<u64, Sender<AttentionResponse>> =
-        std::collections::HashMap::new();
+    sched.drain_max = cfg.drain_cycle.max(1);
+    let mut replies: std::collections::HashMap<u64, Sender<AttentionResponse>> = std::collections::HashMap::new();
 
     'outer: loop {
         // Block for the first message, then greedily drain within the
@@ -321,9 +391,9 @@ fn engine_loop<E: AttnEngine>(engine: E, rx: Receiver<Msg>, cfg: CoordinatorConf
             }
         }
 
-        // Dispatch everything admitted so far.
+        // Dispatch everything admitted so far, one drain cycle at a time.
         while !sched.is_empty() {
-            let pending_reqs = sched.drain(cfg.queue_capacity);
+            let pending_reqs = sched.drain_cycle();
             let batches = form_batches(&pending_reqs, &cfg.batch);
             let mut pend: Vec<Option<Pending>> = pending_reqs
                 .into_iter()
@@ -332,8 +402,12 @@ fn engine_loop<E: AttnEngine>(engine: E, rx: Receiver<Msg>, cfg: CoordinatorConf
                     Some(Pending { req, reply })
                 })
                 .collect();
-            for batch in batches {
-                serve_batch(&engine, &router, &mut sessions, &batch, &mut pend, &metrics);
+            if fused {
+                serve_cycle_fused(&engine, &router, &mut sessions, &batches, &mut pend, &metrics);
+            } else {
+                for batch in &batches {
+                    serve_batch(&engine, &router, &mut sessions, batch, &mut pend, &metrics);
+                }
             }
         }
         if shutdown {
@@ -342,64 +416,97 @@ fn engine_loop<E: AttnEngine>(engine: E, rx: Receiver<Msg>, cfg: CoordinatorConf
     }
 }
 
-/// Execute one batch end to end and deliver its responses.
-fn serve_batch<E: AttnEngine>(
-    engine: &E,
+/// How a prepared batch's K/V is sourced at lowering time.
+enum KvSrc {
+    /// Borrow the session cache (decode/prefill).
+    Session(u64),
+    /// Borrow the first member's request payload (stateless).
+    Inline,
+}
+
+/// A batch that survived phase A of dispatch (session mutations + routing
+/// validation) and is ready to execute — serially or lowered into a fused
+/// submission.
+struct Ready {
+    members: Vec<Pending>,
+    sig: ShapeSig,
+    route: Route,
+    kv: KvSrc,
+    /// Live KV length captured at admission. The fusion-group conflict
+    /// rule guarantees it cannot change before the group flushes.
+    kv_len: usize,
+    /// Total query rows across members — the fused query-block height.
+    total_q: usize,
+    /// Reported batch size (the formed batch's member count).
+    batch_size: usize,
+}
+
+fn respond_error(members: Vec<Pending>, msg: &str, batch_size: usize, metrics: &Arc<Metrics>) {
+    for m in members {
+        metrics.errors.fetch_add(1, Ordering::Relaxed);
+        let _ = m.reply.send(AttentionResponse {
+            id: m.req.id,
+            output: Err(msg.to_string()),
+            latency_us: m.req.submitted_at.elapsed().as_micros() as u64,
+            batch_size,
+        });
+    }
+}
+
+fn respond_ok(m: Pending, out: Vec<f32>, batch_size: usize, metrics: &Arc<Metrics>) {
+    let latency_us = m.req.submitted_at.elapsed().as_micros() as u64;
+    metrics.responses.fetch_add(1, Ordering::Relaxed);
+    metrics.observe_latency(latency_us);
+    let _ = m.reply.send(AttentionResponse { id: m.req.id, output: Ok(out), latency_us, batch_size });
+}
+
+/// Phase A of dispatch: claim the batch's members, apply its session
+/// mutations in arrival order, capture the KV geometry, and validate
+/// routing. Admission failures answer the members immediately and return
+/// `None`; mutations applied before the failure are kept, exactly as in
+/// serial dispatch.
+fn admit_batch(
     router: &Router,
     sessions: &mut SessionStore,
     batch: &Batch,
     pend: &mut [Option<Pending>],
     metrics: &Arc<Metrics>,
-) {
-    let members: Vec<Pending> = batch
-        .members
-        .iter()
-        .filter_map(|&i| pend[i].take())
-        .collect();
+) -> Option<Ready> {
+    let members: Vec<Pending> = batch.members.iter().filter_map(|&i| pend[i].take()).collect();
     if members.is_empty() {
-        return;
+        return None;
     }
     metrics.batches.fetch_add(1, Ordering::Relaxed);
     metrics.batched_requests.fetch_add(members.len() as u64, Ordering::Relaxed);
-
-    let result = build_and_execute(engine, router, sessions, &members, metrics);
-    match result {
-        Ok(outputs) => {
-            for (m, out) in members.into_iter().zip(outputs) {
-                let latency_us = m.req.submitted_at.elapsed().as_micros() as u64;
-                metrics.responses.fetch_add(1, Ordering::Relaxed);
-                metrics.observe_latency(latency_us);
-                let _ = m.reply.send(AttentionResponse {
-                    id: m.req.id,
-                    output: Ok(out),
-                    latency_us,
-                    batch_size: batch.members.len(),
-                });
-            }
+    match prepare_batch(router, sessions, &members, metrics) {
+        Ok((route, kv, kv_len)) => {
+            let total_q = members.iter().map(|m| m.req.nq).sum();
+            Some(Ready {
+                sig: members[0].req.sig,
+                route,
+                kv,
+                kv_len,
+                total_q,
+                batch_size: batch.members.len(),
+                members,
+            })
         }
         Err(e) => {
-            let msg = format!("{e}");
-            for m in members {
-                metrics.errors.fetch_add(1, Ordering::Relaxed);
-                let _ = m.reply.send(AttentionResponse {
-                    id: m.req.id,
-                    output: Err(msg.clone()),
-                    latency_us: m.req.submitted_at.elapsed().as_micros() as u64,
-                    batch_size: batch.members.len(),
-                });
-            }
+            respond_error(members, &format!("{e}"), batch.members.len(), metrics);
+            None
         }
     }
 }
 
-/// Assemble the padded block tensors for a batch, run it, split outputs.
-fn build_and_execute<E: AttnEngine>(
-    engine: &E,
+/// Apply a batch's session mutations and resolve its KV source, live
+/// length, and route — the state half of dispatch, shared by the serial
+/// and fused paths.
+fn prepare_batch(
     router: &Router,
     sessions: &mut SessionStore,
     members: &[Pending],
     metrics: &Arc<Metrics>,
-) -> Result<Vec<Vec<f32>>> {
+) -> Result<(Route, KvSrc, usize)> {
     let first = &members[0].req;
     let sig = first.sig;
     let variant = first.variant;
@@ -409,16 +516,10 @@ fn build_and_execute<E: AttnEngine>(
     match &first.kind {
         RequestKind::Stateless => {}
         RequestKind::Prefill { session } => {
-            let cap = router
-                .max_kv(variant, sig)
-                .ok_or_else(|| anyhow!("no artifacts for signature"))?;
-            sessions
-                .create(*session, h, d, cap)
-                .map_err(|e| anyhow!("session create: {e}"))?;
+            let cap = router.max_kv(variant, sig).ok_or_else(|| anyhow!("no artifacts for signature"))?;
+            sessions.create(*session, h, d, cap).map_err(|e| anyhow!("session create: {e}"))?;
             let cache = sessions.get_mut(*session).unwrap();
-            cache
-                .append(&first.k, &first.v, first.nkv)
-                .map_err(|e| anyhow!("prefill append: {e}"))?;
+            cache.append(&first.k, &first.v, first.nkv).map_err(|e| anyhow!("prefill append: {e}"))?;
             metrics.kv_appends.fetch_add(first.nkv as u64, Ordering::Relaxed);
         }
         RequestKind::Decode { session } => {
@@ -428,34 +529,81 @@ fn build_and_execute<E: AttnEngine>(
             }
             let cache = sessions.get_mut(sid).unwrap();
             for m in members {
-                cache
-                    .append(&m.req.k, &m.req.v, 1)
-                    .map_err(|e| anyhow!("decode append: {e}"))?;
+                cache.append(&m.req.k, &m.req.v, 1).map_err(|e| anyhow!("decode append: {e}"))?;
             }
             metrics.kv_appends.fetch_add(members.len() as u64, Ordering::Relaxed);
         }
     }
 
-    // 2. Gather K/V + query rows.
+    // 2. Resolve the KV source + live length.
     let total_q: usize = members.iter().map(|m| m.req.nq).sum();
-    let (kv_src_k, kv_src_v, kv_len, kv_src_cap): (&[f32], &[f32], usize, usize) =
-        match first.session() {
-            Some(sid) if !matches!(first.kind, RequestKind::Stateless) => {
-                let cache = sessions.get(sid).ok_or_else(|| anyhow!("session vanished"))?;
-                (&cache.k, &cache.v, cache.len, cache.cap)
-            }
-            _ => (&first.k, &first.v, first.nkv, first.nkv),
-        };
+    let (kv, kv_len) = match first.session() {
+        Some(sid) if !matches!(first.kind, RequestKind::Stateless) => {
+            let cache = sessions.get(sid).ok_or_else(|| anyhow!("session vanished"))?;
+            (KvSrc::Session(sid), cache.len)
+        }
+        _ => (KvSrc::Inline, first.nkv),
+    };
 
+    // 3. Routing validation. The fused path executes exact shapes without
+    //    padding, but a problem no compiled artifact could serve must be
+    //    rejected identically on every engine.
     let route = router.route(variant, sig, total_q, kv_len).map_err(|e| anyhow!(e))?;
+    Ok((route, kv, kv_len))
+}
 
-    // 3. Pack tensors (heads, slots, d).
+/// Serial dispatch: execute one batch end to end through the padded
+/// per-route engine call and deliver its responses.
+fn serve_batch<E: AttnEngine>(
+    engine: &E,
+    router: &Router,
+    sessions: &mut SessionStore,
+    batch: &Batch,
+    pend: &mut [Option<Pending>],
+    metrics: &Arc<Metrics>,
+) {
+    let Some(ready) = admit_batch(router, sessions, batch, pend, metrics) else {
+        return;
+    };
+    let batch_size = ready.batch_size;
+    match pack_execute_split(engine, sessions, &ready) {
+        Ok(outputs) => {
+            for (m, out) in ready.members.into_iter().zip(outputs) {
+                respond_ok(m, out, batch_size, metrics);
+            }
+        }
+        Err(e) => respond_error(ready.members, &format!("{e}"), batch_size, metrics),
+    }
+}
+
+/// The serial execute half: pack the padded `(heads, slots, head_dim)`
+/// block tensors for the routed artifact, execute, split per-member
+/// outputs.
+fn pack_execute_split<E: AttnEngine>(
+    engine: &E,
+    sessions: &SessionStore,
+    r: &Ready,
+) -> Result<Vec<Vec<f32>>> {
+    let (h, d) = (r.sig.heads, r.sig.head_dim);
+    let route = &r.route;
+    let kv_len = r.kv_len;
+    let (kv_src_k, kv_src_v, kv_src_cap): (&[f32], &[f32], usize) = match r.kv {
+        KvSrc::Session(sid) => {
+            let cache = sessions.get(sid).ok_or_else(|| anyhow!("session vanished"))?;
+            (&cache.k, &cache.v, cache.cap)
+        }
+        KvSrc::Inline => {
+            let first = &r.members[0].req;
+            (&first.k, &first.v, first.nkv)
+        }
+    };
+
     let mut q = vec![0.0f32; h * route.q_slots * d];
     let mut row = 0usize;
-    for m in members {
-        for r in 0..m.req.nq {
+    for m in &r.members {
+        for rq in 0..m.req.nq {
             for hh in 0..h {
-                let src = (hh * m.req.nq + r) * d;
+                let src = (hh * m.req.nq + rq) * d;
                 let dst = (hh * route.q_slots + row) * d;
                 q[dst..dst + d].copy_from_slice(&m.req.q[src..src + d]);
             }
@@ -472,16 +620,15 @@ fn build_and_execute<E: AttnEngine>(
         v[dst..dst + n].copy_from_slice(&kv_src_v[src..src + n]);
     }
 
-    // 4. Execute and split.
-    let out = engine.execute(&route, &q, &k, &v, kv_len)?;
-    let mut outputs = Vec::with_capacity(members.len());
+    let out = engine.execute(route, &q, &k, &v, kv_len)?;
+    let mut outputs = Vec::with_capacity(r.members.len());
     let mut row = 0usize;
-    for m in members {
-        let mut o = vec![0.0f32; h * m.req.nq * d];
-        for r in 0..m.req.nq {
+    for m in &r.members {
+        let mut o = vec![0.0f32; r.sig.flat(m.req.nq)];
+        for rq in 0..m.req.nq {
             for hh in 0..h {
-                let src = (hh * route.q_slots + row + r) * d;
-                let dst = (hh * m.req.nq + r) * d;
+                let src = (hh * route.q_slots + row + rq) * d;
+                let dst = (hh * m.req.nq + rq) * d;
                 o[dst..dst + d].copy_from_slice(&out[src..src + d]);
             }
         }
@@ -489,6 +636,231 @@ fn build_and_execute<E: AttnEngine>(
         outputs.push(o);
     }
     Ok(outputs)
+}
+
+/// Fused dispatch: serve one drain cycle's batches through as few kernel
+/// submissions as possible — one, absent session conflicts (see the
+/// module docs for the full drain-cycle → block-job lowering contract).
+fn serve_cycle_fused<E: AttnEngine>(
+    engine: &E,
+    router: &Router,
+    sessions: &mut SessionStore,
+    batches: &[Batch],
+    pend: &mut [Option<Pending>],
+    metrics: &Arc<Metrics>,
+) {
+    if batches.is_empty() {
+        return;
+    }
+    metrics.fused_cycles.fetch_add(1, Ordering::Relaxed);
+    let mut group: Vec<Ready> = Vec::new();
+    let mut group_sessions: HashSet<u64> = HashSet::new();
+    let mut jobs_this_cycle = 0u64;
+    for batch in batches {
+        if fusion_conflict(router, sessions, &group_sessions, batch) {
+            jobs_this_cycle += flush_group(engine, sessions, &mut group, metrics);
+            group_sessions.clear();
+        }
+        if let Some(r) = admit_batch(router, sessions, batch, pend, metrics) {
+            if let KvSrc::Session(sid) = r.kv {
+                group_sessions.insert(sid);
+            }
+            group.push(r);
+        }
+    }
+    jobs_this_cycle += flush_group(engine, sessions, &mut group, metrics);
+    metrics.observe_jobs_per_cycle(jobs_this_cycle);
+}
+
+/// Must the current fusion group flush before this batch is admitted?
+/// True when the batch touches a session the group already reads (its
+/// create/appends would be visible to the earlier batch's borrow), or
+/// when it is a prefill whose session creation could LRU-evict a cache
+/// while the group still holds borrows.
+fn fusion_conflict(
+    router: &Router,
+    sessions: &SessionStore,
+    group_sessions: &HashSet<u64>,
+    batch: &Batch,
+) -> bool {
+    let Some(sid) = batch.session else {
+        return false; // stateless: private KV, never conflicts
+    };
+    if group_sessions.contains(&sid) {
+        return true;
+    }
+    if batch.decode || group_sessions.is_empty() {
+        return false;
+    }
+    // Prefill joining a non-empty group: conservative eviction test (an
+    // unknown signature can't create a session, so it can't evict either).
+    match router.max_kv(batch.variant, batch.sig) {
+        Some(cap) => sessions.would_evict(sid, batch.sig.heads, batch.sig.head_dim, cap),
+        None => false,
+    }
+}
+
+/// Lower the accumulated fusion group into one flat job list, submit it
+/// through a single [`AttnEngine::execute_fused`] call, and scatter the
+/// outputs back to the members. Returns the number of jobs submitted.
+fn flush_group<E: AttnEngine>(
+    engine: &E,
+    sessions: &SessionStore,
+    group: &mut Vec<Ready>,
+    metrics: &Arc<Metrics>,
+) -> u64 {
+    if group.is_empty() {
+        return 0;
+    }
+    let group: Vec<Ready> = std::mem::take(group);
+    metrics.fused_batches.fetch_add(group.len() as u64, Ordering::Relaxed);
+
+    // Gather staging: only multi-member (decode fusion) batches need their
+    // members' query rows copied into one (heads, total_q, d) block;
+    // single-member batches borrow the request's q as-is.
+    let staged: Vec<Option<Vec<f32>>> = group.iter().map(gather_queries).collect();
+
+    // Simultaneous per-session KV borrows via `SessionStore::borrow_many`:
+    // all of the group's mutations are done, so every source is stable
+    // until the submission returns. Inline (stateless) batches borrow
+    // their first member's request payload instead.
+    let sess_ids: Vec<u64> = group
+        .iter()
+        .filter_map(|r| match r.kv {
+            KvSrc::Session(sid) => Some(sid),
+            KvSrc::Inline => None,
+        })
+        .collect();
+    let mut sess_caches = sessions.borrow_many(&sess_ids).into_iter();
+    let srcs: Vec<Option<(&[f32], &[f32], usize)>> = group
+        .iter()
+        .map(|r| match r.kv {
+            KvSrc::Session(_) => sess_caches
+                .next()
+                .expect("one borrow per session-backed batch")
+                .map(|c| (c.k.as_slice(), c.v.as_slice(), c.cap)),
+            KvSrc::Inline => {
+                let first = &r.members[0].req;
+                Some((first.k.as_slice(), first.v.as_slice(), first.nkv))
+            }
+        })
+        .collect();
+
+    // Lower: one BlockJob per (batch, head), covering the batch's whole
+    // query block against the head's live KV prefix, borrowed in place.
+    let mut jobs: Vec<BlockJob<'_>> = Vec::new();
+    let mut offsets: Vec<usize> = vec![usize::MAX; group.len()];
+    let mut off = 0usize;
+    for (bi, (r, src)) in group.iter().zip(&srcs).enumerate() {
+        let Some((ks, vs, cap)) = *src else {
+            continue; // vanished session: answered after the submission
+        };
+        let (h, d) = (r.sig.heads, r.sig.head_dim);
+        let scale = (d as f32).powf(-0.5);
+        let q: &[f32] = staged[bi].as_deref().unwrap_or(&r.members[0].req.q);
+        for hh in 0..h {
+            jobs.push(BlockJob {
+                q: &q[hh * r.total_q * d..(hh + 1) * r.total_q * d],
+                k: &ks[hh * cap * d..hh * cap * d + r.kv_len * d],
+                v: &vs[hh * cap * d..hh * cap * d + r.kv_len * d],
+                nq: r.total_q,
+                n: r.kv_len,
+                d,
+                scale,
+                causal: false,
+            });
+        }
+        offsets[bi] = off;
+        off += r.sig.flat(r.total_q);
+    }
+
+    let njobs = jobs.len() as u64;
+    let rows: u64 = group
+        .iter()
+        .enumerate()
+        .filter(|(bi, _)| offsets[*bi] != usize::MAX)
+        .map(|(_, r)| r.total_q as u64)
+        .sum();
+    let mut out = vec![0.0f32; off];
+    let exec = if jobs.is_empty() {
+        Ok(SkipStats::default())
+    } else {
+        metrics.fused_submissions.fetch_add(1, Ordering::Relaxed);
+        metrics.fused_jobs.fetch_add(njobs, Ordering::Relaxed);
+        metrics.fused_rows.fetch_add(rows, Ordering::Relaxed);
+        metrics.observe_fused_width(rows);
+        engine.execute_fused(&jobs, &mut out)
+    };
+    drop(jobs);
+    drop(srcs);
+    match exec {
+        Ok(st) => {
+            metrics.skip_steps.fetch_add(st.total, Ordering::Relaxed);
+            metrics.skip_skipped.fetch_add(st.skipped(), Ordering::Relaxed);
+            for (bi, r) in group.into_iter().enumerate() {
+                if offsets[bi] == usize::MAX {
+                    let batch_size = r.batch_size;
+                    respond_error(r.members, "session vanished", batch_size, metrics);
+                    continue;
+                }
+                let end = offsets[bi] + r.sig.flat(r.total_q);
+                scatter_batch(r, &out[offsets[bi]..end], metrics);
+            }
+        }
+        Err(e) => {
+            let msg = format!("{e}");
+            for r in group {
+                let batch_size = r.batch_size;
+                respond_error(r.members, &msg, batch_size, metrics);
+            }
+        }
+    }
+    njobs
+}
+
+/// Staging for a decode fusion: copy the members' query rows into one
+/// contiguous `(heads, total_q, d)` block. Single-member batches return
+/// `None` — their request payload already has the block layout and is
+/// borrowed directly.
+fn gather_queries(r: &Ready) -> Option<Vec<f32>> {
+    if r.members.len() == 1 {
+        return None;
+    }
+    let (h, d) = (r.sig.heads, r.sig.head_dim);
+    let nqs: Vec<usize> = r.members.iter().map(|m| m.req.nq).collect();
+    let spans = member_row_spans(&nqs);
+    let mut buf = vec![0.0f32; r.sig.flat(r.total_q)];
+    for (m, (row0, nq)) in r.members.iter().zip(spans) {
+        for hh in 0..h {
+            for rq in 0..nq {
+                let src = (hh * nq + rq) * d;
+                let dst = (hh * r.total_q + row0 + rq) * d;
+                buf[dst..dst + d].copy_from_slice(&m.req.q[src..src + d]);
+            }
+        }
+    }
+    Some(buf)
+}
+
+/// Scatter one batch's `(heads, total_q, d)` region of the fused output
+/// back into per-member `(heads, nq, d)` responses by row span.
+fn scatter_batch(r: Ready, region: &[f32], metrics: &Arc<Metrics>) {
+    let (h, d) = (r.sig.heads, r.sig.head_dim);
+    let total_q = r.total_q;
+    let batch_size = r.batch_size;
+    let nqs: Vec<usize> = r.members.iter().map(|m| m.req.nq).collect();
+    let spans = member_row_spans(&nqs);
+    for (m, (row0, nq)) in r.members.into_iter().zip(spans) {
+        let mut o = vec![0.0f32; h * nq * d];
+        for hh in 0..h {
+            for rq in 0..nq {
+                let src = (hh * total_q + row0 + rq) * d;
+                let dst = (hh * nq + rq) * d;
+                o[dst..dst + d].copy_from_slice(&region[src..src + d]);
+            }
+        }
+        respond_ok(m, o, batch_size, metrics);
+    }
 }
 
 #[cfg(test)]
@@ -609,10 +981,7 @@ mod tests {
     #[test]
     fn concurrent_decodes_batch_and_all_respond() {
         let c = start_naive();
-        assert!(c
-            .submit_blocking(rand_req(0, RequestKind::Prefill { session: 1 }, 1, 8, 3))
-            .output
-            .is_ok());
+        assert!(c.submit_blocking(rand_req(0, RequestKind::Prefill { session: 1 }, 1, 8, 3)).output.is_ok());
         // submit a burst of decodes from worker threads
         let c = std::sync::Arc::new(c);
         let mut handles = Vec::new();
@@ -634,7 +1003,9 @@ mod tests {
         assert_eq!(snap.responses, 9);
         assert!(snap.kv_appends >= 16);
         c.metrics.snapshot();
-        std::sync::Arc::try_unwrap(c).ok().map(|c| c.shutdown());
+        if let Ok(c) = std::sync::Arc::try_unwrap(c) {
+            c.shutdown();
+        }
     }
 
     #[test]
@@ -643,5 +1014,150 @@ mod tests {
         let resp = c.submit_blocking(rand_req(1, RequestKind::Stateless, 1, 300, 4));
         assert!(resp.output.is_err());
         c.shutdown();
+    }
+
+    fn mk_pend(reqs: Vec<AttentionRequest>) -> (Vec<Option<Pending>>, Vec<Receiver<AttentionResponse>>) {
+        let mut pend = Vec::new();
+        let mut rxs = Vec::new();
+        for req in reqs {
+            let (tx, rx) = channel();
+            pend.push(Some(Pending { req, reply: tx }));
+            rxs.push(rx);
+        }
+        (pend, rxs)
+    }
+
+    fn recv_ok(rxs: &[Receiver<AttentionResponse>]) -> Vec<Vec<f32>> {
+        rxs.iter().map(|rx| rx.recv().expect("response").output.expect("ok")).collect()
+    }
+
+    #[test]
+    fn fused_cycle_is_one_submission_and_matches_serial() {
+        let router = test_router();
+        let kernel = KernelConfig { tile: 8, threads: 2, ..KernelConfig::default() };
+        let engine = NaiveEngine::with_kernel(router.clone(), kernel);
+        let policy = BatchPolicy::default();
+
+        // Cycle 1: two prefills (sessions 1, 2) + one stateless = 3
+        // mergeable batches -> exactly one fused submission of 6 jobs.
+        let reqs = vec![
+            rand_req(1, RequestKind::Prefill { session: 1 }, 1, 12, 100),
+            rand_req(2, RequestKind::Prefill { session: 2 }, 1, 9, 101),
+            rand_req(3, RequestKind::Stateless, 2, 17, 102),
+        ];
+        let batches = form_batches(&reqs, &policy);
+        assert_eq!(batches.len(), 3);
+
+        let m_f = Arc::new(Metrics::new());
+        let mut sess_f = SessionStore::new(256 << 20);
+        let (mut pend_f, rxs_f) = mk_pend(reqs.clone());
+        serve_cycle_fused(&engine, &router, &mut sess_f, &batches, &mut pend_f, &m_f);
+        let outs_f = recv_ok(&rxs_f);
+        let snap = m_f.snapshot();
+        assert_eq!(snap.fused_cycles, 1);
+        assert_eq!(snap.fused_submissions, 1, "3 mergeable batches, 1 submission");
+        assert_eq!(snap.fused_batches, 3);
+        assert_eq!(snap.fused_jobs, 6); // 3 batches x 2 heads
+        assert_eq!(snap.fused_rows, 4); // 1 + 1 + 2 query rows
+        assert_eq!(snap.jobs_per_cycle_buckets.iter().sum::<u64>(), 1);
+
+        let m_s = Arc::new(Metrics::new());
+        let mut sess_s = SessionStore::new(256 << 20);
+        let (mut pend_s, rxs_s) = mk_pend(reqs);
+        for b in &batches {
+            serve_batch(&engine, &router, &mut sess_s, b, &mut pend_s, &m_s);
+        }
+        let outs_s = recv_ok(&rxs_s);
+        assert_eq!(outs_f, outs_s, "fused outputs must be bit-identical to serial");
+        assert_eq!(m_s.snapshot().fused_submissions, 0);
+
+        // Cycle 2: a decode fusion on session 1 + a decode on session 2 =
+        // 2 batches, still one submission; outputs still bit-identical.
+        let reqs2 = vec![
+            rand_req(10, RequestKind::Decode { session: 1 }, 1, 1, 110),
+            rand_req(11, RequestKind::Decode { session: 2 }, 1, 1, 111),
+            rand_req(12, RequestKind::Decode { session: 1 }, 1, 1, 112),
+        ];
+        let batches2 = form_batches(&reqs2, &policy);
+        assert_eq!(batches2.len(), 2);
+        let (mut pend2_f, rxs2_f) = mk_pend(reqs2.clone());
+        serve_cycle_fused(&engine, &router, &mut sess_f, &batches2, &mut pend2_f, &m_f);
+        let outs2_f = recv_ok(&rxs2_f);
+        let snap2 = m_f.snapshot();
+        assert_eq!(snap2.fused_cycles, 2);
+        assert_eq!(snap2.fused_submissions, 2);
+        let (mut pend2_s, rxs2_s) = mk_pend(reqs2);
+        for b in &batches2 {
+            serve_batch(&engine, &router, &mut sess_s, b, &mut pend2_s, &m_s);
+        }
+        assert_eq!(outs2_f, recv_ok(&rxs2_s));
+        assert_eq!(sess_f.get(1).unwrap().len, sess_s.get(1).unwrap().len);
+    }
+
+    #[test]
+    fn same_session_conflict_splits_submissions() {
+        let router = test_router();
+        let engine = NaiveEngine::new(router.clone());
+        let m = Arc::new(Metrics::new());
+        let mut sessions = SessionStore::new(256 << 20);
+        let policy = BatchPolicy::default();
+
+        let pre = vec![rand_req(1, RequestKind::Prefill { session: 7 }, 1, 8, 7)];
+        let b0 = form_batches(&pre, &policy);
+        let (mut p0, r0) = mk_pend(pre);
+        serve_cycle_fused(&engine, &router, &mut sessions, &b0, &mut p0, &m);
+        assert!(r0[0].recv().unwrap().output.is_ok());
+
+        // One cycle: decode(7) then re-prefill(7). The re-prefill would
+        // replace the cache the decode's job borrows -> group must flush,
+        // giving 2 submissions and serial-identical state.
+        let cyc = vec![
+            rand_req(2, RequestKind::Decode { session: 7 }, 1, 1, 8),
+            rand_req(3, RequestKind::Prefill { session: 7 }, 1, 6, 9),
+        ];
+        let batches = form_batches(&cyc, &policy);
+        assert_eq!(batches.len(), 2);
+        let (mut pend, rxs) = mk_pend(cyc);
+        serve_cycle_fused(&engine, &router, &mut sessions, &batches, &mut pend, &m);
+        for rx in &rxs {
+            assert!(rx.recv().unwrap().output.is_ok());
+        }
+        let snap = m.snapshot();
+        assert_eq!(snap.fused_cycles, 2);
+        assert_eq!(snap.fused_submissions, 3, "conflict must split the cycle");
+        // the re-prefill replaced the cache after the decode executed
+        assert_eq!(sessions.get(7).unwrap().len, 6);
+    }
+
+    #[test]
+    fn eviction_risk_flushes_group() {
+        let router = test_router();
+        let engine = NaiveEngine::new(router.clone());
+        let m = Arc::new(Metrics::new());
+        // budget fits one session cache (2 heads * cap 256 * d 8 * 2
+        // tensors * 4B = 32KiB) but not two
+        let mut sessions = SessionStore::new(40_000);
+        let policy = BatchPolicy::default();
+
+        let pre = vec![rand_req(1, RequestKind::Prefill { session: 1 }, 1, 8, 20)];
+        let b0 = form_batches(&pre, &policy);
+        let (mut p0, r0) = mk_pend(pre);
+        serve_cycle_fused(&engine, &router, &mut sessions, &b0, &mut p0, &m);
+        assert!(r0[0].recv().unwrap().output.is_ok());
+
+        // decode(1) + prefill(2): creating session 2 must evict session 1,
+        // so the group flushes before the prefill is admitted.
+        let cyc = vec![
+            rand_req(2, RequestKind::Decode { session: 1 }, 1, 1, 21),
+            rand_req(3, RequestKind::Prefill { session: 2 }, 1, 5, 22),
+        ];
+        let batches = form_batches(&cyc, &policy);
+        let (mut pend, rxs) = mk_pend(cyc);
+        serve_cycle_fused(&engine, &router, &mut sessions, &batches, &mut pend, &m);
+        for rx in &rxs {
+            assert!(rx.recv().unwrap().output.is_ok());
+        }
+        assert_eq!(m.snapshot().fused_submissions, 3);
+        assert!(!sessions.contains(1) && sessions.contains(2));
     }
 }

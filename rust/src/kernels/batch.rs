@@ -330,14 +330,13 @@ fn partition_by_cost(costs: &[usize], workers: usize) -> Vec<usize> {
 }
 
 /// Execute one chunk of items into a flat `f32` output (each item owns the
-/// next `nq * d` floats). `nq == 1` items run the single-query tiled
-/// kernel with the worker's score scratch; larger items run the
-/// query-blocked kernel.
+/// next `nq * d` floats, with `d` the item's own head dimension — mixed-`d`
+/// chunks are fine). `nq == 1` items run the single-query tiled kernel with
+/// the worker's score scratch; larger items run the query-blocked kernel.
 fn run_chunk_into(
     cfg: &KernelConfig,
     jobs: &[RowJob<'_>],
     items: &[Item<'_>],
-    d: usize,
     out: &mut [f32],
     ws: &mut WorkerScratch,
     stats: &mut SkipStats,
@@ -345,8 +344,8 @@ fn run_chunk_into(
     let WorkerScratch { qs, row_scores, qbuf, .. } = ws;
     let mut off = 0usize;
     for it in items {
-        let slot = &mut out[off..off + it.nq * d];
-        off += it.nq * d;
+        let slot = &mut out[off..off + it.nq * it.d];
+        off += it.nq * it.d;
         let st = if it.nq == 1 {
             tiled::attention_tiled_into_with(
                 it.single_query(jobs),
@@ -402,15 +401,16 @@ fn run_chunk(
 
 /// Shared driver: size the worker pool from total work, partition items
 /// into contiguous cost-balanced chunks, and run `chunk_fn` on each chunk
-/// with its `sum(nq) * per` output slots and its own scratch slot,
-/// serially or on scoped threads. All decisions depend only on
-/// `(cfg, items)`, so results are bitwise identical for every thread
-/// count.
+/// with its output slots and its own scratch slot, serially or on scoped
+/// threads. `flat` selects the output unit: `nq * d` floats per item
+/// (flat `f32` outputs, mixed `d` allowed) versus `nq` per-query slots.
+/// All decisions depend only on `(cfg, items)`, so results are bitwise
+/// identical for every thread count.
 fn run_items<'j, T, F>(
     cfg: &KernelConfig,
     items: &[Item<'j>],
     out: &mut [T],
-    per: usize,
+    flat: bool,
     scratch: &mut BatchScratch,
     chunk_fn: F,
 ) -> SkipStats
@@ -443,7 +443,10 @@ where
         let mut rem_slots = &mut scratch.slots[..];
         for (part, &take) in stat_parts.iter_mut().zip(&takes) {
             let (item_chunk, items_rest) = rem_items.split_at(take);
-            let units: usize = item_chunk.iter().map(|it| it.nq).sum::<usize>() * per;
+            let units: usize = item_chunk
+                .iter()
+                .map(|it| if flat { it.nq * it.d } else { it.nq })
+                .sum();
             let (out_chunk, out_rest) = rem_out.split_at_mut(units);
             let (slot_chunk, slots_rest) = rem_slots.split_at_mut(1);
             rem_items = items_rest;
@@ -467,7 +470,7 @@ pub fn run_rows(cfg: &KernelConfig, jobs: &[RowJob<'_>]) -> (Vec<Vec<f32>>, Skip
     let mut outputs: Vec<Vec<f32>> = vec![Vec::new(); jobs.len()];
     let items = coalesce(jobs, cfg.block_q);
     let mut scratch = BatchScratch::new();
-    let stats = run_items(cfg, &items, &mut outputs, 1, &mut scratch, |ic, oc, ws, st| {
+    let stats = run_items(cfg, &items, &mut outputs, false, &mut scratch, |ic, oc, ws, st| {
         run_chunk(cfg, jobs, ic, oc, ws, st)
     });
     (outputs, stats)
@@ -496,8 +499,8 @@ pub fn run_rows_into_with(
     assert_eq!(out.len(), jobs.len() * d, "output buffer must be jobs.len() * d");
     debug_assert!(jobs.iter().all(|j| j.d == d));
     let items = coalesce(jobs, cfg.block_q);
-    run_items(cfg, &items, out, d, scratch, |ic, oc, ws, st| {
-        run_chunk_into(cfg, jobs, ic, d, oc, ws, st)
+    run_items(cfg, &items, out, true, scratch, |ic, oc, ws, st| {
+        run_chunk_into(cfg, jobs, ic, oc, ws, st)
     })
 }
 
@@ -509,7 +512,7 @@ pub fn run_blocks(cfg: &KernelConfig, blocks: &[BlockJob<'_>]) -> (Vec<Vec<f32>>
     let mut outputs: Vec<Vec<f32>> = vec![Vec::new(); total_q];
     let items = items_of_blocks(blocks, cfg);
     let mut scratch = BatchScratch::new();
-    let stats = run_items(cfg, &items, &mut outputs, 1, &mut scratch, |ic, oc, ws, st| {
+    let stats = run_items(cfg, &items, &mut outputs, false, &mut scratch, |ic, oc, ws, st| {
         run_chunk(cfg, &[], ic, oc, ws, st)
     });
     (outputs, stats)
@@ -534,9 +537,29 @@ pub fn run_blocks_into_with(
     let total_q: usize = blocks.iter().map(|b| b.nq).sum();
     assert_eq!(out.len(), total_q * d, "output buffer must be sum(nq) * d");
     debug_assert!(blocks.iter().all(|b| b.d == d));
+    run_blocks_flat_into_with(cfg, blocks, out, scratch)
+}
+
+/// Flat-output block driver without the uniform-`d` requirement: block
+/// `b`'s output occupies the next `nq_b * d_b` floats of `out`, in block
+/// order. This is the fused serving entry point — one drain cycle's whole
+/// job graph (every session, head, and shape signature the coordinator
+/// lowered) goes through a single call, so the thread pool is sized and
+/// balanced over the cycle's total work instead of per batch. The KV
+/// slices of each job may borrow from anywhere (session caches, request
+/// payloads); nothing is copied or required to be contiguous across jobs.
+/// Same determinism guarantee as [`run_blocks_into`].
+pub fn run_blocks_flat_into_with(
+    cfg: &KernelConfig,
+    blocks: &[BlockJob<'_>],
+    out: &mut [f32],
+    scratch: &mut BatchScratch,
+) -> SkipStats {
+    let total: usize = blocks.iter().map(|b| b.nq * b.d).sum();
+    assert_eq!(out.len(), total, "output buffer must be sum(nq * d)");
     let items = items_of_blocks(blocks, cfg);
-    run_items(cfg, &items, out, d, scratch, |ic, oc, ws, st| {
-        run_chunk_into(cfg, &[], ic, d, oc, ws, st)
+    run_items(cfg, &items, out, true, scratch, |ic, oc, ws, st| {
+        run_chunk_into(cfg, &[], ic, oc, ws, st)
     })
 }
 
@@ -780,6 +803,36 @@ mod tests {
                 assert_eq!(&flat[iq * d..(iq + 1) * d], &want[..], "query {iq}");
                 want_st.merge(&wst);
             }
+            assert_eq!(st, want_st, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn mixed_d_flat_blocks_match_per_block_runs() {
+        // Two different head dims in one submission — the fused serving
+        // shape. Each block's slice of the flat output must equal a
+        // standalone uniform-d run of that block, for every thread count.
+        let mut rng = Rng::new(21);
+        let qa = rng.normal_vec(3 * 8, 0.8);
+        let ka = rng.normal_vec(33 * 8, 0.8);
+        let va = rng.normal_vec(33 * 8, 1.0);
+        let qb = rng.normal_vec(5 * 16, 0.8);
+        let kb = rng.normal_vec(17 * 16, 0.8);
+        let vb = rng.normal_vec(17 * 16, 1.0);
+        let ba = BlockJob { q: &qa, k: &ka, v: &va, nq: 3, n: 33, d: 8, scale: 0.5, causal: false };
+        let bb = BlockJob { q: &qb, k: &kb, v: &vb, nq: 5, n: 17, d: 16, scale: 0.3, causal: false };
+        for threads in [1usize, 4] {
+            let cfg = KernelConfig { tile: 8, block_q: 2, threads, skip: SkipCriterion::Static };
+            let mut flat = vec![0.0f32; 3 * 8 + 5 * 16];
+            let st = run_blocks_flat_into_with(&cfg, &[ba, bb], &mut flat, &mut BatchScratch::new());
+            let mut wa = vec![0.0f32; 3 * 8];
+            let sa = run_blocks_into(&cfg, &[ba], 8, &mut wa);
+            let mut wb = vec![0.0f32; 5 * 16];
+            let sb = run_blocks_into(&cfg, &[bb], 16, &mut wb);
+            assert_eq!(&flat[..3 * 8], &wa[..], "threads={threads}");
+            assert_eq!(&flat[3 * 8..], &wb[..], "threads={threads}");
+            let mut want_st = sa;
+            want_st.merge(&sb);
             assert_eq!(st, want_st, "threads={threads}");
         }
     }

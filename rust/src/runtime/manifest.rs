@@ -198,7 +198,14 @@ impl Manifest {
     }
 
     /// Resolve the attention artifact for a shape + variant + causality.
-    pub fn find_attention(&self, variant: &str, heads: usize, seq: usize, head_dim: usize, causal: bool) -> Option<&ArtifactInfo> {
+    pub fn find_attention(
+        &self,
+        variant: &str,
+        heads: usize,
+        seq: usize,
+        head_dim: usize,
+        causal: bool,
+    ) -> Option<&ArtifactInfo> {
         self.artifacts.values().find(|a| {
             a.kind == "attention"
                 && a.variant.as_deref() == Some(variant)

@@ -1,0 +1,118 @@
+//! Shared reference machinery for the serving conformance and stress
+//! suites: a per-session reference KV plus direct per-request
+//! `kernels::flashd` execution, bit-comparable to the coordinator's
+//! output (the tiled/query-blocked serving kernels are bit-identical per
+//! query to the scalar FLASH-D kernel under `SkipCriterion::None`).
+#![allow(dead_code)]
+
+use flashd::coordinator::request::{AttentionRequest, RequestKind, ShapeSig, Variant};
+use flashd::coordinator::router::Router;
+use flashd::kernels::flashd as fd;
+use flashd::runtime::Manifest;
+use flashd::util::rng::Rng;
+use std::time::Instant;
+
+pub const HEADS: usize = 2;
+pub const D: usize = 8;
+
+/// Router over a synthetic manifest covering the test signature at two
+/// context capacities.
+pub fn test_router() -> Router {
+    Router::from_manifest(
+        &Manifest::parse(
+            r#"{"artifacts": {
+          "a64": {"file":"x","kind":"attention","variant":"flashd","causal":false,
+            "heads":2,"seq":64,"head_dim":8,"inputs":[],"n_outputs":1},
+          "a256": {"file":"y","kind":"attention","variant":"flashd","causal":false,
+            "heads":2,"seq":256,"head_dim":8,"inputs":[],"n_outputs":1}
+        }}"#,
+        )
+        .expect("manifest"),
+    )
+}
+
+/// Per-session reference KV, per-head contiguous — the layout
+/// `kernels::flashd::attention` consumes directly.
+#[derive(Clone)]
+pub struct RefKv {
+    pub k: Vec<Vec<f32>>,
+    pub v: Vec<Vec<f32>>,
+}
+
+impl RefKv {
+    pub fn new() -> RefKv {
+        RefKv { k: vec![Vec::new(); HEADS], v: vec![Vec::new(); HEADS] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.k[0].len() / D
+    }
+
+    /// Append `(heads, n, d)`-flat request K/V.
+    pub fn append(&mut self, k: &[f32], v: &[f32], n: usize) {
+        for h in 0..HEADS {
+            self.k[h].extend_from_slice(&k[h * n * D..(h + 1) * n * D]);
+            self.v[h].extend_from_slice(&v[h * n * D..(h + 1) * n * D]);
+        }
+    }
+}
+
+/// Direct per-request reference execution: `kernels::flashd` per head and
+/// query row, with the serving scale 1/sqrt(d).
+pub fn reference_output(q: &[f32], nq: usize, kv: &RefKv) -> Vec<f32> {
+    let n = kv.len();
+    let scale = (D as f32).powf(-0.5);
+    let mut out = vec![0.0f32; HEADS * nq * D];
+    for h in 0..HEADS {
+        for r in 0..nq {
+            let row = fd::attention(
+                &q[(h * nq + r) * D..(h * nq + r + 1) * D],
+                &kv.k[h],
+                &kv.v[h],
+                n,
+                D,
+                scale,
+            );
+            out[(h * nq + r) * D..(h * nq + r + 1) * D].copy_from_slice(&row);
+        }
+    }
+    out
+}
+
+pub fn mk_req(rng: &mut Rng, id: u64, kind: RequestKind, nq: usize, nkv: usize) -> AttentionRequest {
+    let sig = ShapeSig { heads: HEADS, head_dim: D };
+    AttentionRequest {
+        id,
+        kind,
+        variant: Variant::FlashD,
+        sig,
+        q: rng.normal_vec(sig.flat(nq), 0.6),
+        nq,
+        k: rng.normal_vec(sig.flat(nkv), 0.6),
+        v: rng.normal_vec(sig.flat(nkv), 1.0),
+        nkv,
+        submitted_at: Instant::now(),
+    }
+}
+
+/// Update the reference KV for a request about to be submitted and return
+/// the expected (bit-exact) output. Prefill replaces the session cache;
+/// decode appends one pair; stateless attends its own payload.
+pub fn expect_for(req: &AttentionRequest, kv: &mut RefKv) -> Vec<f32> {
+    match req.kind {
+        RequestKind::Prefill { .. } => {
+            *kv = RefKv::new();
+            kv.append(&req.k, &req.v, req.nkv);
+        }
+        RequestKind::Decode { .. } => kv.append(&req.k, &req.v, 1),
+        RequestKind::Stateless => {}
+    }
+    match req.kind {
+        RequestKind::Stateless => {
+            let mut own = RefKv::new();
+            own.append(&req.k, &req.v, req.nkv);
+            reference_output(&req.q, req.nq, &own)
+        }
+        _ => reference_output(&req.q, req.nq, kv),
+    }
+}

@@ -1,0 +1,246 @@
+//! Differential serving conformance suite: randomized interleavings of
+//! prefill/decode/stateless requests across many sessions run through the
+//! FULL coordinator (scheduler, batcher, KV store, fused dispatch, kernel
+//! engine) and are asserted **bit-identical** to direct per-request
+//! `kernels::flashd` reference execution — for both scheduler policies and
+//! with fused dispatch on and off.
+//!
+//! The client contract the driver follows: a session submits its next
+//! request only after its previous response arrived (so per-session KV
+//! order is defined); cross-session and stateless submissions interleave
+//! randomly, exercising multi-batch fused cycles with arbitrary timing.
+//! Outputs must not depend on that timing, on the drain batching, or on
+//! `KernelConfig::threads` — equality to the timing-free reference proves
+//! all three at once.
+
+mod common;
+
+use common::{expect_for, mk_req, reference_output, test_router, RefKv, HEADS};
+use flashd::coordinator::request::{AttentionRequest, AttentionResponse, RequestKind};
+use flashd::coordinator::scheduler::Policy;
+use flashd::coordinator::{Coordinator, CoordinatorConfig};
+use flashd::kernels::batch::KernelConfig;
+use flashd::util::rng::Rng;
+use std::collections::VecDeque;
+use std::sync::mpsc::Receiver;
+use std::time::Duration;
+
+/// Scripted lifecycle for one session: prefill, decode stream, sometimes a
+/// re-prefill (cache replacement) with a short second decode stream.
+fn session_script(rng: &mut Rng, session: u64, next_id: &mut u64) -> VecDeque<AttentionRequest> {
+    let mut plan: Vec<(RequestKind, usize, usize)> = Vec::new();
+    let prefill_len = 4 + rng.below(9);
+    plan.push((RequestKind::Prefill { session }, 1, prefill_len));
+    for _ in 0..(3 + rng.below(6)) {
+        plan.push((RequestKind::Decode { session }, 1, 1));
+    }
+    if rng.below(3) == 0 {
+        let re_len = 3 + rng.below(7);
+        plan.push((RequestKind::Prefill { session }, 1, re_len));
+        for _ in 0..2 {
+            plan.push((RequestKind::Decode { session }, 1, 1));
+        }
+    }
+    let mut script = VecDeque::new();
+    for (kind, nq, nkv) in plan {
+        script.push_back(mk_req(rng, *next_id, kind, nq, nkv));
+        *next_id += 1;
+    }
+    script
+}
+
+struct InFlight {
+    rx: Receiver<AttentionResponse>,
+    expected: Vec<f32>,
+    id: u64,
+}
+
+fn check(fl: InFlight) {
+    let resp = fl.rx.recv().expect("engine dropped a response");
+    assert_eq!(resp.id, fl.id);
+    let out = resp.output.expect("request failed");
+    assert_eq!(out, fl.expected, "request {} not bit-identical to reference", fl.id);
+}
+
+/// One randomized interleaving through a full coordinator.
+fn run_interleaving(policy: Policy, fused: bool, seed: u64) {
+    let threads = 1 + (seed as usize % 4);
+    let cfg = CoordinatorConfig {
+        policy,
+        fused,
+        batch_window: Duration::from_micros(100),
+        kernel: KernelConfig { tile: 8, block_q: 4, threads, ..KernelConfig::default() },
+        ..CoordinatorConfig::default()
+    };
+    let coord = Coordinator::start_naive(cfg, test_router()).expect("start coordinator");
+    let mut rng = Rng::new(seed ^ 0xC0FFEE);
+    let mut next_id = 1u64;
+
+    let nsessions = 2 + rng.below(3);
+    let mut scripts: Vec<VecDeque<AttentionRequest>> = (0..nsessions)
+        .map(|s| session_script(&mut rng, s as u64, &mut next_id))
+        .collect();
+    let mut kvs: Vec<RefKv> = (0..nsessions).map(|_| RefKv::new()).collect();
+    let mut inflight: Vec<Option<InFlight>> = (0..nsessions).map(|_| None).collect();
+    let mut stateless_left = 2 + rng.below(4);
+    let mut stateless_inflight: Vec<InFlight> = Vec::new();
+    let mut served = 0u64;
+
+    let mut guard = 0u32;
+    loop {
+        guard += 1;
+        assert!(guard < 100_000, "conformance driver stuck");
+        let mut progressed = false;
+
+        // Randomly submit the next request of idle sessions.
+        for s in 0..nsessions {
+            if inflight[s].is_none() && !scripts[s].is_empty() && rng.below(2) == 0 {
+                let req = scripts[s].pop_front().unwrap();
+                let expected = expect_for(&req, &mut kvs[s]);
+                let id = req.id;
+                let rx = coord.submit(req);
+                inflight[s] = Some(InFlight { rx, expected, id });
+                progressed = true;
+            }
+        }
+        // Occasionally add a stateless request.
+        if stateless_left > 0 && rng.below(3) == 0 {
+            stateless_left -= 1;
+            let nq = 1 + rng.below(3);
+            let nkv = 2 + rng.below(20);
+            let req = mk_req(&mut rng, next_id, RequestKind::Stateless, nq, nkv);
+            next_id += 1;
+            let mut own = RefKv::new();
+            let expected = expect_for(&req, &mut own);
+            let id = req.id;
+            let rx = coord.submit(req);
+            stateless_inflight.push(InFlight { rx, expected, id });
+            progressed = true;
+        }
+        // Randomly collect responses (blocking), freeing sessions.
+        for s in 0..nsessions {
+            if inflight[s].is_some() && rng.below(2) == 0 {
+                check(inflight[s].take().unwrap());
+                served += 1;
+                progressed = true;
+            }
+        }
+        if !stateless_inflight.is_empty() && rng.below(2) == 0 {
+            check(stateless_inflight.remove(0));
+            served += 1;
+            progressed = true;
+        }
+
+        let done = scripts.iter().all(VecDeque::is_empty)
+            && inflight.iter().all(Option::is_none)
+            && stateless_inflight.is_empty()
+            && stateless_left == 0;
+        if done {
+            break;
+        }
+        if !progressed {
+            // Force progress so the loop terminates: drain one in-flight
+            // response if any, otherwise submit the next available request.
+            if let Some(s) = (0..nsessions).find(|&s| inflight[s].is_some()) {
+                check(inflight[s].take().unwrap());
+                served += 1;
+            } else if !stateless_inflight.is_empty() {
+                check(stateless_inflight.remove(0));
+                served += 1;
+            }
+        }
+    }
+
+    let snap = coord.metrics.snapshot();
+    assert_eq!(snap.errors, 0, "no request may fail in a conformance run");
+    assert_eq!(snap.responses, served, "every request exactly one response");
+    if fused {
+        assert!(snap.fused_cycles > 0, "fused path must have served the run");
+        assert!(snap.fused_submissions >= snap.fused_cycles);
+        assert_eq!(snap.fused_jobs, HEADS as u64 * snap.fused_batches);
+        assert_eq!(snap.skip_skipped, 0, "serving uses the exact kernel");
+    } else {
+        assert_eq!(snap.fused_submissions, 0, "serial mode must not fuse");
+    }
+    coord.shutdown();
+}
+
+/// ≥ 100 randomized interleavings across the 2×2 (policy × fused) grid —
+/// the acceptance bar for the differential suite.
+const REPS: u64 = 30;
+
+#[test]
+fn conformance_fifo_fused() {
+    for rep in 0..REPS {
+        run_interleaving(Policy::Fifo, true, 1_000 + rep);
+    }
+}
+
+#[test]
+fn conformance_fifo_serial() {
+    for rep in 0..REPS {
+        run_interleaving(Policy::Fifo, false, 2_000 + rep);
+    }
+}
+
+#[test]
+fn conformance_decode_first_fused() {
+    for rep in 0..REPS {
+        run_interleaving(Policy::DecodeFirst, true, 3_000 + rep);
+    }
+}
+
+#[test]
+fn conformance_decode_first_serial() {
+    for rep in 0..REPS {
+        run_interleaving(Policy::DecodeFirst, false, 4_000 + rep);
+    }
+}
+
+/// A same-session decode burst that merges into ONE multi-member batch
+/// must equal the block reference: every member's query attends the full
+/// post-append KV (all burst pairs included), bit-exactly.
+#[test]
+fn fused_decode_burst_matches_block_reference() {
+    let burst = 6usize;
+    'attempt: for attempt in 0..5 {
+        let cfg = CoordinatorConfig {
+            // wide window so a one-thread burst lands in one drain cycle
+            batch_window: Duration::from_millis(50),
+            kernel: KernelConfig { tile: 8, block_q: 4, threads: 2, ..KernelConfig::default() },
+            ..CoordinatorConfig::default()
+        };
+        let coord = Coordinator::start_naive(cfg, test_router()).expect("start");
+        let mut rng = Rng::new(9_000 + attempt);
+        let mut kv = RefKv::new();
+
+        let prefill = mk_req(&mut rng, 1, RequestKind::Prefill { session: 1 }, 1, 10);
+        let expected = expect_for(&prefill, &mut kv);
+        let got = coord.submit_blocking(prefill).output.expect("prefill ok");
+        assert_eq!(got, expected);
+
+        // Submit the burst without waiting; channel order fixes member order.
+        let decodes: Vec<AttentionRequest> = (0..burst)
+            .map(|i| mk_req(&mut rng, 10 + i as u64, RequestKind::Decode { session: 1 }, 1, 1))
+            .collect();
+        // Reference: all appends land before any member executes.
+        for d in &decodes {
+            kv.append(&d.k, &d.v, 1);
+        }
+        let expects: Vec<Vec<f32>> = decodes.iter().map(|d| reference_output(&d.q, 1, &kv)).collect();
+        let rxs: Vec<Receiver<AttentionResponse>> =
+            decodes.into_iter().map(|d| coord.submit(d)).collect();
+        let resps: Vec<AttentionResponse> = rxs.iter().map(|rx| rx.recv().expect("resp")).collect();
+        if resps.iter().any(|r| r.batch_size != burst) {
+            // Timing fluke: the burst split across cycles; try again.
+            coord.shutdown();
+            continue 'attempt;
+        }
+        for (resp, want) in resps.into_iter().zip(expects) {
+            assert_eq!(resp.output.expect("decode ok"), want, "burst member diverged");
+        }
+        coord.shutdown();
+        return;
+    }
+    panic!("decode burst never merged into one batch in 5 attempts");
+}

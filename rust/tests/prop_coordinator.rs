@@ -2,7 +2,7 @@
 //! and KV-session state management (the L3 proptest coverage DESIGN.md
 //! calls out).
 
-use flashd::coordinator::batcher::{form_batches, BatchPolicy};
+use flashd::coordinator::batcher::{form_batches, member_row_spans, BatchPolicy};
 use flashd::coordinator::kv_cache::SessionStore;
 use flashd::coordinator::request::{AttentionRequest, RequestKind, ShapeSig, Variant};
 use flashd::coordinator::router::Router;
@@ -173,6 +173,113 @@ fn prop_router_choice_is_minimal_and_sufficient() {
                 prop_assert!(g, nq.max(nkv) > 256, "spurious routing failure nq={nq} nkv={nkv}");
             }
         }
+        true
+    });
+}
+
+/// Fused-path lowering invariants: the batch annotations are consistent
+/// with the members, and the member row spans partition the fused query
+/// block — so every pending request is lowered into exactly one
+/// `BlockJob` span per head, and `max_batch` / same-(session, variant,
+/// signature) invariants survive lowering.
+#[test]
+fn prop_fused_lowering_covers_every_request_exactly_once() {
+    forall("fused-lowering-cover", 150, |g| {
+        let n = g.usize_in(0, 24);
+        let reqs: Vec<AttentionRequest> = (0..n).map(|i| mk_request(g, i as u64)).collect();
+        let max_batch = g.usize_in(1, 6);
+        let batches = form_batches(&reqs, &BatchPolicy { max_batch });
+        let mut covered = vec![0usize; n];
+        for b in &batches {
+            prop_assert!(g, b.members.len() <= max_batch, "batch over max");
+            let first = &reqs[b.members[0]];
+            prop_assert!(
+                g,
+                b.variant == first.variant && b.sig == first.sig,
+                "annotation mismatch"
+            );
+            prop_assert!(g, b.session == first.session(), "session annotation mismatch");
+            prop_assert!(g, b.decode == first.is_decode(), "decode annotation mismatch");
+            if b.decode {
+                for &i in &b.members {
+                    prop_assert!(
+                        g,
+                        reqs[i].session() == b.session
+                            && reqs[i].variant == b.variant
+                            && reqs[i].sig == b.sig,
+                        "unmergeable member survived lowering"
+                    );
+                }
+            }
+            let nqs: Vec<usize> = b.members.iter().map(|&i| reqs[i].nq).collect();
+            prop_assert!(g, b.total_q == nqs.iter().sum::<usize>(), "total_q mismatch");
+            let spans = member_row_spans(&nqs);
+            let mut row = 0usize;
+            for (k, &(row0, nq)) in spans.iter().enumerate() {
+                prop_assert!(g, row0 == row && nq == nqs[k], "span broken");
+                row += nq;
+                covered[b.members[k]] += 1;
+            }
+            prop_assert!(g, row == b.total_q, "spans don't cover the query block");
+        }
+        prop_assert!(
+            g,
+            covered.iter().all(|&c| c == 1),
+            "request lowered into != exactly one span: {covered:?}"
+        );
+        true
+    });
+}
+
+/// Under `DecodeFirst` with bounded drain cycles, no admitted request
+/// starves: once arrivals stop, the backlog clears in exactly
+/// ceil(len / drain_max) cycles and every admitted request is drained
+/// exactly once, decodes always ahead of prefill/stateless in a cycle.
+#[test]
+fn prop_decode_first_never_starves_across_drain_cycles() {
+    forall("no-starvation", 100, |g| {
+        let cap = g.usize_in(4, 24);
+        let mut s = Scheduler::new(cap, Policy::DecodeFirst);
+        s.drain_max = g.usize_in(1, 6);
+        let drain_max = s.drain_max;
+        let mut admitted: Vec<u64> = Vec::new();
+        let mut drained: Vec<u64> = Vec::new();
+        let mut next_id = 0u64;
+        let cycles = g.usize_in(1, 10);
+        for _ in 0..cycles {
+            for _ in 0..g.usize_in(0, 4) {
+                let r = mk_request(g, next_id);
+                if s.submit(r).is_ok() {
+                    admitted.push(next_id);
+                }
+                next_id += 1;
+            }
+            let cycle = s.drain_cycle();
+            prop_assert!(g, cycle.len() <= drain_max, "cycle over drain_max");
+            if let Some(p) = cycle.iter().position(|r| !r.is_decode()) {
+                prop_assert!(
+                    g,
+                    cycle[p..].iter().all(|r| !r.is_decode()),
+                    "decode scheduled after non-decode in a DecodeFirst cycle"
+                );
+            }
+            drained.extend(cycle.iter().map(|r| r.id));
+        }
+        // arrivals stop: the backlog must clear without starvation
+        let backlog = s.len();
+        let bound = backlog.div_ceil(drain_max);
+        let mut extra = 0usize;
+        while !s.is_empty() {
+            let cycle = s.drain_cycle();
+            prop_assert!(g, !cycle.is_empty(), "empty drain with backlog");
+            prop_assert!(g, cycle.len() <= drain_max, "cycle over drain_max");
+            drained.extend(cycle.iter().map(|r| r.id));
+            extra += 1;
+            prop_assert!(g, extra <= bound, "starved: {extra} cycles for backlog {backlog}");
+        }
+        admitted.sort();
+        drained.sort();
+        prop_assert!(g, admitted == drained, "admitted != drained exactly once");
         true
     });
 }

@@ -1,0 +1,190 @@
+//! Concurrency stress + determinism: N client threads × M sessions
+//! against the engine thread. Every request must get exactly one
+//! response, every output must be bit-identical to direct per-request
+//! reference execution (which proves independence from drain timing and
+//! `KernelConfig::threads`), and the fused-dispatch metrics must sum
+//! consistently with the workload.
+
+mod common;
+
+use common::{expect_for, mk_req, test_router, RefKv, HEADS};
+use flashd::coordinator::metrics::Snapshot;
+use flashd::coordinator::request::RequestKind;
+use flashd::coordinator::{Coordinator, CoordinatorConfig};
+use flashd::kernels::batch::KernelConfig;
+use flashd::util::rng::Rng;
+use std::sync::Arc;
+use std::time::Duration;
+
+const CLIENTS: u64 = 4;
+const SESSIONS_PER_CLIENT: u64 = 2;
+const DECODE_STEPS: usize = 6;
+
+/// Timing-independent expected totals, accumulated while driving.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+struct Totals {
+    requests: u64,
+    rows: u64,
+    kv_appends: u64,
+    /// FLASH-D weight-update steps: heads * nq * (n_at_execution - 1) per
+    /// request. Deterministic because each client keeps at most one
+    /// request in flight per session, so same-session decode fusion never
+    /// changes a request's KV length.
+    steps: u64,
+}
+
+impl Totals {
+    fn merge(&mut self, o: Totals) {
+        self.requests += o.requests;
+        self.rows += o.rows;
+        self.kv_appends += o.kv_appends;
+        self.steps += o.steps;
+    }
+}
+
+struct SessDriver {
+    sid: u64,
+    kv: RefKv,
+    rng: Rng,
+    next_id: u64,
+}
+
+impl SessDriver {
+    fn new(sid: u64) -> SessDriver {
+        SessDriver { sid, kv: RefKv::new(), rng: Rng::new(0xFEED ^ sid), next_id: sid * 10_000 + 1 }
+    }
+}
+
+/// Submit one request blocking, assert bit-equality to the reference, and
+/// account its totals.
+fn step(
+    coord: &Coordinator,
+    dr: &mut SessDriver,
+    kind: RequestKind,
+    nq: usize,
+    nkv: usize,
+    totals: &mut Totals,
+    outs: &mut Vec<(u64, Vec<f32>)>,
+) {
+    let req = mk_req(&mut dr.rng, dr.next_id, kind, nq, nkv);
+    dr.next_id += 1;
+    let expected = expect_for(&req, &mut dr.kv);
+    let n_exec = match req.kind {
+        RequestKind::Stateless => req.nkv,
+        _ => dr.kv.len(),
+    };
+    totals.requests += 1;
+    totals.rows += nq as u64;
+    totals.kv_appends += match req.kind {
+        RequestKind::Prefill { .. } => nkv as u64,
+        RequestKind::Decode { .. } => 1,
+        RequestKind::Stateless => 0,
+    };
+    totals.steps += (HEADS * nq * (n_exec - 1)) as u64;
+    let id = req.id;
+    let resp = coord.submit_blocking(req);
+    let out = resp.output.expect("request failed under stress");
+    assert_eq!(out, expected, "request {id} diverged from reference");
+    outs.push((id, out));
+}
+
+/// One client thread: prefill its sessions, then an interleaved decode
+/// stream across them with stateless requests sprinkled in.
+fn drive_client(coord: &Coordinator, t: u64) -> (Totals, Vec<(u64, Vec<f32>)>) {
+    let mut totals = Totals::default();
+    let mut outs = Vec::new();
+    let mut drivers: Vec<SessDriver> = (0..SESSIONS_PER_CLIENT)
+        .map(|s| SessDriver::new(t * SESSIONS_PER_CLIENT + s))
+        .collect();
+    for dr in drivers.iter_mut() {
+        let p = 6 + (dr.sid as usize % 4) * 2;
+        let kind = RequestKind::Prefill { session: dr.sid };
+        step(coord, dr, kind, 1, p, &mut totals, &mut outs);
+    }
+    let mut stl = SessDriver::new(900 + t);
+    for round in 0..DECODE_STEPS {
+        for di in 0..drivers.len() {
+            let kind = RequestKind::Decode { session: drivers[di].sid };
+            step(coord, &mut drivers[di], kind, 1, 1, &mut totals, &mut outs);
+        }
+        if round % 3 == 0 {
+            step(coord, &mut stl, RequestKind::Stateless, 2, 12, &mut totals, &mut outs);
+        }
+    }
+    (totals, outs)
+}
+
+fn run_stress(kernel_threads: usize) -> (Vec<(u64, Vec<f32>)>, Snapshot, Totals) {
+    let cfg = CoordinatorConfig {
+        batch_window: Duration::from_micros(150),
+        kernel: KernelConfig { tile: 8, block_q: 4, threads: kernel_threads, ..KernelConfig::default() },
+        ..CoordinatorConfig::default()
+    };
+    let coord = Arc::new(Coordinator::start_naive(cfg, test_router()).expect("start"));
+    let mut handles = Vec::new();
+    for t in 0..CLIENTS {
+        let c = coord.clone();
+        handles.push(std::thread::spawn(move || drive_client(&c, t)));
+    }
+    let mut totals = Totals::default();
+    let mut outs: Vec<(u64, Vec<f32>)> = Vec::new();
+    for h in handles {
+        let (tt, o) = h.join().expect("client thread panicked");
+        totals.merge(tt);
+        outs.extend(o);
+    }
+    outs.sort_by_key(|(id, _)| *id);
+    let snap = coord.metrics.snapshot();
+    match Arc::try_unwrap(coord) {
+        Ok(c) => c.shutdown(),
+        Err(_) => panic!("coordinator still shared"),
+    }
+    (outs, snap, totals)
+}
+
+fn assert_metrics_consistent(snap: &Snapshot, totals: &Totals) {
+    // exactly one response per request, none lost, none failed
+    assert_eq!(snap.requests, totals.requests);
+    assert_eq!(snap.responses, totals.requests);
+    assert_eq!(snap.errors, 0);
+    assert_eq!(snap.queue_rejections, 0);
+    assert_eq!(snap.batched_requests, totals.requests);
+    // KV accounting
+    assert_eq!(snap.kv_appends, totals.kv_appends);
+    // kernel-step accounting: the fused path executed every row with the
+    // exact kernel; the step count is timing-independent
+    assert_eq!(snap.skip_steps, totals.steps);
+    assert_eq!(snap.skip_skipped, 0);
+    // fused lowering invariants: every admitted batch lowered, one job per
+    // (batch, head), every query row served exactly once
+    assert_eq!(snap.fused_batches, snap.batches);
+    assert_eq!(snap.fused_jobs, HEADS as u64 * snap.fused_batches);
+    assert_eq!(snap.fused_rows, totals.rows);
+    assert!(snap.fused_submissions >= snap.fused_cycles);
+    assert!(snap.fused_submissions <= snap.fused_batches);
+}
+
+#[test]
+fn stress_every_request_exactly_one_reference_response() {
+    let (outs, snap, totals) = run_stress(2);
+    // unique ids: exactly one response per submitted request
+    let mut ids: Vec<u64> = outs.iter().map(|(id, _)| *id).collect();
+    ids.dedup();
+    assert_eq!(ids.len() as u64, totals.requests, "duplicate or missing responses");
+    assert_metrics_consistent(&snap, &totals);
+}
+
+#[test]
+fn stress_outputs_independent_of_kernel_threads() {
+    let (o1, s1, t1) = run_stress(1);
+    let (o4, s4, t4) = run_stress(4);
+    assert_eq!(t1, t4, "workload must be deterministic");
+    assert_eq!(o1, o4, "outputs must not depend on KernelConfig::threads");
+    assert_metrics_consistent(&s1, &t1);
+    assert_metrics_consistent(&s4, &t4);
+    // timing-dependent metrics (cycles, batches) may differ between runs,
+    // but the timing-independent sums must agree
+    assert_eq!(s1.skip_steps, s4.skip_steps);
+    assert_eq!(s1.fused_rows, s4.fused_rows);
+    assert_eq!(s1.kv_appends, s4.kv_appends);
+}

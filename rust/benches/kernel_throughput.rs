@@ -9,7 +9,11 @@
 
 use flashd::bench_harness::suites::{SWEEP_NQ, SWEEP_SHAPES, SWEEP_THREADS, SWEEP_TILES};
 use flashd::kernels::flashd as fd;
-use flashd::kernels::{batch, flash1, flash2, naive, tiled, AttnProblem, BlockJob, KernelConfig, RowJob};
+use flashd::kernels::{
+    batch, flash1, flash2, naive, scalar, tiled, AttnProblem, BlockJob, KernelConfig, KvRef,
+    KvRowJob, RowJob, SigmoidMode,
+};
+use flashd::numerics::quant::{quantize_bf16, quantize_fp8};
 use flashd::numerics::{Bf16, Fp8E4M3};
 use flashd::pwl::{LnPwl, SigmoidPwl};
 use flashd::util::bench::{bb, Bench};
@@ -162,6 +166,7 @@ fn main() {
                 threads,
                 skip: fd::SkipCriterion::None,
                 block_q: 1,
+                ..KernelConfig::default()
             };
             let t = b.bench_throughput(
                 &format!("batch rows=32 T={threads} n={n} d={d}"),
@@ -195,6 +200,110 @@ fn main() {
     b.bench("flash2 bf16 exact-nonlin n=256 d=32", || {
         bb(flash2::attention_generic::<Bf16>(&p.q, &p.k, &p.v, 256, 32, 1.0));
     });
+
+    println!("\n=== precision ladder: SIMD primitives / quantized KV / PWL sigmoid ===");
+    {
+        let (n, d) = (2048usize, 64usize);
+        // (a) hot-loop primitives: crate-level dot/axpy_blend (vectorized
+        // under --features simd, identical to scalar otherwise) vs the
+        // always-compiled scalar reference, over one full KV stream.
+        let p = AttnProblem::random(&mut rng, 1, n, d, 2.0);
+        let mut o = vec![0.0f32; d];
+        let t_vec =
+            b.bench_throughput(&format!("primitives crate  n={n} d={d}"), n as f64, "pair", || {
+                let mut s = 0.0f32;
+                for i in 0..n {
+                    s += flashd::kernels::dot(&p.q, &p.k[i * d..(i + 1) * d]);
+                    flashd::kernels::axpy_blend(&mut o, &p.v[i * d..(i + 1) * d], 0.125);
+                }
+                bb((s, o[0]));
+            });
+        let t_sca =
+            b.bench_throughput(&format!("primitives scalar n={n} d={d}"), n as f64, "pair", || {
+                let mut s = 0.0f32;
+                for i in 0..n {
+                    s += scalar::dot(&p.q, &p.k[i * d..(i + 1) * d]);
+                    scalar::axpy_blend(&mut o, &p.v[i * d..(i + 1) * d], 0.125);
+                }
+                bb((s, o[0]));
+            });
+        // == 1.0 by construction on the default (scalar) build; the real
+        // ratio comes from the nightly --features simd CI leg.
+        b.note("simd_over_scalar_n2048_d64", t_sca / t_vec);
+
+        // (b) quantized KV streaming: 8 decode rows over a (2048, 64) KV
+        // context each — the bandwidth-bound serving shape. Single thread
+        // and no skipping so the ratio isolates the memory-path change.
+        let heads = 8usize;
+        let ps: Vec<AttnProblem> =
+            (0..heads).map(|_| AttnProblem::random(&mut rng, 1, n, d, 2.0)).collect();
+        let cfg = KernelConfig {
+            skip: fd::SkipCriterion::None,
+            threads: 1,
+            ..KernelConfig::default()
+        };
+        let mut out = vec![0.0f32; heads * d];
+        let mut scratch = batch::BatchScratch::new();
+        let jobs32: Vec<KvRowJob> = ps
+            .iter()
+            .map(|p| KvRowJob {
+                q: &p.q,
+                k: KvRef::F32(p.k.as_slice()),
+                v: KvRef::F32(p.v.as_slice()),
+                n,
+                d,
+                scale: 1.0,
+            })
+            .collect();
+        let pairs = (heads * n) as f64;
+        let t32 = b.bench_throughput(&format!("kv-rows f32  h={heads} nkv={n} d={d}"), pairs, "pair", || {
+            bb(batch::run_kv_rows_into_with(&cfg, &jobs32, d, &mut out, &mut scratch));
+        });
+        let st16: Vec<(Vec<u16>, Vec<u16>)> =
+            ps.iter().map(|p| (quantize_bf16(&p.k), quantize_bf16(&p.v))).collect();
+        let jobs16: Vec<KvRowJob> = ps
+            .iter()
+            .zip(&st16)
+            .map(|(p, (k, v))| KvRowJob {
+                q: &p.q,
+                k: KvRef::Bf16(k.as_slice()),
+                v: KvRef::Bf16(v.as_slice()),
+                n,
+                d,
+                scale: 1.0,
+            })
+            .collect();
+        let t16 = b.bench_throughput(&format!("kv-rows bf16 h={heads} nkv={n} d={d}"), pairs, "pair", || {
+            bb(batch::run_kv_rows_into_with(&cfg, &jobs16, d, &mut out, &mut scratch));
+        });
+        b.note("bf16_kv_over_f32_nkv2048_d64", t32 / t16);
+        let st8: Vec<(Vec<u8>, Vec<u8>)> =
+            ps.iter().map(|p| (quantize_fp8(&p.k), quantize_fp8(&p.v))).collect();
+        let jobs8: Vec<KvRowJob> = ps
+            .iter()
+            .zip(&st8)
+            .map(|(p, (k, v))| KvRowJob {
+                q: &p.q,
+                k: KvRef::Fp8(k.as_slice()),
+                v: KvRef::Fp8(v.as_slice()),
+                n,
+                d,
+                scale: 1.0,
+            })
+            .collect();
+        let t8 = b.bench_throughput(&format!("kv-rows fp8  h={heads} nkv={n} d={d}"), pairs, "pair", || {
+            bb(batch::run_kv_rows_into_with(&cfg, &jobs8, d, &mut out, &mut scratch));
+        });
+        b.note("fp8_kv_over_f32_nkv2048_d64", t32 / t8);
+
+        // (c) PWL sigmoid fast path: same rows, exact transcendentals
+        // (the f32 baseline above) vs the 8-segment table pair.
+        let cfg_pwl = KernelConfig { sigmoid: SigmoidMode::Pwl { segments: 8 }, ..cfg };
+        let t_pwl = b.bench_throughput(&format!("kv-rows pwl8 h={heads} nkv={n} d={d}"), pairs, "pair", || {
+            bb(batch::run_kv_rows_into_with(&cfg_pwl, &jobs32, d, &mut out, &mut scratch));
+        });
+        b.note("pwl_sigmoid_over_exact_n2048_d64", t32 / t_pwl);
+    }
 
     println!("\n=== PJRT artifact latency (iso-performance check) ===");
     match flashd::runtime::open_default() {

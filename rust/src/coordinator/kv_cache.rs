@@ -6,8 +6,112 @@
 //! head_dim) flat with the live prefix `len` valid and the tail zero-padded
 //! (the artifacts mask by `kv_len`, so padding content is irrelevant —
 //! zeros keep buffers deterministic).
+//!
+//! Since the quantized-KV PR, both tensors live in a [`KvStore`]: f32 at
+//! full precision (the default, bit-identical to the old layout) or
+//! bf16/fp8 quantized *at rest*. Quantization happens once on append;
+//! reads hand out a [`KvRef`] that the kernels dequantize tile-by-tile
+//! into per-worker scratch, so a bf16 session holds half — and an fp8
+//! session a quarter — of the f32 cache bytes, which the LRU byte budget
+//! accounts for exactly.
 
 use std::collections::HashMap;
+
+use crate::numerics::bf16::Bf16;
+use crate::numerics::fp8::Fp8E4M3;
+use crate::numerics::quant::{KvPrecision, KvRef};
+
+/// Backing storage for one K or V tensor at a chosen [`KvPrecision`].
+/// The f32 variant reads back bit-exactly; the quantized variants are a
+/// round-to-nearest-even projection applied once at append time (so the
+/// kernel output over a quantized store equals the f32 kernel run over
+/// the dequantized array, bit for bit).
+#[derive(Clone, Debug)]
+pub enum KvStore {
+    F32(Vec<f32>),
+    Bf16(Vec<u16>),
+    Fp8(Vec<u8>),
+}
+
+impl KvStore {
+    /// An all-zero store of `n` elements (zero encodes exactly in every
+    /// supported format, so padding stays deterministic).
+    pub fn zeros(prec: KvPrecision, n: usize) -> KvStore {
+        match prec {
+            KvPrecision::F32 => KvStore::F32(vec![0.0; n]),
+            KvPrecision::Bf16 => KvStore::Bf16(vec![0u16; n]),
+            KvPrecision::Fp8 => KvStore::Fp8(vec![0u8; n]),
+        }
+    }
+
+    pub fn precision(&self) -> KvPrecision {
+        match self {
+            KvStore::F32(_) => KvPrecision::F32,
+            KvStore::Bf16(_) => KvPrecision::Bf16,
+            KvStore::Fp8(_) => KvPrecision::Fp8,
+        }
+    }
+
+    /// Element count (not bytes).
+    pub fn len(&self) -> usize {
+        match self {
+            KvStore::F32(b) => b.len(),
+            KvStore::Bf16(b) => b.len(),
+            KvStore::Fp8(b) => b.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Resident bytes of the backing buffer.
+    pub fn bytes(&self) -> usize {
+        self.len() * self.precision().bytes_per_elem()
+    }
+
+    /// Borrow the storage as the kernel-facing [`KvRef`].
+    pub fn as_kv(&self) -> KvRef<'_> {
+        match self {
+            KvStore::F32(b) => KvRef::F32(b),
+            KvStore::Bf16(b) => KvRef::Bf16(b),
+            KvStore::Fp8(b) => KvRef::Fp8(b),
+        }
+    }
+
+    /// Quantize-and-write `src` at element offset `at` (the single
+    /// rounding point of the storage path).
+    pub fn store(&mut self, at: usize, src: &[f32]) {
+        match self {
+            KvStore::F32(b) => b[at..at + src.len()].copy_from_slice(src),
+            KvStore::Bf16(b) => {
+                for (dst, &x) in b[at..at + src.len()].iter_mut().zip(src) {
+                    *dst = Bf16::from_f32(x).to_bits();
+                }
+            }
+            KvStore::Fp8(b) => {
+                for (dst, &x) in b[at..at + src.len()].iter_mut().zip(src) {
+                    *dst = Fp8E4M3::from_f32(x).to_bits();
+                }
+            }
+        }
+    }
+
+    /// Quantize-and-append `src` at the end of the buffer.
+    pub fn extend_from_f32(&mut self, src: &[f32]) {
+        match self {
+            KvStore::F32(b) => b.extend_from_slice(src),
+            KvStore::Bf16(b) => b.extend(src.iter().map(|&x| Bf16::from_f32(x).to_bits())),
+            KvStore::Fp8(b) => b.extend(src.iter().map(|&x| Fp8E4M3::from_f32(x).to_bits())),
+        }
+    }
+
+    /// Dequantize the whole buffer (test/debug convenience; the hot paths
+    /// dequantize tile-by-tile through [`KvRef`] instead).
+    pub fn to_f32_vec(&self) -> Vec<f32> {
+        self.as_kv().to_f32_vec()
+    }
+}
 
 /// One session's cached keys/values.
 #[derive(Clone, Debug)]
@@ -17,24 +121,37 @@ pub struct KvCache {
     pub cap: usize,
     pub len: usize,
     /// (heads, cap, head_dim) flat, zero-padded beyond `len`.
-    pub k: Vec<f32>,
-    pub v: Vec<f32>,
+    pub k: KvStore,
+    pub v: KvStore,
 }
 
 impl KvCache {
     pub fn new(heads: usize, head_dim: usize, cap: usize) -> KvCache {
+        KvCache::with_precision(heads, head_dim, cap, KvPrecision::F32)
+    }
+
+    pub fn with_precision(
+        heads: usize,
+        head_dim: usize,
+        cap: usize,
+        prec: KvPrecision,
+    ) -> KvCache {
         KvCache {
             heads,
             head_dim,
             cap,
             len: 0,
-            k: vec![0.0; heads * cap * head_dim],
-            v: vec![0.0; heads * cap * head_dim],
+            k: KvStore::zeros(prec, heads * cap * head_dim),
+            v: KvStore::zeros(prec, heads * cap * head_dim),
         }
     }
 
+    pub fn precision(&self) -> KvPrecision {
+        self.k.precision()
+    }
+
     pub fn bytes(&self) -> usize {
-        (self.k.len() + self.v.len()) * std::mem::size_of::<f32>()
+        self.k.bytes() + self.v.bytes()
     }
 
     pub fn remaining(&self) -> usize {
@@ -55,8 +172,8 @@ impl KvCache {
             for i in 0..n {
                 let src = (h * n + i) * self.head_dim;
                 let dst = (h * self.cap + self.len + i) * self.head_dim;
-                self.k[dst..dst + self.head_dim].copy_from_slice(&k_new[src..src + self.head_dim]);
-                self.v[dst..dst + self.head_dim].copy_from_slice(&v_new[src..src + self.head_dim]);
+                self.k.store(dst, &k_new[src..src + self.head_dim]);
+                self.v.store(dst, &v_new[src..src + self.head_dim]);
             }
         }
         self.len += n;
@@ -64,7 +181,8 @@ impl KvCache {
     }
 }
 
-/// Session store with LRU eviction under a byte budget.
+/// Session store with LRU eviction under a byte budget. All sessions
+/// share one storage precision, fixed at construction.
 #[derive(Debug)]
 pub struct SessionStore {
     sessions: HashMap<u64, KvCache>,
@@ -73,11 +191,23 @@ pub struct SessionStore {
     pub max_bytes: usize,
     pub bytes: usize,
     pub evictions: u64,
+    pub precision: KvPrecision,
 }
 
 impl SessionStore {
     pub fn new(max_bytes: usize) -> SessionStore {
-        SessionStore { sessions: HashMap::new(), lru: Vec::new(), max_bytes, bytes: 0, evictions: 0 }
+        SessionStore::with_precision(max_bytes, KvPrecision::F32)
+    }
+
+    pub fn with_precision(max_bytes: usize, precision: KvPrecision) -> SessionStore {
+        SessionStore {
+            sessions: HashMap::new(),
+            lru: Vec::new(),
+            max_bytes,
+            bytes: 0,
+            evictions: 0,
+            precision,
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -102,7 +232,7 @@ impl SessionStore {
     /// Create a session (evicting LRU sessions if needed). Replaces any
     /// existing cache under the same id.
     pub fn create(&mut self, id: u64, heads: usize, head_dim: usize, cap: usize) -> Result<(), String> {
-        let cache = KvCache::new(heads, head_dim, cap);
+        let cache = KvCache::with_precision(heads, head_dim, cap, self.precision);
         let need = cache.bytes();
         if need > self.max_bytes {
             return Err(format!("session of {need} bytes exceeds budget {}", self.max_bytes));
@@ -146,7 +276,7 @@ impl SessionStore {
     /// so caches an earlier batch in the cycle reads can't vanish between
     /// lowering and kernel submission.
     pub fn would_evict(&self, id: u64, heads: usize, head_dim: usize, cap: usize) -> bool {
-        let need = 2 * heads * cap * head_dim * std::mem::size_of::<f32>();
+        let need = 2 * heads * cap * head_dim * self.precision.bytes_per_elem();
         let freed = self.sessions.get(&id).map(KvCache::bytes).unwrap_or(0);
         self.bytes - freed + need > self.max_bytes
     }
@@ -176,6 +306,9 @@ impl SessionStore {
             if c.len > c.cap {
                 return Err("cache len > cap".into());
             }
+            if c.precision() != self.precision || c.v.precision() != self.precision {
+                return Err("cache precision != store precision".into());
+            }
         }
         Ok(())
     }
@@ -191,10 +324,11 @@ mod tests {
         // two heads, one pair: head0 = [1,2,3], head1 = [4,5,6]
         c.append(&[1., 2., 3., 4., 5., 6.], &[9., 9., 9., 8., 8., 8.], 1).unwrap();
         assert_eq!(c.len, 1);
-        assert_eq!(&c.k[0..3], &[1., 2., 3.]); // head 0, slot 0
-        assert_eq!(&c.k[4 * 3..4 * 3 + 3], &[4., 5., 6.]); // head 1, slot 0
+        let kf = c.k.to_f32_vec();
+        assert_eq!(&kf[0..3], &[1., 2., 3.]); // head 0, slot 0
+        assert_eq!(&kf[4 * 3..4 * 3 + 3], &[4., 5., 6.]); // head 1, slot 0
         c.append(&[10., 11., 12., 13., 14., 15.], &[0.; 6], 1).unwrap();
-        assert_eq!(&c.k[3..6], &[10., 11., 12.]); // head 0, slot 1
+        assert_eq!(&c.k.to_f32_vec()[3..6], &[10., 11., 12.]); // head 0, slot 1
         assert_eq!(c.remaining(), 2);
     }
 
@@ -203,10 +337,43 @@ mod tests {
         let mut c = KvCache::new(1, 2, 2);
         c.append(&[1., 2.], &[3., 4.], 1).unwrap();
         c.append(&[5., 6.], &[7., 8.], 1).unwrap();
-        let before = c.k.clone();
+        let before = c.k.to_f32_vec();
         assert!(c.append(&[9., 9.], &[9., 9.], 1).is_err());
-        assert_eq!(c.k, before);
+        assert_eq!(c.k.to_f32_vec(), before);
         assert_eq!(c.len, 2);
+    }
+
+    #[test]
+    fn quantized_append_is_single_rounding_projection() {
+        use crate::numerics::quant::{quantize_bf16, quantize_fp8};
+        let vals = [0.1f32, -1.75, 3.25, 0.0, 448.0, -0.007];
+        for prec in [KvPrecision::Bf16, KvPrecision::Fp8] {
+            let mut c = KvCache::with_precision(1, 3, 2, prec);
+            c.append(&vals[..3], &vals[3..], 1).unwrap();
+            let kf = c.k.to_f32_vec();
+            let want: Vec<f32> = match prec {
+                KvPrecision::Bf16 => {
+                    quantize_bf16(&vals[..3]).iter().map(|&b| Bf16(b).to_f32()).collect()
+                }
+                _ => quantize_fp8(&vals[..3]).iter().map(|&b| Fp8E4M3(b).to_f32()).collect(),
+            };
+            assert_eq!(&kf[..3], &want[..], "{prec:?}");
+            // appending the dequantized values back is a fixed point
+            let mut c2 = KvCache::with_precision(1, 3, 2, prec);
+            c2.append(&kf[..3], &c.v.to_f32_vec()[..3], 1).unwrap();
+            assert_eq!(c2.k.to_f32_vec()[..3], kf[..3], "{prec:?}");
+        }
+    }
+
+    #[test]
+    fn bytes_track_precision() {
+        let f = KvCache::new(2, 4, 8);
+        let b = KvCache::with_precision(2, 4, 8, KvPrecision::Bf16);
+        let q = KvCache::with_precision(2, 4, 8, KvPrecision::Fp8);
+        assert_eq!(f.bytes(), 2 * 2 * 4 * 8 * 4);
+        assert_eq!(b.bytes(), f.bytes() / 2);
+        assert_eq!(q.bytes(), f.bytes() / 4);
+        assert_eq!(b.precision(), KvPrecision::Bf16);
     }
 
     #[test]
@@ -225,6 +392,21 @@ mod tests {
     }
 
     #[test]
+    fn quantized_store_fits_more_sessions_in_budget() {
+        // 128B fits two f32 sessions of this geometry, but four bf16 ones.
+        let mut s = SessionStore::with_precision(128, KvPrecision::Bf16);
+        for id in 1..=4 {
+            s.create(id, 1, 2, 4).unwrap();
+        }
+        assert_eq!(s.len(), 4);
+        assert_eq!(s.evictions, 0);
+        s.check_invariants().unwrap();
+        s.create(5, 1, 2, 4).unwrap(); // fifth evicts the LRU
+        assert_eq!(s.evictions, 1);
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
     fn borrow_many_takes_simultaneous_refs() {
         let mut s = SessionStore::new(1024);
         s.create(1, 1, 2, 4).unwrap();
@@ -234,9 +416,12 @@ mod tests {
         // duplicates and repeats are fine; all refs are alive at once
         let caches = s.borrow_many(&[1, 2, 1]);
         assert_eq!(caches.len(), 3);
-        assert_eq!(caches[0].unwrap().k[0], 1.0);
-        assert_eq!(caches[1].unwrap().k[0], 5.0);
-        assert_eq!(caches[2].unwrap().k[0], caches[0].unwrap().k[0]);
+        assert_eq!(caches[0].unwrap().k.to_f32_vec()[0], 1.0);
+        assert_eq!(caches[1].unwrap().k.to_f32_vec()[0], 5.0);
+        assert_eq!(
+            caches[2].unwrap().k.to_f32_vec()[0],
+            caches[0].unwrap().k.to_f32_vec()[0]
+        );
         // a missing id degrades to None in its slot, not a whole failure
         let partial = s.borrow_many(&[1, 9]);
         assert!(partial[0].is_some() && partial[1].is_none());

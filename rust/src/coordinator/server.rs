@@ -24,13 +24,15 @@
 //!    reads, or it is a prefill whose session creation could LRU-evict a
 //!    cache while the group still borrows caches — flushes the group
 //!    first, so fused results are bit-identical to serial dispatch.
-//! 4. A flush lowers every batch in the group to one [`BlockJob`] per
+//! 4. A flush lowers every batch in the group to one [`KvBlockJob`] per
 //!    head over its `(total_q, kv_len)` problem — query rows borrowed
 //!    from the requests (gathered into a contiguous block only for
 //!    multi-member decode fusions), K/V borrowed in place from the
-//!    session caches with no copies or padding — and submits the whole
-//!    job list through a single [`AttnEngine::execute_fused`] call on the
-//!    batched driver's thread pool.
+//!    session caches with no copies or padding (quantized caches are
+//!    referenced as [`KvRef`]s and dequantized tile-by-tile inside the
+//!    kernel workers) — and submits the whole job list through a single
+//!    [`AttnEngine::execute_fused`] call on the batched driver's thread
+//!    pool.
 //! 5. The flat output is scattered back into per-member `(heads, nq,
 //!    head_dim)` responses by member row span.
 //!
@@ -46,9 +48,11 @@ use super::request::{AttentionRequest, AttentionResponse, RequestKind, ShapeSig}
 use super::router::{Route, Router};
 use super::scheduler::{Policy, Rejected, Scheduler};
 use crate::kernels::batch::{
-    run_blocks_flat_into_with, run_blocks_into_with, BatchScratch, BlockJob, KernelConfig,
+    run_blocks_into_with, run_kv_blocks_flat_into_with, BatchScratch, BlockJob, KernelConfig,
+    KvBlockJob,
 };
 use crate::kernels::flashd::SkipStats;
+use crate::numerics::quant::KvRef;
 use crate::runtime::{lit_f32, lit_i32, to_vec_f32, Runtime};
 use anyhow::{anyhow, Result};
 use std::cell::RefCell;
@@ -75,9 +79,12 @@ pub trait AttnEngine {
 
     /// Fused dispatch: execute a whole drain cycle's lowered block jobs
     /// as ONE kernel submission. `out` is the flat concatenation of job
-    /// outputs (job `i` owns the next `nq_i * d_i` floats). Only called
-    /// when [`AttnEngine::supports_fused`] returns true.
-    fn execute_fused(&self, jobs: &[BlockJob<'_>], out: &mut [f32]) -> Result<SkipStats> {
+    /// outputs (job `i` owns the next `nq_i * d_i` floats). K/V arrive as
+    /// [`KvRef`]s borrowed straight from the session caches, in whatever
+    /// storage precision the store holds — `F32` sessions execute the
+    /// zero-copy bit-exact path. Only called when
+    /// [`AttnEngine::supports_fused`] returns true.
+    fn execute_fused(&self, jobs: &[KvBlockJob<'_>], out: &mut [f32]) -> Result<SkipStats> {
         let _ = (jobs, out);
         Err(anyhow!("engine does not support fused dispatch"))
     }
@@ -175,8 +182,8 @@ impl AttnEngine for NaiveEngine {
         true
     }
 
-    fn execute_fused(&self, jobs: &[BlockJob<'_>], out: &mut [f32]) -> Result<SkipStats> {
-        Ok(run_blocks_flat_into_with(&self.kernel, jobs, out, &mut self.scratch.borrow_mut()))
+    fn execute_fused(&self, jobs: &[KvBlockJob<'_>], out: &mut [f32]) -> Result<SkipStats> {
+        Ok(run_kv_blocks_flat_into_with(&self.kernel, jobs, out, &mut self.scratch.borrow_mut()))
     }
 }
 
@@ -192,9 +199,12 @@ pub struct CoordinatorConfig {
     /// How long the engine waits for more arrivals before dispatching a
     /// non-full batch.
     pub batch_window: Duration,
-    /// Tile/thread/skip knobs for the software kernel path (honored by
-    /// [`NaiveEngine`]-backed coordinators via [`Coordinator::start_naive`];
-    /// the PJRT path executes whole compiled blocks and ignores it).
+    /// Tile/thread/skip/sigmoid/KV-precision knobs for the software kernel
+    /// path (honored by [`NaiveEngine`]-backed coordinators via
+    /// [`Coordinator::start_naive`]; the PJRT path executes whole compiled
+    /// blocks and ignores all but `kv_precision`, which still selects the
+    /// session cache storage format — quantized caches are dequantized
+    /// into the padded block tensors at pack time).
     pub kernel: KernelConfig,
     /// Fused cross-session dispatch: lower a whole drain cycle into one
     /// kernel submission when the engine supports it. `false` restores
@@ -329,7 +339,10 @@ struct Pending {
 fn engine_loop<E: AttnEngine>(engine: E, rx: Receiver<Msg>, cfg: CoordinatorConfig, metrics: Arc<Metrics>) {
     let router = engine.router();
     let fused = cfg.fused && engine.supports_fused();
-    let mut sessions = SessionStore::new(cfg.kv_budget_bytes);
+    // Session caches store KV at the kernel config's precision; f32 (the
+    // default) keeps every downstream path bit-identical to the
+    // unquantized coordinator.
+    let mut sessions = SessionStore::with_precision(cfg.kv_budget_bytes, cfg.kernel.kv_precision);
     let mut sched = Scheduler::new(cfg.queue_capacity, cfg.policy);
     sched.drain_max = cfg.drain_cycle.max(1);
     let mut replies: std::collections::HashMap<u64, Sender<AttentionResponse>> = std::collections::HashMap::new();
@@ -587,14 +600,14 @@ fn pack_execute_split<E: AttnEngine>(
     let (h, d) = (r.sig.heads, r.sig.head_dim);
     let route = &r.route;
     let kv_len = r.kv_len;
-    let (kv_src_k, kv_src_v, kv_src_cap): (&[f32], &[f32], usize) = match r.kv {
+    let (kv_src_k, kv_src_v, kv_src_cap): (KvRef<'_>, KvRef<'_>, usize) = match r.kv {
         KvSrc::Session(sid) => {
             let cache = sessions.get(sid).ok_or_else(|| anyhow!("session vanished"))?;
-            (&cache.k, &cache.v, cache.cap)
+            (cache.k.as_kv(), cache.v.as_kv(), cache.cap)
         }
         KvSrc::Inline => {
             let first = &r.members[0].req;
-            (&first.k, &first.v, first.nkv)
+            (KvRef::F32(&first.k), KvRef::F32(&first.v), first.nkv)
         }
     };
 
@@ -612,12 +625,15 @@ fn pack_execute_split<E: AttnEngine>(
     }
     let mut k = vec![0.0f32; h * route.kv_slots * d];
     let mut v = vec![0.0f32; h * route.kv_slots * d];
+    // For f32 sessions this is a straight copy; quantized sessions
+    // dequantize into the padded block tensors (the per-route engines
+    // consume f32 regardless of storage precision).
     for hh in 0..h {
         let src = hh * kv_src_cap * d;
         let dst = hh * route.kv_slots * d;
         let n = kv_len * d;
-        k[dst..dst + n].copy_from_slice(&kv_src_k[src..src + n]);
-        v[dst..dst + n].copy_from_slice(&kv_src_v[src..src + n]);
+        kv_src_k.load_into(src, src + n, &mut k[dst..dst + n]);
+        kv_src_v.load_into(src, src + n, &mut v[dst..dst + n]);
     }
 
     let out = engine.execute(route, &q, &k, &v, kv_len)?;
@@ -732,23 +748,25 @@ fn flush_group<E: AttnEngine>(
         })
         .collect();
     let mut sess_caches = sessions.borrow_many(&sess_ids).into_iter();
-    let srcs: Vec<Option<(&[f32], &[f32], usize)>> = group
+    let srcs: Vec<Option<(KvRef<'_>, KvRef<'_>, usize)>> = group
         .iter()
         .map(|r| match r.kv {
             KvSrc::Session(_) => sess_caches
                 .next()
                 .expect("one borrow per session-backed batch")
-                .map(|c| (c.k.as_slice(), c.v.as_slice(), c.cap)),
+                .map(|c| (c.k.as_kv(), c.v.as_kv(), c.cap)),
             KvSrc::Inline => {
                 let first = &r.members[0].req;
-                Some((first.k.as_slice(), first.v.as_slice(), first.nkv))
+                Some((KvRef::F32(first.k.as_slice()), KvRef::F32(first.v.as_slice()), first.nkv))
             }
         })
         .collect();
 
-    // Lower: one BlockJob per (batch, head), covering the batch's whole
-    // query block against the head's live KV prefix, borrowed in place.
-    let mut jobs: Vec<BlockJob<'_>> = Vec::new();
+    // Lower: one KvBlockJob per (batch, head), covering the batch's whole
+    // query block against the head's live KV prefix, borrowed in place —
+    // quantized session caches are referenced as-is and only dequantized
+    // tile-by-tile inside the kernel workers.
+    let mut jobs: Vec<KvBlockJob<'_>> = Vec::new();
     let mut offsets: Vec<usize> = vec![usize::MAX; group.len()];
     let mut off = 0usize;
     for (bi, (r, src)) in group.iter().zip(&srcs).enumerate() {
@@ -759,10 +777,10 @@ fn flush_group<E: AttnEngine>(
         let scale = (d as f32).powf(-0.5);
         let q: &[f32] = staged[bi].as_deref().unwrap_or(&r.members[0].req.q);
         for hh in 0..h {
-            jobs.push(BlockJob {
+            jobs.push(KvBlockJob {
                 q: &q[hh * r.total_q * d..(hh + 1) * r.total_q * d],
-                k: &ks[hh * cap * d..hh * cap * d + r.kv_len * d],
-                v: &vs[hh * cap * d..hh * cap * d + r.kv_len * d],
+                k: ks.slice(hh * cap * d, hh * cap * d + r.kv_len * d),
+                v: vs.slice(hh * cap * d, hh * cap * d + r.kv_len * d),
                 nq: r.total_q,
                 n: r.kv_len,
                 d,
@@ -1092,6 +1110,56 @@ mod tests {
         }
         assert_eq!(outs2_f, recv_ok(&rxs2_s));
         assert_eq!(sess_f.get(1).unwrap().len, sess_s.get(1).unwrap().len);
+    }
+
+    #[test]
+    fn quantized_sessions_fused_matches_serial() {
+        use crate::numerics::quant::KvPrecision;
+        // Same drain cycle served fused and serially over bf16 session
+        // caches: both paths read the identical quantized store, so the
+        // outputs must be bit-identical to each other (and the store half
+        // the bytes of an f32 one).
+        let router = test_router();
+        let kernel = KernelConfig {
+            tile: 8,
+            threads: 2,
+            kv_precision: KvPrecision::Bf16,
+            ..KernelConfig::default()
+        };
+        let engine = NaiveEngine::with_kernel(router.clone(), kernel);
+        let policy = BatchPolicy::default();
+        let reqs = vec![
+            rand_req(1, RequestKind::Prefill { session: 1 }, 1, 12, 200),
+            rand_req(2, RequestKind::Stateless, 2, 17, 201),
+        ];
+        let batches = form_batches(&reqs, &policy);
+
+        let m_f = Arc::new(Metrics::new());
+        let mut sess_f = SessionStore::with_precision(256 << 20, KvPrecision::Bf16);
+        let (mut pend_f, rxs_f) = mk_pend(reqs.clone());
+        serve_cycle_fused(&engine, &router, &mut sess_f, &batches, &mut pend_f, &m_f);
+        let outs_f = recv_ok(&rxs_f);
+
+        let m_s = Arc::new(Metrics::new());
+        let mut sess_s = SessionStore::with_precision(256 << 20, KvPrecision::Bf16);
+        let (mut pend_s, rxs_s) = mk_pend(reqs);
+        for b in &batches {
+            serve_batch(&engine, &router, &mut sess_s, b, &mut pend_s, &m_s);
+        }
+        assert_eq!(outs_f, recv_ok(&rxs_s));
+        let c = sess_f.get(1).unwrap();
+        // bf16 store: 2 tensors x 2 bytes per element (half the f32 size)
+        assert_eq!(c.bytes(), 2 * 2 * c.heads * c.cap * c.head_dim);
+        // follow-up decode over the quantized cache answers on both paths
+        let dec = vec![rand_req(3, RequestKind::Decode { session: 1 }, 1, 1, 202)];
+        let db = form_batches(&dec, &policy);
+        let (mut pd_f, rd_f) = mk_pend(dec.clone());
+        serve_cycle_fused(&engine, &router, &mut sess_f, &db, &mut pd_f, &m_f);
+        let (mut pd_s, rd_s) = mk_pend(dec);
+        for b in &db {
+            serve_batch(&engine, &router, &mut sess_s, b, &mut pd_s, &m_s);
+        }
+        assert_eq!(recv_ok(&rd_f), recv_ok(&rd_s));
     }
 
     #[test]

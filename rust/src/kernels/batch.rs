@@ -34,12 +34,19 @@
 //!   lists, not KV-sized buffers.
 //!
 //! [`KernelConfig`] bundles the knobs every caller threads through:
-//! KV tile length, query block length, worker count, and the skip
-//! criterion.
+//! KV tile length, query block length, worker count, skip criterion,
+//! sigmoid evaluation mode ([`SigmoidMode`]), and KV storage precision
+//! ([`KvPrecision`]). The quantized entry points ([`KvRowJob`],
+//! [`KvBlockJob`], [`run_kv_rows_into_with`],
+//! [`run_kv_blocks_flat_into_with`]) accept K/V as [`KvRef`] in any
+//! storage precision; `F32` references take a zero-copy path that is
+//! bit-identical to the plain drivers.
 
-use super::flashd::{SkipCriterion, SkipStats};
+use super::flashd::{SigmoidMode, SkipCriterion, SkipStats};
 use super::qblock::{self, QScratch, DEFAULT_BLOCK_Q};
-use super::tiled::{self, DEFAULT_TILE};
+use super::tiled::{self, SigmoidEval, DEFAULT_TILE};
+use crate::numerics::quant::{KvPrecision, KvRef};
+use crate::pwl::SigTables;
 
 /// Tuning knobs for the tiled/batched kernel engine, threaded through
 /// `model::engine`, `model::decode`, and `coordinator::server`.
@@ -54,6 +61,18 @@ pub struct KernelConfig {
     pub threads: usize,
     /// Saturation-skip criterion applied per row.
     pub skip: SkipCriterion,
+    /// Per-step nonlinearity evaluation: the exact `exp`/`ln_1p` pair
+    /// (default, bit-identical to the scalar reference) or the paper's
+    /// §IV-B piecewise-linear sigmoid/ln tables (opt-in fast path with a
+    /// measured error envelope). Tables are fitted once per worker and
+    /// cached in its [`BatchScratch`] slot.
+    pub sigmoid: SigmoidMode,
+    /// Storage precision for KV operands. The kernels themselves accept
+    /// any [`KvRef`] regardless of this knob; the storage layers
+    /// (`coordinator::kv_cache`, `model::decode`) read it to decide how
+    /// caches are held at rest. `F32` keeps every path bit-identical to
+    /// the unquantized engine.
+    pub kv_precision: KvPrecision,
 }
 
 impl Default for KernelConfig {
@@ -63,6 +82,8 @@ impl Default for KernelConfig {
             block_q: DEFAULT_BLOCK_Q,
             threads: default_threads(),
             skip: SkipCriterion::None,
+            sigmoid: SigmoidMode::Exact,
+            kv_precision: KvPrecision::F32,
         }
     }
 }
@@ -105,14 +126,79 @@ pub struct BlockJob<'a> {
     pub causal: bool,
 }
 
+/// [`RowJob`] over possibly-quantized KV: the query stays f32, while K and
+/// V arrive as [`KvRef`] in whatever storage precision the cache holds.
+/// `F32` references execute the zero-copy bit-exact path; `Bf16`/`Fp8`
+/// references are dequantized tile-by-tile into worker scratch.
+#[derive(Copy, Clone, Debug)]
+pub struct KvRowJob<'a> {
+    pub q: &'a [f32],
+    pub k: KvRef<'a>,
+    pub v: KvRef<'a>,
+    pub n: usize,
+    pub d: usize,
+    pub scale: f32,
+}
+
+/// [`BlockJob`] over possibly-quantized KV — the fused serving submission
+/// unit once session caches hold compressed KV. Semantics (causal
+/// staircase, splitting, determinism) match [`BlockJob`] exactly; an
+/// all-`F32` submission is bit-identical to the f32 driver.
+#[derive(Copy, Clone, Debug)]
+pub struct KvBlockJob<'a> {
+    pub q: &'a [f32],
+    pub k: KvRef<'a>,
+    pub v: KvRef<'a>,
+    pub nq: usize,
+    pub n: usize,
+    pub d: usize,
+    pub scale: f32,
+    pub causal: bool,
+}
+
+impl<'a> From<&BlockJob<'a>> for KvBlockJob<'a> {
+    fn from(b: &BlockJob<'a>) -> Self {
+        KvBlockJob {
+            q: b.q,
+            k: KvRef::F32(b.k),
+            v: KvRef::F32(b.v),
+            nq: b.nq,
+            n: b.n,
+            d: b.d,
+            scale: b.scale,
+            causal: b.causal,
+        }
+    }
+}
+
 /// Per-worker scratch: query-block kernel scratch, single-row score
-/// buffer, and gather/output staging for the row-grouping path.
+/// buffer, gather/output staging for the row-grouping path, dequantized
+/// KV tile buffers, and the worker's cached PWL sigmoid tables.
 #[derive(Debug, Default)]
 struct WorkerScratch {
     qs: QScratch,
     row_scores: Vec<f64>,
     qbuf: Vec<f32>,
     obuf: Vec<f32>,
+    ktile: Vec<f32>,
+    vtile: Vec<f32>,
+    sig: Option<SigTables>,
+}
+
+/// Resolve the configured [`SigmoidMode`] into the kernel-level evaluator,
+/// (re)fitting the worker's cached PWL tables only when the requested
+/// segment count differs from the cached fit.
+fn sigmoid_eval<'s>(cfg: &KernelConfig, slot: &'s mut Option<SigTables>) -> SigmoidEval<'s> {
+    match cfg.sigmoid {
+        SigmoidMode::Exact => SigmoidEval::Exact,
+        SigmoidMode::Pwl { segments } => {
+            let segments = segments.max(1);
+            if slot.as_ref().map(SigTables::segments) != Some(segments) {
+                *slot = Some(SigTables::new(segments));
+            }
+            SigmoidEval::Pwl(slot.as_ref().expect("table fitted above"))
+        }
+    }
 }
 
 /// Reusable scratch for the batched driver: one [`WorkerScratch`] slot per
@@ -147,13 +233,32 @@ impl BatchScratch {
 struct Item<'a> {
     q: Option<&'a [f32]>,
     row0: usize,
-    k: &'a [f32],
-    v: &'a [f32],
+    k: KvRef<'a>,
+    v: KvRef<'a>,
     nq: usize,
     n: usize,
     d: usize,
     scale: f32,
     causal: bool,
+}
+
+/// Job types the row-grouping machinery can gather query rows from —
+/// lets [`Item`] and the chunk runners serve both the f32 [`RowJob`]
+/// path and the quantized [`KvRowJob`] path with one implementation.
+trait QRow<'a> {
+    fn q_row(&self) -> &'a [f32];
+}
+
+impl<'a> QRow<'a> for RowJob<'a> {
+    fn q_row(&self) -> &'a [f32] {
+        self.q
+    }
+}
+
+impl<'a> QRow<'a> for KvRowJob<'a> {
+    fn q_row(&self) -> &'a [f32] {
+        self.q
+    }
 }
 
 impl<'a> Item<'a> {
@@ -170,16 +275,16 @@ impl<'a> Item<'a> {
     }
 
     /// The single query row of an `nq == 1` item.
-    fn single_query(&self, jobs: &[RowJob<'a>]) -> &'a [f32] {
+    fn single_query<J: QRow<'a>>(&self, jobs: &[J]) -> &'a [f32] {
         match self.q {
             Some(q) => &q[..self.d],
-            None => &jobs[self.row0].q[..self.d],
+            None => &jobs[self.row0].q_row()[..self.d],
         }
     }
 
     /// The `(nq, d)` query rows, gathering from `jobs` into `qbuf` when
     /// the item came from the row-grouping pass.
-    fn queries<'b>(&self, jobs: &[RowJob<'a>], qbuf: &'b mut Vec<f32>) -> &'b [f32]
+    fn queries<'b, J: QRow<'a>>(&self, jobs: &[J], qbuf: &'b mut Vec<f32>) -> &'b [f32]
     where
         'a: 'b,
     {
@@ -188,7 +293,7 @@ impl<'a> Item<'a> {
         }
         qbuf.clear();
         for j in 0..self.nq {
-            qbuf.extend_from_slice(&jobs[self.row0 + j].q[..self.d]);
+            qbuf.extend_from_slice(&jobs[self.row0 + j].q_row()[..self.d]);
         }
         &qbuf[..]
     }
@@ -239,13 +344,56 @@ fn coalesce<'a>(jobs: &[RowJob<'a>], max_bq: usize) -> Vec<Item<'a>> {
             q: None,
             row0: i,
             // the last row's K/V cover every query's prefix in both modes
+            k: KvRef::F32(last.k),
+            v: KvRef::F32(last.v),
+            nq,
+            n: last.n,
+            d: last.d,
+            scale: last.scale,
+            causal,
+        });
+        i += nq;
+    }
+    items
+}
+
+/// Grouping pass for [`KvRowJob`]s: adjacent rows sharing the exact same
+/// KV references (same variant, base pointer, length, `n`, `d`, `scale`)
+/// coalesce into one query block, so a serving batch over one quantized
+/// cache dequantizes each KV tile once per block instead of once per row.
+/// (The causal-staircase pattern is submitted through [`KvBlockJob`]s by
+/// the block-level callers, so row-level staircase detection isn't
+/// replicated here.)
+fn coalesce_kv<'a>(jobs: &[KvRowJob<'a>], max_bq: usize) -> Vec<Item<'a>> {
+    let max_bq = max_bq.max(1);
+    let mut items = Vec::new();
+    let mut i = 0usize;
+    while i < jobs.len() {
+        let mut nq = 1usize;
+        while nq < max_bq && i + nq < jobs.len() {
+            let p = &jobs[i + nq - 1];
+            let nx = &jobs[i + nq];
+            if nx.d != p.d
+                || nx.scale != p.scale
+                || nx.n != p.n
+                || !KvRef::same(p.k, nx.k)
+                || !KvRef::same(p.v, nx.v)
+            {
+                break;
+            }
+            nq += 1;
+        }
+        let last = &jobs[i + nq - 1];
+        items.push(Item {
+            q: None,
+            row0: i,
             k: last.k,
             v: last.v,
             nq,
             n: last.n,
             d: last.d,
             scale: last.scale,
-            causal,
+            causal: false,
         });
         i += nq;
     }
@@ -258,15 +406,25 @@ fn items_of_blocks<'a>(blocks: &[BlockJob<'a>], cfg: &KernelConfig) -> Vec<Item<
     let max_bq = cfg.block_q.max(1);
     let mut items = Vec::new();
     for b in blocks {
+        push_block_items(&KvBlockJob::from(b), max_bq, &mut items);
+    }
+    items
+}
+
+/// [`items_of_blocks`] over quantized-KV blocks.
+fn items_of_kv_blocks<'a>(blocks: &[KvBlockJob<'a>], cfg: &KernelConfig) -> Vec<Item<'a>> {
+    let max_bq = cfg.block_q.max(1);
+    let mut items = Vec::new();
+    for b in blocks {
         push_block_items(b, max_bq, &mut items);
     }
     items
 }
 
-/// Split a [`BlockJob`] into items of at most `max_bq` queries. Causal
+/// Split a [`KvBlockJob`] into items of at most `max_bq` queries. Causal
 /// sub-blocks keep the global staircase: sub-block queries `a..e` of a
 /// causal block attend `n - nq + 1 + iq` keys for their global index `iq`.
-fn push_block_items<'a>(b: &BlockJob<'a>, max_bq: usize, items: &mut Vec<Item<'a>>) {
+fn push_block_items<'a>(b: &KvBlockJob<'a>, max_bq: usize, items: &mut Vec<Item<'a>>) {
     assert!(b.nq >= 1, "empty BlockJob");
     assert!(b.n >= 1, "BlockJob with empty KV context");
     if b.causal {
@@ -333,29 +491,34 @@ fn partition_by_cost(costs: &[usize], workers: usize) -> Vec<usize> {
 /// next `nq * d` floats, with `d` the item's own head dimension — mixed-`d`
 /// chunks are fine). `nq == 1` items run the single-query tiled kernel with
 /// the worker's score scratch; larger items run the query-blocked kernel.
-fn run_chunk_into(
+/// All-`F32` items take the zero-copy delegation inside the KV cores, so
+/// this compiles to the same float-op sequence the pre-quantization driver
+/// executed; quantized items stream through the worker's tile buffers.
+fn run_chunk_into<'a, J: QRow<'a>>(
     cfg: &KernelConfig,
-    jobs: &[RowJob<'_>],
-    items: &[Item<'_>],
+    jobs: &[J],
+    items: &[Item<'a>],
     out: &mut [f32],
     ws: &mut WorkerScratch,
     stats: &mut SkipStats,
 ) {
-    let WorkerScratch { qs, row_scores, qbuf, .. } = ws;
+    let WorkerScratch { qs, row_scores, qbuf, ktile, vtile, sig, .. } = ws;
+    let sig = sigmoid_eval(cfg, sig);
     let mut off = 0usize;
     for it in items {
         let slot = &mut out[off..off + it.nq * it.d];
         off += it.nq * it.d;
         let st = if it.nq == 1 {
-            tiled::attention_tiled_into_with(
+            tiled::attention_kv_core(
                 it.single_query(jobs),
-                it.k, it.v, it.n, it.d, it.scale, cfg.tile, cfg.skip, slot, row_scores,
+                it.k, it.v, it.n, it.d, it.scale, cfg.tile, cfg.skip, sig, slot, row_scores,
+                ktile, vtile,
             )
         } else {
             let q = it.queries(jobs, qbuf);
-            qblock::attention_qblock_into(
+            qblock::qblock_kv_core(
                 q, it.k, it.v, it.nq, it.n, it.d, it.scale, cfg.tile, cfg.skip, it.causal,
-                qs, slot,
+                sig, qs, ktile, vtile, slot,
             )
         };
         stats.merge(&st);
@@ -363,22 +526,24 @@ fn run_chunk_into(
 }
 
 /// Execute one chunk of items into per-query `Vec<f32>` output slots.
-fn run_chunk(
+fn run_chunk<'a, J: QRow<'a>>(
     cfg: &KernelConfig,
-    jobs: &[RowJob<'_>],
-    items: &[Item<'_>],
+    jobs: &[J],
+    items: &[Item<'a>],
     out: &mut [Vec<f32>],
     ws: &mut WorkerScratch,
     stats: &mut SkipStats,
 ) {
-    let WorkerScratch { qs, row_scores, qbuf, obuf } = ws;
+    let WorkerScratch { qs, row_scores, qbuf, obuf, ktile, vtile, sig } = ws;
+    let sig = sigmoid_eval(cfg, sig);
     let mut slot = 0usize;
     for it in items {
         if it.nq == 1 {
             let mut o = vec![0.0f32; it.d];
-            let st = tiled::attention_tiled_into_with(
+            let st = tiled::attention_kv_core(
                 it.single_query(jobs),
-                it.k, it.v, it.n, it.d, it.scale, cfg.tile, cfg.skip, &mut o, row_scores,
+                it.k, it.v, it.n, it.d, it.scale, cfg.tile, cfg.skip, sig, &mut o, row_scores,
+                ktile, vtile,
             );
             stats.merge(&st);
             out[slot] = o;
@@ -386,9 +551,9 @@ fn run_chunk(
             let q = it.queries(jobs, qbuf);
             obuf.clear();
             obuf.resize(it.nq * it.d, 0.0);
-            let st = qblock::attention_qblock_into(
+            let st = qblock::qblock_kv_core(
                 q, it.k, it.v, it.nq, it.n, it.d, it.scale, cfg.tile, cfg.skip, it.causal,
-                qs, &mut obuf[..],
+                sig, qs, ktile, vtile, &mut obuf[..],
             );
             stats.merge(&st);
             for (j, row) in obuf[..it.nq * it.d].chunks_exact(it.d).enumerate() {
@@ -512,8 +677,9 @@ pub fn run_blocks(cfg: &KernelConfig, blocks: &[BlockJob<'_>]) -> (Vec<Vec<f32>>
     let mut outputs: Vec<Vec<f32>> = vec![Vec::new(); total_q];
     let items = items_of_blocks(blocks, cfg);
     let mut scratch = BatchScratch::new();
+    let no_rows: &[RowJob] = &[];
     let stats = run_items(cfg, &items, &mut outputs, false, &mut scratch, |ic, oc, ws, st| {
-        run_chunk(cfg, &[], ic, oc, ws, st)
+        run_chunk(cfg, no_rows, ic, oc, ws, st)
     });
     (outputs, stats)
 }
@@ -558,8 +724,52 @@ pub fn run_blocks_flat_into_with(
     let total: usize = blocks.iter().map(|b| b.nq * b.d).sum();
     assert_eq!(out.len(), total, "output buffer must be sum(nq * d)");
     let items = items_of_blocks(blocks, cfg);
+    let no_rows: &[RowJob] = &[];
     run_items(cfg, &items, out, true, scratch, |ic, oc, ws, st| {
-        run_chunk_into(cfg, &[], ic, oc, ws, st)
+        run_chunk_into(cfg, no_rows, ic, oc, ws, st)
+    })
+}
+
+/// [`run_rows_into_with`] over possibly-quantized KV: job `i`'s output row
+/// lands at `out[i * d..(i + 1) * d]`. Adjacent jobs sharing the exact
+/// same KV references coalesce into query blocks (see [`coalesce_kv`]);
+/// all-`F32` jobs are bit-identical to [`run_rows_into_with`], and
+/// quantized jobs are bit-identical to the f32 driver run over the
+/// dequantized arrays. The decode hot path once the layer caches hold
+/// compressed KV.
+pub fn run_kv_rows_into_with(
+    cfg: &KernelConfig,
+    jobs: &[KvRowJob<'_>],
+    d: usize,
+    out: &mut [f32],
+    scratch: &mut BatchScratch,
+) -> SkipStats {
+    assert_eq!(out.len(), jobs.len() * d, "output buffer must be jobs.len() * d");
+    debug_assert!(jobs.iter().all(|j| j.d == d));
+    let items = coalesce_kv(jobs, cfg.block_q);
+    run_items(cfg, &items, out, true, scratch, |ic, oc, ws, st| {
+        run_chunk_into(cfg, jobs, ic, oc, ws, st)
+    })
+}
+
+/// [`run_blocks_flat_into_with`] over possibly-quantized KV — the fused
+/// serving entry point once session caches hold compressed KV. Block `b`'s
+/// output occupies the next `nq_b * d_b` floats of `out`, in block order;
+/// mixed head dims and mixed precisions in one submission are fine. Same
+/// determinism guarantee as the f32 driver, and bit-identical to it for
+/// all-`F32` submissions.
+pub fn run_kv_blocks_flat_into_with(
+    cfg: &KernelConfig,
+    blocks: &[KvBlockJob<'_>],
+    out: &mut [f32],
+    scratch: &mut BatchScratch,
+) -> SkipStats {
+    let total: usize = blocks.iter().map(|b| b.nq * b.d).sum();
+    assert_eq!(out.len(), total, "output buffer must be sum(nq * d)");
+    let items = items_of_kv_blocks(blocks, cfg);
+    let no_rows: &[KvRowJob] = &[];
+    run_items(cfg, &items, out, true, scratch, |ic, oc, ws, st| {
+        run_chunk_into(cfg, no_rows, ic, oc, ws, st)
     })
 }
 
@@ -687,7 +897,13 @@ mod tests {
                 )
             })
             .collect();
-        let cfg = KernelConfig { tile: 4, threads: 2, block_q: 5, skip: SkipCriterion::Static };
+        let cfg = KernelConfig {
+            tile: 4,
+            threads: 2,
+            block_q: 5,
+            skip: SkipCriterion::Static,
+            ..KernelConfig::default()
+        };
         let (outs, stats) = run_causal_heads(&cfg, &heads, l, d, 0.35);
         assert_eq!(outs.len(), 3 * l * d);
         // rows per head: each row r contributes r weight-update steps
@@ -782,7 +998,13 @@ mod tests {
         let v = rng.normal_vec(n * d, 1.0);
         let block = BlockJob { q: &q, k: &k, v: &v, nq, n, d, scale: 0.4, causal: false };
         for threads in [1usize, 4] {
-            let cfg = KernelConfig { tile: 16, block_q: 8, threads, skip: SkipCriterion::Static };
+            let cfg = KernelConfig {
+                tile: 16,
+                block_q: 8,
+                threads,
+                skip: SkipCriterion::Static,
+                ..KernelConfig::default()
+            };
             let mut flat = vec![0.0f32; nq * d];
             let st = run_blocks_into(&cfg, &[block], d, &mut flat);
             let (vecs, vst) = run_blocks(&cfg, &[block]);
@@ -822,7 +1044,13 @@ mod tests {
         let ba = BlockJob { q: &qa, k: &ka, v: &va, nq: 3, n: 33, d: 8, scale: 0.5, causal: false };
         let bb = BlockJob { q: &qb, k: &kb, v: &vb, nq: 5, n: 17, d: 16, scale: 0.3, causal: false };
         for threads in [1usize, 4] {
-            let cfg = KernelConfig { tile: 8, block_q: 2, threads, skip: SkipCriterion::Static };
+            let cfg = KernelConfig {
+                tile: 8,
+                block_q: 2,
+                threads,
+                skip: SkipCriterion::Static,
+                ..KernelConfig::default()
+            };
             let mut flat = vec![0.0f32; 3 * 8 + 5 * 16];
             let st = run_blocks_flat_into_with(&cfg, &[ba, bb], &mut flat, &mut BatchScratch::new());
             let mut wa = vec![0.0f32; 3 * 8];
@@ -870,8 +1098,8 @@ mod tests {
         let it = Item {
             q: None,
             row0: 0,
-            k: &[],
-            v: &[],
+            k: KvRef::F32(&[]),
+            v: KvRef::F32(&[]),
             nq: 4,
             n: 10,
             d: 2,
@@ -891,5 +1119,114 @@ mod tests {
         assert!(cfg.block_q >= 1);
         assert!(cfg.threads >= 1 && cfg.threads <= 8);
         assert_eq!(cfg.skip, SkipCriterion::None);
+        assert_eq!(cfg.sigmoid, SigmoidMode::Exact);
+        assert_eq!(cfg.kv_precision, KvPrecision::F32);
+    }
+
+    #[test]
+    fn kv_rows_f32_bitmatch_plain_rows() {
+        let (n, d) = (130usize, 16usize);
+        let data = jobs_fixture(31, 7, n, d);
+        let jobs = as_jobs(&data, n, d);
+        let kv_jobs: Vec<KvRowJob> = data
+            .iter()
+            .map(|(q, k, v)| KvRowJob {
+                q,
+                k: KvRef::F32(k.as_slice()),
+                v: KvRef::F32(v.as_slice()),
+                n,
+                d,
+                scale: 0.5,
+            })
+            .collect();
+        for threads in [1usize, 3] {
+            let cfg = KernelConfig {
+                tile: 16,
+                threads,
+                skip: SkipCriterion::Static,
+                ..KernelConfig::default()
+            };
+            let mut want = vec![0.0f32; jobs.len() * d];
+            let want_st = run_rows_into(&cfg, &jobs, d, &mut want);
+            let mut got = vec![0.0f32; jobs.len() * d];
+            let got_st =
+                run_kv_rows_into_with(&cfg, &kv_jobs, d, &mut got, &mut BatchScratch::new());
+            assert_eq!(got, want, "threads={threads}");
+            assert_eq!(got_st, want_st, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn kv_rows_quantized_match_dequantized_f32_run() {
+        use crate::numerics::quant::{quantize_bf16, quantize_fp8};
+        let (n, d) = (90usize, 8usize);
+        let data = jobs_fixture(32, 5, n, d);
+        let kq: Vec<Vec<u16>> = data.iter().map(|(_, k, _)| quantize_bf16(k)).collect();
+        let vq: Vec<Vec<u8>> = data.iter().map(|(_, _, v)| quantize_fp8(v)).collect();
+        let cfg = KernelConfig {
+            tile: 16,
+            threads: 2,
+            skip: SkipCriterion::Static,
+            ..KernelConfig::default()
+        };
+        let kv_jobs: Vec<KvRowJob> = data
+            .iter()
+            .zip(kq.iter().zip(&vq))
+            .map(|((q, _, _), (kb, vb))| KvRowJob {
+                q,
+                k: KvRef::Bf16(kb.as_slice()),
+                v: KvRef::Fp8(vb.as_slice()),
+                n,
+                d,
+                scale: 0.5,
+            })
+            .collect();
+        let mut got = vec![0.0f32; data.len() * d];
+        let got_st = run_kv_rows_into_with(&cfg, &kv_jobs, d, &mut got, &mut BatchScratch::new());
+        // reference: the plain f32 driver over the dequantized arrays
+        let kd: Vec<Vec<f32>> = kv_jobs.iter().map(|j| j.k.to_f32_vec()).collect();
+        let vd: Vec<Vec<f32>> = kv_jobs.iter().map(|j| j.v.to_f32_vec()).collect();
+        let ref_jobs: Vec<RowJob> = data
+            .iter()
+            .zip(kd.iter().zip(&vd))
+            .map(|((q, _, _), (k, v))| RowJob { q, k, v, n, d, scale: 0.5 })
+            .collect();
+        let mut want = vec![0.0f32; data.len() * d];
+        let want_st = run_rows_into(&cfg, &ref_jobs, d, &mut want);
+        assert_eq!(got, want);
+        assert_eq!(got_st, want_st);
+    }
+
+    #[test]
+    fn kv_blocks_f32_bitmatch_plain_blocks_and_pwl_stays_close() {
+        let (nq, n, d) = (6usize, 70usize, 8usize);
+        let mut rng = Rng::new(33);
+        let q = rng.normal_vec(nq * d, 0.8);
+        let k = rng.normal_vec(n * d, 0.8);
+        let v = rng.normal_vec(n * d, 1.0);
+        let fb = BlockJob { q: &q, k: &k, v: &v, nq, n, d, scale: 0.4, causal: true };
+        let kb = KvBlockJob::from(&fb);
+        let cfg = KernelConfig {
+            tile: 8,
+            block_q: 4,
+            threads: 2,
+            skip: SkipCriterion::Static,
+            ..KernelConfig::default()
+        };
+        let mut want = vec![0.0f32; nq * d];
+        let want_st = run_blocks_into(&cfg, &[fb], d, &mut want);
+        let mut got = vec![0.0f32; nq * d];
+        let got_st = run_kv_blocks_flat_into_with(&cfg, &[kb], &mut got, &mut BatchScratch::new());
+        assert_eq!(got, want);
+        assert_eq!(got_st, want_st);
+        // PWL sigmoid mode: not bit-identical, but within a loose envelope
+        // (per-step table error is damped by the convex output recursion).
+        let pwl_cfg = KernelConfig { sigmoid: SigmoidMode::Pwl { segments: 8 }, ..cfg };
+        let mut pwl = vec![0.0f32; nq * d];
+        run_kv_blocks_flat_into_with(&pwl_cfg, &[kb], &mut pwl, &mut BatchScratch::new());
+        let vmax = v.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+        for (a, b) in pwl.iter().zip(&want) {
+            assert!((a - b).abs() <= 0.5 * vmax, "pwl={a} exact={b}");
+        }
     }
 }

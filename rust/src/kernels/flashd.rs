@@ -84,6 +84,21 @@ pub fn attention_multi(q: &[f32], k: &[f32], v: &[f32], nq: usize, nkv: usize, d
     out
 }
 
+/// How the per-step sigmoid / log-sigmoid pair is evaluated inside the
+/// tiled engines (threaded through `batch::KernelConfig`).
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Default)]
+pub enum SigmoidMode {
+    /// Exact `exp`/`ln_1p` nonlinearities — bit-identical to
+    /// [`attention`]. The default.
+    #[default]
+    Exact,
+    /// Piecewise-linear sigmoid + ln tables with `segments` segments each
+    /// (the paper's §IV-B hardware units, via [`crate::pwl::SigTables`]).
+    /// Error is enveloped by the tables' `max_error_against`; the skip
+    /// fast paths are unaffected by the mode.
+    Pwl { segments: usize },
+}
+
 /// Which saturation rule decides that an output update can be skipped.
 #[derive(Copy, Clone, Debug, PartialEq)]
 pub enum SkipCriterion {

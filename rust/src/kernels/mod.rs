@@ -48,13 +48,43 @@
 //!   cost-balanced chunks (in `nq * n * d` units), reusable per-worker
 //!   scratch ([`batch::BatchScratch`]), and exact [`flashd::SkipStats`]
 //!   aggregation. [`batch::KernelConfig`] (`tile`, `block_q`, `threads`,
-//!   `skip`) is the knob bundle threaded through `model::engine`,
+//!   `skip`, `sigmoid`, `kv_precision`) is the knob bundle threaded through
+//!   `model::engine`,
 //!   `model::decode`, and the serving coordinator so every layer runs the
 //!   same kernel path.
 //!
 //! Data layout note: jobs reference `(n, d)` row-major K/V slices; outputs
 //! land at the job's index, so multi-threaded runs are bitwise
 //! reproducible and independent of the thread count.
+//!
+//! ## The precision ladder
+//!
+//! Three independently toggleable speed layers sit on the same hot path,
+//! ordered from bit-exact to enveloped:
+//!
+//! 1. **SIMD primitives** (`--features simd`, nightly `portable_simd`):
+//!    [`dot`] and [`axpy_blend`] switch to explicit `f32x8`/`f32x4`
+//!    implementations whose lanes mirror the scalar unroll's accumulator
+//!    array and reduce in the same tree order — **bit-exact** with the
+//!    default scalar build ([`scalar::dot`] / [`scalar::axpy_blend`] stay
+//!    compiled either way as the reference).
+//! 2. **Quantized KV streaming** ([`batch::KvRowJob`] /
+//!    [`batch::KvBlockJob`] over [`crate::numerics::quant::KvRef`]): K/V
+//!    rest in BF16 or FP8-E4M3 and are dequantized tile-by-tile into
+//!    per-worker scratch; the f32 inner recursion and the carried
+//!    `(s_prev, ln_w, o)` state are unchanged, so the result is **bit-exact
+//!    vs. the f32 kernel run on the dequantized operands** and enveloped
+//!    (bf16 ≲ 1e-2, fp8 ≲ 5e-2 max-abs-diff) vs. the full-precision run.
+//!    Skipped tiles never touch V, so block-skip stacks with the bandwidth
+//!    win. `KvPrecision::F32` stores borrow zero-copy and reproduce the
+//!    unquantized path exactly.
+//! 3. **PWL sigmoid** ([`batch::KernelConfig::sigmoid`] =
+//!    [`flashd::SigmoidMode::Pwl`]): the per-step sigmoid / log-sigmoid
+//!    pair evaluates through [`crate::pwl::SigTables`] piecewise-linear
+//!    tables (the paper's §IV-B hardware trick); **enveloped** by the
+//!    tables' measured `max_error_against`. The default
+//!    [`flashd::SigmoidMode::Exact`] is bit-identical to the scalar
+//!    FLASH-D reference.
 
 pub mod batch;
 pub mod flash1;
@@ -65,56 +95,116 @@ pub mod qblock;
 pub mod tiled;
 
 pub use batch::{
-    run_blocks, run_blocks_into, run_rows, run_rows_into, BatchScratch, BlockJob, KernelConfig,
-    RowJob,
+    run_blocks, run_blocks_into, run_kv_blocks_flat_into_with, run_kv_rows_into_with, run_rows,
+    run_rows_into, BatchScratch, BlockJob, KernelConfig, KvBlockJob, KvRowJob, RowJob,
 };
+pub use crate::numerics::quant::{KvPrecision, KvRef};
+pub use flashd::SigmoidMode;
 
-/// Dot product of two length-`d` slices.
+/// The scalar reference implementations of the two hot-loop primitives.
 ///
-/// Eight-wide unrolled accumulation over `chunks_exact` so the compiler
-/// drops bounds checks and vectorizes; shared by every kernel (scalar and
-/// tiled) so all formulations see the same summation order.
-#[inline]
-pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let n8 = a.len() & !7;
-    let mut acc = [0.0f32; 8];
-    for (x, y) in a[..n8].chunks_exact(8).zip(b[..n8].chunks_exact(8)) {
-        acc[0] += x[0] * y[0];
-        acc[1] += x[1] * y[1];
-        acc[2] += x[2] * y[2];
-        acc[3] += x[3] * y[3];
-        acc[4] += x[4] * y[4];
-        acc[5] += x[5] * y[5];
-        acc[6] += x[6] * y[6];
-        acc[7] += x[7] * y[7];
+/// Always compiled — with `--features simd` the crate-level [`dot`] /
+/// [`axpy_blend`] switch to the vectorized versions and these remain the
+/// bit-exactness oracle for tests and benches.
+pub mod scalar {
+    /// Dot product of two length-`d` slices.
+    ///
+    /// Eight-wide unrolled accumulation over `chunks_exact` so the compiler
+    /// drops bounds checks and vectorizes; shared by every kernel (scalar and
+    /// tiled) so all formulations see the same summation order.
+    #[inline]
+    pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n8 = a.len() & !7;
+        let mut acc = [0.0f32; 8];
+        for (x, y) in a[..n8].chunks_exact(8).zip(b[..n8].chunks_exact(8)) {
+            acc[0] += x[0] * y[0];
+            acc[1] += x[1] * y[1];
+            acc[2] += x[2] * y[2];
+            acc[3] += x[3] * y[3];
+            acc[4] += x[4] * y[4];
+            acc[5] += x[5] * y[5];
+            acc[6] += x[6] * y[6];
+            acc[7] += x[7] * y[7];
+        }
+        let mut tail = 0.0f32;
+        for (x, y) in a[n8..].iter().zip(&b[n8..]) {
+            tail += x * y;
+        }
+        ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7])) + tail
     }
-    let mut tail = 0.0f32;
-    for (x, y) in a[n8..].iter().zip(&b[n8..]) {
-        tail += x * y;
+
+    /// The fused Eq. 12 output update `o[j] += (v[j] - o[j]) * w`, four-wide
+    /// unrolled over `chunks_exact` — the single vector op FLASH-D performs
+    /// per active KV step, shared by the scalar and tiled kernels.
+    #[inline]
+    pub fn axpy_blend(o: &mut [f32], v: &[f32], w: f32) {
+        debug_assert_eq!(o.len(), v.len());
+        let n4 = o.len() & !3;
+        let (o4, o_tail) = o.split_at_mut(n4);
+        let (v4, v_tail) = v.split_at(n4);
+        for (oc, vc) in o4.chunks_exact_mut(4).zip(v4.chunks_exact(4)) {
+            oc[0] += (vc[0] - oc[0]) * w;
+            oc[1] += (vc[1] - oc[1]) * w;
+            oc[2] += (vc[2] - oc[2]) * w;
+            oc[3] += (vc[3] - oc[3]) * w;
+        }
+        for (oo, vv) in o_tail.iter_mut().zip(v_tail) {
+            *oo += (*vv - *oo) * w;
+        }
     }
-    ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7])) + tail
 }
 
-/// The fused Eq. 12 output update `o[j] += (v[j] - o[j]) * w`, four-wide
-/// unrolled over `chunks_exact` — the single vector op FLASH-D performs per
-/// active KV step, shared by the scalar and tiled kernels.
-#[inline]
-pub fn axpy_blend(o: &mut [f32], v: &[f32], w: f32) {
-    debug_assert_eq!(o.len(), v.len());
-    let n4 = o.len() & !3;
-    let (o4, o_tail) = o.split_at_mut(n4);
-    let (v4, v_tail) = v.split_at(n4);
-    for (oc, vc) in o4.chunks_exact_mut(4).zip(v4.chunks_exact(4)) {
-        oc[0] += (vc[0] - oc[0]) * w;
-        oc[1] += (vc[1] - oc[1]) * w;
-        oc[2] += (vc[2] - oc[2]) * w;
-        oc[3] += (vc[3] - oc[3]) * w;
+/// Explicit `std::simd` implementations of the hot-loop primitives.
+///
+/// Bit-exact with [`scalar`]: the `f32x8` accumulator's lane `j` sees the
+/// identical sequence of `x[8i+j] * y[8i+j]` multiply-adds the scalar
+/// unroll's `acc[j]` sees (Rust never contracts `a + b * c` into an FMA),
+/// and the final reduction uses the same `((0+1)+(2+3)) + ((4+5)+(6+7))`
+/// tree. Likewise `axpy_blend`'s per-lane `o + (v - o) * w` is the scalar
+/// expression verbatim.
+#[cfg(feature = "simd")]
+mod simd_ops {
+    use std::simd::{f32x4, f32x8};
+
+    #[inline]
+    pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n8 = a.len() & !7;
+        let mut acc = f32x8::splat(0.0);
+        for (x, y) in a[..n8].chunks_exact(8).zip(b[..n8].chunks_exact(8)) {
+            acc += f32x8::from_slice(x) * f32x8::from_slice(y);
+        }
+        let mut tail = 0.0f32;
+        for (x, y) in a[n8..].iter().zip(&b[n8..]) {
+            tail += x * y;
+        }
+        let acc = acc.to_array();
+        ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7])) + tail
     }
-    for (oo, vv) in o_tail.iter_mut().zip(v_tail) {
-        *oo += (*vv - *oo) * w;
+
+    #[inline]
+    pub fn axpy_blend(o: &mut [f32], v: &[f32], w: f32) {
+        debug_assert_eq!(o.len(), v.len());
+        let n4 = o.len() & !3;
+        let (o4, o_tail) = o.split_at_mut(n4);
+        let (v4, v_tail) = v.split_at(n4);
+        let wv = f32x4::splat(w);
+        for (oc, vc) in o4.chunks_exact_mut(4).zip(v4.chunks_exact(4)) {
+            let ov = f32x4::from_slice(oc);
+            let r = ov + (f32x4::from_slice(vc) - ov) * wv;
+            r.copy_to_slice(oc);
+        }
+        for (oo, vv) in o_tail.iter_mut().zip(v_tail) {
+            *oo += (*vv - *oo) * w;
+        }
     }
 }
+
+#[cfg(not(feature = "simd"))]
+pub use scalar::{axpy_blend, dot};
+#[cfg(feature = "simd")]
+pub use simd_ops::{axpy_blend, dot};
 
 /// Maximum absolute difference between two vectors.
 pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {

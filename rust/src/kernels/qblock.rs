@@ -58,8 +58,12 @@
 //! sequence identical to the single-query kernel run on that prefix.
 
 use super::flashd::{SkipCriterion, SkipStats};
-use super::tiled::{process_scored_tile, tile_skip_lo, RowState};
+use super::tiled::{
+    process_scored_tile, process_tile_fallback, score_pass, tile_skip_lo, try_skip_tile, RowState,
+    SigmoidEval,
+};
 use super::dot;
+use crate::numerics::quant::KvRef;
 
 /// Default query block length. 16 queries × d=64 × 4 B = 4 KiB of Q plus
 /// the `Bq × Bc` f64 score scratch (4 KiB at the default tile) alongside
@@ -79,6 +83,10 @@ pub struct QScratch {
     s_max: Vec<f64>,
     /// Per-query carried `(s_prev, ln_w)` state.
     states: Vec<RowState>,
+    /// Per-query "tile not skipped" marks for the quantized-KV path (V is
+    /// dequantized only if at least one query's tile survives the skip
+    /// test).
+    active: Vec<bool>,
 }
 
 impl QScratch {
@@ -95,6 +103,9 @@ impl QScratch {
         }
         if self.states.len() < nq {
             self.states.resize(nq, RowState::default());
+        }
+        if self.active.len() < nq {
+            self.active.resize(nq, false);
         }
     }
 }
@@ -122,6 +133,25 @@ pub fn attention_qblock_into(
     scratch: &mut QScratch,
     out: &mut [f32],
 ) -> SkipStats {
+    qblock_core(q, k, v, nq, n, d, scale, tile, crit, causal, SigmoidEval::Exact, scratch, out)
+}
+
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn qblock_core(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    nq: usize,
+    n: usize,
+    d: usize,
+    scale: f32,
+    tile: usize,
+    crit: SkipCriterion,
+    causal: bool,
+    sig: SigmoidEval<'_>,
+    scratch: &mut QScratch,
+    out: &mut [f32],
+) -> SkipStats {
     assert!(nq >= 1, "empty query block");
     assert!(n > 0, "empty KV context");
     assert!(tile > 0, "tile must be >= 1");
@@ -133,7 +163,7 @@ pub fn attention_qblock_into(
     debug_assert!(k.len() >= n * d && v.len() >= n * d);
 
     scratch.ensure(nq, tile);
-    let QScratch { scores, s_max, states } = scratch;
+    let QScratch { scores, s_max, states, .. } = scratch;
 
     let mut stats = SkipStats::default();
     // Per-query KV length: the causal staircase nests prefixes so the
@@ -153,24 +183,20 @@ pub fn attention_qblock_into(
     while i < n {
         let t_end = (i + tile).min(n);
 
-        // --- phase 1: score pass, K tile shared across the block --------
+        // --- phase 1: fused score pass, K tile shared across the block --
         for iq in 0..nq {
             let ni = n_of(iq);
             if ni <= i {
                 continue; // this query's prefix ended before the tile
             }
             let e = t_end.min(ni);
-            let qrow = &q[iq * d..(iq + 1) * d];
-            let mut mx = f64::NEG_INFINITY;
-            for (t, slot) in scores[iq * tile..iq * tile + (e - i)].iter_mut().enumerate() {
-                let row = i + t;
-                let s = (dot(qrow, &k[row * d..(row + 1) * d]) * scale) as f64;
-                *slot = s;
-                if s > mx {
-                    mx = s;
-                }
-            }
-            s_max[iq] = mx;
+            s_max[iq] = score_pass(
+                &q[iq * d..(iq + 1) * d],
+                &k[i * d..e * d],
+                d,
+                scale,
+                &mut scores[iq * tile..iq * tile + (e - i)],
+            );
         }
 
         // --- phase 2: per-query skip test + fallback, V tile shared -----
@@ -188,10 +214,176 @@ pub fn attention_qblock_into(
                 d,
                 crit,
                 tile_lo,
+                sig,
                 &mut states[iq],
                 &mut out[iq * d..(iq + 1) * d],
                 &mut stats,
             );
+        }
+        i = t_end;
+    }
+    stats
+}
+
+/// Query-blocked FLASH-D over possibly-quantized KV ([`KvRef`]). The K tile
+/// is dequantized into `ktile` **once per query block** (the bandwidth win
+/// compounds with query blocking); the V tile is dequantized into `vtile`
+/// only if at least one query's tile survives the block-skip test. `F32`
+/// operands take the zero-copy path and are bit-identical to
+/// [`attention_qblock_into`]; quantized operands are bit-identical to the
+/// f32 kernel over the dequantized arrays (stats accumulate in a different
+/// but commutative order).
+#[allow(clippy::too_many_arguments)]
+pub fn attention_qblock_kv_into(
+    q: &[f32],
+    k: KvRef<'_>,
+    v: KvRef<'_>,
+    nq: usize,
+    n: usize,
+    d: usize,
+    scale: f32,
+    tile: usize,
+    crit: SkipCriterion,
+    causal: bool,
+    scratch: &mut QScratch,
+    ktile: &mut Vec<f32>,
+    vtile: &mut Vec<f32>,
+    out: &mut [f32],
+) -> SkipStats {
+    qblock_kv_core(
+        q,
+        k,
+        v,
+        nq,
+        n,
+        d,
+        scale,
+        tile,
+        crit,
+        causal,
+        SigmoidEval::Exact,
+        scratch,
+        ktile,
+        vtile,
+        out,
+    )
+}
+
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn qblock_kv_core(
+    q: &[f32],
+    k: KvRef<'_>,
+    v: KvRef<'_>,
+    nq: usize,
+    n: usize,
+    d: usize,
+    scale: f32,
+    tile: usize,
+    crit: SkipCriterion,
+    causal: bool,
+    sig: SigmoidEval<'_>,
+    scratch: &mut QScratch,
+    ktile: &mut Vec<f32>,
+    vtile: &mut Vec<f32>,
+    out: &mut [f32],
+) -> SkipStats {
+    if let (Some(kf), Some(vf)) = (k.as_f32(), v.as_f32()) {
+        return qblock_core(q, kf, vf, nq, n, d, scale, tile, crit, causal, sig, scratch, out);
+    }
+
+    assert!(nq >= 1, "empty query block");
+    assert!(n > 0, "empty KV context");
+    assert!(tile > 0, "tile must be >= 1");
+    assert_eq!(out.len(), nq * d);
+    if causal {
+        assert!(n >= nq, "causal block needs n >= nq (got n={n}, nq={nq})");
+    }
+    debug_assert!(q.len() >= nq * d);
+    debug_assert!(k.len() >= n * d && v.len() >= n * d);
+
+    scratch.ensure(nq, tile);
+    if ktile.len() < tile * d {
+        ktile.resize(tile * d, 0.0);
+    }
+    if vtile.len() < tile * d {
+        vtile.resize(tile * d, 0.0);
+    }
+    let QScratch { scores, s_max, states, active } = scratch;
+
+    let mut stats = SkipStats::default();
+    let n_of = |iq: usize| if causal { n - nq + 1 + iq } else { n };
+
+    // Step 0: dequantize row 0 of K and V through the tile buffers.
+    k.load_into(0, d, &mut ktile[..d]);
+    v.load_into(0, d, &mut vtile[..d]);
+    for iq in 0..nq {
+        let s0 = (dot(&q[iq * d..(iq + 1) * d], &ktile[..d]) * scale) as f64;
+        out[iq * d..(iq + 1) * d].copy_from_slice(&vtile[..d]);
+        states[iq] = RowState { s_prev: s0, ln_w: 0.0 };
+    }
+
+    let tile_lo = tile_skip_lo(crit);
+    let mut i = 1usize;
+    while i < n {
+        let t_end = (i + tile).min(n);
+
+        // K tile: one dequantization serves the whole query block.
+        k.load_into(i * d, t_end * d, &mut ktile[..(t_end - i) * d]);
+        for iq in 0..nq {
+            let ni = n_of(iq);
+            if ni <= i {
+                continue;
+            }
+            let e = t_end.min(ni);
+            s_max[iq] = score_pass(
+                &q[iq * d..(iq + 1) * d],
+                &ktile[..(e - i) * d],
+                d,
+                scale,
+                &mut scores[iq * tile..iq * tile + (e - i)],
+            );
+        }
+
+        // Skip tests first: V is only dequantized if some query needs it.
+        let mut need_v = false;
+        for iq in 0..nq {
+            active[iq] = false;
+            let ni = n_of(iq);
+            if ni <= i {
+                continue;
+            }
+            let e = t_end.min(ni);
+            if !try_skip_tile(
+                &scores[iq * tile..iq * tile + (e - i)],
+                s_max[iq],
+                tile_lo,
+                &mut states[iq],
+                &mut stats,
+            ) {
+                active[iq] = true;
+                need_v = true;
+            }
+        }
+        if need_v {
+            v.load_into(i * d, t_end * d, &mut vtile[..(t_end - i) * d]);
+            for iq in 0..nq {
+                if !active[iq] {
+                    continue;
+                }
+                let e = t_end.min(n_of(iq));
+                process_tile_fallback(
+                    &scores[iq * tile..iq * tile + (e - i)],
+                    i,
+                    &vtile[..(t_end - i) * d],
+                    i,
+                    d,
+                    crit,
+                    sig,
+                    &mut states[iq],
+                    &mut out[iq * d..(iq + 1) * d],
+                    &mut stats,
+                );
+            }
         }
         i = t_end;
     }
@@ -393,5 +585,51 @@ mod tests {
             SkipCriterion::Static,
         );
         assert_eq!(&got[d..2 * d], &want1[..]);
+    }
+
+    #[test]
+    fn kv_qblock_bitmatches_f32_over_dequantized_operands() {
+        use crate::numerics::quant::{quantize_bf16, quantize_fp8, KvRef};
+        let (nq, n, d) = (5usize, 97usize, 16usize);
+        let (q, k, v) = problem(123, nq, n, d, 1.2);
+        let kb = quantize_bf16(&k);
+        let vb = quantize_bf16(&v);
+        let k8 = quantize_fp8(&k);
+        let v8 = quantize_fp8(&v);
+        let refs = [
+            (KvRef::F32(&k), KvRef::F32(&v)),
+            (KvRef::Bf16(&kb), KvRef::Bf16(&vb)),
+            (KvRef::Fp8(&k8), KvRef::Fp8(&v8)),
+        ];
+        for causal in [false, true] {
+            for (kr, vr) in refs {
+                let kd = kr.to_f32_vec();
+                let vd = vr.to_f32_vec();
+                for tile in [4usize, 16, 97] {
+                    let (want, want_st) = attention_qblock(
+                        &q, &kd, &vd, nq, n, d, 0.5, tile,
+                        SkipCriterion::Static,
+                        causal,
+                    );
+                    let mut scratch = QScratch::new();
+                    let (mut ktile, mut vtile) = (Vec::new(), Vec::new());
+                    let mut got = vec![0.0f32; nq * d];
+                    let got_st = attention_qblock_kv_into(
+                        &q, kr, vr, nq, n, d, 0.5, tile,
+                        SkipCriterion::Static,
+                        causal,
+                        &mut scratch,
+                        &mut ktile,
+                        &mut vtile,
+                        &mut got,
+                    );
+                    let p = kr.precision();
+                    assert_eq!(got, want, "tile={tile} causal={causal} {p:?}");
+                    // SkipStats are commutative sums, so the reordered
+                    // (skips-then-fallbacks) accumulation matches exactly.
+                    assert_eq!(got_st, want_st, "tile={tile} causal={causal} {p:?}");
+                }
+            }
+        }
     }
 }

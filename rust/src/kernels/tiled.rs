@@ -47,6 +47,8 @@
 
 use super::flashd::{log_sigmoid, sigmoid, SkipCriterion, SkipStats, ACTIVE_HI, ACTIVE_LO};
 use super::{axpy_blend, dot};
+use crate::numerics::quant::KvRef;
+use crate::pwl::SigTables;
 
 /// Default KV tile length (keys per block). 32 keys × d=64 × 4 B ≈ 8 KiB
 /// of K plus 8 KiB of V per tile — comfortably L1-resident.
@@ -80,6 +82,49 @@ pub(crate) struct RowState {
     pub ln_w: f64,
 }
 
+/// Resolved per-step nonlinearity evaluator, the runtime form of
+/// [`super::flashd::SigmoidMode`]: either the exact `exp`/`ln_1p` pair or a borrowed set
+/// of PWL tables (owned by the per-worker scratch so table fits are
+/// amortized across calls). The skip fast paths never evaluate the
+/// nonlinearities, so they are identical under both variants.
+#[derive(Copy, Clone)]
+pub(crate) enum SigmoidEval<'a> {
+    Exact,
+    Pwl(&'a SigTables),
+}
+
+impl SigmoidEval<'_> {
+    /// `(w, ln w)` for sigmoid argument `x`. The `Exact` arm performs the
+    /// same two calls, in the same order, as the scalar reference kernel —
+    /// the default path stays bit-identical.
+    #[inline]
+    fn weight_and_ln(self, x: f64) -> (f64, f64) {
+        match self {
+            SigmoidEval::Exact => (sigmoid(x), log_sigmoid(x)),
+            SigmoidEval::Pwl(t) => t.weight_and_ln(x),
+        }
+    }
+}
+
+/// Step 1 of the tiled kernel, fused: score every key of a tile through the
+/// shared [`dot`] and track the running maximum in the same sweep. `k` is
+/// the tile's rows only (`scores.len()` rows of length `d`, starting at
+/// element 0), so it works equally over a zero-copy f32 sub-slice and over
+/// a dequantized tile buffer. Returns the tile's score maximum.
+#[inline]
+pub(crate) fn score_pass(q: &[f32], k: &[f32], d: usize, scale: f32, scores: &mut [f64]) -> f64 {
+    debug_assert!(k.len() >= scores.len() * d);
+    let mut s_max = f64::NEG_INFINITY;
+    for (t, srow) in scores.iter_mut().enumerate() {
+        let s = (dot(q, &k[t * d..(t + 1) * d]) * scale) as f64;
+        *srow = s;
+        if s > s_max {
+            s_max = s;
+        }
+    }
+    s_max
+}
+
 /// Steps 2 + 3 of the tiled kernel for one query and one already-scored
 /// tile: the telescoped block-skip fast path, then the exact per-step
 /// recursion fallback. `scores[t]` is the score of absolute KV row
@@ -95,17 +140,33 @@ pub(crate) fn process_scored_tile(
     d: usize,
     crit: SkipCriterion,
     tile_lo: f64,
+    sig: SigmoidEval<'_>,
     st: &mut RowState,
     o: &mut [f32],
     stats: &mut SkipStats,
 ) {
-    let t_len = scores.len();
+    if try_skip_tile(scores, s_max, tile_lo, st, stats) {
+        return;
+    }
+    process_tile_fallback(scores, base, v, 0, d, crit, sig, st, o, stats);
+}
 
-    // --- block-skip fast path ------------------------------------------
-    // The telescoped bound proves saturation for the whole tile; the
-    // scalar chain below re-verifies it step by step so the committed
-    // state (and stats) are bit-identical to the per-step kernel even in
-    // floating-point corner cases.
+/// The block-skip fast path alone: commits state and stats and returns
+/// `true` iff the whole tile saturates low. Split out so the quantized-KV
+/// path can run it *before* resolving (dequantizing) the tile's V rows —
+/// a fully-skipped tile never touches V in any precision.
+///
+/// The telescoped bound proves saturation for the whole tile; the scalar
+/// chain re-verifies it step by step so the committed state (and stats)
+/// are bit-identical to the per-step kernel even in floating-point corner
+/// cases.
+pub(crate) fn try_skip_tile(
+    scores: &[f64],
+    s_max: f64,
+    tile_lo: f64,
+    st: &mut RowState,
+    stats: &mut SkipStats,
+) -> bool {
     if s_max - st.s_prev + st.ln_w <= tile_lo {
         let mut sp = st.s_prev;
         let mut lw = st.ln_w;
@@ -122,17 +183,36 @@ pub(crate) fn process_scored_tile(
         if all_low {
             // Whole tile saturates low: no value loads, no output
             // updates, state carried by the scalar chain alone.
-            stats.total += t_len as u64;
-            stats.skip_low += t_len as u64;
+            stats.total += scores.len() as u64;
+            stats.skip_low += scores.len() as u64;
             st.s_prev = sp;
             st.ln_w = lw;
-            return;
+            return true;
         }
     }
+    false
+}
 
-    // --- fallback: exact per-step recursion ----------------------------
+/// The exact per-step recursion fallback. `v` holds rows starting at
+/// absolute KV row `voff`, so the value row for `scores[t]` (absolute row
+/// `base + t`) is `v[(base + t - voff) * d ..]` — `voff = 0` with the full
+/// V slice reproduces the historical indexing exactly, while the
+/// quantized-KV path passes the dequantized tile buffer with `voff = base`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn process_tile_fallback(
+    scores: &[f64],
+    base: usize,
+    v: &[f32],
+    voff: usize,
+    d: usize,
+    crit: SkipCriterion,
+    sig: SigmoidEval<'_>,
+    st: &mut RowState,
+    o: &mut [f32],
+    stats: &mut SkipStats,
+) {
     for (t, &s) in scores.iter().enumerate() {
-        let row = base + t;
+        let row = base + t - voff;
         let vi = &v[row * d..(row + 1) * d];
         stats.total += 1;
         let s_diff = s - st.s_prev;
@@ -155,9 +235,9 @@ pub(crate) fn process_scored_tile(
             st.s_prev = s;
             continue;
         }
-        let w = sigmoid(x) as f32;
-        st.ln_w = log_sigmoid(x);
-        axpy_blend(o, vi, w);
+        let (w, ln_w) = sig.weight_and_ln(x);
+        st.ln_w = ln_w;
+        axpy_blend(o, vi, w as f32);
         st.s_prev = s;
     }
 }
@@ -190,7 +270,7 @@ pub fn attention_tiled_instrumented(
 /// Shared core behind both `into` variants: `scores` is a scratch slice of
 /// exactly `tile` elements.
 #[allow(clippy::too_many_arguments)]
-fn tiled_core(
+pub(crate) fn tiled_core(
     q: &[f32],
     k: &[f32],
     v: &[f32],
@@ -199,6 +279,7 @@ fn tiled_core(
     scale: f32,
     tile: usize,
     crit: SkipCriterion,
+    sig: SigmoidEval<'_>,
     scores: &mut [f64],
     o: &mut [f32],
 ) -> SkipStats {
@@ -222,21 +303,136 @@ fn tiled_core(
     while i < n {
         let t_len = tile.min(n - i);
 
-        // --- score pass: dot every key in the tile, track the max ---
-        let mut s_max = f64::NEG_INFINITY;
-        for (t, srow) in scores[..t_len].iter_mut().enumerate() {
-            let row = i + t;
-            let s = (dot(q, &k[row * d..(row + 1) * d]) * scale) as f64;
-            *srow = s;
-            if s > s_max {
-                s_max = s;
-            }
-        }
+        // Step 1, fused: score the tile's keys and track the max in one
+        // sweep (V is not touched yet).
+        let s_max = score_pass(q, &k[i * d..(i + t_len) * d], d, scale, &mut scores[..t_len]);
 
-        process_scored_tile(&scores[..t_len], s_max, i, v, d, crit, tile_lo, &mut st, o, &mut stats);
+        process_scored_tile(&scores[..t_len], s_max, i, v, d, crit, tile_lo, sig, &mut st, o, &mut stats);
         i += t_len;
     }
     stats
+}
+
+/// Tiled single-query FLASH-D over possibly-quantized KV ([`KvRef`]): K and
+/// V tiles are dequantized into the caller-owned `ktile`/`vtile` f32
+/// scratch right before use, so the recursion itself (and its carried
+/// state) is the plain f32 kernel. Guarantees:
+///
+/// * `KvRef::F32` operands take the zero-copy path and are **bit-identical**
+///   to [`attention_tiled_into_with`];
+/// * quantized operands are **bit-identical to the f32 kernel run over the
+///   dequantized arrays** (dequantization is pointwise);
+/// * a tile proven skippable by the block-skip test never dequantizes its
+///   V rows (K must be scored regardless), so block-skip stacks with the
+///   bandwidth saving.
+#[allow(clippy::too_many_arguments)]
+pub fn attention_kv_into_with(
+    q: &[f32],
+    k: KvRef<'_>,
+    v: KvRef<'_>,
+    n: usize,
+    d: usize,
+    scale: f32,
+    tile: usize,
+    crit: SkipCriterion,
+    o: &mut [f32],
+    scores: &mut Vec<f64>,
+    ktile: &mut Vec<f32>,
+    vtile: &mut Vec<f32>,
+) -> SkipStats {
+    attention_kv_core(q, k, v, n, d, scale, tile, crit, SigmoidEval::Exact, o, scores, ktile, vtile)
+}
+
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn attention_kv_core(
+    q: &[f32],
+    k: KvRef<'_>,
+    v: KvRef<'_>,
+    n: usize,
+    d: usize,
+    scale: f32,
+    tile: usize,
+    crit: SkipCriterion,
+    sig: SigmoidEval<'_>,
+    o: &mut [f32],
+    scores: &mut Vec<f64>,
+    ktile: &mut Vec<f32>,
+    vtile: &mut Vec<f32>,
+) -> SkipStats {
+    if scores.len() < tile {
+        scores.resize(tile, 0.0);
+    }
+    if let (Some(kf), Some(vf)) = (k.as_f32(), v.as_f32()) {
+        return tiled_core(q, kf, vf, n, d, scale, tile, crit, sig, &mut scores[..tile], o);
+    }
+
+    assert!(n > 0, "empty KV context");
+    assert!(tile > 0, "tile must be >= 1");
+    assert_eq!(o.len(), d);
+    debug_assert_eq!(q.len(), d);
+    debug_assert!(k.len() >= n * d && v.len() >= n * d);
+    if ktile.len() < tile * d {
+        ktile.resize(tile * d, 0.0);
+    }
+    if vtile.len() < tile * d {
+        vtile.resize(tile * d, 0.0);
+    }
+
+    let mut stats = SkipStats::default();
+
+    // Step 0: dequantize row 0 of K and V through the tile buffers.
+    k.load_into(0, d, &mut ktile[..d]);
+    v.load_into(0, d, &mut vtile[..d]);
+    let s0 = (dot(q, &ktile[..d]) * scale) as f64;
+    o.copy_from_slice(&vtile[..d]);
+    let mut st = RowState { s_prev: s0, ln_w: 0.0 };
+
+    let tile_lo = tile_skip_lo(crit);
+    let mut i = 1usize;
+    while i < n {
+        let t_len = tile.min(n - i);
+        k.load_into(i * d, (i + t_len) * d, &mut ktile[..t_len * d]);
+        let s_max = score_pass(q, &ktile[..t_len * d], d, scale, &mut scores[..t_len]);
+        if !try_skip_tile(&scores[..t_len], s_max, tile_lo, &mut st, &mut stats) {
+            // Tile is active: resolve its V rows now.
+            v.load_into(i * d, (i + t_len) * d, &mut vtile[..t_len * d]);
+            process_tile_fallback(
+                &scores[..t_len],
+                i,
+                &vtile[..t_len * d],
+                i,
+                d,
+                crit,
+                sig,
+                &mut st,
+                o,
+                &mut stats,
+            );
+        }
+        i += t_len;
+    }
+    stats
+}
+
+/// Allocating convenience wrapper over [`attention_kv_into_with`] —
+/// the single-query quantized-KV entry used by tests and benches.
+#[allow(clippy::too_many_arguments)]
+pub fn attention_kv(
+    q: &[f32],
+    k: KvRef<'_>,
+    v: KvRef<'_>,
+    n: usize,
+    d: usize,
+    scale: f32,
+    tile: usize,
+    crit: SkipCriterion,
+) -> (Vec<f32>, SkipStats) {
+    let mut o = vec![0.0f32; d];
+    let (mut scores, mut ktile, mut vtile) = (Vec::new(), Vec::new(), Vec::new());
+    let stats = attention_kv_into_with(
+        q, k, v, n, d, scale, tile, crit, &mut o, &mut scores, &mut ktile, &mut vtile,
+    );
+    (o, stats)
 }
 
 /// Allocation-free core: writes the output row into the caller-provided
@@ -264,7 +460,7 @@ pub fn attention_tiled_into(
         heap_buf.resize(tile, 0.0);
         &mut heap_buf
     };
-    tiled_core(q, k, v, n, d, scale, tile, crit, scores, o)
+    tiled_core(q, k, v, n, d, scale, tile, crit, SigmoidEval::Exact, scores, o)
 }
 
 /// [`attention_tiled_into`] with a caller-owned score scratch: `scores` is
@@ -288,7 +484,7 @@ pub fn attention_tiled_into_with(
     if scores.len() < tile {
         scores.resize(tile, 0.0);
     }
-    tiled_core(q, k, v, n, d, scale, tile, crit, &mut scores[..tile], o)
+    tiled_core(q, k, v, n, d, scale, tile, crit, SigmoidEval::Exact, &mut scores[..tile], o)
 }
 
 /// Multi-query tiled FLASH-D: independent `(nq, d)` queries over a shared
@@ -476,5 +672,50 @@ mod tests {
         assert!(a.iter().all(|x| x.is_finite()));
         let b = naive::attention(&q, &k, &v, 64, 16, 1.0);
         assert!(max_abs_diff(&a, &b) < 1e-4);
+    }
+
+    #[test]
+    fn kv_f32_path_bitmatches_tiled() {
+        use crate::numerics::quant::KvRef;
+        let (n, d) = (257usize, 16usize);
+        let (q, k, v) = problem(51, n, d, 0.9);
+        for crit in [SkipCriterion::None, SkipCriterion::Static] {
+            for tile in [1usize, 8, 32, 100] {
+                let (want, want_st) =
+                    attention_tiled_instrumented(&q, &k, &v, n, d, 0.5, tile, crit);
+                let (got, got_st) =
+                    attention_kv(&q, KvRef::F32(&k), KvRef::F32(&v), n, d, 0.5, tile, crit);
+                assert_eq!(got, want, "tile={tile} crit={crit:?}");
+                assert_eq!(got_st, want_st, "tile={tile} crit={crit:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_kv_bitmatches_f32_over_dequantized_operands() {
+        // The quantized path's contract is deterministic: it must equal the
+        // f32 kernel run over dequantize(quantize(K)), dequantize(quantize(V))
+        // bit for bit — dequantization is pointwise, the recursion is f32
+        // either way.
+        use crate::numerics::quant::{quantize_bf16, quantize_fp8, KvRef};
+        let (n, d) = (300usize, 8usize);
+        let (q, k, v) = problem(52, n, d, 0.8);
+        let kb = quantize_bf16(&k);
+        let vb = quantize_bf16(&v);
+        let k8 = quantize_fp8(&k);
+        let v8 = quantize_fp8(&v);
+        for (kr, vr) in [(KvRef::Bf16(&kb), KvRef::Bf16(&vb)), (KvRef::Fp8(&k8), KvRef::Fp8(&v8))] {
+            let kd = kr.to_f32_vec();
+            let vd = vr.to_f32_vec();
+            for tile in [4usize, 32, 300] {
+                for crit in [SkipCriterion::None, SkipCriterion::Static] {
+                    let (want, want_st) =
+                        attention_tiled_instrumented(&q, &kd, &vd, n, d, 0.5, tile, crit);
+                    let (got, got_st) = attention_kv(&q, kr, vr, n, d, 0.5, tile, crit);
+                    assert_eq!(got, want, "tile={tile} crit={crit:?} {:?}", kr.precision());
+                    assert_eq!(got_st, want_st, "tile={tile} crit={crit:?}");
+                }
+            }
+        }
     }
 }

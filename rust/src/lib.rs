@@ -16,6 +16,8 @@
 //!
 //! See DESIGN.md for the system inventory and the experiment index.
 
+#![cfg_attr(feature = "simd", feature(portable_simd))]
+
 pub mod bench_harness;
 pub mod coordinator;
 pub mod hw;

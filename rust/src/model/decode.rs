@@ -7,15 +7,20 @@
 //! Numerically identical to the full forward (same FLASH-D recursion, same
 //! QK-norm), verified in tests and in `EXPERIMENTS.md` §Perf.
 
-use crate::kernels::batch::{self, BatchScratch, KernelConfig, RowJob};
+use crate::kernels::batch::{self, BatchScratch, KernelConfig, KvRowJob};
 use crate::model::engine::{Engine, ForwardStats};
+use crate::numerics::quant::{KvPrecision, KvStore};
 
 /// Per-layer attention cache: normalized keys + values, per head,
-/// contiguous (len, d_head) each.
+/// contiguous (len, d_head) each. Stored at the session's
+/// [`KvPrecision`] — new rows are quantized once on append and the
+/// kernels dequantize tile-by-tile; the FLASH-D recursion itself stays
+/// f32, so the default `F32` precision is bit-identical to an
+/// unquantized cache.
 struct LayerCache {
     /// per head: (cap, dh) flat, prefix `len` valid
-    k: Vec<Vec<f32>>,
-    v: Vec<Vec<f32>>,
+    k: Vec<KvStore>,
+    v: Vec<KvStore>,
 }
 
 /// A streaming decode session over an [`Engine`].
@@ -55,12 +60,14 @@ fn vecmat(x: &[f32], w: &[f32], k: usize, n: usize) -> Vec<f32> {
 
 impl<'a> DecodeSession<'a> {
     pub fn new(engine: &'a Engine) -> DecodeSession<'a> {
+        let kernel = engine.kernel_config();
         let nl = engine.info.n_layers;
         let nh = engine.info.n_heads;
+        let prec = kernel.kv_precision;
         let layers = (0..nl)
             .map(|_| LayerCache {
-                k: vec![Vec::new(); nh],
-                v: vec![Vec::new(); nh],
+                k: (0..nh).map(|_| KvStore::zeros(prec, 0)).collect(),
+                v: (0..nh).map(|_| KvStore::zeros(prec, 0)).collect(),
             })
             .collect();
         DecodeSession {
@@ -68,9 +75,25 @@ impl<'a> DecodeSession<'a> {
             layers,
             pos: 0,
             stats: ForwardStats::default(),
-            kernel: engine.kernel_config(),
+            kernel,
             scratch: BatchScratch::new(),
         }
+    }
+
+    /// Storage precision of this session's KV caches.
+    pub fn kv_precision(&self) -> KvPrecision {
+        self.kernel.kv_precision
+    }
+
+    /// Total bytes held by the per-layer KV caches right now.
+    pub fn kv_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| {
+                l.k.iter().map(KvStore::bytes).sum::<usize>()
+                    + l.v.iter().map(KvStore::bytes).sum::<usize>()
+            })
+            .sum()
     }
 
     /// Remaining capacity before the positional table runs out.
@@ -120,8 +143,8 @@ impl<'a> DecodeSession<'a> {
                 let ki = rms_inv(&kh);
                 kh.iter_mut().for_each(|v| *v *= ki);
 
-                cache.k[head].extend_from_slice(&kh);
-                cache.v[head].extend_from_slice(&v[head * dh..(head + 1) * dh]);
+                cache.k[head].extend_from_f32(&kh);
+                cache.v[head].extend_from_f32(&v[head * dh..(head + 1) * dh]);
                 qhs.push(qh);
             }
             let n = self.pos + 1;
@@ -131,17 +154,17 @@ impl<'a> DecodeSession<'a> {
             // scratch keeps the kernel's score/state buffers off the
             // per-step allocation path
             let st = {
-                let jobs: Vec<RowJob<'_>> = (0..nh)
-                    .map(|head| RowJob {
+                let jobs: Vec<KvRowJob<'_>> = (0..nh)
+                    .map(|head| KvRowJob {
                         q: &qhs[head],
-                        k: &cache.k[head],
-                        v: &cache.v[head],
+                        k: cache.k[head].as_kv(),
+                        v: cache.v[head].as_kv(),
                         n,
                         d: dh,
                         scale,
                     })
                     .collect();
-                batch::run_rows_into_with(&kcfg, &jobs, dh, &mut attn, &mut self.scratch)
+                batch::run_kv_rows_into_with(&kcfg, &jobs, dh, &mut attn, &mut self.scratch)
             };
             self.stats.skip.merge(&st);
             self.stats.rows += nh as u64;
@@ -244,6 +267,41 @@ mod tests {
         let (_, stats) = e.greedy_decode_fast(&[1, 2, 3], 6);
         // rows = layers * heads * tokens_pushed
         assert_eq!(stats.rows, (2 * 2 * (3 + 6)) as u64);
+    }
+
+    #[test]
+    fn quantized_session_stays_close_and_halves_bytes() {
+        let toks: Vec<i32> = (0..10).map(|i| (i * 7 + 1) % 32).collect();
+        let e32 = tiny_engine(25);
+        let mut sess32 = e32.start_session();
+        let mut last32 = Vec::new();
+        for &t in &toks {
+            last32 = sess32.push_token(t);
+        }
+
+        let mut e16 = tiny_engine(25);
+        e16.set_kv_precision(KvPrecision::Bf16);
+        let mut sess16 = e16.start_session();
+        assert_eq!(sess16.kv_precision(), KvPrecision::Bf16);
+        let mut last16 = Vec::new();
+        for &t in &toks {
+            last16 = sess16.push_token(t);
+        }
+
+        // bf16 storage perturbs K/V by <0.4% relative; after two layers the
+        // logits stay well inside this envelope on the tiny model.
+        let diff = crate::kernels::max_abs_diff(&last32, &last16);
+        assert!(diff < 5e-2, "bf16 session drifted: {diff}");
+        // same element count, half the bytes at rest
+        assert_eq!(sess16.kv_bytes() * 2, sess32.kv_bytes());
+
+        let mut e8 = tiny_engine(25);
+        e8.set_kv_precision(KvPrecision::Fp8);
+        let mut sess8 = e8.start_session();
+        for &t in &toks {
+            sess8.push_token(t);
+        }
+        assert_eq!(sess8.kv_bytes() * 4, sess32.kv_bytes());
     }
 
     #[test]

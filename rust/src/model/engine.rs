@@ -8,8 +8,9 @@
 //! logits through the PJRT path and through this engine.
 
 use crate::kernels::batch::{self, KernelConfig};
-use crate::kernels::flashd::{SkipCriterion, SkipStats};
+use crate::kernels::flashd::{SigmoidMode, SkipCriterion, SkipStats};
 use crate::kernels::AttnProblem;
+use crate::numerics::quant::KvPrecision;
 use crate::model::weights::NamedTensor;
 use crate::runtime::ModelInfo;
 use anyhow::{anyhow, Result};
@@ -144,6 +145,21 @@ impl Engine {
     pub fn set_query_block(&mut self, block_q: usize) {
         assert!(block_q >= 1);
         self.kernel.block_q = block_q;
+    }
+
+    /// Storage precision for KV caches opened by [`Engine::start_session`]
+    /// (and honored by any layer that reads [`Engine::kernel_config`]).
+    /// Quantization is storage-only: the FLASH-D recursion stays f32, so
+    /// the default `F32` is bit-identical to the unquantized path.
+    pub fn set_kv_precision(&mut self, precision: KvPrecision) {
+        self.kernel.kv_precision = precision;
+    }
+
+    /// Sigmoid evaluation mode for the attention kernels: exact `libm`
+    /// transcendentals (default) or the piecewise-linear fast path of
+    /// paper §IV-B (opt-in, bounded error).
+    pub fn set_sigmoid_mode(&mut self, mode: SigmoidMode) {
+        self.kernel.sigmoid = mode;
     }
 
     /// Load a zoo model from the artifact directory (weights default to the

@@ -6,12 +6,25 @@
 //! convert -> f32 op -> convert, which models a hardware unit that keeps the
 //! operand format at its interfaces (the paper's datapaths likewise compute
 //! internal products at higher precision before renormalizing).
+//!
+//! Two distinct consumers share these formats:
+//!
+//! * the [`Scalar`] trait below runs *whole kernels* in a reduced format
+//!   (every intermediate rounds) — the hardware-faithful datapath study;
+//! * the [`quant`] module quantizes only the *KV storage* — operands round
+//!   once at rest, tiles dequantize to f32 scratch, and the attention
+//!   recursion itself stays in f32. That path is deterministic (bit-equal
+//!   to the f32 kernel over the dequantized arrays) and is what the serving
+//!   stack's `KvPrecision` knob toggles; see the `kernels` module docs for
+//!   the full precision ladder.
 
 pub mod bf16;
 pub mod fp8;
+pub mod quant;
 
 pub use bf16::Bf16;
 pub use fp8::Fp8E4M3;
+pub use quant::{KvPrecision, KvRef};
 
 /// A scalar number format the attention kernels can run in. This is the
 /// seam that lets the same Rust kernel code execute in f64/f32 (for

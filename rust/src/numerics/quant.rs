@@ -1,0 +1,228 @@
+//! KV-cache quantization: the storage-precision half of the precision
+//! ladder (see the `kernels` module docs).
+//!
+//! K and V rest in one of three formats — f32, BF16, or FP8-E4M3 — and are
+//! dequantized tile-by-tile into per-worker f32 scratch right before the
+//! score pass, so the attention recursion itself always runs in f32. The
+//! contract is therefore *deterministic*: a kernel run over quantized KV is
+//! bit-identical to the f32 kernel run over the dequantized arrays, and the
+//! only error vs. a full-precision run is the round-to-nearest-even
+//! quantization of the operands (bf16: 2^-9 relative per element, fp8:
+//! 2^-4).
+//!
+//! [`KvRef`] is the borrowed view the kernels consume; the owning side
+//! (`coordinator::kv_cache::KvStore`, `model::decode`) lives with the
+//! caches. FP8 decode goes through a 256-entry table built once from
+//! [`Fp8E4M3::to_f32`], so dequantization is a byte-indexed load — the
+//! in-software analogue of the hardware decode ROM.
+
+use std::sync::OnceLock;
+
+use super::{Bf16, Fp8E4M3};
+
+/// Storage precision for a KV cache. `F32` is the default and keeps every
+/// path bit-identical to the unquantized kernels (stores borrow zero-copy).
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Default)]
+pub enum KvPrecision {
+    #[default]
+    F32,
+    Bf16,
+    Fp8,
+}
+
+impl KvPrecision {
+    pub fn bytes_per_elem(self) -> usize {
+        match self {
+            KvPrecision::F32 => 4,
+            KvPrecision::Bf16 => 2,
+            KvPrecision::Fp8 => 1,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            KvPrecision::F32 => "f32",
+            KvPrecision::Bf16 => "bf16",
+            KvPrecision::Fp8 => "fp8_e4m3",
+        }
+    }
+}
+
+static FP8_DECODE: OnceLock<[f32; 256]> = OnceLock::new();
+
+/// The 256-entry FP8-E4M3 decode table (hardware decode ROM analogue).
+/// Entry `b` is exactly `Fp8E4M3(b).to_f32()`.
+#[inline]
+pub fn fp8_decode_table() -> &'static [f32; 256] {
+    FP8_DECODE.get_or_init(|| {
+        let mut t = [0.0f32; 256];
+        for (b, slot) in t.iter_mut().enumerate() {
+            *slot = Fp8E4M3(b as u8).to_f32();
+        }
+        t
+    })
+}
+
+/// Quantize to BF16 bits with round-to-nearest-even.
+pub fn quantize_bf16(src: &[f32]) -> Vec<u16> {
+    src.iter().map(|&x| Bf16::from_f32(x).to_bits()).collect()
+}
+
+/// Quantize to FP8-E4M3 bits with round-to-nearest-even and saturation.
+pub fn quantize_fp8(src: &[f32]) -> Vec<u8> {
+    src.iter().map(|&x| Fp8E4M3::from_f32(x).to_bits()).collect()
+}
+
+/// Dequantize BF16 bits; `dst.len()` must equal `src.len()`.
+#[inline]
+pub fn dequantize_bf16_into(src: &[u16], dst: &mut [f32]) {
+    debug_assert_eq!(src.len(), dst.len());
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = Bf16::from_bits(s).to_f32();
+    }
+}
+
+/// Dequantize FP8-E4M3 bits through the decode table; `dst.len()` must
+/// equal `src.len()`.
+#[inline]
+pub fn dequantize_fp8_into(src: &[u8], dst: &mut [f32]) {
+    debug_assert_eq!(src.len(), dst.len());
+    let lut = fp8_decode_table();
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = lut[s as usize];
+    }
+}
+
+/// A borrowed, possibly-quantized K or V buffer, in the same flat row-major
+/// element order as the f32 slices the kernels take. Lengths are in
+/// *elements* (f32 lanes), not bytes.
+#[derive(Copy, Clone, Debug)]
+pub enum KvRef<'a> {
+    F32(&'a [f32]),
+    Bf16(&'a [u16]),
+    Fp8(&'a [u8]),
+}
+
+impl<'a> KvRef<'a> {
+    pub fn len(&self) -> usize {
+        match self {
+            KvRef::F32(s) => s.len(),
+            KvRef::Bf16(s) => s.len(),
+            KvRef::Fp8(s) => s.len(),
+        }
+    }
+
+    pub fn precision(&self) -> KvPrecision {
+        match self {
+            KvRef::F32(_) => KvPrecision::F32,
+            KvRef::Bf16(_) => KvPrecision::Bf16,
+            KvRef::Fp8(_) => KvPrecision::Fp8,
+        }
+    }
+
+    /// The zero-copy escape hatch: `Some` iff the buffer is already f32.
+    pub fn as_f32(&self) -> Option<&'a [f32]> {
+        match self {
+            KvRef::F32(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Element sub-range `[a, b)`.
+    pub fn slice(&self, a: usize, b: usize) -> KvRef<'a> {
+        match self {
+            KvRef::F32(s) => KvRef::F32(&s[a..b]),
+            KvRef::Bf16(s) => KvRef::Bf16(&s[a..b]),
+            KvRef::Fp8(s) => KvRef::Fp8(&s[a..b]),
+        }
+    }
+
+    /// Dequantize elements `[a, b)` into `dst` (`dst.len() == b - a`). For
+    /// `F32` this is a plain copy, so downstream f32 math is unchanged.
+    pub fn load_into(&self, a: usize, b: usize, dst: &mut [f32]) {
+        debug_assert_eq!(dst.len(), b - a);
+        match self {
+            KvRef::F32(s) => dst.copy_from_slice(&s[a..b]),
+            KvRef::Bf16(s) => dequantize_bf16_into(&s[a..b], dst),
+            KvRef::Fp8(s) => dequantize_fp8_into(&s[a..b], dst),
+        }
+    }
+
+    /// Dequantize the whole buffer into a fresh Vec.
+    pub fn to_f32_vec(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.len()];
+        self.load_into(0, self.len(), &mut out);
+        out
+    }
+
+    /// Identity: same variant, same starting address, same length. Used by
+    /// the batch coalescer to detect shared KV / causal staircases.
+    pub fn same(a: KvRef<'_>, b: KvRef<'_>) -> bool {
+        match (a, b) {
+            (KvRef::F32(x), KvRef::F32(y)) => std::ptr::eq(x.as_ptr(), y.as_ptr()) && x.len() == y.len(),
+            (KvRef::Bf16(x), KvRef::Bf16(y)) => std::ptr::eq(x.as_ptr(), y.as_ptr()) && x.len() == y.len(),
+            (KvRef::Fp8(x), KvRef::Fp8(y)) => std::ptr::eq(x.as_ptr(), y.as_ptr()) && x.len() == y.len(),
+            _ => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fp8_table_matches_to_f32() {
+        let t = fp8_decode_table();
+        for b in 0u16..=255 {
+            let want = Fp8E4M3(b as u8).to_f32();
+            let got = t[b as usize];
+            if want.is_nan() {
+                assert!(got.is_nan(), "code {b:#04x}");
+            } else {
+                assert_eq!(got, want, "code {b:#04x}");
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_dequantize_roundtrip_is_projection() {
+        // dequant(quant(x)) is a fixpoint: quantizing again changes nothing.
+        let src: Vec<f32> = (0..257).map(|i| (i as f32 - 128.0) * 0.0371).collect();
+        let b = quantize_bf16(&src);
+        let mut d1 = vec![0.0f32; src.len()];
+        dequantize_bf16_into(&b, &mut d1);
+        assert_eq!(quantize_bf16(&d1), b);
+        let f = quantize_fp8(&src);
+        let mut d2 = vec![0.0f32; src.len()];
+        dequantize_fp8_into(&f, &mut d2);
+        assert_eq!(quantize_fp8(&d2), f);
+    }
+
+    #[test]
+    fn kvref_slice_load_and_identity() {
+        let src: Vec<f32> = (0..64).map(|i| i as f32 * 0.25 - 8.0).collect();
+        let qb = quantize_bf16(&src);
+        let qf = quantize_fp8(&src);
+        for r in [KvRef::F32(&src), KvRef::Bf16(&qb), KvRef::Fp8(&qf)] {
+            assert_eq!(r.len(), 64);
+            let full = r.to_f32_vec();
+            let mut mid = vec![0.0f32; 16];
+            r.load_into(8, 24, &mut mid);
+            assert_eq!(&full[8..24], &mid[..]);
+            let sub = r.slice(8, 24).to_f32_vec();
+            assert_eq!(sub, mid);
+            assert!(KvRef::same(r, r));
+        }
+        assert!(!KvRef::same(KvRef::F32(&src), KvRef::Bf16(&qb)));
+        assert!(!KvRef::same(KvRef::F32(&src[..32]), KvRef::F32(&src)));
+    }
+
+    #[test]
+    fn precision_metadata() {
+        assert_eq!(KvPrecision::default(), KvPrecision::F32);
+        assert_eq!(KvPrecision::F32.bytes_per_elem(), 4);
+        assert_eq!(KvPrecision::Bf16.bytes_per_elem(), 2);
+        assert_eq!(KvPrecision::Fp8.bytes_per_elem(), 1);
+    }
+}

@@ -37,6 +37,61 @@ fn sigmoid(x: f64) -> f64 {
     }
 }
 
+/// The paired sigmoid + ln PWL tables the tiled kernel's
+/// `SigmoidMode::Pwl { segments }` fast path evaluates through — the two
+/// non-linear units of the paper's Fig. 3 datapath, with a configurable
+/// segment count (the paper uses [`SEGMENTS`] = 8 for both).
+///
+/// Mirrors `flashd::attention_pwl`'s structure: the weight comes from the
+/// sigmoid table (clamped to [0, 1]) and the carried `ln w` from the ln
+/// table applied to that weight (clamped to <= 0), so the software fast
+/// path models the same two ROMs the hardware would instantiate.
+#[derive(Clone, Debug)]
+pub struct SigTables {
+    segments: usize,
+    sig: Pwl,
+    ln: Pwl,
+}
+
+impl SigTables {
+    pub fn new(segments: usize) -> SigTables {
+        let segments = segments.max(1);
+        SigTables {
+            segments,
+            sig: fit_adaptive(sigmoid, SIGMOID_LO, SIGMOID_HI, segments, 4096),
+            ln: fit_adaptive(f64::ln, LN_LO, LN_HI, segments, 4096),
+        }
+    }
+
+    pub fn segments(&self) -> usize {
+        self.segments
+    }
+
+    /// One weight-update step: `(w, ln w)` for sigmoid argument `x`.
+    ///
+    /// The sigmoid table saturates to ~sigmoid(-6) > 0 below the domain, so
+    /// `w` stays positive and the ln table's domain `[sigmoid(-6), 1]`
+    /// covers it; the `w <= 0` guard (pass-through `ln w := x`, the same
+    /// low-tail identity the skip path uses) only protects against a
+    /// degenerate fit.
+    #[inline]
+    pub fn weight_and_ln(&self, x: f64) -> (f64, f64) {
+        let w = self.sig.eval(x).clamp(0.0, 1.0);
+        let ln_w = if w <= 0.0 { x } else { self.ln.eval(w).min(0.0) };
+        (w, ln_w)
+    }
+
+    /// Measured max abs error of the sigmoid table over its domain.
+    pub fn sigmoid_max_error(&self) -> f64 {
+        self.sig.max_error_against(sigmoid, 20_000)
+    }
+
+    /// Measured max abs error of the ln table over its domain.
+    pub fn ln_max_error(&self) -> f64 {
+        self.ln.max_error_against(f64::ln, 20_000)
+    }
+}
+
 /// The hardware sigmoid unit: 8-segment PWL over [-6, 11], saturating to
 /// (near) 0 / 1 outside — Fig. 3's σ block.
 #[derive(Clone, Debug)]
@@ -225,5 +280,35 @@ mod tests {
     fn segment_count_is_papers_eight() {
         assert_eq!(SigmoidPwl::new().table().segments(), SEGMENTS);
         assert_eq!(LnPwl::new().table().segments(), SEGMENTS);
+    }
+
+    #[test]
+    fn sig_tables_weight_and_ln_envelope() {
+        let t = SigTables::new(SEGMENTS);
+        assert_eq!(t.segments(), SEGMENTS);
+        let es = t.sigmoid_max_error();
+        let el = t.ln_max_error();
+        assert!(es < 0.015, "sigmoid table err {es}");
+        assert!(el < 0.25, "ln table err {el}");
+        for i in 0..=400 {
+            let x = -12.0 + 26.0 * i as f64 / 400.0;
+            let (w, lnw) = t.weight_and_ln(x);
+            assert!((0.0..=1.0).contains(&w), "x={x} w={w}");
+            assert!(lnw <= 0.0, "x={x} lnw={lnw}");
+            if x >= SIGMOID_LO && x <= SIGMOID_HI {
+                assert!((w - sigmoid(x)).abs() <= es + 1e-12, "x={x}");
+            }
+            if w >= LN_LO {
+                assert!((lnw - w.ln()).abs() <= el + 1e-12, "x={x}");
+            }
+        }
+    }
+
+    #[test]
+    fn sig_tables_more_segments_tighter() {
+        let coarse = SigTables::new(4);
+        let fine = SigTables::new(16);
+        assert!(fine.sigmoid_max_error() < coarse.sigmoid_max_error());
+        assert!(fine.ln_max_error() < coarse.ln_max_error());
     }
 }

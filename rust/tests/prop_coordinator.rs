@@ -295,16 +295,58 @@ fn prop_kv_append_preserves_prior_content() {
             let kv = (i as f32 + 0.25, i as f32 * 2.0);
             c.append(&[kv.0, kv.1], &[kv.1, kv.0], 1).unwrap();
             history.push(kv);
-            // all earlier entries still intact
+            // all earlier entries still intact (f32 store: exact)
+            let kf = c.k.to_f32_vec();
             for (j, (a, b)) in history.iter().enumerate() {
                 prop_assert!(
                     g,
-                    c.k[j * 2] == *a && c.k[j * 2 + 1] == *b,
+                    kf[j * 2] == *a && kf[j * 2 + 1] == *b,
                     "slot {j} corrupted after append {i}"
                 );
             }
         }
         prop_assert!(g, c.len == n_ops, "len mismatch");
+        true
+    });
+}
+
+/// Quantized caches: appending is a projection (quantize once, stays
+/// fixed), earlier rows are never re-rounded by later appends, and the
+/// byte accounting matches the precision.
+#[test]
+fn prop_quantized_kv_append_is_stable_projection() {
+    use flashd::coordinator::kv_cache::KvCache;
+    use flashd::numerics::quant::KvPrecision;
+    forall("kv-append-quantized", 100, |g| {
+        let prec = if g.bool() { KvPrecision::Bf16 } else { KvPrecision::Fp8 };
+        let cap = g.usize_in(2, 12);
+        let mut c = KvCache::with_precision(1, 2, cap, prec);
+        let n_ops = g.usize_in(1, cap);
+        let mut snapshot: Vec<f32> = Vec::new();
+        for i in 0..n_ops {
+            // modest magnitudes so fp8 stays in range
+            let a = (i as f32 * 0.37 - 1.0).sin();
+            let b = (i as f32 * 0.91 + 0.5).cos();
+            c.append(&[a, b], &[b, a], 1).unwrap();
+            let kf = c.k.to_f32_vec();
+            // earlier rows bit-stable across appends
+            prop_assert!(
+                g,
+                kf[..snapshot.len()] == snapshot[..],
+                "earlier rows re-rounded at append {i}"
+            );
+            // re-storing a dequantized value is a fixed point
+            let row = &kf[i * 2..i * 2 + 2];
+            let mut probe = KvCache::with_precision(1, 2, 1, prec);
+            probe.append(row, row, 1).unwrap();
+            prop_assert!(
+                g,
+                probe.k.to_f32_vec() == row,
+                "quantize not a projection at append {i}"
+            );
+            snapshot = kf[..(i + 1) * 2].to_vec();
+        }
+        prop_assert!(g, c.bytes() == 2 * cap * 2 * prec.bytes_per_elem(), "byte accounting");
         true
     });
 }

@@ -4,9 +4,14 @@
 
 use flashd::kernels::flashd::{log_sigmoid, sigmoid, weight, SkipCriterion, SkipStats, ACTIVE_HI, ACTIVE_LO};
 use flashd::kernels::flashd as fd;
-use flashd::kernels::{batch, flash1, flash2, max_abs_diff, naive, qblock, tiled, KernelConfig, RowJob};
+use flashd::kernels::{
+    batch, flash1, flash2, max_abs_diff, naive, qblock, scalar, tiled, BatchScratch, KernelConfig,
+    KvRef, KvRowJob, RowJob, SigmoidMode,
+};
+use flashd::numerics::quant::{quantize_bf16, quantize_fp8};
 use flashd::numerics::{Bf16, Fp8E4M3, Scalar};
 use flashd::prop_assert;
+use flashd::pwl::SigTables;
 use flashd::util::prop::forall;
 
 #[test]
@@ -417,6 +422,7 @@ fn prop_grouped_rows_bitmatch_and_thread_invariant() {
                 block_q,
                 threads,
                 skip: SkipCriterion::Static,
+                ..KernelConfig::default()
             };
             let (want, want_st) = batch::run_rows(&mk(1), &jobs);
             for (i, j) in jobs.iter().enumerate() {
@@ -465,6 +471,158 @@ fn prop_permuting_kv_pairs_preserves_attention() {
         }
         let rot = fd::attention(&q, &k2, &v2, n, d, 1.0);
         prop_assert!(g, max_abs_diff(&base, &rot) < 5e-5, "order dependence detected");
+        true
+    });
+}
+
+#[test]
+fn prop_hot_loop_primitives_bitmatch_scalar_reference() {
+    // The crate-level dot / axpy_blend must be bit-identical to the scalar
+    // reference for every slice length (tails included). Under
+    // `--features simd` this pins the vectorized lanes to the scalar
+    // unroll's accumulator order; on the default build it is an identity.
+    forall("simd-scalar-bitmatch", 120, |g| {
+        let len = g.usize_in(0, 70);
+        let a = g.vec_normal(len, 1.3);
+        let b = g.vec_normal(len, 1.3);
+        prop_assert!(
+            g,
+            flashd::kernels::dot(&a, &b) == scalar::dot(&a, &b),
+            "dot differs from scalar at len={len}"
+        );
+        let w = g.f64_in(0.0, 1.0) as f32;
+        let mut o1 = g.vec_normal(len, 1.0);
+        let mut o2 = o1.clone();
+        flashd::kernels::axpy_blend(&mut o1, &a, w);
+        scalar::axpy_blend(&mut o2, &a, w);
+        prop_assert!(g, o1 == o2, "axpy_blend differs from scalar at len={len}");
+        true
+    });
+}
+
+#[test]
+fn prop_quantized_kv_rows_bitmatch_dequantized_run_and_stay_enveloped() {
+    // The quantized-KV contract is deterministic: running the kernel over
+    // bf16/fp8 stores is the SAME sequence of f32 ops as running the plain
+    // f32 kernel over dequantize(quantize(.)), so outputs and SkipStats
+    // must be bit-identical. Against the unquantized f32 run the error is
+    // enveloped by the format's relative precision.
+    forall("kv-quantized-contract", 30, |g| {
+        let rows = g.usize_in(1, 6);
+        let n = g.usize_in(1, 64);
+        let d = *g.choose(&[4usize, 8, 16]);
+        let scale = 0.3f32;
+        let data: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = (0..rows)
+            .map(|_| {
+                let mut v = g.vec_normal(n * d, 0.3);
+                // keep fp8's relative error an absolute envelope
+                v.iter_mut().for_each(|x| *x = x.clamp(-0.6, 0.6));
+                (g.vec_normal(d, 0.6), g.vec_normal(n * d, 0.6), v)
+            })
+            .collect();
+        let cfg = KernelConfig { tile: 16, threads: 2, ..KernelConfig::default() };
+
+        // unquantized f32 reference
+        let jobs32: Vec<RowJob> = data
+            .iter()
+            .map(|(q, k, v)| RowJob { q, k, v, n, d, scale })
+            .collect();
+        let mut out32 = vec![0.0f32; rows * d];
+        let mut scratch = BatchScratch::new();
+        batch::run_rows_into_with(&cfg, &jobs32, d, &mut out32, &mut scratch);
+
+        for fp8 in [false, true] {
+            // quantize at rest, then dequantize to build the oracle operands
+            let stores: Vec<(Vec<u16>, Vec<u8>, Vec<u16>, Vec<u8>)> = data
+                .iter()
+                .map(|(_, k, v)| {
+                    (quantize_bf16(k), quantize_fp8(k), quantize_bf16(v), quantize_fp8(v))
+                })
+                .collect();
+            let kvrefs: Vec<(KvRef, KvRef)> = stores
+                .iter()
+                .map(|(kb, k8, vb, v8)| {
+                    if fp8 {
+                        (KvRef::Fp8(k8.as_slice()), KvRef::Fp8(v8.as_slice()))
+                    } else {
+                        (KvRef::Bf16(kb.as_slice()), KvRef::Bf16(vb.as_slice()))
+                    }
+                })
+                .collect();
+            let jobs_q: Vec<KvRowJob> = data
+                .iter()
+                .zip(&kvrefs)
+                .map(|((q, _, _), (k, v))| KvRowJob { q, k: *k, v: *v, n, d, scale })
+                .collect();
+            let mut out_q = vec![0.0f32; rows * d];
+            let st_q = batch::run_kv_rows_into_with(&cfg, &jobs_q, d, &mut out_q, &mut scratch);
+
+            // oracle: plain f32 run over the dequantized operands
+            let deq: Vec<(Vec<f32>, Vec<f32>)> = kvrefs
+                .iter()
+                .map(|(k, v)| (k.to_f32_vec(), v.to_f32_vec()))
+                .collect();
+            let jobs_o: Vec<RowJob> = data
+                .iter()
+                .zip(&deq)
+                .map(|((q, _, _), (k, v))| RowJob { q, k, v, n, d, scale })
+                .collect();
+            let mut out_o = vec![0.0f32; rows * d];
+            let st_o = batch::run_rows_into_with(&cfg, &jobs_o, d, &mut out_o, &mut scratch);
+            prop_assert!(g, out_q == out_o, "fp8={fp8}: not bit-identical to dequantized run");
+            prop_assert!(g, st_q == st_o, "fp8={fp8}: stats differ from dequantized run");
+
+            // envelope vs the full-precision run
+            let bound = if fp8 { 5e-2 } else { 1e-2 };
+            let err = max_abs_diff(&out_q, &out32);
+            prop_assert!(g, err <= bound, "fp8={fp8}: err {err} > {bound} (n={n} d={d})");
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_pwl_sigmoid_end_to_end_enveloped_by_table_error() {
+    // Opt-in PWL sigmoid: the end-to-end attention error is controlled by
+    // the measured table errors (sigmoid + ln), scaled by the value range
+    // — the output stays a convex-ish combination of values, so per-step
+    // weight perturbations cannot amplify past the value spread.
+    forall("pwl-envelope", 30, |g| {
+        let rows = g.usize_in(1, 4);
+        let n = g.usize_in(2, 64);
+        let d = *g.choose(&[4usize, 8]);
+        let data: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = (0..rows)
+            .map(|_| (g.vec_normal(d, 0.8), g.vec_normal(n * d, 0.8), g.vec_normal(n * d, 1.0)))
+            .collect();
+        let jobs: Vec<RowJob> = data
+            .iter()
+            .map(|(q, k, v)| RowJob { q, k, v, n, d, scale: 0.4 })
+            .collect();
+        let exact_cfg = KernelConfig { tile: 16, threads: 1, ..KernelConfig::default() };
+        let (exact, _) = batch::run_rows(&exact_cfg, &jobs);
+        for segments in [8usize, 16] {
+            let tables = SigTables::new(segments);
+            let es = tables.sigmoid_max_error() as f32;
+            let el = tables.ln_max_error() as f32;
+            let cfg = KernelConfig {
+                sigmoid: SigmoidMode::Pwl { segments },
+                ..exact_cfg
+            };
+            let (pwl, _) = batch::run_rows(&cfg, &jobs);
+            let vmax = data
+                .iter()
+                .flat_map(|(_, _, v)| v.iter())
+                .fold(0.0f32, |a, &b| a.max(b.abs()));
+            let bound = (3.0 * (es + el)).max(0.25) * vmax + 1e-4;
+            for (i, row) in pwl.iter().enumerate() {
+                let err = max_abs_diff(row, &exact[i]);
+                prop_assert!(
+                    g,
+                    err <= bound,
+                    "segments={segments} row {i}: err {err} > {bound}"
+                );
+            }
+        }
         true
     });
 }

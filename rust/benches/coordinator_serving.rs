@@ -11,11 +11,19 @@
 //! so the serving path is measurable in artifact-free environments too.
 
 use flashd::bench_harness::workload::{session_requests, stateless_request, WorkloadSpec};
+use flashd::coordinator::kv_cache::SessionStore;
 use flashd::coordinator::router::Router;
 use flashd::coordinator::{Coordinator, CoordinatorConfig, ShapeSig, Variant};
+use flashd::kernels::batch::{
+    run_kv_blocks_flat_into_with, run_paged_kv_blocks_flat_into_with, BatchScratch, KernelConfig,
+    KvBlockJob, PagedKvBlockJob,
+};
+use flashd::kernels::KvRef;
+use flashd::numerics::quant::KvPrecision;
 use flashd::runtime::Manifest;
-use flashd::util::bench::{Bench, Stats};
+use flashd::util::bench::{bb, Bench, Stats};
 use flashd::util::json::Json;
+use flashd::util::rng::Rng;
 use std::collections::BTreeMap;
 use std::sync::{Arc, Barrier};
 use std::time::Instant;
@@ -269,6 +277,132 @@ fn main() {
         });
     }
     sb.note("fused_over_serial_sessions8_nkv2048_d64", serial_s / fused_s);
+
+    // -- paged KV pool: shared-prefix memory + paged vs dense streaming --
+    println!("\n=== paged KV pool: shared-prefix memory (32 forks) + paged vs dense streaming ===");
+    let (heads, d) = (2usize, 64usize);
+    let bs = KernelConfig::default().tile;
+    let scale = (d as f32).powf(-0.5);
+    let mut rng = Rng::new(0x9A6ED);
+    {
+        // (a) memory: 32 sessions forked off one shared system prompt vs
+        // 32 dense (unshared) copies of the same contexts. The prompt is a
+        // multiple of the block size, so the fork boundary is
+        // block-aligned and divergence costs zero copy-on-write.
+        let prefix = if fast { 8 * bs } else { 64 * bs };
+        let sessions32 = 32usize;
+        let diverge = 8usize;
+        let pk = rng.normal_vec(heads * prefix * d, 0.5);
+        let pv = rng.normal_vec(heads * prefix * d, 0.5);
+        let dk = rng.normal_vec(heads * diverge * d, 0.5);
+        let dv = rng.normal_vec(heads * diverge * d, 0.5);
+        let mut paged = SessionStore::with_block_steps(usize::MAX, KvPrecision::F32, bs);
+        paged.create(0, heads, d, prefix + diverge).expect("create");
+        paged.append(0, &pk, &pv, prefix).expect("prefill");
+        for s in 1..sessions32 as u64 {
+            paged.fork(0, s).expect("fork");
+        }
+        for s in 0..sessions32 as u64 {
+            paged.append(s, &dk, &dv, diverge).expect("diverge");
+        }
+        let mut dense = SessionStore::with_block_steps(usize::MAX, KvPrecision::F32, bs);
+        for s in 0..sessions32 as u64 {
+            dense.create(s, heads, d, prefix + diverge).expect("create");
+            dense.append(s, &pk, &pv, prefix).expect("prefill");
+            dense.append(s, &dk, &dv, diverge).expect("diverge");
+        }
+        let ratio = dense.bytes() as f64 / paged.bytes() as f64;
+        println!(
+            "shared-prefix memory: dense {} bytes vs paged {} bytes -> {ratio:.2}x \
+             ({} prefix blocks stored once across {sessions32} sessions, cow_copies={})",
+            dense.bytes(),
+            paged.bytes(),
+            prefix / bs,
+            paged.cow_copies,
+        );
+        assert_eq!(paged.cow_copies, 0, "block-aligned fork must not copy");
+        sb.note("paged_shared_prefix_bytes_over_dense_sessions32", ratio);
+    }
+    {
+        // (b) throughput: the 8-session decode gather served through the
+        // paged block-table views vs the same logical KV as contiguous
+        // buffers. Outputs are bit-identical by construction; the ratio
+        // prices the per-tile fragment resolution.
+        let (nses, nkv) = (8usize, 2048usize);
+        let cfg = KernelConfig::default();
+        let mut store = SessionStore::with_block_steps(usize::MAX, KvPrecision::F32, bs);
+        let (mut ks, mut vs, mut qs) = (Vec::new(), Vec::new(), Vec::new());
+        for s in 0..nses {
+            let k = rng.normal_vec(heads * nkv * d, 0.5);
+            let v = rng.normal_vec(heads * nkv * d, 0.5);
+            store.create(s as u64, heads, d, nkv).expect("create");
+            store.append(s as u64, &k, &v, nkv).expect("append");
+            ks.push(k);
+            vs.push(v);
+            qs.push(rng.normal_vec(heads * d, 0.5));
+        }
+        let mut dense_jobs = Vec::with_capacity(nses * heads);
+        for s in 0..nses {
+            for h in 0..heads {
+                dense_jobs.push(KvBlockJob {
+                    q: &qs[s][h * d..(h + 1) * d],
+                    k: KvRef::F32(&ks[s][h * nkv * d..(h + 1) * nkv * d]),
+                    v: KvRef::F32(&vs[s][h * nkv * d..(h + 1) * nkv * d]),
+                    nq: 1,
+                    n: nkv,
+                    d,
+                    scale,
+                    causal: false,
+                });
+            }
+        }
+        let ids: Vec<u64> = (0..nses as u64).collect();
+        let views: Vec<_> = store
+            .gather_many(&ids)
+            .into_iter()
+            .map(|o| o.expect("session exists"))
+            .collect();
+        let mut paged_jobs = Vec::with_capacity(nses * heads);
+        for s in 0..nses {
+            for h in 0..heads {
+                paged_jobs.push(PagedKvBlockJob {
+                    q: &qs[s][h * d..(h + 1) * d],
+                    k: views[s].head_k(h),
+                    v: views[s].head_v(h),
+                    nq: 1,
+                    n: nkv,
+                    d,
+                    scale,
+                    causal: false,
+                });
+            }
+        }
+        let mut scratch = BatchScratch::new();
+        let mut out_d = vec![0.0f32; nses * heads * d];
+        let mut out_p = vec![0.0f32; nses * heads * d];
+        run_kv_blocks_flat_into_with(&cfg, &dense_jobs, &mut out_d, &mut scratch);
+        run_paged_kv_blocks_flat_into_with(&cfg, &paged_jobs, &mut out_p, &mut scratch);
+        assert_eq!(out_d, out_p, "paged gather must be bit-identical to contiguous");
+        let pairs = (nses * heads * nkv) as f64;
+        let t_dense = sb.bench_throughput(
+            "serving_dense_kv_blocks_sessions8_nkv2048_d64",
+            pairs,
+            "pair",
+            || {
+                bb(run_kv_blocks_flat_into_with(&cfg, &dense_jobs, &mut out_d, &mut scratch));
+            },
+        );
+        let t_paged = sb.bench_throughput(
+            "serving_paged_kv_blocks_sessions8_nkv2048_d64",
+            pairs,
+            "pair",
+            || {
+                bb(run_paged_kv_blocks_flat_into_with(&cfg, &paged_jobs, &mut out_p, &mut scratch));
+            },
+        );
+        println!("-- paged/dense streaming throughput: {:.3}x", t_dense / t_paged);
+        sb.note("paged_over_dense_sessions8_nkv2048_d64", t_dense / t_paged);
+    }
     merge_serving_into_bench_json(&sb, "BENCH_kernels.json");
 
     std::fs::create_dir_all("reports").ok();

@@ -11,7 +11,7 @@ use flashd::bench_harness::suites::{SWEEP_NQ, SWEEP_SHAPES, SWEEP_THREADS, SWEEP
 use flashd::kernels::flashd as fd;
 use flashd::kernels::{
     batch, flash1, flash2, naive, scalar, tiled, AttnProblem, BlockJob, KernelConfig, KvRef,
-    KvRowJob, RowJob, SigmoidMode,
+    KvRowJob, KvView, RowJob, SigmoidMode,
 };
 use flashd::numerics::quant::{quantize_bf16, quantize_fp8};
 use flashd::numerics::{Bf16, Fp8E4M3};
@@ -248,8 +248,8 @@ fn main() {
             .iter()
             .map(|p| KvRowJob {
                 q: &p.q,
-                k: KvRef::F32(p.k.as_slice()),
-                v: KvRef::F32(p.v.as_slice()),
+                k: KvView::Contig(KvRef::F32(p.k.as_slice())),
+                v: KvView::Contig(KvRef::F32(p.v.as_slice())),
                 n,
                 d,
                 scale: 1.0,
@@ -266,8 +266,8 @@ fn main() {
             .zip(&st16)
             .map(|(p, (k, v))| KvRowJob {
                 q: &p.q,
-                k: KvRef::Bf16(k.as_slice()),
-                v: KvRef::Bf16(v.as_slice()),
+                k: KvView::Contig(KvRef::Bf16(k.as_slice())),
+                v: KvView::Contig(KvRef::Bf16(v.as_slice())),
                 n,
                 d,
                 scale: 1.0,
@@ -284,8 +284,8 @@ fn main() {
             .zip(&st8)
             .map(|(p, (k, v))| KvRowJob {
                 q: &p.q,
-                k: KvRef::Fp8(k.as_slice()),
-                v: KvRef::Fp8(v.as_slice()),
+                k: KvView::Contig(KvRef::Fp8(k.as_slice())),
+                v: KvView::Contig(KvRef::Fp8(v.as_slice())),
                 n,
                 d,
                 scale: 1.0,

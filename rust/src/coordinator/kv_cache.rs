@@ -1,25 +1,47 @@
-//! Per-session KV cache with capacity accounting and LRU eviction — the
-//! state the decode path reads instead of re-shipping the whole context on
-//! every token.
+//! Paged KV cache: a block-pooled store with per-session block tables,
+//! refcounted copy-on-write prefix sharing, and block-granular LRU
+//! eviction — the state the decode path reads instead of re-shipping the
+//! whole context on every token.
 //!
-//! Layout matches the attention artifacts: K and V are (heads, cap,
-//! head_dim) flat with the live prefix `len` valid and the tail zero-padded
-//! (the artifacts mask by `kv_len`, so padding content is irrelevant —
-//! zeros keep buffers deterministic).
+//! # Why paged equals contiguous, bit for bit
 //!
-//! Since the quantized-KV PR, both tensors live in a [`KvStore`]: f32 at
-//! full precision (the default, bit-identical to the old layout) or
-//! bf16/fp8 quantized *at rest*. Quantization happens once on append;
-//! reads hand out a [`KvRef`] that the kernels dequantize tile-by-tile
-//! into per-worker scratch, so a bf16 session holds half — and an fp8
-//! session a quarter — of the f32 cache bytes, which the LRU byte budget
-//! accounts for exactly.
+//! Storage is a [`BlockPool`] of fixed-size blocks, each holding
+//! `block_steps` KV steps for every head of one session, laid out
+//! `[head][step][dim]` flat inside the block. A session is a
+//! [`BlockTable`]: an ordered list of pool slots whose concatenated
+//! per-head fragments form exactly the same element sequence the old
+//! contiguous cache held. The kernels never index KV storage directly —
+//! they consume it through [`KvView::load_into`] element ranges (the tile
+//! loop), and the paged view ([`crate::numerics::quant::PagedKv`]) splits
+//! each requested range across block fragments, dequantizing the *same
+//! stored values in the same order* as a contiguous buffer would. Kernel
+//! tiles start at key index 1 (step 0 seeds the recursion), so tiles are
+//! deliberately *not* aligned to pool blocks; correctness rests purely on
+//! the range-splitting contract, which is why per-tile output is
+//! bit-identical to the contiguous path by construction, at every
+//! [`KvPrecision`].
+//!
+//! # Sharing and eviction
+//!
+//! Blocks are refcounted. [`SessionStore::fork`] shares *all* of a
+//! session's blocks (including a partially filled tail) at zero copy
+//! cost; the first divergent append to a shared tail triggers a
+//! copy-on-write clone of just that block. Full blocks are never mutated
+//! after they fill, so a shared prefix is stored once no matter how many
+//! sessions hang off it. Eviction picks a victim session via an O(1) LRU
+//! index but reclaims at *block* granularity: only blocks whose refcount
+//! drops to zero free bytes, so evicting one fork never tears the shared
+//! prefix out from under its siblings.
+//!
+//! Quantization is unchanged from the contiguous design: each block's K
+//! and V live in a [`KvStore`] (f32 / bf16 / fp8 at rest), quantized once
+//! on append, dequantized tile-by-tile through [`KvRef`].
 
 use std::collections::HashMap;
 
 use crate::numerics::bf16::Bf16;
 use crate::numerics::fp8::Fp8E4M3;
-use crate::numerics::quant::{KvPrecision, KvRef};
+use crate::numerics::quant::{KvPrecision, KvRef, KvView, PagedKv};
 
 /// Backing storage for one K or V tensor at a chosen [`KvPrecision`].
 /// The f32 variant reads back bit-exactly; the quantized variants are a
@@ -113,84 +135,473 @@ impl KvStore {
     }
 }
 
-/// One session's cached keys/values.
-#[derive(Clone, Debug)]
-pub struct KvCache {
+// ---------------------------------------------------------------------------
+// O(1) LRU index
+// ---------------------------------------------------------------------------
+
+const NIL: usize = usize::MAX;
+
+#[derive(Debug)]
+struct LruNode {
+    id: u64,
+    prev: usize,
+    next: usize,
+}
+
+/// Intrusive doubly-linked LRU over a slab, with a hash index for O(1)
+/// `touch`/`remove` (the old store paid an O(n) `Vec` scan + shift on
+/// every access). Front = least recently used, back = most recent.
+#[derive(Debug)]
+pub struct LruIndex {
+    nodes: Vec<LruNode>,
+    map: HashMap<u64, usize>,
+    head: usize,
+    tail: usize,
+    free: Vec<usize>,
+}
+
+impl LruIndex {
+    pub fn new() -> LruIndex {
+        LruIndex { nodes: Vec::new(), map: HashMap::new(), head: NIL, tail: NIL, free: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn contains(&self, id: u64) -> bool {
+        self.map.contains_key(&id)
+    }
+
+    /// Least recently used id, if any.
+    pub fn front(&self) -> Option<u64> {
+        (self.head != NIL).then(|| self.nodes[self.head].id)
+    }
+
+    /// Least recently used id that is not `skip` — the eviction victim
+    /// query: the session being served must never evict itself.
+    pub fn front_excluding(&self, skip: u64) -> Option<u64> {
+        let mut idx = self.head;
+        while idx != NIL {
+            if self.nodes[idx].id != skip {
+                return Some(self.nodes[idx].id);
+            }
+            idx = self.nodes[idx].next;
+        }
+        None
+    }
+
+    fn unlink(&mut self, idx: usize) {
+        let (prev, next) = (self.nodes[idx].prev, self.nodes[idx].next);
+        if prev != NIL {
+            self.nodes[prev].next = next;
+        } else {
+            self.head = next;
+        }
+        if next != NIL {
+            self.nodes[next].prev = prev;
+        } else {
+            self.tail = prev;
+        }
+        self.nodes[idx].prev = NIL;
+        self.nodes[idx].next = NIL;
+    }
+
+    fn push_back(&mut self, idx: usize) {
+        self.nodes[idx].prev = self.tail;
+        self.nodes[idx].next = NIL;
+        if self.tail != NIL {
+            self.nodes[self.tail].next = idx;
+        } else {
+            self.head = idx;
+        }
+        self.tail = idx;
+    }
+
+    /// Mark `id` most recently used, inserting it if absent. O(1).
+    pub fn touch(&mut self, id: u64) {
+        if let Some(&idx) = self.map.get(&id) {
+            self.unlink(idx);
+            self.push_back(idx);
+            return;
+        }
+        let idx = match self.free.pop() {
+            Some(slot) => {
+                self.nodes[slot] = LruNode { id, prev: NIL, next: NIL };
+                slot
+            }
+            None => {
+                self.nodes.push(LruNode { id, prev: NIL, next: NIL });
+                self.nodes.len() - 1
+            }
+        };
+        self.map.insert(id, idx);
+        self.push_back(idx);
+    }
+
+    /// Drop `id` from the order (no-op if absent). O(1).
+    pub fn remove(&mut self, id: u64) {
+        if let Some(idx) = self.map.remove(&id) {
+            self.unlink(idx);
+            self.free.push(idx);
+        }
+    }
+
+    /// Full LRU→MRU order — O(n), for tests and invariant checks only.
+    pub fn order(&self) -> Vec<u64> {
+        let mut out = Vec::with_capacity(self.map.len());
+        let mut idx = self.head;
+        while idx != NIL {
+            out.push(self.nodes[idx].id);
+            idx = self.nodes[idx].next;
+        }
+        out
+    }
+}
+
+impl Default for LruIndex {
+    fn default() -> Self {
+        LruIndex::new()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Block pool
+// ---------------------------------------------------------------------------
+
+/// One pool block: `block_steps` KV steps for all heads of one session,
+/// `[head][step][dim]` flat in each of `k`/`v`. `len` counts the filled
+/// steps; `refs` counts the block tables pointing at this slot. A block
+/// with `refs > 1` is immutable (appends copy-on-write it first), so a
+/// shared fragment can never be corrupted through a sibling session.
+#[derive(Debug)]
+struct Block {
+    heads: usize,
+    head_dim: usize,
+    len: usize,
+    refs: u32,
+    k: KvStore,
+    v: KvStore,
+}
+
+/// Fixed-budget slab of KV blocks. Byte accounting is full-capacity per
+/// block (allocation-sized, not fill-sized), so the budget check is a
+/// simple block count and a partially filled tail costs what it reserves.
+#[derive(Debug)]
+pub struct BlockPool {
+    pub precision: KvPrecision,
+    /// KV steps per block (one kernel tile by default).
+    pub block_steps: usize,
+    slots: Vec<Option<Block>>,
+    free: Vec<usize>,
+    pub max_bytes: usize,
+    pub bytes: usize,
+    pub peak_bytes: usize,
+    pub allocated: u64,
+    pub freed: u64,
+}
+
+impl BlockPool {
+    pub fn new(max_bytes: usize, precision: KvPrecision, block_steps: usize) -> BlockPool {
+        assert!(block_steps >= 1, "block_steps must be >= 1");
+        BlockPool {
+            precision,
+            block_steps,
+            slots: Vec::new(),
+            free: Vec::new(),
+            max_bytes,
+            bytes: 0,
+            peak_bytes: 0,
+            allocated: 0,
+            freed: 0,
+        }
+    }
+
+    /// Resident bytes of one block of this geometry (K and V tensors at
+    /// full `block_steps` capacity).
+    pub fn block_bytes(&self, heads: usize, head_dim: usize) -> usize {
+        2 * heads * self.block_steps * head_dim * self.precision.bytes_per_elem()
+    }
+
+    pub fn live_blocks(&self) -> usize {
+        (self.allocated - self.freed) as usize
+    }
+
+    /// Allocate an empty block (refs = 1). Fails — without allocating —
+    /// if the budget would be exceeded; the caller evicts first.
+    fn alloc(&mut self, heads: usize, head_dim: usize) -> Result<usize, String> {
+        let bb = self.block_bytes(heads, head_dim);
+        if self.bytes + bb > self.max_bytes {
+            return Err(format!("block pool over budget: {} + {bb} > {}", self.bytes, self.max_bytes));
+        }
+        let elems = heads * self.block_steps * head_dim;
+        let block = Block {
+            heads,
+            head_dim,
+            len: 0,
+            refs: 1,
+            k: KvStore::zeros(self.precision, elems),
+            v: KvStore::zeros(self.precision, elems),
+        };
+        let slot = match self.free.pop() {
+            Some(s) => {
+                self.slots[s] = Some(block);
+                s
+            }
+            None => {
+                self.slots.push(Some(block));
+                self.slots.len() - 1
+            }
+        };
+        self.bytes += bb;
+        self.peak_bytes = self.peak_bytes.max(self.bytes);
+        self.allocated += 1;
+        Ok(slot)
+    }
+
+    /// Bit-exact copy of a block's first `new_len` steps into a fresh
+    /// block (refs = 1) — the copy-on-write primitive. Stored codes are
+    /// cloned, not re-quantized, so the copy round-trips identically.
+    fn clone_block(&mut self, slot: usize, new_len: usize) -> Result<usize, String> {
+        let (heads, head_dim) = {
+            let b = self.slots[slot].as_ref().expect("clone of free slot");
+            debug_assert!(new_len <= b.len, "clone beyond filled steps");
+            (b.heads, b.head_dim)
+        };
+        let bb = self.block_bytes(heads, head_dim);
+        if self.bytes + bb > self.max_bytes {
+            return Err(format!("block pool over budget: {} + {bb} > {}", self.bytes, self.max_bytes));
+        }
+        let src = self.slots[slot].as_ref().unwrap();
+        let block = Block {
+            heads,
+            head_dim,
+            len: new_len,
+            refs: 1,
+            k: src.k.clone(),
+            v: src.v.clone(),
+        };
+        let dst = match self.free.pop() {
+            Some(s) => {
+                self.slots[s] = Some(block);
+                s
+            }
+            None => {
+                self.slots.push(Some(block));
+                self.slots.len() - 1
+            }
+        };
+        self.bytes += bb;
+        self.peak_bytes = self.peak_bytes.max(self.bytes);
+        self.allocated += 1;
+        Ok(dst)
+    }
+
+    fn incref(&mut self, slot: usize) {
+        self.slots[slot].as_mut().expect("incref of free slot").refs += 1;
+    }
+
+    /// Drop one reference; frees the block (and its bytes) when the count
+    /// hits zero. Returns whether the block was actually freed.
+    fn decref(&mut self, slot: usize) -> bool {
+        let b = self.slots[slot].as_mut().expect("decref of free slot");
+        debug_assert!(b.refs > 0);
+        b.refs -= 1;
+        if b.refs > 0 {
+            return false;
+        }
+        let bb = self.block_bytes(b.heads, b.head_dim);
+        self.slots[slot] = None;
+        self.free.push(slot);
+        self.bytes -= bb;
+        self.freed += 1;
+        true
+    }
+
+    pub fn refs(&self, slot: usize) -> u32 {
+        self.slots[slot].as_ref().map(|b| b.refs).unwrap_or(0)
+    }
+
+    /// Filled steps of a block.
+    pub fn block_len(&self, slot: usize) -> usize {
+        self.slots[slot].as_ref().expect("len of free slot").len
+    }
+
+    /// Append one step (`k_row`/`v_row` are `(heads, head_dim)` flat) to
+    /// a block that must have spare capacity and a single owner.
+    fn push_step(&mut self, slot: usize, k_row: &[f32], v_row: &[f32]) {
+        let bs = self.block_steps;
+        let b = self.slots[slot].as_mut().expect("push into free slot");
+        debug_assert!(b.len < bs, "push into full block");
+        debug_assert_eq!(b.refs, 1, "push into shared block (missing CoW)");
+        let d = b.head_dim;
+        debug_assert_eq!(k_row.len(), b.heads * d);
+        for h in 0..b.heads {
+            let at = (h * bs + b.len) * d;
+            b.k.store(at, &k_row[h * d..(h + 1) * d]);
+            b.v.store(at, &v_row[h * d..(h + 1) * d]);
+        }
+        b.len += 1;
+    }
+
+    /// Borrow head `h`'s first `steps` steps of a block as a contiguous
+    /// [`KvRef`] fragment — the unit the paged kernel view streams.
+    fn head_frag_k(&self, slot: usize, h: usize, steps: usize) -> KvRef<'_> {
+        let b = self.slots[slot].as_ref().expect("frag of free slot");
+        debug_assert!(steps <= b.len, "frag beyond filled steps");
+        let (bs, d) = (self.block_steps, b.head_dim);
+        b.k.as_kv().slice(h * bs * d, h * bs * d + steps * d)
+    }
+
+    fn head_frag_v(&self, slot: usize, h: usize, steps: usize) -> KvRef<'_> {
+        let b = self.slots[slot].as_ref().expect("frag of free slot");
+        debug_assert!(steps <= b.len, "frag beyond filled steps");
+        let (bs, d) = (self.block_steps, b.head_dim);
+        b.v.as_kv().slice(h * bs * d, h * bs * d + steps * d)
+    }
+
+    /// Pool-side consistency check: byte accounting, refcounts matching
+    /// the table references handed in, free-list/slot agreement.
+    pub fn check_invariants(&self, table_refs: &HashMap<usize, u32>) -> Result<(), String> {
+        let mut accounted = 0usize;
+        let mut live = 0usize;
+        let on_free: std::collections::HashSet<usize> = self.free.iter().copied().collect();
+        if on_free.len() != self.free.len() {
+            return Err("duplicate slot on free list".into());
+        }
+        for (i, slot) in self.slots.iter().enumerate() {
+            match slot {
+                Some(b) => {
+                    live += 1;
+                    accounted += self.block_bytes(b.heads, b.head_dim);
+                    if b.len > self.block_steps {
+                        return Err(format!("block {i}: len {} > block_steps {}", b.len, self.block_steps));
+                    }
+                    if b.refs == 0 {
+                        return Err(format!("block {i}: live with zero refs"));
+                    }
+                    let want = *table_refs.get(&i).unwrap_or(&0);
+                    if b.refs != want {
+                        return Err(format!("block {i}: refs {} != table references {want}", b.refs));
+                    }
+                    if on_free.contains(&i) {
+                        return Err(format!("block {i}: live but on free list"));
+                    }
+                    if b.k.precision() != self.precision || b.v.precision() != self.precision {
+                        return Err(format!("block {i}: precision mismatch"));
+                    }
+                }
+                None => {
+                    if !on_free.contains(&i) {
+                        return Err(format!("slot {i}: empty but not on free list"));
+                    }
+                }
+            }
+        }
+        if let Some(&ghost) = table_refs.keys().find(|s| {
+            **s >= self.slots.len() || self.slots[**s].is_none()
+        }) {
+            return Err(format!("table references freed/unknown slot {ghost}"));
+        }
+        if accounted != self.bytes {
+            return Err(format!("bytes {} != accounted {accounted}", self.bytes));
+        }
+        if self.bytes > self.max_bytes {
+            return Err(format!("over budget: {} > {}", self.bytes, self.max_bytes));
+        }
+        if live != self.live_blocks() {
+            return Err(format!("live {} != allocated-freed {}", live, self.live_blocks()));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Block tables and the gathered kernel view
+// ---------------------------------------------------------------------------
+
+/// One session's logical KV sequence: an ordered list of pool slots. The
+/// first `len / block_steps` entries are full blocks; the final entry (if
+/// `len % block_steps != 0`) is a partially filled tail.
+#[derive(Debug, Clone)]
+pub struct BlockTable {
     pub heads: usize,
     pub head_dim: usize,
     pub cap: usize,
     pub len: usize,
-    /// (heads, cap, head_dim) flat, zero-padded beyond `len`.
-    pub k: KvStore,
-    pub v: KvStore,
+    blocks: Vec<usize>,
 }
 
-impl KvCache {
-    pub fn new(heads: usize, head_dim: usize, cap: usize) -> KvCache {
-        KvCache::with_precision(heads, head_dim, cap, KvPrecision::F32)
-    }
-
-    pub fn with_precision(
-        heads: usize,
-        head_dim: usize,
-        cap: usize,
-        prec: KvPrecision,
-    ) -> KvCache {
-        KvCache {
-            heads,
-            head_dim,
-            cap,
-            len: 0,
-            k: KvStore::zeros(prec, heads * cap * head_dim),
-            v: KvStore::zeros(prec, heads * cap * head_dim),
-        }
-    }
-
-    pub fn precision(&self) -> KvPrecision {
-        self.k.precision()
-    }
-
-    pub fn bytes(&self) -> usize {
-        self.k.bytes() + self.v.bytes()
+impl BlockTable {
+    /// Pool slots in logical order.
+    pub fn blocks(&self) -> &[usize] {
+        &self.blocks
     }
 
     pub fn remaining(&self) -> usize {
         self.cap - self.len
     }
+}
 
-    /// Append `n` KV pairs given as (heads, n, head_dim) flat slices.
-    /// Fails (leaving the cache untouched) if capacity would be exceeded.
-    pub fn append(&mut self, k_new: &[f32], v_new: &[f32], n: usize) -> Result<(), String> {
-        let hd = self.heads * self.head_dim;
-        if k_new.len() != hd * n || v_new.len() != hd * n {
-            return Err(format!("append: expected {} elems, got {}", hd * n, k_new.len()));
-        }
-        if self.len + n > self.cap {
-            return Err(format!("kv cache full: {} + {n} > {}", self.len, self.cap));
-        }
-        for h in 0..self.heads {
-            for i in 0..n {
-                let src = (h * n + i) * self.head_dim;
-                let dst = (h * self.cap + self.len + i) * self.head_dim;
-                self.k.store(dst, &k_new[src..src + self.head_dim]);
-                self.v.store(dst, &v_new[src..src + self.head_dim]);
-            }
-        }
-        self.len += n;
-        Ok(())
+/// A session's KV gathered as borrowed per-head fragment lists, ready to
+/// lower into paged kernel jobs. Lives as long as the store borrow: the
+/// fused drain cycle gathers every session once, after all of the cycle's
+/// mutations are done.
+#[derive(Debug)]
+pub struct PagedSessionKv<'p> {
+    pub heads: usize,
+    pub head_dim: usize,
+    /// Valid KV steps (the kernel's `n`).
+    pub len: usize,
+    block_steps: usize,
+    k: Vec<Vec<KvRef<'p>>>,
+    v: Vec<Vec<KvRef<'p>>>,
+}
+
+impl<'p> PagedSessionKv<'p> {
+    /// Head `h`'s keys as a paged kernel view of `len * head_dim` elements.
+    pub fn head_k(&self, h: usize) -> KvView<'_> {
+        KvView::Paged(PagedKv {
+            blocks: &self.k[h],
+            block_elems: self.block_steps * self.head_dim,
+            len: self.len * self.head_dim,
+        })
+    }
+
+    pub fn head_v(&self, h: usize) -> KvView<'_> {
+        KvView::Paged(PagedKv {
+            blocks: &self.v[h],
+            block_elems: self.block_steps * self.head_dim,
+            len: self.len * self.head_dim,
+        })
     }
 }
 
-/// Session store with LRU eviction under a byte budget. All sessions
-/// share one storage precision, fixed at construction.
+// ---------------------------------------------------------------------------
+// Session store
+// ---------------------------------------------------------------------------
+
+/// Session store over a shared [`BlockPool`] with LRU eviction under a
+/// byte budget. All sessions share one storage precision and block size,
+/// fixed at construction.
+///
+/// Creation is lazy (a new session owns zero blocks), so `create` never
+/// evicts; all eviction pressure lands on `append`/`share_prefix`, which
+/// the fused dispatcher predicts exactly via the `*_would_evict` queries
+/// before lowering a batch.
 #[derive(Debug)]
 pub struct SessionStore {
-    sessions: HashMap<u64, KvCache>,
-    /// Recency order: front = least recently used.
-    lru: Vec<u64>,
-    pub max_bytes: usize,
-    pub bytes: usize,
+    pool: BlockPool,
+    sessions: HashMap<u64, BlockTable>,
+    lru: LruIndex,
     pub evictions: u64,
+    pub block_evictions: u64,
+    pub prefix_share_hits: u64,
+    pub cow_copies: u64,
     pub precision: KvPrecision,
 }
 
@@ -200,12 +611,22 @@ impl SessionStore {
     }
 
     pub fn with_precision(max_bytes: usize, precision: KvPrecision) -> SessionStore {
+        SessionStore::with_block_steps(max_bytes, precision, crate::kernels::tiled::DEFAULT_TILE)
+    }
+
+    pub fn with_block_steps(
+        max_bytes: usize,
+        precision: KvPrecision,
+        block_steps: usize,
+    ) -> SessionStore {
         SessionStore {
+            pool: BlockPool::new(max_bytes, precision, block_steps),
             sessions: HashMap::new(),
-            lru: Vec::new(),
-            max_bytes,
-            bytes: 0,
+            lru: LruIndex::new(),
             evictions: 0,
+            block_evictions: 0,
+            prefix_share_hits: 0,
+            cow_copies: 0,
             precision,
         }
     }
@@ -222,95 +643,343 @@ impl SessionStore {
         self.sessions.contains_key(&id)
     }
 
-    fn touch(&mut self, id: u64) {
-        if let Some(pos) = self.lru.iter().position(|&x| x == id) {
-            self.lru.remove(pos);
-        }
-        self.lru.push(id);
+    /// Resident pool bytes (full-capacity accounting per block).
+    pub fn bytes(&self) -> usize {
+        self.pool.bytes
     }
 
-    /// Create a session (evicting LRU sessions if needed). Replaces any
-    /// existing cache under the same id.
-    pub fn create(&mut self, id: u64, heads: usize, head_dim: usize, cap: usize) -> Result<(), String> {
-        let cache = KvCache::with_precision(heads, head_dim, cap, self.precision);
-        let need = cache.bytes();
-        if need > self.max_bytes {
-            return Err(format!("session of {need} bytes exceeds budget {}", self.max_bytes));
-        }
-        self.remove(id);
-        while self.bytes + need > self.max_bytes {
-            let victim = *self.lru.first().ok_or("lru empty but over budget")?;
-            self.remove(victim);
-            self.evictions += 1;
-        }
-        self.bytes += need;
-        self.sessions.insert(id, cache);
-        self.touch(id);
-        Ok(())
+    pub fn max_bytes(&self) -> usize {
+        self.pool.max_bytes
     }
 
-    /// Access a session mutably, refreshing its recency.
-    pub fn get_mut(&mut self, id: u64) -> Option<&mut KvCache> {
-        if self.sessions.contains_key(&id) {
-            self.touch(id);
-        }
-        self.sessions.get_mut(&id)
+    pub fn block_steps(&self) -> usize {
+        self.pool.block_steps
     }
 
-    pub fn get(&self, id: u64) -> Option<&KvCache> {
+    /// The underlying pool — counters for the metrics export.
+    pub fn pool(&self) -> &BlockPool {
+        &self.pool
+    }
+
+    pub fn get(&self, id: u64) -> Option<&BlockTable> {
         self.sessions.get(&id)
     }
 
-    /// Borrow several sessions' caches simultaneously — the fused dispatch
-    /// gather phase: one drain cycle reads many sessions at once, after all
-    /// of the cycle's mutations (creates/appends) are done. Duplicates are
-    /// allowed; a missing id yields `None` in its slot so the caller can
-    /// degrade per session instead of failing the whole cycle.
-    pub fn borrow_many(&self, ids: &[u64]) -> Vec<Option<&KvCache>> {
-        ids.iter().map(|&id| self.get(id)).collect()
+    fn blocks_for(&self, steps: usize) -> usize {
+        steps.div_ceil(self.pool.block_steps)
     }
 
-    /// Would creating (or re-creating) session `id` with this geometry
-    /// evict any *other* session to fit the byte budget? The fused
-    /// dispatcher flushes its current fusion group before such a create,
-    /// so caches an earlier batch in the cycle reads can't vanish between
+    /// New block allocations an `n`-step append to table `t` performs:
+    /// fresh blocks to cover the growth, plus one copy-on-write clone if
+    /// the partial tail is currently shared.
+    fn blocks_needed(&self, t: &BlockTable, n: usize) -> usize {
+        if n == 0 {
+            return 0;
+        }
+        let fresh = self.blocks_for(t.len + n) - t.blocks.len();
+        let cow = if t.len % self.pool.block_steps != 0
+            && self.pool.refs(*t.blocks.last().expect("partial len with no blocks")) > 1
+        {
+            1
+        } else {
+            0
+        };
+        fresh + cow
+    }
+
+    /// Bytes freed by removing session `id`: only blocks this table is
+    /// the last owner of actually release memory.
+    fn removal_frees(&self, id: u64) -> usize {
+        let Some(t) = self.sessions.get(&id) else { return 0 };
+        let sole = t.blocks.iter().filter(|&&b| self.pool.refs(b) == 1).count();
+        sole * self.pool.block_bytes(t.heads, t.head_dim)
+    }
+
+    /// Would appending `n` steps to session `id` evict another session?
+    /// Exact mirror of `append`'s admission check — the fused dispatcher
+    /// flushes its current group before any append this returns true for,
+    /// so KV an earlier batch in the cycle reads can't vanish between
     /// lowering and kernel submission.
-    pub fn would_evict(&self, id: u64, heads: usize, head_dim: usize, cap: usize) -> bool {
-        let need = 2 * heads * cap * head_dim * self.precision.bytes_per_elem();
-        let freed = self.sessions.get(&id).map(KvCache::bytes).unwrap_or(0);
-        self.bytes - freed + need > self.max_bytes
+    pub fn append_would_evict(&self, id: u64, n: usize) -> bool {
+        let Some(t) = self.sessions.get(&id) else { return false };
+        let need = self.blocks_needed(t, n) * self.pool.block_bytes(t.heads, t.head_dim);
+        self.pool.bytes + need > self.pool.max_bytes
     }
 
+    /// Would a prefill (re-create + `n`-step append) of this geometry
+    /// evict another session? Re-creating `id` first frees the blocks it
+    /// solely owns.
+    pub fn prefill_would_evict(&self, id: u64, heads: usize, head_dim: usize, n: usize) -> bool {
+        let need = self.blocks_for(n) * self.pool.block_bytes(heads, head_dim);
+        self.pool.bytes - self.removal_frees(id) + need > self.pool.max_bytes
+    }
+
+    /// Would forking `src` into `dst` and appending `n` divergent steps
+    /// evict another session? The fork itself is free; the append pays
+    /// for growth blocks plus a CoW of any partial tail (always shared
+    /// right after a fork). Re-creating `dst` frees its solely owned
+    /// blocks first.
+    pub fn fork_would_evict(&self, src: u64, dst: u64, n: usize) -> bool {
+        let Some(t) = self.sessions.get(&src) else { return false };
+        let mut blocks = if n == 0 { 0 } else { self.blocks_for(t.len + n) - t.blocks.len() };
+        if n > 0 && t.len % self.pool.block_steps != 0 {
+            blocks += 1;
+        }
+        let need = blocks * self.pool.block_bytes(t.heads, t.head_dim);
+        self.pool.bytes - self.removal_frees(dst) + need > self.pool.max_bytes
+    }
+
+    /// Create a session with zero blocks. Replaces any existing table
+    /// under the same id. Fails only if the session could never fit: a
+    /// full-capacity table alone must stay within the byte budget (which
+    /// is what guarantees the append eviction loop always converges).
+    pub fn create(&mut self, id: u64, heads: usize, head_dim: usize, cap: usize) -> Result<(), String> {
+        let worst = self.blocks_for(cap) * self.pool.block_bytes(heads, head_dim);
+        if worst > self.pool.max_bytes {
+            return Err(format!("session of {worst} bytes exceeds budget {}", self.pool.max_bytes));
+        }
+        self.remove(id);
+        self.sessions.insert(id, BlockTable { heads, head_dim, cap, len: 0, blocks: Vec::new() });
+        self.lru.touch(id);
+        Ok(())
+    }
+
+    /// Append `n` KV pairs given as `(heads, n, head_dim)` flat slices,
+    /// evicting LRU sessions (never `id` itself) to make room. Fails
+    /// (leaving the table untouched) on capacity overflow; the byte
+    /// budget cannot fail for a validly created session.
+    pub fn append(&mut self, id: u64, k_new: &[f32], v_new: &[f32], n: usize) -> Result<(), String> {
+        let (heads, head_dim) = match self.sessions.get(&id) {
+            Some(t) => (t.heads, t.head_dim),
+            None => return Err(format!("append to unknown session {id}")),
+        };
+        let hd = heads * head_dim;
+        if k_new.len() != hd * n || v_new.len() != hd * n {
+            return Err(format!("append: expected {} elems, got {}", hd * n, k_new.len()));
+        }
+        {
+            let t = &self.sessions[&id];
+            if t.len + n > t.cap {
+                return Err(format!("kv cache full: {} + {n} > {}", t.len, t.cap));
+            }
+        }
+        self.lru.touch(id);
+        if n == 0 {
+            return Ok(());
+        }
+        // Make room. Recompute per iteration: evicting a sibling fork can
+        // drop the shared-tail refcount and cancel the CoW allocation.
+        loop {
+            let t = &self.sessions[&id];
+            let need = self.blocks_needed(t, n) * self.pool.block_bytes(heads, head_dim);
+            if self.pool.bytes + need <= self.pool.max_bytes {
+                break;
+            }
+            let victim = self
+                .lru
+                .front_excluding(id)
+                .ok_or_else(|| format!("append of {need} bytes cannot fit budget {}", self.pool.max_bytes))?;
+            self.evict(victim);
+        }
+        // Copy-on-write a shared partial tail before mutating it.
+        let bs = self.pool.block_steps;
+        let tail_len = self.sessions[&id].len % bs;
+        if tail_len != 0 {
+            let tail = *self.sessions[&id].blocks.last().unwrap();
+            if self.pool.refs(tail) > 1 {
+                let fresh = self.pool.clone_block(tail, tail_len)?;
+                self.pool.decref(tail);
+                *self.sessions.get_mut(&id).unwrap().blocks.last_mut().unwrap() = fresh;
+                self.cow_copies += 1;
+            }
+        }
+        // Stream the steps in, allocating blocks at block boundaries.
+        let SessionStore { pool, sessions, .. } = self;
+        let t = sessions.get_mut(&id).unwrap();
+        let d = head_dim;
+        let mut krow = vec![0.0f32; hd];
+        let mut vrow = vec![0.0f32; hd];
+        for i in 0..n {
+            if t.len % bs == 0 {
+                let slot = pool.alloc(heads, d).expect("append: eviction loop reserved space");
+                t.blocks.push(slot);
+            }
+            for h in 0..heads {
+                let src = (h * n + i) * d;
+                krow[h * d..(h + 1) * d].copy_from_slice(&k_new[src..src + d]);
+                vrow[h * d..(h + 1) * d].copy_from_slice(&v_new[src..src + d]);
+            }
+            let slot = *t.blocks.last().unwrap();
+            debug_assert_eq!(pool.block_len(slot), t.len % bs);
+            pool.push_step(slot, &krow, &vrow);
+            t.len += 1;
+        }
+        Ok(())
+    }
+
+    /// Fork `src` into `dst`: `dst` shares *every* block of `src` —
+    /// including a partial tail — at zero copy cost. The first divergent
+    /// append to either side copy-on-writes just the tail; full blocks
+    /// are immutable once filled and stay shared forever. Replaces any
+    /// existing `dst`.
+    pub fn fork(&mut self, src: u64, dst: u64) -> Result<(), String> {
+        if src == dst {
+            return Err("fork: src == dst".into());
+        }
+        let table = match self.sessions.get(&src) {
+            Some(t) => t.clone(),
+            None => return Err(format!("fork from unknown session {src}")),
+        };
+        self.remove(dst);
+        for &b in &table.blocks {
+            self.pool.incref(b);
+        }
+        self.prefix_share_hits += table.blocks.len() as u64;
+        self.sessions.insert(dst, table);
+        self.lru.touch(src);
+        self.lru.touch(dst);
+        Ok(())
+    }
+
+    /// Create `dst` sharing exactly the first `steps` of `src`: full
+    /// blocks are shared by reference; a partial tail block is
+    /// materialized as a truncated bit-exact copy (one CoW up front,
+    /// since the prefix boundary splits a block). Replaces any existing
+    /// `dst`.
+    pub fn share_prefix(&mut self, src: u64, dst: u64, steps: usize) -> Result<(), String> {
+        if src == dst {
+            return Err("share_prefix: src == dst".into());
+        }
+        let (heads, head_dim, cap, src_len) = match self.sessions.get(&src) {
+            Some(t) => (t.heads, t.head_dim, t.cap, t.len),
+            None => return Err(format!("share_prefix from unknown session {src}")),
+        };
+        if steps > src_len {
+            return Err(format!("share_prefix: {steps} > source len {src_len}"));
+        }
+        self.remove(dst);
+        let bs = self.pool.block_steps;
+        let (full, partial) = (steps / bs, steps % bs);
+        if partial != 0 {
+            // Reserve room for the one materialized tail block.
+            let bb = self.pool.block_bytes(heads, head_dim);
+            while self.pool.bytes + bb > self.pool.max_bytes {
+                let victim = self
+                    .lru
+                    .front_excluding(src)
+                    .ok_or_else(|| format!("share_prefix of {bb} bytes cannot fit budget {}", self.pool.max_bytes))?;
+                self.evict(victim);
+            }
+        }
+        let src_blocks: Vec<usize> = self.sessions[&src].blocks.clone();
+        let mut blocks = Vec::with_capacity(full + usize::from(partial != 0));
+        for &b in &src_blocks[..full] {
+            self.pool.incref(b);
+            blocks.push(b);
+        }
+        self.prefix_share_hits += full as u64;
+        if partial != 0 {
+            let clone = self.pool.clone_block(src_blocks[full], partial)?;
+            blocks.push(clone);
+            self.cow_copies += 1;
+        }
+        self.sessions.insert(dst, BlockTable { heads, head_dim, cap, len: steps, blocks });
+        self.lru.touch(src);
+        self.lru.touch(dst);
+        Ok(())
+    }
+
+    /// Evict a session under budget pressure: drops its table and every
+    /// reference, but only blocks it solely owned free bytes — a shared
+    /// prefix survives for the sibling sessions that still point at it.
+    fn evict(&mut self, id: u64) {
+        if let Some(t) = self.sessions.remove(&id) {
+            self.lru.remove(id);
+            self.evictions += 1;
+            for &b in &t.blocks {
+                if self.pool.decref(b) {
+                    self.block_evictions += 1;
+                }
+            }
+        }
+    }
+
+    /// Drop a session (client-initiated; not counted as an eviction).
     pub fn remove(&mut self, id: u64) {
-        if let Some(c) = self.sessions.remove(&id) {
-            self.bytes -= c.bytes();
-        }
-        if let Some(pos) = self.lru.iter().position(|&x| x == id) {
-            self.lru.remove(pos);
+        if let Some(t) = self.sessions.remove(&id) {
+            self.lru.remove(id);
+            for &b in &t.blocks {
+                self.pool.decref(b);
+            }
         }
     }
 
-    /// Internal-consistency check used by the property tests.
+    /// Gather one session's KV as borrowed per-head fragment lists. The
+    /// fragments cover exactly `len` steps per head in logical order —
+    /// the contract the paged kernel view streams tiles from.
+    pub fn gather(&self, id: u64) -> Option<PagedSessionKv<'_>> {
+        let t = self.sessions.get(&id)?;
+        let bs = self.pool.block_steps;
+        let mut k = Vec::with_capacity(t.heads);
+        let mut v = Vec::with_capacity(t.heads);
+        for h in 0..t.heads {
+            let mut kh = Vec::with_capacity(t.blocks.len());
+            let mut vh = Vec::with_capacity(t.blocks.len());
+            for (j, &slot) in t.blocks.iter().enumerate() {
+                let covered = (t.len - j * bs).min(bs);
+                kh.push(self.pool.head_frag_k(slot, h, covered));
+                vh.push(self.pool.head_frag_v(slot, h, covered));
+            }
+            k.push(kh);
+            v.push(vh);
+        }
+        Some(PagedSessionKv { heads: t.heads, head_dim: t.head_dim, len: t.len, block_steps: bs, k, v })
+    }
+
+    /// Gather several sessions simultaneously — the fused dispatch gather
+    /// phase: one drain cycle reads many sessions at once, after all of
+    /// the cycle's mutations (creates/appends/forks) are done. Duplicates
+    /// are allowed; a missing id yields `None` in its slot so the caller
+    /// can degrade per session instead of failing the whole cycle.
+    pub fn gather_many(&self, ids: &[u64]) -> Vec<Option<PagedSessionKv<'_>>> {
+        ids.iter().map(|&id| self.gather(id)).collect()
+    }
+
+    /// Internal-consistency check used by the property tests and (when
+    /// `validate_invariants` is set) the serving engine loop: table
+    /// geometry, LRU membership, and pool refcount/byte accounting.
     pub fn check_invariants(&self) -> Result<(), String> {
         if self.lru.len() != self.sessions.len() {
             return Err(format!("lru {} != sessions {}", self.lru.len(), self.sessions.len()));
         }
-        let bytes: usize = self.sessions.values().map(KvCache::bytes).sum();
-        if bytes != self.bytes {
-            return Err(format!("bytes {} != accounted {}", bytes, self.bytes));
-        }
-        if self.bytes > self.max_bytes {
-            return Err(format!("over budget: {} > {}", self.bytes, self.max_bytes));
-        }
-        for c in self.sessions.values() {
-            if c.len > c.cap {
-                return Err("cache len > cap".into());
+        let bs = self.pool.block_steps;
+        let mut refs: HashMap<usize, u32> = HashMap::new();
+        for (&id, t) in &self.sessions {
+            if !self.lru.contains(id) {
+                return Err(format!("session {id} missing from lru"));
             }
-            if c.precision() != self.precision || c.v.precision() != self.precision {
-                return Err("cache precision != store precision".into());
+            if t.len > t.cap {
+                return Err(format!("session {id}: len {} > cap {}", t.len, t.cap));
+            }
+            if t.blocks.len() != t.len.div_ceil(bs) {
+                return Err(format!(
+                    "session {id}: {} blocks for len {} (block_steps {bs})",
+                    t.blocks.len(),
+                    t.len
+                ));
+            }
+            for (j, &slot) in t.blocks.iter().enumerate() {
+                let covered = (t.len - j * bs).min(bs);
+                if covered > self.pool.block_len(slot) {
+                    return Err(format!(
+                        "session {id} block {j}: covers {covered} steps but block holds {}",
+                        self.pool.block_len(slot)
+                    ));
+                }
+                *refs.entry(slot).or_insert(0) += 1;
             }
         }
-        Ok(())
+        self.pool.check_invariants(&refs)
     }
 }
 
@@ -318,29 +987,74 @@ impl SessionStore {
 mod tests {
     use super::*;
 
+    const BIG: usize = 1 << 30;
+
+    fn gather_head_k(s: &SessionStore, id: u64, h: usize) -> Vec<f32> {
+        s.gather(id).unwrap().head_k(h).to_f32_vec()
+    }
+
     #[test]
-    fn append_layout_round_trips() {
-        let mut c = KvCache::new(2, 3, 4);
-        // two heads, one pair: head0 = [1,2,3], head1 = [4,5,6]
-        c.append(&[1., 2., 3., 4., 5., 6.], &[9., 9., 9., 8., 8., 8.], 1).unwrap();
-        assert_eq!(c.len, 1);
-        let kf = c.k.to_f32_vec();
-        assert_eq!(&kf[0..3], &[1., 2., 3.]); // head 0, slot 0
-        assert_eq!(&kf[4 * 3..4 * 3 + 3], &[4., 5., 6.]); // head 1, slot 0
-        c.append(&[10., 11., 12., 13., 14., 15.], &[0.; 6], 1).unwrap();
-        assert_eq!(&c.k.to_f32_vec()[3..6], &[10., 11., 12.]); // head 0, slot 1
-        assert_eq!(c.remaining(), 2);
+    fn lru_index_is_ordered_and_o1_shaped() {
+        let mut l = LruIndex::new();
+        assert!(l.is_empty() && l.front().is_none());
+        l.touch(1);
+        l.touch(2);
+        l.touch(3);
+        assert_eq!(l.order(), [1, 2, 3]);
+        l.touch(1); // move-to-back, not duplicate
+        assert_eq!(l.order(), [2, 3, 1]);
+        assert_eq!(l.len(), 3);
+        assert_eq!(l.front(), Some(2));
+        assert_eq!(l.front_excluding(2), Some(3));
+        assert_eq!(l.front_excluding(9), Some(2));
+        l.remove(3);
+        assert_eq!(l.order(), [2, 1]);
+        l.remove(3); // absent remove is a no-op
+        l.touch(4); // reuses the freed slab slot
+        assert_eq!(l.order(), [2, 1, 4]);
+        assert!(l.contains(4) && !l.contains(3));
+        l.remove(2);
+        l.remove(1);
+        l.remove(4);
+        assert!(l.is_empty() && l.front().is_none() && l.front_excluding(0).is_none());
+    }
+
+    #[test]
+    fn append_layout_round_trips_across_blocks() {
+        // block_steps 2 so three appended steps span two blocks.
+        let mut s = SessionStore::with_block_steps(BIG, KvPrecision::F32, 2);
+        s.create(1, 2, 3, 4).unwrap();
+        // (heads, n, head_dim) flat: head0 = [1,2,3], head1 = [4,5,6]
+        s.append(1, &[1., 2., 3., 4., 5., 6.], &[9., 9., 9., 8., 8., 8.], 1).unwrap();
+        assert_eq!(s.get(1).unwrap().len, 1);
+        assert_eq!(gather_head_k(&s, 1, 0), [1., 2., 3.]);
+        assert_eq!(gather_head_k(&s, 1, 1), [4., 5., 6.]);
+        // two more steps: n=2 layout is (h*n + i)*d
+        s.append(
+            1,
+            &[10., 11., 12., 20., 21., 22., 13., 14., 15., 23., 24., 25.],
+            &[0.; 12],
+            2,
+        )
+        .unwrap();
+        assert_eq!(s.get(1).unwrap().blocks().len(), 2);
+        assert_eq!(gather_head_k(&s, 1, 0), [1., 2., 3., 10., 11., 12., 20., 21., 22.]);
+        assert_eq!(gather_head_k(&s, 1, 1), [4., 5., 6., 13., 14., 15., 23., 24., 25.]);
+        assert_eq!(s.get(1).unwrap().remaining(), 1);
+        s.check_invariants().unwrap();
     }
 
     #[test]
     fn append_over_capacity_fails_cleanly() {
-        let mut c = KvCache::new(1, 2, 2);
-        c.append(&[1., 2.], &[3., 4.], 1).unwrap();
-        c.append(&[5., 6.], &[7., 8.], 1).unwrap();
-        let before = c.k.to_f32_vec();
-        assert!(c.append(&[9., 9.], &[9., 9.], 1).is_err());
-        assert_eq!(c.k.to_f32_vec(), before);
-        assert_eq!(c.len, 2);
+        let mut s = SessionStore::with_block_steps(BIG, KvPrecision::F32, 2);
+        s.create(1, 1, 2, 2).unwrap();
+        s.append(1, &[1., 2.], &[3., 4.], 1).unwrap();
+        s.append(1, &[5., 6.], &[7., 8.], 1).unwrap();
+        let before = gather_head_k(&s, 1, 0);
+        assert!(s.append(1, &[9., 9.], &[9., 9.], 1).is_err());
+        assert_eq!(gather_head_k(&s, 1, 0), before);
+        assert_eq!(s.get(1).unwrap().len, 2);
+        s.check_invariants().unwrap();
     }
 
     #[test]
@@ -348,113 +1062,286 @@ mod tests {
         use crate::numerics::quant::{quantize_bf16, quantize_fp8};
         let vals = [0.1f32, -1.75, 3.25, 0.0, 448.0, -0.007];
         for prec in [KvPrecision::Bf16, KvPrecision::Fp8] {
-            let mut c = KvCache::with_precision(1, 3, 2, prec);
-            c.append(&vals[..3], &vals[3..], 1).unwrap();
-            let kf = c.k.to_f32_vec();
+            let mut s = SessionStore::with_block_steps(BIG, prec, 2);
+            s.create(1, 1, 3, 2).unwrap();
+            s.append(1, &vals[..3], &vals[3..], 1).unwrap();
+            let kf = gather_head_k(&s, 1, 0);
             let want: Vec<f32> = match prec {
                 KvPrecision::Bf16 => {
                     quantize_bf16(&vals[..3]).iter().map(|&b| Bf16(b).to_f32()).collect()
                 }
                 _ => quantize_fp8(&vals[..3]).iter().map(|&b| Fp8E4M3(b).to_f32()).collect(),
             };
-            assert_eq!(&kf[..3], &want[..], "{prec:?}");
+            assert_eq!(kf, want, "{prec:?}");
             // appending the dequantized values back is a fixed point
-            let mut c2 = KvCache::with_precision(1, 3, 2, prec);
-            c2.append(&kf[..3], &c.v.to_f32_vec()[..3], 1).unwrap();
-            assert_eq!(c2.k.to_f32_vec()[..3], kf[..3], "{prec:?}");
+            let mut s2 = SessionStore::with_block_steps(BIG, prec, 2);
+            s2.create(1, 1, 3, 2).unwrap();
+            let vf = s.gather(1).unwrap().head_v(0).to_f32_vec();
+            s2.append(1, &kf, &vf, 1).unwrap();
+            assert_eq!(gather_head_k(&s2, 1, 0), kf, "{prec:?}");
         }
     }
 
     #[test]
-    fn bytes_track_precision() {
-        let f = KvCache::new(2, 4, 8);
-        let b = KvCache::with_precision(2, 4, 8, KvPrecision::Bf16);
-        let q = KvCache::with_precision(2, 4, 8, KvPrecision::Fp8);
-        assert_eq!(f.bytes(), 2 * 2 * 4 * 8 * 4);
-        assert_eq!(b.bytes(), f.bytes() / 2);
-        assert_eq!(q.bytes(), f.bytes() / 4);
-        assert_eq!(b.precision(), KvPrecision::Bf16);
+    fn bytes_are_block_granular_and_track_precision() {
+        // 1 head, dim 2, block_steps 4 → f32 block = 2*1*4*2*4 = 64 bytes.
+        let mut stores: Vec<SessionStore> = [KvPrecision::F32, KvPrecision::Bf16, KvPrecision::Fp8]
+            .into_iter()
+            .map(|p| SessionStore::with_block_steps(BIG, p, 4))
+            .collect();
+        for s in &mut stores {
+            s.create(1, 1, 2, 16).unwrap();
+            assert_eq!(s.bytes(), 0, "lazy create allocates nothing");
+            assert_eq!(s.pool().live_blocks(), 0);
+            // one step allocates one full-capacity block
+            s.append(1, &[1., 2.], &[3., 4.], 1).unwrap();
+        }
+        assert_eq!(stores[0].bytes(), 64);
+        assert_eq!(stores[1].bytes(), 32);
+        assert_eq!(stores[2].bytes(), 16);
+        // a second step fits the same block: no new bytes
+        stores[0].append(1, &[5., 6.], &[7., 8.], 1).unwrap();
+        assert_eq!(stores[0].bytes(), 64);
+        assert_eq!(stores[0].pool().peak_bytes, 64);
     }
 
     #[test]
-    fn store_lru_eviction() {
-        // each session: 1 head * cap 4 * dim 2 * 2 tensors * 4B = 64B
-        let mut s = SessionStore::new(128);
+    fn store_lru_eviction_on_append() {
+        // 1 head, dim 2, block_steps 2 → block = 2*1*2*2*4 = 32B; budget 64 = 2 blocks.
+        let mut s = SessionStore::with_block_steps(64, KvPrecision::F32, 2);
         s.create(1, 1, 2, 4).unwrap();
         s.create(2, 1, 2, 4).unwrap();
-        s.check_invariants().unwrap();
-        // touch 1 so 2 becomes LRU
-        s.get_mut(1).unwrap();
-        s.create(3, 1, 2, 4).unwrap(); // evicts 2
+        s.append(1, &[1., 1.], &[1., 1.], 1).unwrap();
+        s.append(2, &[2., 2.], &[2., 2.], 1).unwrap();
+        assert_eq!(s.bytes(), 64);
+        // touch 1 (fills its existing tail block — no allocation) so 2 is LRU
+        s.append(1, &[1., 1.], &[1., 1.], 1).unwrap();
+        s.create(3, 1, 2, 4).unwrap(); // lazy: still no eviction
+        assert!(s.contains(2));
+        s.append(3, &[3., 3.], &[3., 3.], 1).unwrap(); // needs a block → evicts 2
         assert!(s.contains(1) && s.contains(3) && !s.contains(2));
         assert_eq!(s.evictions, 1);
+        assert_eq!(s.block_evictions, 1);
+        assert_eq!(s.bytes(), 64);
         s.check_invariants().unwrap();
     }
 
     #[test]
-    fn quantized_store_fits_more_sessions_in_budget() {
-        // 128B fits two f32 sessions of this geometry, but four bf16 ones.
-        let mut s = SessionStore::with_precision(128, KvPrecision::Bf16);
-        for id in 1..=4 {
-            s.create(id, 1, 2, 4).unwrap();
-        }
-        assert_eq!(s.len(), 4);
-        assert_eq!(s.evictions, 0);
-        s.check_invariants().unwrap();
-        s.create(5, 1, 2, 4).unwrap(); // fifth evicts the LRU
-        assert_eq!(s.evictions, 1);
-        s.check_invariants().unwrap();
-    }
-
-    #[test]
-    fn borrow_many_takes_simultaneous_refs() {
-        let mut s = SessionStore::new(1024);
+    fn append_would_evict_predicts_append() {
+        let mut s = SessionStore::with_block_steps(64, KvPrecision::F32, 2);
         s.create(1, 1, 2, 4).unwrap();
         s.create(2, 1, 2, 4).unwrap();
-        s.get_mut(1).unwrap().append(&[1., 2.], &[3., 4.], 1).unwrap();
-        s.get_mut(2).unwrap().append(&[5., 6.], &[7., 8.], 1).unwrap();
-        // duplicates and repeats are fine; all refs are alive at once
-        let caches = s.borrow_many(&[1, 2, 1]);
-        assert_eq!(caches.len(), 3);
-        assert_eq!(caches[0].unwrap().k.to_f32_vec()[0], 1.0);
-        assert_eq!(caches[1].unwrap().k.to_f32_vec()[0], 5.0);
+        assert!(!s.append_would_evict(1, 1));
+        s.append(1, &[1., 1.], &[1., 1.], 1).unwrap();
+        assert!(!s.append_would_evict(1, 1), "tail block has room");
+        assert!(s.append_would_evict(1, 3), "two more blocks cannot fit");
+        assert!(!s.append_would_evict(2, 2));
+        s.append(2, &[2., 2., 2., 2.], &[2., 2., 2., 2.], 2).unwrap();
+        assert!(s.append_would_evict(1, 2), "second block for 1 must evict");
+        assert!(!s.append_would_evict(2, 0), "empty append never evicts");
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn create_too_large_rejected_and_lazy() {
+        let mut s = SessionStore::with_block_steps(32, KvPrecision::F32, 2);
+        // cap 4 needs 2 blocks = 64B worst case > 32B budget
+        assert!(s.create(1, 1, 2, 4).is_err());
+        assert!(s.is_empty());
+        // cap 2 fits (one 32B block worst case) and allocates nothing yet
+        s.create(1, 1, 2, 2).unwrap();
+        assert_eq!(s.bytes(), 0);
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn recreate_replaces_and_frees() {
+        let mut s = SessionStore::with_block_steps(BIG, KvPrecision::F32, 2);
+        s.create(7, 1, 2, 4).unwrap();
+        s.append(7, &[1., 2.], &[3., 4.], 1).unwrap();
+        assert!(s.bytes() > 0);
+        s.create(7, 1, 2, 4).unwrap();
+        assert_eq!(s.get(7).unwrap().len, 0);
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.bytes(), 0, "old blocks freed on replace");
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn fork_shares_blocks_and_cows_on_divergence() {
+        let mut s = SessionStore::with_block_steps(BIG, KvPrecision::F32, 2);
+        s.create(1, 1, 2, 8).unwrap();
+        // 3 steps = one full block + a partial tail
+        s.append(1, &[1., 1., 2., 2., 3., 3.], &[4., 4., 5., 5., 6., 6.], 3).unwrap();
+        let bytes_before = s.bytes();
+        let src_before = gather_head_k(&s, 1, 0);
+        s.fork(1, 2).unwrap();
+        assert_eq!(s.bytes(), bytes_before, "fork allocates nothing");
+        assert_eq!(s.get(2).unwrap().blocks(), s.get(1).unwrap().blocks());
+        for &b in s.get(1).unwrap().blocks() {
+            assert_eq!(s.pool().refs(b), 2);
+        }
+        assert_eq!(s.prefix_share_hits, 2);
+        assert_eq!(gather_head_k(&s, 2, 0), src_before);
+        s.check_invariants().unwrap();
+        // divergent append on the fork CoWs only the partial tail
+        s.append(2, &[7., 7.], &[8., 8.], 1).unwrap();
+        assert_eq!(s.cow_copies, 1);
+        let (t1, t2) = (s.get(1).unwrap().blocks().to_vec(), s.get(2).unwrap().blocks().to_vec());
+        assert_eq!(t1[0], t2[0], "full prefix block still shared");
+        assert_ne!(t1[1], t2[1], "tail copied on write");
+        assert_eq!(s.pool().refs(t1[0]), 2);
+        assert_eq!(s.pool().refs(t1[1]), 1);
+        assert_eq!(s.pool().refs(t2[1]), 1);
+        assert_eq!(gather_head_k(&s, 1, 0), src_before, "source bits untouched");
+        assert_eq!(gather_head_k(&s, 2, 0), [1., 1., 2., 2., 3., 3., 7., 7.]);
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn fork32_stores_prefix_exactly_once() {
+        // block-aligned prefix: 8 steps over block_steps 4 = 2 full blocks
+        let mut s = SessionStore::with_block_steps(BIG, KvPrecision::F32, 4);
+        s.create(0, 1, 2, 64).unwrap();
+        let prefix: Vec<f32> = (0..16).map(|x| x as f32).collect();
+        s.append(0, &prefix, &prefix, 8).unwrap();
+        let prefix_bytes = s.bytes();
+        assert_eq!(prefix_bytes, 2 * 2 * 4 * 2 * 4);
+        for id in 1..=32 {
+            s.fork(0, id).unwrap();
+        }
+        assert_eq!(s.bytes(), prefix_bytes, "32 forks add zero bytes");
+        for &b in s.get(0).unwrap().blocks() {
+            assert_eq!(s.pool().refs(b), 33, "prefix stored once, referenced 33x");
+        }
+        s.check_invariants().unwrap();
+        // one divergent step per fork: tail is block-aligned, so no CoW —
+        // each fork allocates exactly one fresh block
+        for id in 1..=32 {
+            s.append(id, &[id as f32, 0.], &[0., 0.], 1).unwrap();
+        }
+        assert_eq!(s.cow_copies, 0);
+        assert_eq!(s.bytes(), prefix_bytes + 32 * (prefix_bytes / 2));
+        for &b in s.get(0).unwrap().blocks() {
+            assert_eq!(s.pool().refs(b), 33);
+        }
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn share_prefix_materializes_partial_tail() {
+        let mut s = SessionStore::with_block_steps(BIG, KvPrecision::F32, 4);
+        s.create(1, 1, 1, 16).unwrap();
+        let data: Vec<f32> = (0..6).map(|x| x as f32 + 1.0).collect();
+        s.append(1, &data, &data, 6).unwrap();
+        // steps=5 splits block 1: share block 0, clone one step of block 1
+        s.share_prefix(1, 2, 5).unwrap();
+        assert_eq!(s.get(2).unwrap().len, 5);
+        assert_eq!(s.pool().refs(s.get(1).unwrap().blocks()[0]), 2);
+        assert_ne!(s.get(1).unwrap().blocks()[1], s.get(2).unwrap().blocks()[1]);
+        assert_eq!(s.cow_copies, 1);
+        assert_eq!(s.prefix_share_hits, 1);
+        assert_eq!(gather_head_k(&s, 2, 0), [1., 2., 3., 4., 5.]);
+        s.check_invariants().unwrap();
+        // block-aligned prefix shares everything, clones nothing
+        s.share_prefix(1, 3, 4).unwrap();
+        assert_eq!(s.cow_copies, 1, "aligned prefix needs no copy");
+        assert_eq!(s.get(3).unwrap().blocks()[0], s.get(1).unwrap().blocks()[0]);
+        assert_eq!(gather_head_k(&s, 3, 0), [1., 2., 3., 4.]);
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn eviction_preserves_shared_prefix_blocks() {
+        // block = 2*1*2*2*4 = 32B; budget 96 = 3 blocks.
+        let mut s = SessionStore::with_block_steps(96, KvPrecision::F32, 2);
+        s.create(1, 1, 2, 4).unwrap();
+        s.append(1, &[1., 1., 2., 2.], &[1., 1., 2., 2.], 2).unwrap(); // block A (full)
+        s.fork(1, 2).unwrap(); // 2 shares A
+        s.append(2, &[3., 3., 4., 4.], &[3., 3., 4., 4.], 2).unwrap(); // + exclusive block B
+        s.append(1, &[5., 5., 6., 6.], &[5., 5., 6., 6.], 2).unwrap(); // + exclusive block C
+        assert_eq!(s.bytes(), 96);
+        // session 2 is now LRU; a third session's first append evicts it...
+        s.create(3, 1, 2, 4).unwrap(); // lazy: no eviction yet
+        s.append(3, &[9., 9., 8., 8.], &[9., 9., 8., 8.], 2).unwrap();
+        assert!(s.contains(1) && !s.contains(2) && s.contains(3));
+        assert_eq!(s.evictions, 1);
+        // ...freeing only its exclusive block B — shared A survives for 1
+        assert_eq!(s.block_evictions, 1, "only the unshared block frees");
+        assert_eq!(s.bytes(), 96);
+        assert_eq!(s.pool().refs(s.get(1).unwrap().blocks()[0]), 1);
+        assert_eq!(gather_head_k(&s, 1, 0), [1., 1., 2., 2., 5., 5., 6., 6.]);
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn prefill_and_fork_would_evict_predict() {
+        let mut s = SessionStore::with_block_steps(64, KvPrecision::F32, 2);
+        s.create(1, 1, 2, 4).unwrap();
+        s.append(1, &[1., 1., 2., 2., 3., 3.], &[0.; 6], 3).unwrap(); // 2 blocks = 64B
+        assert!(!s.prefill_would_evict(1, 1, 2, 4), "replacing self frees own blocks");
+        assert!(s.prefill_would_evict(2, 1, 2, 1), "any new block must evict");
+        // fork+append: tail is partial and will CoW, plus growth
+        assert!(s.fork_would_evict(1, 2, 1), "CoW block cannot fit");
+        s.fork(1, 2).unwrap(); // sharing itself is free
+        assert_eq!(s.bytes(), 64);
+        assert!(s.append_would_evict(2, 1), "divergence needs the CoW block");
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn gather_many_takes_simultaneous_refs() {
+        let mut s = SessionStore::with_block_steps(BIG, KvPrecision::F32, 2);
+        s.create(1, 1, 2, 4).unwrap();
+        s.create(2, 1, 2, 4).unwrap();
+        s.append(1, &[1., 2.], &[3., 4.], 1).unwrap();
+        s.append(2, &[5., 6.], &[7., 8.], 1).unwrap();
+        let views = s.gather_many(&[1, 2, 1]);
+        assert_eq!(views.len(), 3);
+        assert_eq!(views[0].as_ref().unwrap().head_k(0).to_f32_vec()[0], 1.0);
+        assert_eq!(views[1].as_ref().unwrap().head_k(0).to_f32_vec()[0], 5.0);
         assert_eq!(
-            caches[2].unwrap().k.to_f32_vec()[0],
-            caches[0].unwrap().k.to_f32_vec()[0]
+            views[2].as_ref().unwrap().head_k(0).to_f32_vec(),
+            views[0].as_ref().unwrap().head_k(0).to_f32_vec()
         );
-        // a missing id degrades to None in its slot, not a whole failure
-        let partial = s.borrow_many(&[1, 9]);
+        let partial = s.gather_many(&[1, 9]);
         assert!(partial[0].is_some() && partial[1].is_none());
     }
 
     #[test]
-    fn would_evict_predicts_create() {
-        // budget fits exactly two sessions of this geometry (64B each)
-        let mut s = SessionStore::new(128);
-        s.create(1, 1, 2, 4).unwrap();
-        assert!(!s.would_evict(2, 1, 2, 4), "second session fits");
-        s.create(2, 1, 2, 4).unwrap();
-        assert!(s.would_evict(3, 1, 2, 4), "third must evict");
-        // re-creating an existing id frees its own bytes first
-        assert!(!s.would_evict(1, 1, 2, 4), "replace never evicts others");
-        assert!(s.would_evict(1, 1, 2, 8), "larger replace does");
-    }
-
-    #[test]
-    fn create_too_large_rejected() {
-        let mut s = SessionStore::new(32);
-        assert!(s.create(1, 4, 64, 128).is_err());
-        assert!(s.is_empty());
-    }
-
-    #[test]
-    fn recreate_replaces() {
-        let mut s = SessionStore::new(1024);
-        s.create(7, 1, 2, 4).unwrap();
-        s.get_mut(7).unwrap().append(&[1., 2.], &[3., 4.], 1).unwrap();
-        s.create(7, 1, 2, 4).unwrap();
-        assert_eq!(s.get(7).unwrap().len, 0);
-        assert_eq!(s.len(), 1);
-        s.check_invariants().unwrap();
+    fn paged_gather_bitmatches_contiguous_reference() {
+        // Deterministic pseudo-data, odd block size, all three precisions:
+        // gathered per-head views must equal the quantize-projected
+        // contiguous sequence element for element.
+        for prec in [KvPrecision::F32, KvPrecision::Bf16, KvPrecision::Fp8] {
+            let (heads, d, bs) = (2, 3, 5);
+            let mut s = SessionStore::with_block_steps(BIG, prec, bs);
+            s.create(1, heads, d, 64).unwrap();
+            let mut expect_k: Vec<KvStore> = (0..heads).map(|_| KvStore::zeros(prec, 0)).collect();
+            let mut x = 0.0f32;
+            let mut total = 0usize;
+            for n in [1usize, 4, 7, 2, 9] {
+                let mut k_new = vec![0.0f32; heads * n * d];
+                for h in 0..heads {
+                    for i in 0..n {
+                        for e in 0..d {
+                            x += 0.37;
+                            k_new[(h * n + i) * d + e] = x * if e % 2 == 0 { 1.0 } else { -1.0 };
+                        }
+                    }
+                }
+                let v_new = k_new.clone();
+                s.append(1, &k_new, &v_new, n).unwrap();
+                for h in 0..heads {
+                    expect_k[h].extend_from_f32(&k_new[h * n * d..(h + 1) * n * d]);
+                }
+                total += n;
+            }
+            assert_eq!(s.get(1).unwrap().len, total);
+            for h in 0..heads {
+                assert_eq!(gather_head_k(&s, 1, h), expect_k[h].to_f32_vec(), "{prec:?} head {h}");
+            }
+            s.check_invariants().unwrap();
+        }
     }
 }

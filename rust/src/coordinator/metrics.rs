@@ -38,6 +38,21 @@ pub struct Metrics {
     pub skip_steps: AtomicU64,
     /// Saturation-skipped steps (zero under `SkipCriterion::None`).
     pub skip_skipped: AtomicU64,
+    /// Resident KV block-pool bytes (gauge: engine publishes the store's
+    /// current value each drain cycle).
+    pub kv_pool_bytes: AtomicU64,
+    /// High-water mark of `kv_pool_bytes` over the store's lifetime.
+    pub kv_pool_peak_bytes: AtomicU64,
+    /// Live KV pool blocks (gauge).
+    pub kv_pool_blocks: AtomicU64,
+    /// Blocks actually freed by LRU eviction (a shared prefix block whose
+    /// refcount stays positive is *not* counted — it survived).
+    pub kv_block_evictions: AtomicU64,
+    /// Blocks shared by reference instead of copied (fork/share_prefix).
+    pub kv_prefix_share_hits: AtomicU64,
+    /// Copy-on-write block clones (first divergent append to a shared
+    /// tail, or a prefix share splitting a block).
+    pub kv_cow_copies: AtomicU64,
     latency_buckets: [AtomicU64; 12],
     latency_sum_us: AtomicU64,
     jobs_per_cycle_buckets: [AtomicU64; 9],
@@ -99,6 +114,12 @@ impl Metrics {
             fused_rows: self.fused_rows.load(Ordering::Relaxed),
             skip_steps: self.skip_steps.load(Ordering::Relaxed),
             skip_skipped: self.skip_skipped.load(Ordering::Relaxed),
+            kv_pool_bytes: self.kv_pool_bytes.load(Ordering::Relaxed),
+            kv_pool_peak_bytes: self.kv_pool_peak_bytes.load(Ordering::Relaxed),
+            kv_pool_blocks: self.kv_pool_blocks.load(Ordering::Relaxed),
+            kv_block_evictions: self.kv_block_evictions.load(Ordering::Relaxed),
+            kv_prefix_share_hits: self.kv_prefix_share_hits.load(Ordering::Relaxed),
+            kv_cow_copies: self.kv_cow_copies.load(Ordering::Relaxed),
             latency_buckets: self.latency_buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
             latency_sum_us: self.latency_sum_us.load(Ordering::Relaxed),
             jobs_per_cycle_buckets: self.jobs_per_cycle_buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
@@ -124,6 +145,12 @@ pub struct Snapshot {
     pub fused_rows: u64,
     pub skip_steps: u64,
     pub skip_skipped: u64,
+    pub kv_pool_bytes: u64,
+    pub kv_pool_peak_bytes: u64,
+    pub kv_pool_blocks: u64,
+    pub kv_block_evictions: u64,
+    pub kv_prefix_share_hits: u64,
+    pub kv_cow_copies: u64,
     pub latency_buckets: Vec<u64>,
     pub latency_sum_us: u64,
     pub jobs_per_cycle_buckets: Vec<u64>,
@@ -183,6 +210,8 @@ impl Snapshot {
              fused: cycles={} submissions={} batches={} jobs={} rows={} \
              jobs/cycle={:.2}\n\
              kernel steps={} skipped={}\n\
+             kv pool: bytes={} peak={} blocks={} block_evictions={} \
+             prefix_share_hits={} cow_copies={}\n\
              latency: mean={:.0}µs p50<={}µs p95<={}µs p99<={}µs",
             self.requests,
             self.responses,
@@ -199,6 +228,12 @@ impl Snapshot {
             self.mean_jobs_per_cycle(),
             self.skip_steps,
             self.skip_skipped,
+            self.kv_pool_bytes,
+            self.kv_pool_peak_bytes,
+            self.kv_pool_blocks,
+            self.kv_block_evictions,
+            self.kv_prefix_share_hits,
+            self.kv_cow_copies,
             self.mean_latency_us(),
             fmt_b(self.latency_percentile_us(50.0)),
             fmt_b(self.latency_percentile_us(95.0)),
@@ -252,6 +287,28 @@ mod tests {
         assert_eq!(s.mean_jobs_per_cycle(), 0.0);
         assert!(s.render().contains("requests=0"));
         assert!(s.render().contains("fused: cycles=0"));
+        assert!(s.render().contains("kv pool: bytes=0"));
+    }
+
+    #[test]
+    fn kv_pool_gauges_render_and_snapshot() {
+        let m = Metrics::new();
+        m.kv_pool_bytes.store(4096, Ordering::Relaxed);
+        m.kv_pool_peak_bytes.store(8192, Ordering::Relaxed);
+        m.kv_pool_blocks.store(4, Ordering::Relaxed);
+        m.kv_block_evictions.store(2, Ordering::Relaxed);
+        m.kv_prefix_share_hits.store(7, Ordering::Relaxed);
+        m.kv_cow_copies.store(1, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.kv_pool_bytes, 4096);
+        assert_eq!(s.kv_pool_peak_bytes, 8192);
+        assert_eq!(s.kv_pool_blocks, 4);
+        assert_eq!(s.kv_block_evictions, 2);
+        assert_eq!(s.kv_prefix_share_hits, 7);
+        assert_eq!(s.kv_cow_copies, 1);
+        let r = s.render();
+        assert!(r.contains("kv pool: bytes=4096 peak=8192 blocks=4"));
+        assert!(r.contains("block_evictions=2 prefix_share_hits=7 cow_copies=1"));
     }
 
     #[test]

@@ -5,7 +5,8 @@
 //!
 //! Components:
 //! * [`request`]   — request/response types and shape signatures,
-//! * [`kv_cache`]  — per-session KV cache with LRU eviction,
+//! * [`kv_cache`]  — paged KV block pool: per-session block tables,
+//!   copy-on-write prefix sharing, block-granular LRU eviction,
 //! * [`router`]    — maps (variant, shape) to a compiled artifact + pad,
 //! * [`batcher`]   — dynamic batching of decode requests into query blocks,
 //! * [`scheduler`] — bounded two-class (prefill/decode) admission queue,

@@ -45,6 +45,9 @@ pub enum RequestKind {
     /// Decode step: append one K/V pair to the session, attend with the
     /// carried single query against the whole cache.
     Decode { session: u64 },
+    /// Fork session `src` into `session` (zero-copy prefix share in the
+    /// paged store), append the carried divergent K/V, then attend.
+    Fork { src: u64, session: u64 },
 }
 
 /// One attention request.
@@ -88,15 +91,24 @@ impl AttentionRequest {
             // a 0-length context would reach the kernels' n >= 1 assert on
             // the engine thread — reject it at admission instead
             RequestKind::Prefill { .. } if self.nkv == 0 => Err("prefill needs kv".into()),
+            RequestKind::Fork { .. } if self.nkv == 0 => {
+                Err("fork needs at least one divergent kv pair".into())
+            }
+            RequestKind::Fork { src, session } if src == session => {
+                Err("fork src == dst".into())
+            }
             _ => Ok(()),
         }
     }
 
-    /// The session this request touches, if any.
+    /// The session this request touches (for Fork: the one it mutates —
+    /// the destination), if any.
     pub fn session(&self) -> Option<u64> {
         match self.kind {
             RequestKind::Stateless => None,
-            RequestKind::Prefill { session } | RequestKind::Decode { session } => Some(session),
+            RequestKind::Prefill { session }
+            | RequestKind::Decode { session }
+            | RequestKind::Fork { session, .. } => Some(session),
         }
     }
 
@@ -162,5 +174,14 @@ mod tests {
         assert_eq!(req(RequestKind::Stateless, 1, 1).session(), None);
         assert_eq!(req(RequestKind::Prefill { session: 5 }, 1, 1).session(), Some(5));
         assert_eq!(req(RequestKind::Decode { session: 7 }, 1, 1).session(), Some(7));
+        assert_eq!(req(RequestKind::Fork { src: 5, session: 6 }, 1, 1).session(), Some(6));
+    }
+
+    #[test]
+    fn fork_needs_divergence_and_distinct_ids() {
+        assert!(req(RequestKind::Fork { src: 1, session: 2 }, 1, 3).validate().is_ok());
+        assert!(req(RequestKind::Fork { src: 1, session: 2 }, 1, 0).validate().is_err());
+        assert!(req(RequestKind::Fork { src: 2, session: 2 }, 1, 1).validate().is_err());
+        assert!(!req(RequestKind::Fork { src: 1, session: 2 }, 1, 1).is_decode());
     }
 }

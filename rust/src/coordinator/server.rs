@@ -21,16 +21,18 @@
 //!    mutations are kept, exactly as in serial dispatch.
 //! 3. Admitted batches accumulate into a *fusion group*. A batch that
 //!    conflicts with the group — it touches a session the group already
-//!    reads, or it is a prefill whose session creation could LRU-evict a
-//!    cache while the group still borrows caches — flushes the group
-//!    first, so fused results are bit-identical to serial dispatch.
-//! 4. A flush lowers every batch in the group to one [`KvBlockJob`] per
-//!    head over its `(total_q, kv_len)` problem — query rows borrowed
+//!    reads (for a fork: either endpoint), or its appends could LRU-evict
+//!    blocks while the group still borrows block tables — flushes the
+//!    group first, so fused results are bit-identical to serial dispatch.
+//! 4. A flush lowers every batch in the group to one [`PagedKvBlockJob`]
+//!    per head over its `(total_q, kv_len)` problem — query rows borrowed
 //!    from the requests (gathered into a contiguous block only for
-//!    multi-member decode fusions), K/V borrowed in place from the
-//!    session caches with no copies or padding (quantized caches are
-//!    referenced as [`KvRef`]s and dequantized tile-by-tile inside the
-//!    kernel workers) — and submits the whole job list through a single
+//!    multi-member decode fusions), K/V borrowed in place from the paged
+//!    session store with no copies or padding: each session's block table
+//!    is gathered once into per-head fragment lists, and the kernels
+//!    stream tiles through the gather-aware [`KvView`] (quantized blocks
+//!    are dequantized tile-by-tile inside the kernel workers) — and
+//!    submits the whole job list through a single
 //!    [`AttnEngine::execute_fused`] call on the batched driver's thread
 //!    pool.
 //! 5. The flat output is scattered back into per-member `(heads, nq,
@@ -42,17 +44,17 @@
 //! suite (`tests/conformance_serving.rs`) asserts exactly that.
 
 use super::batcher::{form_batches, member_row_spans, Batch, BatchPolicy};
-use super::kv_cache::SessionStore;
+use super::kv_cache::{PagedSessionKv, SessionStore};
 use super::metrics::Metrics;
 use super::request::{AttentionRequest, AttentionResponse, RequestKind, ShapeSig};
 use super::router::{Route, Router};
 use super::scheduler::{Policy, Rejected, Scheduler};
 use crate::kernels::batch::{
-    run_blocks_into_with, run_kv_blocks_flat_into_with, BatchScratch, BlockJob, KernelConfig,
-    KvBlockJob,
+    run_blocks_into_with, run_paged_kv_blocks_flat_into_with, BatchScratch, BlockJob,
+    KernelConfig, PagedKvBlockJob,
 };
 use crate::kernels::flashd::SkipStats;
-use crate::numerics::quant::KvRef;
+use crate::numerics::quant::{KvRef, KvView};
 use crate::runtime::{lit_f32, lit_i32, to_vec_f32, Runtime};
 use anyhow::{anyhow, Result};
 use std::cell::RefCell;
@@ -80,11 +82,12 @@ pub trait AttnEngine {
     /// Fused dispatch: execute a whole drain cycle's lowered block jobs
     /// as ONE kernel submission. `out` is the flat concatenation of job
     /// outputs (job `i` owns the next `nq_i * d_i` floats). K/V arrive as
-    /// [`KvRef`]s borrowed straight from the session caches, in whatever
-    /// storage precision the store holds — `F32` sessions execute the
-    /// zero-copy bit-exact path. Only called when
-    /// [`AttnEngine::supports_fused`] returns true.
-    fn execute_fused(&self, jobs: &[KvBlockJob<'_>], out: &mut [f32]) -> Result<SkipStats> {
+    /// [`KvView`]s borrowed straight from the paged session store —
+    /// per-head block-fragment lists the kernels stream tiles across
+    /// (contiguous `F32` payloads still take the zero-copy bit-exact
+    /// path), in whatever storage precision the store holds. Only called
+    /// when [`AttnEngine::supports_fused`] returns true.
+    fn execute_fused(&self, jobs: &[PagedKvBlockJob<'_>], out: &mut [f32]) -> Result<SkipStats> {
         let _ = (jobs, out);
         Err(anyhow!("engine does not support fused dispatch"))
     }
@@ -182,8 +185,8 @@ impl AttnEngine for NaiveEngine {
         true
     }
 
-    fn execute_fused(&self, jobs: &[KvBlockJob<'_>], out: &mut [f32]) -> Result<SkipStats> {
-        Ok(run_kv_blocks_flat_into_with(&self.kernel, jobs, out, &mut self.scratch.borrow_mut()))
+    fn execute_fused(&self, jobs: &[PagedKvBlockJob<'_>], out: &mut [f32]) -> Result<SkipStats> {
+        Ok(run_paged_kv_blocks_flat_into_with(&self.kernel, jobs, out, &mut self.scratch.borrow_mut()))
     }
 }
 
@@ -214,6 +217,11 @@ pub struct CoordinatorConfig {
     /// Drain-cycle sizing knob: how many requests one dispatch cycle may
     /// pull from the scheduler, bounding the width of a fused submission.
     pub drain_cycle: usize,
+    /// Run the paged KV store's full refcount/byte-accounting invariant
+    /// check after every drain cycle, panicking the engine thread on a
+    /// violation. Debug/stress-test knob — O(sessions + blocks) per
+    /// cycle, off by default.
+    pub validate_invariants: bool,
 }
 
 impl Default for CoordinatorConfig {
@@ -228,6 +236,7 @@ impl Default for CoordinatorConfig {
             kernel: KernelConfig::default(),
             fused: true,
             drain_cycle: 256,
+            validate_invariants: false,
         }
     }
 }
@@ -339,10 +348,15 @@ struct Pending {
 fn engine_loop<E: AttnEngine>(engine: E, rx: Receiver<Msg>, cfg: CoordinatorConfig, metrics: Arc<Metrics>) {
     let router = engine.router();
     let fused = cfg.fused && engine.supports_fused();
-    // Session caches store KV at the kernel config's precision; f32 (the
-    // default) keeps every downstream path bit-identical to the
-    // unquantized coordinator.
-    let mut sessions = SessionStore::with_precision(cfg.kv_budget_bytes, cfg.kernel.kv_precision);
+    // Session KV lives in the paged block pool at the kernel config's
+    // precision, one kernel tile of steps per block; f32 (the default)
+    // keeps every downstream path bit-identical to the unquantized
+    // coordinator.
+    let mut sessions = SessionStore::with_block_steps(
+        cfg.kv_budget_bytes,
+        cfg.kernel.kv_precision,
+        cfg.kernel.tile.max(1),
+    );
     let mut sched = Scheduler::new(cfg.queue_capacity, cfg.policy);
     sched.drain_max = cfg.drain_cycle.max(1);
     let mut replies: std::collections::HashMap<u64, Sender<AttentionResponse>> = std::collections::HashMap::new();
@@ -422,11 +436,28 @@ fn engine_loop<E: AttnEngine>(engine: E, rx: Receiver<Msg>, cfg: CoordinatorConf
                     serve_batch(&engine, &router, &mut sessions, batch, &mut pend, &metrics);
                 }
             }
+            publish_kv_metrics(&sessions, &metrics);
+            if cfg.validate_invariants {
+                sessions.check_invariants().expect("kv store invariants violated");
+            }
         }
         if shutdown {
             break 'outer;
         }
     }
+}
+
+/// Publish the paged store's pool gauges and sharing counters into the
+/// metrics sink (store-latest: the engine thread owns the store, so each
+/// drain cycle's value is the current truth).
+fn publish_kv_metrics(sessions: &SessionStore, metrics: &Arc<Metrics>) {
+    let pool = sessions.pool();
+    metrics.kv_pool_bytes.store(pool.bytes as u64, Ordering::Relaxed);
+    metrics.kv_pool_peak_bytes.store(pool.peak_bytes as u64, Ordering::Relaxed);
+    metrics.kv_pool_blocks.store(pool.live_blocks() as u64, Ordering::Relaxed);
+    metrics.kv_block_evictions.store(sessions.block_evictions, Ordering::Relaxed);
+    metrics.kv_prefix_share_hits.store(sessions.prefix_share_hits, Ordering::Relaxed);
+    metrics.kv_cow_copies.store(sessions.cow_copies, Ordering::Relaxed);
 }
 
 /// How a prepared batch's K/V is sourced at lowering time.
@@ -525,14 +556,15 @@ fn prepare_batch(
     let variant = first.variant;
     let (h, d) = (sig.heads, sig.head_dim);
 
-    // 1. Update session state.
+    // 1. Update session state (all appends land in the paged block pool).
     match &first.kind {
         RequestKind::Stateless => {}
         RequestKind::Prefill { session } => {
             let cap = router.max_kv(variant, sig).ok_or_else(|| anyhow!("no artifacts for signature"))?;
             sessions.create(*session, h, d, cap).map_err(|e| anyhow!("session create: {e}"))?;
-            let cache = sessions.get_mut(*session).unwrap();
-            cache.append(&first.k, &first.v, first.nkv).map_err(|e| anyhow!("prefill append: {e}"))?;
+            sessions
+                .append(*session, &first.k, &first.v, first.nkv)
+                .map_err(|e| anyhow!("prefill append: {e}"))?;
             metrics.kv_appends.fetch_add(first.nkv as u64, Ordering::Relaxed);
         }
         RequestKind::Decode { session } => {
@@ -540,11 +572,25 @@ fn prepare_batch(
             if !sessions.contains(sid) {
                 return Err(anyhow!("unknown session {sid}"));
             }
-            let cache = sessions.get_mut(sid).unwrap();
             for m in members {
-                cache.append(&m.req.k, &m.req.v, 1).map_err(|e| anyhow!("decode append: {e}"))?;
+                sessions
+                    .append(sid, &m.req.k, &m.req.v, 1)
+                    .map_err(|e| anyhow!("decode append: {e}"))?;
             }
             metrics.kv_appends.fetch_add(members.len() as u64, Ordering::Relaxed);
+        }
+        RequestKind::Fork { src, session } => {
+            let (src, dst) = (*src, *session);
+            let t = sessions.get(src).ok_or_else(|| anyhow!("unknown fork source {src}"))?;
+            if t.heads != h || t.head_dim != d {
+                return Err(anyhow!("fork source geometry mismatch"));
+            }
+            // Zero-copy prefix share; the carried K/V is the divergence.
+            sessions.fork(src, dst).map_err(|e| anyhow!("fork: {e}"))?;
+            sessions
+                .append(dst, &first.k, &first.v, first.nkv)
+                .map_err(|e| anyhow!("fork append: {e}"))?;
+            metrics.kv_appends.fetch_add(first.nkv as u64, Ordering::Relaxed);
         }
     }
 
@@ -552,8 +598,8 @@ fn prepare_batch(
     let total_q: usize = members.iter().map(|m| m.req.nq).sum();
     let (kv, kv_len) = match first.session() {
         Some(sid) if !matches!(first.kind, RequestKind::Stateless) => {
-            let cache = sessions.get(sid).ok_or_else(|| anyhow!("session vanished"))?;
-            (KvSrc::Session(sid), cache.len)
+            let table = sessions.get(sid).ok_or_else(|| anyhow!("session vanished"))?;
+            (KvSrc::Session(sid), table.len)
         }
         _ => (KvSrc::Inline, first.nkv),
     };
@@ -600,16 +646,6 @@ fn pack_execute_split<E: AttnEngine>(
     let (h, d) = (r.sig.heads, r.sig.head_dim);
     let route = &r.route;
     let kv_len = r.kv_len;
-    let (kv_src_k, kv_src_v, kv_src_cap): (KvRef<'_>, KvRef<'_>, usize) = match r.kv {
-        KvSrc::Session(sid) => {
-            let cache = sessions.get(sid).ok_or_else(|| anyhow!("session vanished"))?;
-            (cache.k.as_kv(), cache.v.as_kv(), cache.cap)
-        }
-        KvSrc::Inline => {
-            let first = &r.members[0].req;
-            (KvRef::F32(&first.k), KvRef::F32(&first.v), first.nkv)
-        }
-    };
 
     let mut q = vec![0.0f32; h * route.q_slots * d];
     let mut row = 0usize;
@@ -625,15 +661,33 @@ fn pack_execute_split<E: AttnEngine>(
     }
     let mut k = vec![0.0f32; h * route.kv_slots * d];
     let mut v = vec![0.0f32; h * route.kv_slots * d];
-    // For f32 sessions this is a straight copy; quantized sessions
-    // dequantize into the padded block tensors (the per-route engines
-    // consume f32 regardless of storage precision).
-    for hh in 0..h {
-        let src = hh * kv_src_cap * d;
-        let dst = hh * route.kv_slots * d;
-        let n = kv_len * d;
-        kv_src_k.load_into(src, src + n, &mut k[dst..dst + n]);
-        kv_src_v.load_into(src, src + n, &mut v[dst..dst + n]);
+    // Session KV streams out of the paged store through the same
+    // element-range `load_into` contract the fused path tiles over, so
+    // the packed tensors are bit-identical to a contiguous cache. For
+    // f32 blocks this is a straight copy; quantized blocks dequantize
+    // into the padded block tensors (the per-route engines consume f32
+    // regardless of storage precision).
+    match r.kv {
+        KvSrc::Session(sid) => {
+            let kv = sessions.gather(sid).ok_or_else(|| anyhow!("session vanished"))?;
+            debug_assert_eq!(kv.len, kv_len);
+            let n = kv_len * d;
+            for hh in 0..h {
+                let dst = hh * route.kv_slots * d;
+                kv.head_k(hh).load_into(0, n, &mut k[dst..dst + n]);
+                kv.head_v(hh).load_into(0, n, &mut v[dst..dst + n]);
+            }
+        }
+        KvSrc::Inline => {
+            let first = &r.members[0].req;
+            let n = kv_len * d;
+            for hh in 0..h {
+                let src = hh * first.nkv * d;
+                let dst = hh * route.kv_slots * d;
+                k[dst..dst + n].copy_from_slice(&first.k[src..src + n]);
+                v[dst..dst + n].copy_from_slice(&first.v[src..src + n]);
+            }
+        }
     }
 
     let out = engine.execute(route, &q, &k, &v, kv_len)?;
@@ -673,7 +727,7 @@ fn serve_cycle_fused<E: AttnEngine>(
     let mut group_sessions: HashSet<u64> = HashSet::new();
     let mut jobs_this_cycle = 0u64;
     for batch in batches {
-        if fusion_conflict(router, sessions, &group_sessions, batch) {
+        if fusion_conflict(router, sessions, &group_sessions, batch, pend) {
             jobs_this_cycle += flush_group(engine, sessions, &mut group, metrics);
             group_sessions.clear();
         }
@@ -689,30 +743,50 @@ fn serve_cycle_fused<E: AttnEngine>(
 }
 
 /// Must the current fusion group flush before this batch is admitted?
-/// True when the batch touches a session the group already reads (its
-/// create/appends would be visible to the earlier batch's borrow), or
-/// when it is a prefill whose session creation could LRU-evict a cache
-/// while the group still holds borrows.
+/// True when the batch touches a session the group already reads — for a
+/// fork, conservatively either endpoint — (its mutations would be visible
+/// to the earlier batch's borrow), or when its appends could LRU-evict
+/// blocks out of the pool while the group still holds admitted-but-
+/// unflushed reads. Creation is lazy in the paged store, so the eviction
+/// predicates mirror `SessionStore::append`'s admission check exactly —
+/// per kind: decode appends `members` steps, prefill re-creates then
+/// appends `nkv`, fork shares then appends `nkv` (CoW-aware).
 fn fusion_conflict(
     router: &Router,
     sessions: &SessionStore,
     group_sessions: &HashSet<u64>,
     batch: &Batch,
+    pend: &[Option<Pending>],
 ) -> bool {
     let Some(sid) = batch.session else {
         return false; // stateless: private KV, never conflicts
     };
-    if group_sessions.contains(&sid) {
+    let first = pend[batch.members[0]].as_ref().map(|p| &p.req);
+    let fork_src = first.and_then(|r| match r.kind {
+        RequestKind::Fork { src, .. } => Some(src),
+        _ => None,
+    });
+    if group_sessions.contains(&sid) || fork_src.is_some_and(|s| group_sessions.contains(&s)) {
         return true;
     }
-    if batch.decode || group_sessions.is_empty() {
+    if group_sessions.is_empty() {
         return false;
     }
-    // Prefill joining a non-empty group: conservative eviction test (an
-    // unknown signature can't create a session, so it can't evict either).
-    match router.max_kv(batch.variant, batch.sig) {
-        Some(cap) => sessions.would_evict(sid, batch.sig.heads, batch.sig.head_dim, cap),
-        None => false,
+    if batch.decode {
+        return sessions.append_would_evict(sid, batch.members.len());
+    }
+    let Some(first) = first else { return false };
+    match first.kind {
+        RequestKind::Fork { src, .. } => sessions.fork_would_evict(src, sid, first.nkv),
+        // An unknown signature can't create a session, so it can't evict
+        // either.
+        RequestKind::Prefill { .. } => match router.max_kv(batch.variant, batch.sig) {
+            Some(_) => {
+                sessions.prefill_would_evict(sid, batch.sig.heads, batch.sig.head_dim, first.nkv)
+            }
+            None => false,
+        },
+        _ => false,
     }
 }
 
@@ -736,10 +810,12 @@ fn flush_group<E: AttnEngine>(
     // single-member batches borrow the request's q as-is.
     let staged: Vec<Option<Vec<f32>>> = group.iter().map(gather_queries).collect();
 
-    // Simultaneous per-session KV borrows via `SessionStore::borrow_many`:
-    // all of the group's mutations are done, so every source is stable
-    // until the submission returns. Inline (stateless) batches borrow
-    // their first member's request payload instead.
+    // Simultaneous per-session KV gathers via `SessionStore::gather_many`:
+    // all of the group's mutations are done, so every block table is
+    // stable until the submission returns — each gather borrows the
+    // session's pool blocks as per-head fragment lists. Inline
+    // (stateless) batches borrow their first member's request payload
+    // instead.
     let sess_ids: Vec<u64> = group
         .iter()
         .filter_map(|r| match r.kv {
@@ -747,40 +823,60 @@ fn flush_group<E: AttnEngine>(
             KvSrc::Inline => None,
         })
         .collect();
-    let mut sess_caches = sessions.borrow_many(&sess_ids).into_iter();
-    let srcs: Vec<Option<(KvRef<'_>, KvRef<'_>, usize)>> = group
+    let sess_views = sessions.gather_many(&sess_ids);
+    #[derive(Clone, Copy)]
+    enum FusedSrc<'a> {
+        Sess(&'a PagedSessionKv<'a>),
+        Inline(&'a AttentionRequest),
+    }
+    let mut views = sess_views.iter();
+    let srcs: Vec<Option<FusedSrc<'_>>> = group
         .iter()
         .map(|r| match r.kv {
-            KvSrc::Session(_) => sess_caches
+            KvSrc::Session(_) => views
                 .next()
-                .expect("one borrow per session-backed batch")
-                .map(|c| (c.k.as_kv(), c.v.as_kv(), c.cap)),
-            KvSrc::Inline => {
-                let first = &r.members[0].req;
-                Some((KvRef::F32(first.k.as_slice()), KvRef::F32(first.v.as_slice()), first.nkv))
-            }
+                .expect("one gather per session-backed batch")
+                .as_ref()
+                .map(FusedSrc::Sess),
+            KvSrc::Inline => Some(FusedSrc::Inline(&r.members[0].req)),
         })
         .collect();
 
-    // Lower: one KvBlockJob per (batch, head), covering the batch's whole
-    // query block against the head's live KV prefix, borrowed in place —
-    // quantized session caches are referenced as-is and only dequantized
-    // tile-by-tile inside the kernel workers.
-    let mut jobs: Vec<KvBlockJob<'_>> = Vec::new();
+    // Lower: one PagedKvBlockJob per (batch, head), covering the batch's
+    // whole query block against the head's live KV prefix, borrowed in
+    // place — session KV as block-table fragment views (kernel tiles
+    // deliberately do not align with pool blocks; the view splits each
+    // tile's element range across fragments, which is what keeps paged
+    // output bit-identical to contiguous), quantized blocks referenced
+    // as-is and only dequantized tile-by-tile inside the kernel workers.
+    let mut jobs: Vec<PagedKvBlockJob<'_>> = Vec::new();
     let mut offsets: Vec<usize> = vec![usize::MAX; group.len()];
     let mut off = 0usize;
     for (bi, (r, src)) in group.iter().zip(&srcs).enumerate() {
-        let Some((ks, vs, cap)) = *src else {
+        let Some(src) = src else {
             continue; // vanished session: answered after the submission
         };
         let (h, d) = (r.sig.heads, r.sig.head_dim);
         let scale = (d as f32).powf(-0.5);
         let q: &[f32] = staged[bi].as_deref().unwrap_or(&r.members[0].req.q);
         for hh in 0..h {
-            jobs.push(KvBlockJob {
+            let (k, v) = match *src {
+                FusedSrc::Sess(p) => {
+                    debug_assert_eq!(p.len, r.kv_len, "table mutated under the fusion group");
+                    (p.head_k(hh), p.head_v(hh))
+                }
+                FusedSrc::Inline(first) => {
+                    let ko = hh * first.nkv * d;
+                    (
+                        KvView::Contig(KvRef::F32(&first.k[ko..ko + r.kv_len * d])),
+                        KvView::Contig(KvRef::F32(&first.v[ko..ko + r.kv_len * d])),
+                    )
+                }
+            };
+            jobs.push(PagedKvBlockJob {
                 q: &q[hh * r.total_q * d..(hh + 1) * r.total_q * d],
-                k: ks.slice(hh * cap * d, hh * cap * d + r.kv_len * d),
-                v: vs.slice(hh * cap * d, hh * cap * d + r.kv_len * d),
+                k,
+                v,
                 nq: r.total_q,
                 n: r.kv_len,
                 d,
@@ -905,6 +1001,8 @@ mod tests {
         let cfg = CoordinatorConfig {
             batch_window: Duration::from_micros(10),
             kernel: KernelConfig { tile: 8, threads: 2, ..KernelConfig::default() },
+            // every engine-thread test doubles as a pool-invariant check
+            validate_invariants: true,
             ..CoordinatorConfig::default()
         };
         Coordinator::start_naive(cfg, test_router()).unwrap()
@@ -1147,9 +1245,11 @@ mod tests {
             serve_batch(&engine, &router, &mut sess_s, b, &mut pend_s, &m_s);
         }
         assert_eq!(outs_f, recv_ok(&rxs_s));
-        let c = sess_f.get(1).unwrap();
-        // bf16 store: 2 tensors x 2 bytes per element (half the f32 size)
-        assert_eq!(c.bytes(), 2 * 2 * c.heads * c.cap * c.head_dim);
+        // bf16 pool: the 12-step prefill occupies one 32-step block of
+        // 2 tensors x 2 heads x 32 steps x 8 dims x 2 bytes — half the
+        // bytes the f32 pool's block would hold.
+        assert_eq!(sess_f.bytes(), sess_f.pool().block_bytes(2, 8));
+        assert_eq!(sess_f.bytes(), 2 * 2 * 32 * 8 * 2);
         // follow-up decode over the quantized cache answers on both paths
         let dec = vec![rand_req(3, RequestKind::Decode { session: 1 }, 1, 1, 202)];
         let db = form_batches(&dec, &policy);
@@ -1202,19 +1302,22 @@ mod tests {
         let router = test_router();
         let engine = NaiveEngine::new(router.clone());
         let m = Arc::new(Metrics::new());
-        // budget fits one session cache (2 heads * cap 256 * d 8 * 2
-        // tensors * 4B = 32KiB) but not two
-        let mut sessions = SessionStore::new(40_000);
+        // budget = exactly one full-capacity session: 8 blocks of
+        // 2 heads x 32 steps x 8 dims x 2 tensors x 4B = 4096B each.
+        let mut sessions = SessionStore::new(8 * 4096);
         let policy = BatchPolicy::default();
 
-        let pre = vec![rand_req(1, RequestKind::Prefill { session: 1 }, 1, 8, 20)];
+        // fill the whole budget: 255 steps -> 8 blocks resident
+        let pre = vec![rand_req(1, RequestKind::Prefill { session: 1 }, 1, 255, 20)];
         let b0 = form_batches(&pre, &policy);
         let (mut p0, r0) = mk_pend(pre);
         serve_cycle_fused(&engine, &router, &mut sessions, &b0, &mut p0, &m);
         assert!(r0[0].recv().unwrap().output.is_ok());
+        assert_eq!(sessions.bytes(), 8 * 4096);
 
-        // decode(1) + prefill(2): creating session 2 must evict session 1,
-        // so the group flushes before the prefill is admitted.
+        // decode(1) fits its partial tail block, but prefill(2) needs a
+        // fresh block the pool can't hold -> its append must evict
+        // session 1's blocks, so the group flushes before admission.
         let cyc = vec![
             rand_req(2, RequestKind::Decode { session: 1 }, 1, 1, 21),
             rand_req(3, RequestKind::Prefill { session: 2 }, 1, 5, 22),
@@ -1227,5 +1330,49 @@ mod tests {
         }
         assert_eq!(m.snapshot().fused_submissions, 3);
         assert!(!sessions.contains(1) && sessions.contains(2));
+        // block-granular accounting: eviction freed all 8 of session 1's
+        // blocks (none shared), and session 2 holds exactly one
+        assert_eq!(sessions.evictions, 1);
+        assert_eq!(sessions.block_evictions, 8);
+        assert_eq!(sessions.bytes(), 4096);
+        sessions.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn fork_request_shares_prefix_and_matches_reference() {
+        let c = start_naive();
+        let pre = rand_req(1, RequestKind::Prefill { session: 1 }, 1, 16, 30);
+        let (pk, pv) = (pre.k.clone(), pre.v.clone());
+        assert!(c.submit_blocking(pre).output.is_ok());
+
+        let fork = rand_req(2, RequestKind::Fork { src: 1, session: 2 }, 1, 2, 31);
+        let (fq, fk, fv) = (fork.q.clone(), fork.k.clone(), fork.v.clone());
+        let out = c.submit_blocking(fork).output.expect("fork ok");
+
+        // reference: the fork's query attends 16 shared + 2 divergent kv
+        let scale = (8f32).powf(-0.5);
+        for hh in 0..2 {
+            let mut ks = pk[hh * 16 * 8..(hh + 1) * 16 * 8].to_vec();
+            ks.extend_from_slice(&fk[hh * 2 * 8..(hh + 1) * 2 * 8]);
+            let mut vs = pv[hh * 16 * 8..(hh + 1) * 16 * 8].to_vec();
+            vs.extend_from_slice(&fv[hh * 2 * 8..(hh + 1) * 2 * 8]);
+            let want = crate::kernels::naive::attention(&fq[hh * 8..(hh + 1) * 8], &ks, &vs, 18, 8, scale);
+            let got = &out[hh * 8..(hh + 1) * 8];
+            assert!(crate::kernels::max_abs_diff(got, &want) < 1e-4, "h={hh}");
+        }
+        // both lineages stay independently decodable after the fork
+        assert!(c.submit_blocking(rand_req(3, RequestKind::Decode { session: 2 }, 1, 1, 32)).output.is_ok());
+        assert!(c.submit_blocking(rand_req(4, RequestKind::Decode { session: 1 }, 1, 1, 33)).output.is_ok());
+        let snap = c.metrics.snapshot();
+        assert!(snap.kv_prefix_share_hits >= 1, "fork must share prefix blocks");
+        c.shutdown();
+    }
+
+    #[test]
+    fn fork_from_unknown_session_errors() {
+        let c = start_naive();
+        let resp = c.submit_blocking(rand_req(1, RequestKind::Fork { src: 42, session: 2 }, 1, 1, 34));
+        assert!(resp.output.unwrap_err().contains("unknown fork source"));
+        c.shutdown();
     }
 }

@@ -40,12 +40,18 @@
 //! [`KvBlockJob`], [`run_kv_rows_into_with`],
 //! [`run_kv_blocks_flat_into_with`]) accept K/V as [`KvRef`] in any
 //! storage precision; `F32` references take a zero-copy path that is
-//! bit-identical to the plain drivers.
+//! bit-identical to the plain drivers. The paged entry points
+//! ([`PagedKvBlockJob`], [`run_paged_kv_blocks_flat_into_with`], and
+//! [`KvRowJob`]'s [`KvView`] fields) additionally accept KV gathered from
+//! non-contiguous pool blocks (`coordinator::kv_cache::BlockPool`); the
+//! kernels consume contiguous and paged storage through the same
+//! element-range tile loads, so paged results are bit-identical to
+//! contiguous ones by construction.
 
 use super::flashd::{SigmoidMode, SkipCriterion, SkipStats};
 use super::qblock::{self, QScratch, DEFAULT_BLOCK_Q};
 use super::tiled::{self, SigmoidEval, DEFAULT_TILE};
-use crate::numerics::quant::{KvPrecision, KvRef};
+use crate::numerics::quant::{KvPrecision, KvRef, KvView};
 use crate::pwl::SigTables;
 
 /// Tuning knobs for the tiled/batched kernel engine, threaded through
@@ -126,15 +132,17 @@ pub struct BlockJob<'a> {
     pub causal: bool,
 }
 
-/// [`RowJob`] over possibly-quantized KV: the query stays f32, while K and
-/// V arrive as [`KvRef`] in whatever storage precision the cache holds.
-/// `F32` references execute the zero-copy bit-exact path; `Bf16`/`Fp8`
-/// references are dequantized tile-by-tile into worker scratch.
+/// [`RowJob`] over possibly-quantized, possibly-paged KV: the query stays
+/// f32, while K and V arrive as [`KvView`] — either one contiguous
+/// [`KvRef`] in whatever storage precision the cache holds, or a paged
+/// gather over pool blocks. Contiguous `F32` views execute the zero-copy
+/// bit-exact path; everything else is dequantized/gathered tile-by-tile
+/// into worker scratch, bit-identically.
 #[derive(Copy, Clone, Debug)]
 pub struct KvRowJob<'a> {
     pub q: &'a [f32],
-    pub k: KvRef<'a>,
-    pub v: KvRef<'a>,
+    pub k: KvView<'a>,
+    pub v: KvView<'a>,
     pub n: usize,
     pub d: usize,
     pub scale: f32,
@@ -162,6 +170,41 @@ impl<'a> From<&BlockJob<'a>> for KvBlockJob<'a> {
             q: b.q,
             k: KvRef::F32(b.k),
             v: KvRef::F32(b.v),
+            nq: b.nq,
+            n: b.n,
+            d: b.d,
+            scale: b.scale,
+            causal: b.causal,
+        }
+    }
+}
+
+/// [`KvBlockJob`] over [`KvView`] KV — the fused serving submission unit
+/// once session caches are paged: K and V may each be a gather over
+/// non-contiguous, refcounted pool blocks ([`crate::numerics::quant::PagedKv`]),
+/// or a plain contiguous reference (stateless requests fuse into the same
+/// submission). Semantics (causal staircase, splitting, determinism) match
+/// [`KvBlockJob`] exactly, and the output is bit-identical to a contiguous
+/// submission over the same logical KV — the kernels consume both through
+/// the same element-range tile loads.
+#[derive(Copy, Clone, Debug)]
+pub struct PagedKvBlockJob<'a> {
+    pub q: &'a [f32],
+    pub k: KvView<'a>,
+    pub v: KvView<'a>,
+    pub nq: usize,
+    pub n: usize,
+    pub d: usize,
+    pub scale: f32,
+    pub causal: bool,
+}
+
+impl<'a> From<&KvBlockJob<'a>> for PagedKvBlockJob<'a> {
+    fn from(b: &KvBlockJob<'a>) -> Self {
+        PagedKvBlockJob {
+            q: b.q,
+            k: KvView::Contig(b.k),
+            v: KvView::Contig(b.v),
             nq: b.nq,
             n: b.n,
             d: b.d,
@@ -233,8 +276,8 @@ impl BatchScratch {
 struct Item<'a> {
     q: Option<&'a [f32]>,
     row0: usize,
-    k: KvRef<'a>,
-    v: KvRef<'a>,
+    k: KvView<'a>,
+    v: KvView<'a>,
     nq: usize,
     n: usize,
     d: usize,
@@ -344,8 +387,8 @@ fn coalesce<'a>(jobs: &[RowJob<'a>], max_bq: usize) -> Vec<Item<'a>> {
             q: None,
             row0: i,
             // the last row's K/V cover every query's prefix in both modes
-            k: KvRef::F32(last.k),
-            v: KvRef::F32(last.v),
+            k: KvView::Contig(KvRef::F32(last.k)),
+            v: KvView::Contig(KvRef::F32(last.v)),
             nq,
             n: last.n,
             d: last.d,
@@ -376,8 +419,8 @@ fn coalesce_kv<'a>(jobs: &[KvRowJob<'a>], max_bq: usize) -> Vec<Item<'a>> {
             if nx.d != p.d
                 || nx.scale != p.scale
                 || nx.n != p.n
-                || !KvRef::same(p.k, nx.k)
-                || !KvRef::same(p.v, nx.v)
+                || !KvView::same(p.k, nx.k)
+                || !KvView::same(p.v, nx.v)
             {
                 break;
             }
@@ -406,7 +449,7 @@ fn items_of_blocks<'a>(blocks: &[BlockJob<'a>], cfg: &KernelConfig) -> Vec<Item<
     let max_bq = cfg.block_q.max(1);
     let mut items = Vec::new();
     for b in blocks {
-        push_block_items(&KvBlockJob::from(b), max_bq, &mut items);
+        push_block_items(&PagedKvBlockJob::from(&KvBlockJob::from(b)), max_bq, &mut items);
     }
     items
 }
@@ -416,15 +459,26 @@ fn items_of_kv_blocks<'a>(blocks: &[KvBlockJob<'a>], cfg: &KernelConfig) -> Vec<
     let max_bq = cfg.block_q.max(1);
     let mut items = Vec::new();
     for b in blocks {
+        push_block_items(&PagedKvBlockJob::from(b), max_bq, &mut items);
+    }
+    items
+}
+
+/// [`items_of_blocks`] over paged/view-KV blocks.
+fn items_of_paged_blocks<'a>(blocks: &[PagedKvBlockJob<'a>], cfg: &KernelConfig) -> Vec<Item<'a>> {
+    let max_bq = cfg.block_q.max(1);
+    let mut items = Vec::new();
+    for b in blocks {
         push_block_items(b, max_bq, &mut items);
     }
     items
 }
 
-/// Split a [`KvBlockJob`] into items of at most `max_bq` queries. Causal
-/// sub-blocks keep the global staircase: sub-block queries `a..e` of a
-/// causal block attend `n - nq + 1 + iq` keys for their global index `iq`.
-fn push_block_items<'a>(b: &KvBlockJob<'a>, max_bq: usize, items: &mut Vec<Item<'a>>) {
+/// Split a [`PagedKvBlockJob`] into items of at most `max_bq` queries.
+/// Causal sub-blocks keep the global staircase: sub-block queries `a..e` of
+/// a causal block attend `n - nq + 1 + iq` keys for their global index
+/// `iq`.
+fn push_block_items<'a>(b: &PagedKvBlockJob<'a>, max_bq: usize, items: &mut Vec<Item<'a>>) {
     assert!(b.nq >= 1, "empty BlockJob");
     assert!(b.n >= 1, "BlockJob with empty KV context");
     if b.causal {
@@ -773,6 +827,30 @@ pub fn run_kv_blocks_flat_into_with(
     })
 }
 
+/// [`run_kv_blocks_flat_into_with`] over [`PagedKvBlockJob`]s — the fused
+/// serving entry point over the paged session pool. Each block's K/V may be
+/// a gather over non-contiguous pool blocks, a contiguous quantized buffer,
+/// or a plain f32 slice (which keeps the zero-copy path); mixed head dims,
+/// precisions, and storage layouts in one submission are fine. Block `b`'s
+/// output occupies the next `nq_b * d_b` floats of `out`, in block order.
+/// Bit-identical to [`run_kv_blocks_flat_into_with`] over contiguous
+/// buffers holding the same logical KV, and carries the same determinism
+/// guarantee across thread counts.
+pub fn run_paged_kv_blocks_flat_into_with(
+    cfg: &KernelConfig,
+    blocks: &[PagedKvBlockJob<'_>],
+    out: &mut [f32],
+    scratch: &mut BatchScratch,
+) -> SkipStats {
+    let total: usize = blocks.iter().map(|b| b.nq * b.d).sum();
+    assert_eq!(out.len(), total, "output buffer must be sum(nq * d)");
+    let items = items_of_paged_blocks(blocks, cfg);
+    let no_rows: &[KvRowJob] = &[];
+    run_items(cfg, &items, out, true, scratch, |ic, oc, ws, st| {
+        run_chunk_into(cfg, no_rows, ic, oc, ws, st)
+    })
+}
+
 /// Causal per-head convenience: for each head buffer `(qh, kh, vh)` of `l`
 /// rows × `d` columns, row `r` attends over the `r + 1` KV prefix. Returns
 /// a flat output with row `(head * l + r)` at `[(head * l + r) * d..][..d]`
@@ -1098,8 +1176,8 @@ mod tests {
         let it = Item {
             q: None,
             row0: 0,
-            k: KvRef::F32(&[]),
-            v: KvRef::F32(&[]),
+            k: KvView::Contig(KvRef::F32(&[])),
+            v: KvView::Contig(KvRef::F32(&[])),
             nq: 4,
             n: 10,
             d: 2,
@@ -1132,8 +1210,8 @@ mod tests {
             .iter()
             .map(|(q, k, v)| KvRowJob {
                 q,
-                k: KvRef::F32(k.as_slice()),
-                v: KvRef::F32(v.as_slice()),
+                k: KvView::Contig(KvRef::F32(k.as_slice())),
+                v: KvView::Contig(KvRef::F32(v.as_slice())),
                 n,
                 d,
                 scale: 0.5,
@@ -1174,8 +1252,8 @@ mod tests {
             .zip(kq.iter().zip(&vq))
             .map(|((q, _, _), (kb, vb))| KvRowJob {
                 q,
-                k: KvRef::Bf16(kb.as_slice()),
-                v: KvRef::Fp8(vb.as_slice()),
+                k: KvView::Contig(KvRef::Bf16(kb.as_slice())),
+                v: KvView::Contig(KvRef::Fp8(vb.as_slice())),
                 n,
                 d,
                 scale: 0.5,
@@ -1227,6 +1305,69 @@ mod tests {
         let vmax = v.iter().fold(0.0f32, |m, x| m.max(x.abs()));
         for (a, b) in pwl.iter().zip(&want) {
             assert!((a - b).abs() <= 0.5 * vmax, "pwl={a} exact={b}");
+        }
+    }
+
+    #[test]
+    fn paged_blocks_bitmatch_contiguous_blocks() {
+        // A fused submission over paged (block-pooled) KV must equal the
+        // same submission over contiguous buffers bit for bit, for every
+        // precision and thread count — including causal staircases whose
+        // per-query lengths truncate mid-block.
+        use crate::numerics::quant::{quantize_bf16, quantize_fp8, PagedKv};
+        let (nq, n, d) = (6usize, 70usize, 8usize);
+        let mut rng = Rng::new(41);
+        let q = rng.normal_vec(nq * d, 0.8);
+        let k = rng.normal_vec(n * d, 0.8);
+        let v = rng.normal_vec(n * d, 1.0);
+        let kb = quantize_bf16(&k);
+        let v8 = quantize_fp8(&v);
+        // 9-step blocks: misaligned with the 8-step kernel tile, with a
+        // partial tail block
+        let bs = 9 * d;
+        for (kr, vr) in [(KvRef::F32(&k), KvRef::F32(&v)), (KvRef::Bf16(&kb), KvRef::Fp8(&v8))] {
+            let kfr: Vec<KvRef> =
+                (0..n * d).step_by(bs).map(|a| kr.slice(a, (a + bs).min(n * d))).collect();
+            let vfr: Vec<KvRef> =
+                (0..n * d).step_by(bs).map(|a| vr.slice(a, (a + bs).min(n * d))).collect();
+            for causal in [false, true] {
+                for threads in [1usize, 4] {
+                    let cfg = KernelConfig {
+                        tile: 8,
+                        block_q: 4,
+                        threads,
+                        skip: SkipCriterion::Static,
+                        ..KernelConfig::default()
+                    };
+                    let contig = KvBlockJob { q: &q, k: kr, v: vr, nq, n, d, scale: 0.4, causal };
+                    let mut want = vec![0.0f32; nq * d];
+                    let want_st = run_kv_blocks_flat_into_with(
+                        &cfg,
+                        &[contig],
+                        &mut want,
+                        &mut BatchScratch::new(),
+                    );
+                    let paged = PagedKvBlockJob {
+                        q: &q,
+                        k: KvView::Paged(PagedKv { blocks: &kfr, block_elems: bs, len: n * d }),
+                        v: KvView::Paged(PagedKv { blocks: &vfr, block_elems: bs, len: n * d }),
+                        nq,
+                        n,
+                        d,
+                        scale: 0.4,
+                        causal,
+                    };
+                    let mut got = vec![0.0f32; nq * d];
+                    let got_st = run_paged_kv_blocks_flat_into_with(
+                        &cfg,
+                        &[paged],
+                        &mut got,
+                        &mut BatchScratch::new(),
+                    );
+                    assert_eq!(got, want, "causal={causal} threads={threads} {:?}", kr.precision());
+                    assert_eq!(got_st, want_st, "causal={causal} threads={threads}");
+                }
+            }
         }
     }
 }

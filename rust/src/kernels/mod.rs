@@ -95,10 +95,11 @@ pub mod qblock;
 pub mod tiled;
 
 pub use batch::{
-    run_blocks, run_blocks_into, run_kv_blocks_flat_into_with, run_kv_rows_into_with, run_rows,
-    run_rows_into, BatchScratch, BlockJob, KernelConfig, KvBlockJob, KvRowJob, RowJob,
+    run_blocks, run_blocks_into, run_kv_blocks_flat_into_with, run_kv_rows_into_with,
+    run_paged_kv_blocks_flat_into_with, run_rows, run_rows_into, BatchScratch, BlockJob,
+    KernelConfig, KvBlockJob, KvRowJob, PagedKvBlockJob, RowJob,
 };
-pub use crate::numerics::quant::{KvPrecision, KvRef};
+pub use crate::numerics::quant::{KvPrecision, KvRef, KvView, PagedKv};
 pub use flashd::SigmoidMode;
 
 /// The scalar reference implementations of the two hot-loop primitives.

@@ -63,7 +63,7 @@ use super::tiled::{
     SigmoidEval,
 };
 use super::dot;
-use crate::numerics::quant::KvRef;
+use crate::numerics::quant::{KvRef, KvView};
 
 /// Default query block length. 16 queries × d=64 × 4 B = 4 KiB of Q plus
 /// the `Bq × Bc` f64 score scratch (4 KiB at the default tile) alongside
@@ -252,8 +252,8 @@ pub fn attention_qblock_kv_into(
 ) -> SkipStats {
     qblock_kv_core(
         q,
-        k,
-        v,
+        KvView::Contig(k),
+        KvView::Contig(v),
         nq,
         n,
         d,
@@ -269,11 +269,18 @@ pub fn attention_qblock_kv_into(
     )
 }
 
+/// The KV-general query-blocked core: K and V arrive as [`KvView`]s —
+/// contiguous (possibly quantized) buffers or paged gathers over pool
+/// blocks. The tile loop consumes KV exclusively through element-range
+/// [`KvView::load_into`] calls, which yield the same f32 tile for paged and
+/// contiguous storage of the same logical buffer — so the paged path is
+/// bit-identical to the contiguous path by construction. A contiguous
+/// all-f32 view delegates to the zero-copy [`qblock_core`].
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn qblock_kv_core(
     q: &[f32],
-    k: KvRef<'_>,
-    v: KvRef<'_>,
+    k: KvView<'_>,
+    v: KvView<'_>,
     nq: usize,
     n: usize,
     d: usize,
@@ -287,7 +294,7 @@ pub(crate) fn qblock_kv_core(
     vtile: &mut Vec<f32>,
     out: &mut [f32],
 ) -> SkipStats {
-    if let (Some(kf), Some(vf)) = (k.as_f32(), v.as_f32()) {
+    if let (Some(kf), Some(vf)) = (k.as_contig_f32(), v.as_contig_f32()) {
         return qblock_core(q, kf, vf, nq, n, d, scale, tile, crit, causal, sig, scratch, out);
     }
 

@@ -47,7 +47,7 @@
 
 use super::flashd::{log_sigmoid, sigmoid, SkipCriterion, SkipStats, ACTIVE_HI, ACTIVE_LO};
 use super::{axpy_blend, dot};
-use crate::numerics::quant::KvRef;
+use crate::numerics::quant::{KvRef, KvView};
 use crate::pwl::SigTables;
 
 /// Default KV tile length (keys per block). 32 keys × d=64 × 4 B ≈ 8 KiB
@@ -340,14 +340,35 @@ pub fn attention_kv_into_with(
     ktile: &mut Vec<f32>,
     vtile: &mut Vec<f32>,
 ) -> SkipStats {
-    attention_kv_core(q, k, v, n, d, scale, tile, crit, SigmoidEval::Exact, o, scores, ktile, vtile)
+    attention_kv_core(
+        q,
+        KvView::Contig(k),
+        KvView::Contig(v),
+        n,
+        d,
+        scale,
+        tile,
+        crit,
+        SigmoidEval::Exact,
+        o,
+        scores,
+        ktile,
+        vtile,
+    )
 }
 
+/// The KV-general core: K and V arrive as [`KvView`]s — contiguous
+/// (possibly quantized) buffers or paged gathers over pool blocks. All
+/// element-range loads go through [`KvView::load_into`], which yields the
+/// same f32 values for paged and contiguous storage of the same logical
+/// buffer, so the paged path is bit-identical to the contiguous path by
+/// construction. A contiguous all-f32 view delegates to the zero-copy
+/// [`tiled_core`].
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn attention_kv_core(
     q: &[f32],
-    k: KvRef<'_>,
-    v: KvRef<'_>,
+    k: KvView<'_>,
+    v: KvView<'_>,
     n: usize,
     d: usize,
     scale: f32,
@@ -362,7 +383,7 @@ pub(crate) fn attention_kv_core(
     if scores.len() < tile {
         scores.resize(tile, 0.0);
     }
-    if let (Some(kf), Some(vf)) = (k.as_f32(), v.as_f32()) {
+    if let (Some(kf), Some(vf)) = (k.as_contig_f32(), v.as_contig_f32()) {
         return tiled_core(q, kf, vf, n, d, scale, tile, crit, sig, &mut scores[..tile], o);
     }
 
@@ -712,6 +733,62 @@ mod tests {
                     let (want, want_st) =
                         attention_tiled_instrumented(&q, &kd, &vd, n, d, 0.5, tile, crit);
                     let (got, got_st) = attention_kv(&q, kr, vr, n, d, 0.5, tile, crit);
+                    assert_eq!(got, want, "tile={tile} crit={crit:?} {:?}", kr.precision());
+                    assert_eq!(got_st, want_st, "tile={tile} crit={crit:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn paged_kv_bitmatches_contiguous_across_precisions() {
+        // Paged storage (arbitrary block length, partial tail, block size
+        // deliberately misaligned with the kernel tile) must be
+        // bit-identical to the contiguous run — for f32 (which loses the
+        // zero-copy path and goes through the tile buffers, itself
+        // bit-identical by the pointwise-copy argument) and for quantized
+        // blocks.
+        use crate::numerics::quant::{quantize_bf16, quantize_fp8, KvView, PagedKv};
+        let (n, d) = (123usize, 8usize);
+        let (q, k, v) = problem(53, n, d, 0.8);
+        let kb = quantize_bf16(&k);
+        let vb = quantize_fp8(&v);
+        // block of 10 steps -> 80 elems: misaligned with tiles {8, 32}
+        let bs_elems = 10 * d;
+        for (kr, vr) in [
+            (KvRef::F32(&k), KvRef::F32(&v)),
+            (KvRef::Bf16(&kb), KvRef::Fp8(&vb)),
+        ] {
+            let kfr: Vec<KvRef> = (0..n * d)
+                .step_by(bs_elems)
+                .map(|a| kr.slice(a, (a + bs_elems).min(n * d)))
+                .collect();
+            let vfr: Vec<KvRef> = (0..n * d)
+                .step_by(bs_elems)
+                .map(|a| vr.slice(a, (a + bs_elems).min(n * d)))
+                .collect();
+            let kp = KvView::Paged(PagedKv { blocks: &kfr, block_elems: bs_elems, len: n * d });
+            let vp = KvView::Paged(PagedKv { blocks: &vfr, block_elems: bs_elems, len: n * d });
+            for tile in [8usize, 32, 200] {
+                for crit in [SkipCriterion::None, SkipCriterion::Static] {
+                    let (want, want_st) = attention_kv(&q, kr, vr, n, d, 0.5, tile, crit);
+                    let mut got = vec![0.0f32; d];
+                    let (mut sc, mut kt, mut vt) = (Vec::new(), Vec::new(), Vec::new());
+                    let got_st = attention_kv_core(
+                        &q,
+                        kp,
+                        vp,
+                        n,
+                        d,
+                        0.5,
+                        tile,
+                        crit,
+                        SigmoidEval::Exact,
+                        &mut got,
+                        &mut sc,
+                        &mut kt,
+                        &mut vt,
+                    );
                     assert_eq!(got, want, "tile={tile} crit={crit:?} {:?}", kr.precision());
                     assert_eq!(got_st, want_st, "tile={tile} crit={crit:?}");
                 }

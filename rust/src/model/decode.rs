@@ -7,26 +7,24 @@
 //! Numerically identical to the full forward (same FLASH-D recursion, same
 //! QK-norm), verified in tests and in `EXPERIMENTS.md` §Perf.
 
+use crate::coordinator::kv_cache::SessionStore;
 use crate::kernels::batch::{self, BatchScratch, KernelConfig, KvRowJob};
 use crate::model::engine::{Engine, ForwardStats};
-use crate::numerics::quant::{KvPrecision, KvStore};
-
-/// Per-layer attention cache: normalized keys + values, per head,
-/// contiguous (len, d_head) each. Stored at the session's
-/// [`KvPrecision`] — new rows are quantized once on append and the
-/// kernels dequantize tile-by-tile; the FLASH-D recursion itself stays
-/// f32, so the default `F32` precision is bit-identical to an
-/// unquantized cache.
-struct LayerCache {
-    /// per head: (cap, dh) flat, prefix `len` valid
-    k: Vec<KvStore>,
-    v: Vec<KvStore>,
-}
+use crate::numerics::quant::KvPrecision;
 
 /// A streaming decode session over an [`Engine`].
+///
+/// KV rows live in a paged [`SessionStore`]: one single-head block chain
+/// per `(layer, head)`, appended step by step and streamed to the kernels
+/// through the block-table gather view. Rows are quantized once on append
+/// at the session's [`KvPrecision`] and dequantized tile-by-tile; the
+/// FLASH-D recursion itself stays f32, so the default `F32` precision is
+/// bit-identical to an unquantized cache.
 pub struct DecodeSession<'a> {
     engine: &'a Engine,
-    layers: Vec<LayerCache>,
+    /// Paged KV pool, unbounded budget (capacity is enforced by the
+    /// positional window, not by eviction).
+    kv: SessionStore,
     pub pos: usize,
     pub stats: ForwardStats,
     /// Effective kernel config, snapshotted from [`Engine::kernel_config`]
@@ -58,21 +56,30 @@ fn vecmat(x: &[f32], w: &[f32], k: usize, n: usize) -> Vec<f32> {
     out
 }
 
+/// Pool session id of one `(layer, head)` KV chain.
+fn chain_id(layer: usize, head: usize, n_heads: usize) -> u64 {
+    (layer * n_heads + head) as u64
+}
+
 impl<'a> DecodeSession<'a> {
     pub fn new(engine: &'a Engine) -> DecodeSession<'a> {
         let kernel = engine.kernel_config();
         let nl = engine.info.n_layers;
         let nh = engine.info.n_heads;
+        let dh = engine.info.d_head();
         let prec = kernel.kv_precision;
-        let layers = (0..nl)
-            .map(|_| LayerCache {
-                k: (0..nh).map(|_| KvStore::zeros(prec, 0)).collect(),
-                v: (0..nh).map(|_| KvStore::zeros(prec, 0)).collect(),
-            })
-            .collect();
+        // block size = one kernel tile, so the paged gather hands the
+        // tiled drivers fragments they can stream without re-splitting
+        let mut kv = SessionStore::with_block_steps(usize::MAX, prec, kernel.tile.max(1));
+        for layer in 0..nl {
+            for head in 0..nh {
+                kv.create(chain_id(layer, head, nh), 1, dh, engine.info.seq_len)
+                    .expect("unbounded pool rejects nothing");
+            }
+        }
         DecodeSession {
             engine,
-            layers,
+            kv,
             pos: 0,
             stats: ForwardStats::default(),
             kernel,
@@ -85,15 +92,10 @@ impl<'a> DecodeSession<'a> {
         self.kernel.kv_precision
     }
 
-    /// Total bytes held by the per-layer KV caches right now.
+    /// Resident pool bytes of the per-layer KV chains (block-granular:
+    /// a partially filled tail block costs its full reservation).
     pub fn kv_bytes(&self) -> usize {
-        self.layers
-            .iter()
-            .map(|l| {
-                l.k.iter().map(KvStore::bytes).sum::<usize>()
-                    + l.v.iter().map(KvStore::bytes).sum::<usize>()
-            })
-            .sum()
+        self.kv.bytes()
     }
 
     /// Remaining capacity before the positional table runs out.
@@ -129,9 +131,9 @@ impl<'a> DecodeSession<'a> {
             let v = vecmat(&h, &self.engine.param(&format!("{pfx}.wv")).data, dm, dm);
 
             let mut attn = vec![0.0f32; dm];
-            let cache = &mut self.layers[layer];
-            // Append the new (normalized) K/V row per head, then run all
-            // heads' attention rows through the batched tiled driver.
+            // Append the new (normalized) K/V row per head into the block
+            // pool, then run all heads' attention rows through the batched
+            // tiled driver over the gathered paged views.
             let mut qhs: Vec<Vec<f32>> = Vec::with_capacity(nh);
             for head in 0..nh {
                 let mut qh = q[head * dh..(head + 1) * dh].to_vec();
@@ -143,8 +145,9 @@ impl<'a> DecodeSession<'a> {
                 let ki = rms_inv(&kh);
                 kh.iter_mut().for_each(|v| *v *= ki);
 
-                cache.k[head].extend_from_f32(&kh);
-                cache.v[head].extend_from_f32(&v[head * dh..(head + 1) * dh]);
+                self.kv
+                    .append(chain_id(layer, head, nh), &kh, &v[head * dh..(head + 1) * dh], 1)
+                    .expect("append within positional capacity");
                 qhs.push(qh);
             }
             let n = self.pos + 1;
@@ -154,11 +157,18 @@ impl<'a> DecodeSession<'a> {
             // scratch keeps the kernel's score/state buffers off the
             // per-step allocation path
             let st = {
+                let ids: Vec<u64> = (0..nh).map(|head| chain_id(layer, head, nh)).collect();
+                let views: Vec<_> = self
+                    .kv
+                    .gather_many(&ids)
+                    .into_iter()
+                    .map(|o| o.expect("decode chain exists"))
+                    .collect();
                 let jobs: Vec<KvRowJob<'_>> = (0..nh)
                     .map(|head| KvRowJob {
                         q: &qhs[head],
-                        k: cache.k[head].as_kv(),
-                        v: cache.v[head].as_kv(),
+                        k: views[head].head_k(0),
+                        v: views[head].head_v(0),
                         n,
                         d: dh,
                         scale,
@@ -292,7 +302,8 @@ mod tests {
         // logits stay well inside this envelope on the tiny model.
         let diff = crate::kernels::max_abs_diff(&last32, &last16);
         assert!(diff < 5e-2, "bf16 session drifted: {diff}");
-        // same element count, half the bytes at rest
+        // same block count, half the bytes at rest (block-granular
+        // accounting scales linearly with bytes-per-element)
         assert_eq!(sess16.kv_bytes() * 2, sess32.kv_bytes());
 
         let mut e8 = tiny_engine(25);

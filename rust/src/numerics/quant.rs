@@ -167,6 +167,111 @@ impl<'a> KvRef<'a> {
     }
 }
 
+/// A borrowed *paged* K or V buffer: an ordered list of per-block
+/// [`KvRef`] fragments standing in for one logical flat buffer. Every
+/// fragment except the last holds exactly `block_elems` elements; the last
+/// may be shorter (a partially-filled tail block). Element `e` of the
+/// logical buffer lives at offset `e % block_elems` of fragment
+/// `e / block_elems` — so [`PagedKv::load_into`] over any element range
+/// yields exactly the bytes a contiguous buffer would, and the kernels'
+/// tile streaming is bit-identical over paged and contiguous storage by
+/// construction.
+#[derive(Copy, Clone, Debug)]
+pub struct PagedKv<'a> {
+    /// Per-block element fragments, in logical order.
+    pub blocks: &'a [KvRef<'a>],
+    /// Elements per full block (fragments `0..blocks.len()-1` are exactly
+    /// this long).
+    pub block_elems: usize,
+    /// Total logical length in elements (`<= blocks.len() * block_elems`).
+    pub len: usize,
+}
+
+impl<'a> PagedKv<'a> {
+    /// Dequantize logical elements `[a, b)` into `dst` (`dst.len() ==
+    /// b - a`), gathering across as many block fragments as the range
+    /// covers. Equals [`KvRef::load_into`] over the concatenated buffer.
+    pub fn load_into(&self, a: usize, b: usize, dst: &mut [f32]) {
+        debug_assert!(a <= b && b <= self.len, "range [{a}, {b}) out of len {}", self.len);
+        debug_assert_eq!(dst.len(), b - a);
+        if a == b {
+            return;
+        }
+        let bs = self.block_elems;
+        let mut off = 0usize;
+        for bi in a / bs..=(b - 1) / bs {
+            let base = bi * bs;
+            let lo = a.max(base) - base;
+            let hi = b.min(base + bs) - base;
+            self.blocks[bi].load_into(lo, hi, &mut dst[off..off + (hi - lo)]);
+            off += hi - lo;
+        }
+    }
+}
+
+/// The KV operand the kernels consume: one logical buffer that is either a
+/// single contiguous [`KvRef`] or a [`PagedKv`] gather over pool blocks.
+/// Both answer the same element-range [`KvView::load_into`] queries, and a
+/// contiguous `F32` view still exposes the zero-copy escape hatch
+/// ([`KvView::as_contig_f32`]) the f32 fast paths delegate to.
+#[derive(Copy, Clone, Debug)]
+pub enum KvView<'a> {
+    Contig(KvRef<'a>),
+    Paged(PagedKv<'a>),
+}
+
+impl<'a> KvView<'a> {
+    pub fn len(&self) -> usize {
+        match self {
+            KvView::Contig(r) => r.len(),
+            KvView::Paged(p) => p.len,
+        }
+    }
+
+    /// The zero-copy escape hatch: `Some` iff the view is one contiguous
+    /// f32 buffer (the pre-paging fast path stays bit-identical *and*
+    /// copy-free).
+    pub fn as_contig_f32(&self) -> Option<&'a [f32]> {
+        match self {
+            KvView::Contig(r) => r.as_f32(),
+            KvView::Paged(_) => None,
+        }
+    }
+
+    /// Dequantize logical elements `[a, b)` into `dst` (`dst.len() ==
+    /// b - a`).
+    pub fn load_into(&self, a: usize, b: usize, dst: &mut [f32]) {
+        match self {
+            KvView::Contig(r) => r.load_into(a, b, dst),
+            KvView::Paged(p) => p.load_into(a, b, dst),
+        }
+    }
+
+    /// Dequantize the whole logical buffer into a fresh Vec.
+    pub fn to_f32_vec(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.len()];
+        self.load_into(0, self.len(), &mut out);
+        out
+    }
+
+    /// Identity (same underlying storage), used by the batch coalescer.
+    /// Contiguous views compare via [`KvRef::same`]; paged views compare
+    /// the block-list address, so two views are "same" only when they
+    /// gather the identical fragment list.
+    pub fn same(a: KvView<'_>, b: KvView<'_>) -> bool {
+        match (a, b) {
+            (KvView::Contig(x), KvView::Contig(y)) => KvRef::same(x, y),
+            (KvView::Paged(x), KvView::Paged(y)) => {
+                std::ptr::eq(x.blocks.as_ptr(), y.blocks.as_ptr())
+                    && x.blocks.len() == y.blocks.len()
+                    && x.block_elems == y.block_elems
+                    && x.len == y.len
+            }
+            _ => false,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -216,6 +321,66 @@ mod tests {
         }
         assert!(!KvRef::same(KvRef::F32(&src), KvRef::Bf16(&qb)));
         assert!(!KvRef::same(KvRef::F32(&src[..32]), KvRef::F32(&src)));
+    }
+
+    #[test]
+    fn paged_load_matches_contiguous_across_precisions() {
+        // One logical 5.5-block buffer split into fragments; every element
+        // range must load exactly what the contiguous buffer loads.
+        let n = 44usize; // block_elems = 8 -> 5 full blocks + 4-elem tail
+        let bs = 8usize;
+        let src: Vec<f32> = (0..n).map(|i| (i as f32 * 0.37 - 3.0).sin()).collect();
+        let qb = quantize_bf16(&src);
+        let qf = quantize_fp8(&src);
+        let cases: Vec<(KvRef, Vec<KvRef>)> = vec![
+            (
+                KvRef::F32(&src),
+                src.chunks(bs).map(KvRef::F32).collect(),
+            ),
+            (
+                KvRef::Bf16(&qb),
+                qb.chunks(bs).map(KvRef::Bf16).collect(),
+            ),
+            (
+                KvRef::Fp8(&qf),
+                qf.chunks(bs).map(KvRef::Fp8).collect(),
+            ),
+        ];
+        for (contig, frags) in &cases {
+            let paged = KvView::Paged(PagedKv { blocks: frags, block_elems: bs, len: n });
+            let flat = KvView::Contig(*contig);
+            assert_eq!(paged.len(), flat.len());
+            assert_eq!(paged.to_f32_vec(), flat.to_f32_vec());
+            // ranges inside a block, spanning 2 blocks, spanning many,
+            // block-aligned, and empty
+            for (a, b) in [(0, 0), (1, 5), (6, 11), (3, 31), (8, 16), (40, 44), (0, 44)] {
+                let mut want = vec![0.0f32; b - a];
+                flat.load_into(a, b, &mut want);
+                let mut got = vec![7.7f32; b - a];
+                paged.load_into(a, b, &mut got);
+                assert_eq!(got, want, "range [{a}, {b})");
+            }
+        }
+    }
+
+    #[test]
+    fn kvview_identity_and_zero_copy() {
+        let src: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        let frags: Vec<KvRef> = src.chunks(8).map(KvRef::F32).collect();
+        let paged = KvView::Paged(PagedKv { blocks: &frags, block_elems: 8, len: 16 });
+        let contig = KvView::Contig(KvRef::F32(&src));
+        // zero-copy only for contiguous f32
+        assert!(contig.as_contig_f32().is_some());
+        assert!(paged.as_contig_f32().is_none());
+        let qb = quantize_bf16(&src);
+        assert!(KvView::Contig(KvRef::Bf16(&qb)).as_contig_f32().is_none());
+        // identity
+        assert!(KvView::same(contig, contig));
+        assert!(KvView::same(paged, paged));
+        assert!(!KvView::same(contig, paged));
+        let other: Vec<KvRef> = src.chunks(8).map(KvRef::F32).collect();
+        let paged2 = KvView::Paged(PagedKv { blocks: &other, block_elems: 8, len: 16 });
+        assert!(!KvView::same(paged, paged2), "distinct fragment lists are not identical");
     }
 
     #[test]

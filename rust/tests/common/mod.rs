@@ -8,6 +8,9 @@
 use flashd::coordinator::request::{AttentionRequest, RequestKind, ShapeSig, Variant};
 use flashd::coordinator::router::Router;
 use flashd::kernels::flashd as fd;
+use flashd::numerics::quant::{
+    dequantize_bf16_into, dequantize_fp8_into, quantize_bf16, quantize_fp8, KvPrecision,
+};
 use flashd::runtime::Manifest;
 use flashd::util::rng::Rng;
 use std::time::Instant;
@@ -31,17 +34,44 @@ pub fn test_router() -> Router {
     )
 }
 
+/// Quantize-roundtrip through the serving storage format — element-wise,
+/// exactly what `KvStore` applies on append, so the reference KV matches
+/// the engine's dequantized operands bit for bit at every precision.
+pub fn quantize_roundtrip(prec: KvPrecision, xs: &[f32]) -> Vec<f32> {
+    match prec {
+        KvPrecision::F32 => xs.to_vec(),
+        KvPrecision::Bf16 => {
+            let bits = quantize_bf16(xs);
+            let mut out = vec![0.0f32; xs.len()];
+            dequantize_bf16_into(&bits, &mut out);
+            out
+        }
+        KvPrecision::Fp8 => {
+            let bits = quantize_fp8(xs);
+            let mut out = vec![0.0f32; xs.len()];
+            dequantize_fp8_into(&bits, &mut out);
+            out
+        }
+    }
+}
+
 /// Per-session reference KV, per-head contiguous — the layout
-/// `kernels::flashd::attention` consumes directly.
+/// `kernels::flashd::attention` consumes directly. Rows are stored
+/// quantize-roundtripped at the session precision (a no-op for `F32`).
 #[derive(Clone)]
 pub struct RefKv {
     pub k: Vec<Vec<f32>>,
     pub v: Vec<Vec<f32>>,
+    pub prec: KvPrecision,
 }
 
 impl RefKv {
     pub fn new() -> RefKv {
-        RefKv { k: vec![Vec::new(); HEADS], v: vec![Vec::new(); HEADS] }
+        RefKv::with_precision(KvPrecision::F32)
+    }
+
+    pub fn with_precision(prec: KvPrecision) -> RefKv {
+        RefKv { k: vec![Vec::new(); HEADS], v: vec![Vec::new(); HEADS], prec }
     }
 
     pub fn len(&self) -> usize {
@@ -51,8 +81,8 @@ impl RefKv {
     /// Append `(heads, n, d)`-flat request K/V.
     pub fn append(&mut self, k: &[f32], v: &[f32], n: usize) {
         for h in 0..HEADS {
-            self.k[h].extend_from_slice(&k[h * n * D..(h + 1) * n * D]);
-            self.v[h].extend_from_slice(&v[h * n * D..(h + 1) * n * D]);
+            self.k[h].extend_from_slice(&quantize_roundtrip(self.prec, &k[h * n * D..(h + 1) * n * D]));
+            self.v[h].extend_from_slice(&quantize_roundtrip(self.prec, &v[h * n * D..(h + 1) * n * D]));
         }
     }
 }
@@ -97,14 +127,17 @@ pub fn mk_req(rng: &mut Rng, id: u64, kind: RequestKind, nq: usize, nkv: usize) 
 
 /// Update the reference KV for a request about to be submitted and return
 /// the expected (bit-exact) output. Prefill replaces the session cache;
-/// decode appends one pair; stateless attends its own payload.
+/// decode appends one pair; stateless attends its own payload. For Fork
+/// the caller must pass `kv` already cloned from the *source* session's
+/// reference — the divergent payload is then appended on top.
 pub fn expect_for(req: &AttentionRequest, kv: &mut RefKv) -> Vec<f32> {
     match req.kind {
         RequestKind::Prefill { .. } => {
-            *kv = RefKv::new();
+            *kv = RefKv::with_precision(kv.prec);
             kv.append(&req.k, &req.v, req.nkv);
         }
         RequestKind::Decode { .. } => kv.append(&req.k, &req.v, 1),
+        RequestKind::Fork { .. } => kv.append(&req.k, &req.v, req.nkv),
         RequestKind::Stateless => {}
     }
     match req.kind {

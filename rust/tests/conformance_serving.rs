@@ -20,8 +20,9 @@ use flashd::coordinator::request::{AttentionRequest, AttentionResponse, RequestK
 use flashd::coordinator::scheduler::Policy;
 use flashd::coordinator::{Coordinator, CoordinatorConfig};
 use flashd::kernels::batch::KernelConfig;
+use flashd::numerics::quant::KvPrecision;
 use flashd::util::rng::Rng;
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc::Receiver;
 use std::time::Duration;
 
@@ -70,6 +71,8 @@ fn run_interleaving(policy: Policy, fused: bool, seed: u64) {
         fused,
         batch_window: Duration::from_micros(100),
         kernel: KernelConfig { tile: 8, block_q: 4, threads, ..KernelConfig::default() },
+        // every conformance cycle doubles as a pool-invariant audit
+        validate_invariants: true,
         ..CoordinatorConfig::default()
     };
     let coord = Coordinator::start_naive(cfg, test_router()).expect("start coordinator");
@@ -194,6 +197,137 @@ fn conformance_decode_first_fused() {
 fn conformance_decode_first_serial() {
     for rep in 0..REPS {
         run_interleaving(Policy::DecodeFirst, false, 4_000 + rep);
+    }
+}
+
+/// Randomized lineage trees over the paged store: prefill base sessions,
+/// fork each into children (copy-on-write prefix sharing in the block
+/// pool), then drive a randomized interleaved decode stream across every
+/// lineage — all outputs bit-identical to per-request `kernels::flashd`
+/// over the reference KV at the serving storage precision.
+fn run_forked_interleaving(prec: KvPrecision, fused: bool, seed: u64) {
+    let cfg = CoordinatorConfig {
+        fused,
+        batch_window: Duration::from_micros(100),
+        kernel: KernelConfig {
+            tile: 8,
+            block_q: 4,
+            threads: 1 + (seed as usize % 3),
+            kv_precision: prec,
+            ..KernelConfig::default()
+        },
+        validate_invariants: true,
+        ..CoordinatorConfig::default()
+    };
+    let coord = Coordinator::start_naive(cfg, test_router()).expect("start coordinator");
+    let mut rng = Rng::new(seed ^ 0xF0_4D);
+    let mut next_id = 1u64;
+    let mut kvs: HashMap<u64, RefKv> = HashMap::new();
+
+    // Phase 1: prefill 2-3 base sessions (blocking, so fork sources are
+    // quiescent and their reference length is defined).
+    let nbase = 2 + rng.below(2) as u64;
+    for s in 0..nbase {
+        let req = mk_req(
+            &mut rng,
+            next_id,
+            RequestKind::Prefill { session: s },
+            1,
+            4 + rng.below(12),
+        );
+        next_id += 1;
+        let mut kv = RefKv::with_precision(prec);
+        let want = expect_for(&req, &mut kv);
+        let got = coord.submit_blocking(req).output.expect("prefill ok");
+        assert_eq!(got, want, "prefill of {s} not bit-identical");
+        kvs.insert(s, kv);
+    }
+
+    // Phase 2: fork each base into 1-2 children with a short divergence.
+    let mut next_sess = nbase;
+    for s in 0..nbase {
+        for _ in 0..(1 + rng.below(2)) {
+            let dst = next_sess;
+            next_sess += 1;
+            let req = mk_req(
+                &mut rng,
+                next_id,
+                RequestKind::Fork { src: s, session: dst },
+                1,
+                1 + rng.below(3),
+            );
+            next_id += 1;
+            // reference: child inherits the source's exact stored prefix
+            let mut kv = kvs[&s].clone();
+            let want = expect_for(&req, &mut kv);
+            let got = coord.submit_blocking(req).output.expect("fork ok");
+            assert_eq!(got, want, "fork {s} -> {dst} not bit-identical");
+            kvs.insert(dst, kv);
+        }
+    }
+
+    // Phase 3: randomized interleaved decode streams over every lineage.
+    let ids: Vec<u64> = kvs.keys().copied().collect();
+    let mut remaining: HashMap<u64, usize> =
+        ids.iter().map(|&s| (s, 2 + rng.below(4))).collect();
+    let mut inflight: HashMap<u64, InFlight> = HashMap::new();
+    let mut guard = 0u32;
+    loop {
+        guard += 1;
+        assert!(guard < 100_000, "forked conformance driver stuck");
+        let mut progressed = false;
+        for &s in &ids {
+            if !inflight.contains_key(&s) && remaining[&s] > 0 && rng.below(2) == 0 {
+                *remaining.get_mut(&s).unwrap() -= 1;
+                let req = mk_req(&mut rng, next_id, RequestKind::Decode { session: s }, 1, 1);
+                next_id += 1;
+                let expected = expect_for(&req, kvs.get_mut(&s).unwrap());
+                let id = req.id;
+                let rx = coord.submit(req);
+                inflight.insert(s, InFlight { rx, expected, id });
+                progressed = true;
+            }
+        }
+        for &s in &ids {
+            if inflight.contains_key(&s) && rng.below(2) == 0 {
+                check(inflight.remove(&s).unwrap());
+                progressed = true;
+            }
+        }
+        if remaining.values().all(|&r| r == 0) && inflight.is_empty() {
+            break;
+        }
+        if !progressed {
+            if let Some(&s) = ids.iter().find(|s| inflight.contains_key(s)) {
+                check(inflight.remove(&s).unwrap());
+            }
+        }
+    }
+
+    let snap = coord.metrics.snapshot();
+    assert_eq!(snap.errors, 0, "no request may fail in a conformance run");
+    assert!(snap.kv_prefix_share_hits > 0, "forks must share prefix blocks");
+    coord.shutdown();
+}
+
+#[test]
+fn conformance_forked_sessions_f32() {
+    for rep in 0..10 {
+        run_forked_interleaving(KvPrecision::F32, rep % 2 == 0, 5_000 + rep);
+    }
+}
+
+#[test]
+fn conformance_forked_sessions_bf16() {
+    for rep in 0..10 {
+        run_forked_interleaving(KvPrecision::Bf16, rep % 2 == 0, 6_000 + rep);
+    }
+}
+
+#[test]
+fn conformance_forked_sessions_fp8() {
+    for rep in 0..10 {
+        run_forked_interleaving(KvPrecision::Fp8, rep % 2 == 0, 7_000 + rep);
     }
 }
 

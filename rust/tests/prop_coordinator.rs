@@ -103,34 +103,97 @@ fn prop_scheduler_conserves_requests() {
     });
 }
 
+/// Pool invariants survive arbitrary interleavings of every mutating
+/// store operation: refcounts always equal the live table references, no
+/// block leaks or double-frees, byte accounting stays block-exact, and
+/// eviction/CoW under a tight budget never corrupts the structures.
 #[test]
 fn prop_session_store_invariants_under_random_ops() {
+    use flashd::numerics::quant::KvPrecision;
     forall("kv-store-invariants", 100, |g| {
-        let budget = g.usize_in(1, 8) * 256; // bytes
-        let mut store = SessionStore::new(budget);
-        let ops = g.usize_in(1, 60);
-        for _ in 0..ops {
+        // tiny blocks + tight budget exercise eviction and CoW constantly
+        let bs = g.usize_in(1, 4);
+        let bb = 2 * bs * 2 * 4; // f32 block bytes: 1 head, dim 2
+        let budget = g.usize_in(2, 10) * bb;
+        let mut store = SessionStore::with_block_steps(budget, KvPrecision::F32, bs);
+        let ops = g.usize_in(1, 80);
+        for i in 0..ops {
             let sid = g.usize_in(0, 5) as u64;
-            match g.usize_in(0, 3) {
+            match g.usize_in(0, 5) {
                 0 => {
-                    // create: 1 head, dim 2, random cap
-                    let cap = g.usize_in(1, 8);
+                    // create: 1 head, dim 2, random cap (may exceed budget)
+                    let cap = g.usize_in(1, 12);
                     let _ = store.create(sid, 1, 2, cap);
                 }
                 1 => {
-                    if let Some(c) = store.get_mut(sid) {
-                        let n = 1usize;
-                        let _ = c.append(&vec![0.5; 2 * n], &vec![0.5; 2 * n], n);
-                    }
+                    let n = g.usize_in(1, 3);
+                    let x = i as f32 * 0.1;
+                    let _ = store.append(sid, &vec![x; 2 * n], &vec![x; 2 * n], n);
                 }
-                2 => store.remove(sid),
+                2 => {
+                    let dst = g.usize_in(0, 5) as u64;
+                    let _ = store.fork(sid, dst);
+                }
+                3 => {
+                    let dst = g.usize_in(0, 5) as u64;
+                    let steps = g.usize_in(0, 8);
+                    let _ = store.share_prefix(sid, dst, steps);
+                }
+                4 => store.remove(sid),
                 _ => {
-                    let _ = store.get(sid);
+                    // gather builds the borrowed paged view end to end
+                    if let Some(view) = store.gather(sid) {
+                        let _ = view.head_k(0).to_f32_vec();
+                    }
                 }
             }
             if let Err(e) = store.check_invariants() {
-                prop_assert!(g, false, "invariant broken: {e}");
+                prop_assert!(g, false, "invariant broken after op {i}: {e}");
             }
+        }
+        true
+    });
+}
+
+/// Copy-on-write correctness: after a fork, divergent appends on both
+/// lineages never disturb the shared prefix, and full prefix blocks stay
+/// physically shared (same pool slots in both tables).
+#[test]
+fn prop_fork_cow_preserves_both_lineages() {
+    use flashd::numerics::quant::KvPrecision;
+    forall("kv-fork-cow", 100, |g| {
+        let bs = g.usize_in(1, 5);
+        let mut store = SessionStore::with_block_steps(1 << 20, KvPrecision::F32, bs);
+        store.create(1, 1, 2, 64).unwrap();
+        let pre = g.usize_in(1, 12);
+        for i in 0..pre {
+            let x = i as f32 * 0.5 + 0.1;
+            store.append(1, &[x, -x], &[-x, x], 1).unwrap();
+        }
+        let base = store.gather(1).unwrap().head_k(0).to_f32_vec();
+        store.fork(1, 2).unwrap();
+        let (na, nb) = (g.usize_in(0, 6), g.usize_in(1, 6));
+        for i in 0..na {
+            let x = 100.0 + i as f32;
+            store.append(1, &[x, x], &[x, x], 1).unwrap();
+        }
+        for i in 0..nb {
+            let x = 200.0 + i as f32;
+            store.append(2, &[x, x], &[x, x], 1).unwrap();
+        }
+        let k1 = store.gather(1).unwrap().head_k(0).to_f32_vec();
+        let k2 = store.gather(2).unwrap().head_k(0).to_f32_vec();
+        prop_assert!(g, k1[..pre * 2] == base[..], "src prefix corrupted");
+        prop_assert!(g, k2[..pre * 2] == base[..], "fork prefix corrupted");
+        prop_assert!(g, k1.len() == (pre + na) * 2, "src len");
+        prop_assert!(g, k2.len() == (pre + nb) * 2, "fork len");
+        // full prefix blocks are stored once: both tables point at them
+        let full = pre / bs;
+        let t1 = store.get(1).unwrap().blocks().to_vec();
+        let t2 = store.get(2).unwrap().blocks().to_vec();
+        prop_assert!(g, t1[..full] == t2[..full], "full prefix blocks not shared");
+        if let Err(e) = store.check_invariants() {
+            prop_assert!(g, false, "invariant broken: {e}");
         }
         true
     });
@@ -286,17 +349,21 @@ fn prop_decode_first_never_starves_across_drain_cycles() {
 
 #[test]
 fn prop_kv_append_preserves_prior_content() {
+    use flashd::numerics::quant::KvPrecision;
     forall("kv-append-prefix", 100, |g| {
+        let bs = g.usize_in(1, 5);
         let cap = g.usize_in(2, 12);
-        let mut c = flashd::coordinator::kv_cache::KvCache::new(1, 2, cap);
+        let mut store = SessionStore::with_block_steps(1 << 20, KvPrecision::F32, bs);
+        store.create(9, 1, 2, cap).unwrap();
         let mut history: Vec<(f32, f32)> = Vec::new();
         let n_ops = g.usize_in(1, cap);
         for i in 0..n_ops {
             let kv = (i as f32 + 0.25, i as f32 * 2.0);
-            c.append(&[kv.0, kv.1], &[kv.1, kv.0], 1).unwrap();
+            store.append(9, &[kv.0, kv.1], &[kv.1, kv.0], 1).unwrap();
             history.push(kv);
-            // all earlier entries still intact (f32 store: exact)
-            let kf = c.k.to_f32_vec();
+            // all earlier entries still intact across block boundaries
+            // (f32 store: exact)
+            let kf = store.gather(9).unwrap().head_k(0).to_f32_vec();
             for (j, (a, b)) in history.iter().enumerate() {
                 prop_assert!(
                     g,
@@ -305,30 +372,31 @@ fn prop_kv_append_preserves_prior_content() {
                 );
             }
         }
-        prop_assert!(g, c.len == n_ops, "len mismatch");
+        prop_assert!(g, store.get(9).unwrap().len == n_ops, "len mismatch");
         true
     });
 }
 
-/// Quantized caches: appending is a projection (quantize once, stays
+/// Quantized block pools: appending is a projection (quantize once, stays
 /// fixed), earlier rows are never re-rounded by later appends, and the
-/// byte accounting matches the precision.
+/// block-granular byte accounting matches the precision.
 #[test]
 fn prop_quantized_kv_append_is_stable_projection() {
-    use flashd::coordinator::kv_cache::KvCache;
     use flashd::numerics::quant::KvPrecision;
     forall("kv-append-quantized", 100, |g| {
         let prec = if g.bool() { KvPrecision::Bf16 } else { KvPrecision::Fp8 };
+        let bs = g.usize_in(1, 5);
         let cap = g.usize_in(2, 12);
-        let mut c = KvCache::with_precision(1, 2, cap, prec);
+        let mut store = SessionStore::with_block_steps(1 << 20, prec, bs);
+        store.create(1, 1, 2, cap).unwrap();
         let n_ops = g.usize_in(1, cap);
         let mut snapshot: Vec<f32> = Vec::new();
         for i in 0..n_ops {
             // modest magnitudes so fp8 stays in range
             let a = (i as f32 * 0.37 - 1.0).sin();
             let b = (i as f32 * 0.91 + 0.5).cos();
-            c.append(&[a, b], &[b, a], 1).unwrap();
-            let kf = c.k.to_f32_vec();
+            store.append(1, &[a, b], &[b, a], 1).unwrap();
+            let kf = store.gather(1).unwrap().head_k(0).to_f32_vec();
             // earlier rows bit-stable across appends
             prop_assert!(
                 g,
@@ -336,17 +404,22 @@ fn prop_quantized_kv_append_is_stable_projection() {
                 "earlier rows re-rounded at append {i}"
             );
             // re-storing a dequantized value is a fixed point
-            let row = &kf[i * 2..i * 2 + 2];
-            let mut probe = KvCache::with_precision(1, 2, 1, prec);
-            probe.append(row, row, 1).unwrap();
+            let row = kf[i * 2..i * 2 + 2].to_vec();
+            let mut probe = SessionStore::with_block_steps(1 << 20, prec, bs);
+            probe.create(1, 1, 2, 1).unwrap();
+            probe.append(1, &row, &row, 1).unwrap();
             prop_assert!(
                 g,
-                probe.k.to_f32_vec() == row,
+                probe.gather(1).unwrap().head_k(0).to_f32_vec() == row,
                 "quantize not a projection at append {i}"
             );
-            snapshot = kf[..(i + 1) * 2].to_vec();
+            snapshot = kf;
         }
-        prop_assert!(g, c.bytes() == 2 * cap * 2 * prec.bytes_per_elem(), "byte accounting");
+        // block-granular accounting: resident bytes are whole blocks at
+        // the store precision, independent of tail fill
+        let bb = store.pool().block_bytes(1, 2);
+        prop_assert!(g, bb == 2 * bs * 2 * prec.bytes_per_elem(), "block bytes");
+        prop_assert!(g, store.bytes() == n_ops.div_ceil(bs) * bb, "byte accounting");
         true
     });
 }

@@ -6,7 +6,7 @@ use flashd::kernels::flashd::{log_sigmoid, sigmoid, weight, SkipCriterion, SkipS
 use flashd::kernels::flashd as fd;
 use flashd::kernels::{
     batch, flash1, flash2, max_abs_diff, naive, qblock, scalar, tiled, BatchScratch, KernelConfig,
-    KvRef, KvRowJob, RowJob, SigmoidMode,
+    KvRef, KvRowJob, KvView, RowJob, SigmoidMode,
 };
 use flashd::numerics::quant::{quantize_bf16, quantize_fp8};
 use flashd::numerics::{Bf16, Fp8E4M3, Scalar};
@@ -552,7 +552,14 @@ fn prop_quantized_kv_rows_bitmatch_dequantized_run_and_stay_enveloped() {
             let jobs_q: Vec<KvRowJob> = data
                 .iter()
                 .zip(&kvrefs)
-                .map(|((q, _, _), (k, v))| KvRowJob { q, k: *k, v: *v, n, d, scale })
+                .map(|((q, _, _), (k, v))| KvRowJob {
+                    q,
+                    k: KvView::Contig(*k),
+                    v: KvView::Contig(*v),
+                    n,
+                    d,
+                    scale,
+                })
                 .collect();
             let mut out_q = vec![0.0f32; rows * d];
             let st_q = batch::run_kv_rows_into_with(&cfg, &jobs_q, d, &mut out_q, &mut scratch);

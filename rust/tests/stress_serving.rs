@@ -76,7 +76,7 @@ fn step(
     totals.requests += 1;
     totals.rows += nq as u64;
     totals.kv_appends += match req.kind {
-        RequestKind::Prefill { .. } => nkv as u64,
+        RequestKind::Prefill { .. } | RequestKind::Fork { .. } => nkv as u64,
         RequestKind::Decode { .. } => 1,
         RequestKind::Stateless => 0,
     };
@@ -118,6 +118,8 @@ fn run_stress(kernel_threads: usize) -> (Vec<(u64, Vec<f32>)>, Snapshot, Totals)
     let cfg = CoordinatorConfig {
         batch_window: Duration::from_micros(150),
         kernel: KernelConfig { tile: 8, block_q: 4, threads: kernel_threads, ..KernelConfig::default() },
+        // the stress suite doubles as a pool-invariant audit per cycle
+        validate_invariants: true,
         ..CoordinatorConfig::default()
     };
     let coord = Arc::new(Coordinator::start_naive(cfg, test_router()).expect("start"));

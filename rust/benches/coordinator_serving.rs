@@ -10,10 +10,14 @@
 //! back to the pure-Rust tiled kernel engine (`Coordinator::start_naive`),
 //! so the serving path is measurable in artifact-free environments too.
 
-use flashd::bench_harness::workload::{session_requests, stateless_request, WorkloadSpec};
+use flashd::bench_harness::traces::poisson_arrival_gaps;
+use flashd::bench_harness::workload::{
+    mixed_streams, session_requests, stateless_request, MixedSpec, WorkloadSpec,
+};
 use flashd::coordinator::kv_cache::SessionStore;
 use flashd::coordinator::router::Router;
-use flashd::coordinator::{Coordinator, CoordinatorConfig, ShapeSig, Variant};
+use flashd::coordinator::scheduler::Policy;
+use flashd::coordinator::{Coordinator, CoordinatorConfig, ShapeSig, StreamEvent, Variant};
 use flashd::kernels::batch::{
     run_kv_blocks_flat_into_with, run_paged_kv_blocks_flat_into_with, BatchScratch, KernelConfig,
     KvBlockJob, PagedKvBlockJob,
@@ -26,7 +30,7 @@ use flashd::util::json::Json;
 use flashd::util::rng::Rng;
 use std::collections::BTreeMap;
 use std::sync::{Arc, Barrier};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Router for the fused-dispatch sweep: 2 heads, head_dim 64, one 2048
 /// context capacity (the headline shape).
@@ -122,6 +126,135 @@ fn merge_serving_into_bench_json(serving: &Bench, path: &str) {
     std::fs::write(path, Json::Obj(obj).to_string())
         .unwrap_or_else(|e| panic!("writing {path}: {e}"));
     println!("-- merged serving section into {path}");
+}
+
+/// `{p50, p99, count}` percentile block (µs) for one latency signal.
+fn pctiles(xs: &[f64]) -> Json {
+    Json::Obj(BTreeMap::from([
+        ("p50".to_string(), Json::Num(flashd::util::percentile(xs, 50.0))),
+        ("p99".to_string(), Json::Num(flashd::util::percentile(xs, 99.0))),
+        ("count".to_string(), Json::Num(xs.len() as f64)),
+    ]))
+}
+
+/// One cell of the mixed prefill+decode scenario matrix: open-loop stream
+/// arrivals (Poisson gaps) into `Coordinator::submit_stream`, every 4th
+/// stream fronted by a long prefill — the head-of-line stimulus. Clients
+/// time their own events, so TTFT and inter-token gaps are end-to-end.
+fn run_mixed_scenario(name: &str, policy: Policy, fused: bool, seed: u64, fast: bool) -> Json {
+    let sessions = if fast { 6 } else { 16 };
+    let mix = MixedSpec {
+        spec: WorkloadSpec {
+            sessions,
+            prefill_len: 128,
+            decode_steps: if fast { 8 } else { 24 },
+            sig: ShapeSig { heads: 2, head_dim: 64 },
+            variant: Variant::FlashD,
+            seed: 3,
+        },
+        long_every: 4,
+        long_prefill_len: 1536,
+    };
+    let cfg = CoordinatorConfig { policy, fused, ..Default::default() };
+    let coord = Coordinator::start_naive(cfg, fused_sweep_router()).expect("start");
+
+    let streams = mixed_streams(&mix, 1_000_000);
+    let total_reqs: usize = streams.iter().map(Vec::len).sum();
+    // ~200 stream-opens/s, gaps capped so the CI smoke run stays quick
+    let gaps = poisson_arrival_gaps(seed, 200.0, streams.len());
+    let t0 = Instant::now();
+    let mut clients = Vec::new();
+    for (stream, gap) in streams.into_iter().zip(gaps) {
+        std::thread::sleep(gap.min(Duration::from_millis(10)));
+        let opened = Instant::now();
+        let handle = coord.submit_stream(stream);
+        clients.push(std::thread::spawn(move || {
+            let mut ttft_us = None;
+            let mut itl_us = Vec::new();
+            let mut lat_us = Vec::new();
+            let mut last: Option<Instant> = None;
+            let mut tokens = 0u64;
+            while let Some(ev) = handle.recv() {
+                match ev {
+                    StreamEvent::Token(resp) => {
+                        let now = Instant::now();
+                        lat_us.push(resp.latency_us as f64);
+                        resp.output.expect("mixed scenario response ok");
+                        if ttft_us.is_none() {
+                            ttft_us = Some(now.duration_since(opened).as_secs_f64() * 1e6);
+                        } else if let Some(prev) = last {
+                            itl_us.push(now.duration_since(prev).as_secs_f64() * 1e6);
+                        }
+                        last = Some(now);
+                        tokens += 1;
+                    }
+                    StreamEvent::Done { tokens: served, .. } => {
+                        assert_eq!(served, tokens, "stream must serve all its requests");
+                        break;
+                    }
+                }
+            }
+            (ttft_us.expect("at least one token per stream"), itl_us, lat_us)
+        }));
+    }
+    let (mut ttfts, mut itls, mut lats) = (Vec::new(), Vec::new(), Vec::new());
+    for c in clients {
+        let (t, i, l) = c.join().expect("client thread");
+        ttfts.push(t);
+        itls.extend(i);
+        lats.extend(l);
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let snap = coord.metrics.snapshot();
+    assert_eq!(snap.errors, 0, "mixed scenario must serve cleanly");
+    assert_eq!(snap.streams_completed, sessions as u64);
+    println!(
+        "{name:<26} {total_reqs:>4} reqs {wall_s:6.3}s  ttft p50={:>8.0}µs p99={:>8.0}µs  \
+         itl p50={:>7.0}µs p99={:>7.0}µs",
+        flashd::util::percentile(&ttfts, 50.0),
+        flashd::util::percentile(&ttfts, 99.0),
+        flashd::util::percentile(&itls, 50.0),
+        flashd::util::percentile(&itls, 99.0),
+    );
+    Json::Obj(BTreeMap::from([
+        ("name".to_string(), Json::Str(name.to_string())),
+        ("policy".to_string(), Json::Str(format!("{policy:?}"))),
+        ("fused".to_string(), Json::Bool(fused)),
+        ("streams".to_string(), Json::Num(sessions as f64)),
+        ("requests".to_string(), Json::Num(total_reqs as f64)),
+        ("wall_s".to_string(), Json::Num(wall_s)),
+        ("ttft_us".to_string(), pctiles(&ttfts)),
+        ("itl_us".to_string(), pctiles(&itls)),
+        ("latency_us".to_string(), pctiles(&lats)),
+        ("queue_wait_mean_us".to_string(), Json::Num(snap.queue_wait.mean_us())),
+        ("admission_deferrals".to_string(), Json::Num(snap.admission_deferrals as f64)),
+    ]))
+}
+
+/// Write the mixed-scenario matrix to the committed `BENCH_serving.json`
+/// (CI validates the per-scenario TTFT/inter-token percentile blocks).
+fn write_bench_serving_json(scenarios: Vec<Json>, path: &str) {
+    let obj = BTreeMap::from([
+        ("suite".to_string(), Json::Str("coordinator_serving_mixed".to_string())),
+        ("scenarios".to_string(), Json::Arr(scenarios)),
+        (
+            "note".to_string(),
+            Json::Str(
+                "regenerate with `cargo bench --bench coordinator_serving` \
+                 (FLASHD_BENCH_FAST=1 for a smoke run); mixed prefill+decode \
+                 streaming scenarios through Coordinator::submit_stream under \
+                 continuous batching — client-measured TTFT, inter-token gap, \
+                 and per-request latency percentiles (µs) for each policy x \
+                 dispatch-mode cell, with every 4th stream fronted by a long \
+                 prefill as the head-of-line stimulus"
+                    .to_string(),
+            ),
+        ),
+    ]);
+    // load-bearing for CI's BENCH_serving.json validation — fail loudly
+    std::fs::write(path, Json::Obj(obj).to_string())
+        .unwrap_or_else(|e| panic!("writing {path}: {e}"));
+    println!("-- wrote {path}");
 }
 
 /// Synthetic router covering the default workload signature (4 heads,
@@ -277,6 +410,22 @@ fn main() {
         });
     }
     sb.note("fused_over_serial_sessions8_nkv2048_d64", serial_s / fused_s);
+
+    // -- mixed prefill+decode scenario matrix (continuous batching) ------
+    // Streaming lifecycles with long prefills salted in: measures TTFT and
+    // inter-token latency under head-of-line pressure, per policy x
+    // dispatch mode, into the committed BENCH_serving.json.
+    println!("\n=== mixed prefill+decode streaming scenarios (TTFT / inter-token latency) ===");
+    let mut scenarios = Vec::new();
+    for (name, policy, fused, seed) in [
+        ("mixed_fifo_fused", Policy::Fifo, true, 0xA11CE_u64),
+        ("mixed_fifo_serial", Policy::Fifo, false, 0xA11CF),
+        ("mixed_decodefirst_fused", Policy::DecodeFirst, true, 0xA11D0),
+        ("mixed_decodefirst_serial", Policy::DecodeFirst, false, 0xA11D1),
+    ] {
+        scenarios.push(run_mixed_scenario(name, policy, fused, seed, fast));
+    }
+    write_bench_serving_json(scenarios, "BENCH_serving.json");
 
     // -- paged KV pool: shared-prefix memory + paged vs dense streaming --
     println!("\n=== paged KV pool: shared-prefix memory (32 forks) + paged vs dense streaming ===");

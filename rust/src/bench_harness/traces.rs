@@ -2,6 +2,9 @@
 //! per-layer/head attention problems — the stimulus the power model (Fig. 5)
 //! measures toggle activity on, mirroring the paper's "average power
 //! measured after executing attention kernels for various LLMs".
+//!
+//! Also provides deterministic open-loop arrival traces
+//! ([`poisson_arrival_gaps`]) for the serving benches.
 
 use crate::bench_harness::suites::ALL_SUITES;
 use crate::hw::activity::{self, ActivityStats};
@@ -11,6 +14,23 @@ use crate::model::tokenizer::ByteTokenizer;
 use crate::numerics::Scalar;
 use anyhow::Result;
 use std::path::Path;
+use std::time::Duration;
+
+/// Deterministic inter-arrival gaps for an open-loop Poisson arrival
+/// process at `rate_hz`, via inverse-CDF sampling of the exponential
+/// distribution. Gap `i` is the wait *before* arrival `i`, so a load
+/// generator replays the trace by sleeping each gap before submitting.
+pub fn poisson_arrival_gaps(seed: u64, rate_hz: f64, n: usize) -> Vec<Duration> {
+    assert!(rate_hz > 0.0, "arrival rate must be positive");
+    let mut rng = crate::util::rng::Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            // uniform() is in [0, 1); flip so the log argument is in (0, 1]
+            let u = 1.0 - rng.uniform();
+            Duration::from_secs_f64(-u.ln() / rate_hz)
+        })
+        .collect()
+}
 
 /// Capture attention problems from a model over suite prompts.
 pub fn capture_problems(engine: &Engine, prompts_per_suite: usize, seed: u64) -> Vec<AttnProblem> {
@@ -65,5 +85,18 @@ mod tests {
         let a = measured_activity::<Bf16>(Path::new("/nonexistent"), 1);
         assert!(a.alpha_kv > 0.05 && a.alpha_kv < 0.7);
         assert!(a.n_queries > 0);
+    }
+
+    #[test]
+    fn poisson_gaps_deterministic_with_exponential_mean() {
+        let a = poisson_arrival_gaps(0xA11CE, 100.0, 4096);
+        let b = poisson_arrival_gaps(0xA11CE, 100.0, 4096);
+        assert_eq!(a, b, "same seed must replay the same trace");
+        assert_ne!(a[..8], poisson_arrival_gaps(0xBEEF, 100.0, 8)[..]);
+        let mean_s: f64 = a.iter().map(Duration::as_secs_f64).sum::<f64>() / a.len() as f64;
+        // exponential(rate=100) has mean 10ms; 4096 samples keep the
+        // sample mean within a comfortable 15%
+        assert!((mean_s - 0.01).abs() < 0.0015, "mean {mean_s}");
+        assert!(a.iter().all(|g| g.as_secs_f64() >= 0.0));
     }
 }

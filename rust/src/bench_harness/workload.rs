@@ -66,6 +66,46 @@ pub fn session_requests(spec: &WorkloadSpec, session: u64, base_id: u64) -> Vec<
     reqs
 }
 
+/// A mixed prefill+decode scenario: mostly short-prefill sessions with a
+/// periodic long-prefill session salted in — the head-of-line-blocking
+/// stimulus the continuous-batching serving bench measures TTFT and
+/// inter-token latency under.
+#[derive(Clone, Debug)]
+pub struct MixedSpec {
+    /// Base session shape (count, short prefill length, decode steps).
+    pub spec: WorkloadSpec,
+    /// Every `long_every`-th session (0 disables) prefills
+    /// `long_prefill_len` tokens instead of `spec.prefill_len`.
+    pub long_every: usize,
+    pub long_prefill_len: usize,
+}
+
+impl Default for MixedSpec {
+    fn default() -> Self {
+        MixedSpec {
+            spec: WorkloadSpec::default(),
+            long_every: 4,
+            long_prefill_len: 1024,
+        }
+    }
+}
+
+/// Generate one request lifecycle per session for a mixed scenario —
+/// each inner `Vec` is ready for `Coordinator::submit_stream`. Session
+/// ids are the stream index; request ids are disjoint across streams.
+pub fn mixed_streams(mix: &MixedSpec, base_id: u64) -> Vec<Vec<AttentionRequest>> {
+    let stride = mix.spec.decode_steps as u64 + 1;
+    (0..mix.spec.sessions)
+        .map(|s| {
+            let mut spec = mix.spec.clone();
+            if mix.long_every > 0 && s % mix.long_every == 0 {
+                spec.prefill_len = mix.long_prefill_len;
+            }
+            session_requests(&spec, s as u64, base_id + s as u64 * stride)
+        })
+        .collect()
+}
+
 /// A stateless prefill-style request (carries its own K/V).
 pub fn stateless_request(spec: &WorkloadSpec, id: u64, nq: usize, nkv: usize) -> AttentionRequest {
     let mut rng = Rng::new(spec.seed ^ id.wrapping_mul(0x2545F491));
@@ -99,6 +139,27 @@ mod tests {
             assert!(r.validate().is_ok(), "{:?}", r.kind);
         }
         assert_eq!(reqs[1].id, 101);
+    }
+
+    #[test]
+    fn mixed_streams_salt_long_prefills() {
+        let mix = MixedSpec {
+            spec: WorkloadSpec { sessions: 6, prefill_len: 32, decode_steps: 4, ..Default::default() },
+            long_every: 3,
+            long_prefill_len: 200,
+        };
+        let streams = mixed_streams(&mix, 500);
+        assert_eq!(streams.len(), 6);
+        let mut ids = std::collections::HashSet::new();
+        for (s, stream) in streams.iter().enumerate() {
+            assert_eq!(stream.len(), 5);
+            let want = if s % 3 == 0 { 200 } else { 32 };
+            assert_eq!(stream[0].nkv, want, "session {s}");
+            for r in stream {
+                assert!(r.validate().is_ok());
+                assert!(ids.insert(r.id), "duplicate request id {}", r.id);
+            }
+        }
     }
 
     #[test]

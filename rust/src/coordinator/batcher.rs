@@ -7,6 +7,7 @@
 //! a stateless request's own `nq` query rows already fill the block.
 
 use super::request::{AttentionRequest, ShapeSig, Variant};
+use std::collections::HashMap;
 
 /// Batch formation parameters.
 #[derive(Clone, Debug)]
@@ -60,6 +61,13 @@ pub fn member_row_spans(nqs: &[usize]) -> Vec<(usize, usize)> {
 /// Partition `pending` into executable batches, preserving arrival order
 /// within each batch.
 ///
+/// Single pass over `pending` with a `(session, variant, sig) → open
+/// batch` map: a decode joins its key's open batch until that batch is
+/// full, at which point it opens (and registers) a fresh one. Batches
+/// appear in first-member arrival order and fill earliest-first, exactly
+/// as the previous greedy rescan did, but in O(n) over the drain width
+/// instead of O(n²).
+///
 /// Invariants (checked by the property tests):
 /// * every index appears in exactly one batch,
 /// * a batch has at most `max_batch` members,
@@ -68,13 +76,8 @@ pub fn member_row_spans(nqs: &[usize]) -> Vec<(usize, usize)> {
 /// * non-decode requests are always alone.
 pub fn form_batches(pending: &[AttentionRequest], policy: &BatchPolicy) -> Vec<Batch> {
     let mut batches: Vec<Batch> = Vec::new();
-    let mut used = vec![false; pending.len()];
-    for i in 0..pending.len() {
-        if used[i] {
-            continue;
-        }
-        used[i] = true;
-        let r = &pending[i];
+    let mut open: HashMap<(Option<u64>, Variant, ShapeSig), usize> = HashMap::new();
+    for (i, r) in pending.iter().enumerate() {
         if !r.is_decode() {
             batches.push(Batch {
                 session: r.session(),
@@ -86,29 +89,25 @@ pub fn form_batches(pending: &[AttentionRequest], policy: &BatchPolicy) -> Vec<B
             });
             continue;
         }
-        let mut members = vec![i];
-        let mut total_q = r.nq;
-        for (j, rj) in pending.iter().enumerate().skip(i + 1) {
-            if members.len() >= policy.max_batch {
-                break;
-            }
-            if used[j] || !rj.is_decode() {
+        let key = (r.session(), r.variant, r.sig);
+        if let Some(&bi) = open.get(&key) {
+            let b = &mut batches[bi];
+            if b.members.len() < policy.max_batch {
+                b.members.push(i);
+                b.total_q += r.nq;
                 continue;
             }
-            if rj.session() == r.session() && rj.variant == r.variant && rj.sig == r.sig {
-                used[j] = true;
-                members.push(j);
-                total_q += rj.nq;
-            }
         }
+        let bi = batches.len();
         batches.push(Batch {
             session: r.session(),
-            members,
+            members: vec![i],
             variant: r.variant,
             sig: r.sig,
-            total_q,
+            total_q: r.nq,
             decode: true,
         });
+        open.insert(key, bi);
     }
     batches
 }
@@ -180,6 +179,26 @@ mod tests {
         assert_eq!(batches[0].members.len(), 4);
         assert_eq!(batches[1].members.len(), 4);
         assert_eq!(batches[2].members.len(), 2);
+    }
+
+    /// Rollover after a full batch: later same-key decodes fill the
+    /// newest open batch, never an earlier full one, and arrival order is
+    /// preserved across the interleaved session.
+    #[test]
+    fn full_batch_rolls_over_preserving_arrival_order() {
+        let mut pending = Vec::new();
+        for i in 0..5u64 {
+            pending.push(decode(i, 1));
+        }
+        pending.push(decode(5, 2));
+        pending.push(decode(6, 1));
+        let batches = form_batches(&pending, &BatchPolicy { max_batch: 3 });
+        assert_eq!(batches.len(), 3);
+        assert_eq!(batches[0].members, vec![0, 1, 2]);
+        assert_eq!(batches[1].members, vec![3, 4, 6]);
+        assert_eq!(batches[1].session, Some(1));
+        assert_eq!(batches[2].members, vec![5]);
+        assert_eq!(batches[2].session, Some(2));
     }
 
     #[test]

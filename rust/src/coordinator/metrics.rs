@@ -1,5 +1,11 @@
-//! Service metrics: lock-free counters + a fixed-bucket latency histogram,
+//! Service metrics: lock-free counters + fixed-bucket latency histograms,
 //! snapshotted by the serving bench and the `flashd serve` CLI.
+//!
+//! Besides the per-response latency histogram, the continuous-batching
+//! worker publishes serving SLO signals: queue-wait (admission → cycle
+//! dispatch), time-to-first-token and inter-token latency for streams, a
+//! queue-depth gauge, and admission-deferral / stream-backpressure
+//! counters.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -10,6 +16,78 @@ pub const BUCKETS_US: [u64; 12] =
 /// Fused-dispatch histogram buckets (upper bounds): block jobs per drain
 /// cycle and query rows per fused submission.
 pub const FUSE_BUCKETS: [u64; 9] = [1, 2, 4, 8, 16, 32, 64, 128, u64::MAX];
+
+/// A lock-free duration histogram over [`BUCKETS_US`], reusable for any
+/// microsecond-scale signal (queue wait, TTFT, inter-token gaps).
+#[derive(Debug, Default)]
+pub struct LatencyHisto {
+    buckets: [AtomicU64; 12],
+    sum_us: AtomicU64,
+    count: AtomicU64,
+}
+
+impl LatencyHisto {
+    pub fn observe(&self, us: u64) {
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        for (i, ub) in BUCKETS_US.iter().enumerate() {
+            if us <= *ub {
+                self.buckets[i].fetch_add(1, Ordering::Relaxed);
+                break;
+            }
+        }
+    }
+
+    fn snap(&self) -> HistoSnap {
+        HistoSnap {
+            buckets: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+            sum_us: self.sum_us.load(Ordering::Relaxed),
+            count: self.count.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time copy of a [`LatencyHisto`].
+#[derive(Clone, Debug, Default)]
+pub struct HistoSnap {
+    pub buckets: Vec<u64>,
+    pub sum_us: u64,
+    pub count: u64,
+}
+
+impl HistoSnap {
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us as f64 / self.count as f64
+        }
+    }
+
+    /// Approximate percentile (upper bound of the bucket containing the
+    /// quantile).
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        bucket_percentile(&self.buckets, p)
+    }
+}
+
+/// Upper bound of the [`BUCKETS_US`] bucket containing quantile `p` (in
+/// percent) of the recorded samples; 0 when empty.
+fn bucket_percentile(buckets: &[u64], p: f64) -> u64 {
+    let total: u64 = buckets.iter().sum();
+    if total == 0 {
+        return 0;
+    }
+    let target = (p / 100.0 * total as f64).ceil() as u64;
+    let mut seen = 0;
+    for (i, c) in buckets.iter().enumerate() {
+        seen += c;
+        if seen >= target {
+            return BUCKETS_US[i];
+        }
+    }
+    BUCKETS_US[BUCKETS_US.len() - 1]
+}
 
 /// Shared, thread-safe metrics sink.
 #[derive(Debug, Default)]
@@ -53,6 +131,25 @@ pub struct Metrics {
     /// Copy-on-write block clones (first divergent append to a shared
     /// tail, or a prefix share splitting a block).
     pub kv_cow_copies: AtomicU64,
+    /// Scheduler queue depth after the most recent admission event
+    /// (gauge).
+    pub queue_depth: AtomicU64,
+    /// Cycles that stopped admitting early because the next request's
+    /// session mutations would evict live pool blocks mid-cycle (the
+    /// deferred request leads the next cycle instead).
+    pub admission_deferrals: AtomicU64,
+    /// Streams opened via `submit_stream`.
+    pub streams_opened: AtomicU64,
+    /// Streams that reached their terminal `Done` event.
+    pub streams_completed: AtomicU64,
+    /// Streams parked by the concurrency limit before activation.
+    pub streams_parked: AtomicU64,
+    /// Admission → cycle-dispatch wait per request.
+    pub queue_wait: LatencyHisto,
+    /// Stream admission → first token.
+    pub ttft: LatencyHisto,
+    /// Gap between consecutive tokens of a stream.
+    pub itl: LatencyHisto,
     latency_buckets: [AtomicU64; 12],
     latency_sum_us: AtomicU64,
     jobs_per_cycle_buckets: [AtomicU64; 9],
@@ -120,6 +217,14 @@ impl Metrics {
             kv_block_evictions: self.kv_block_evictions.load(Ordering::Relaxed),
             kv_prefix_share_hits: self.kv_prefix_share_hits.load(Ordering::Relaxed),
             kv_cow_copies: self.kv_cow_copies.load(Ordering::Relaxed),
+            queue_depth: self.queue_depth.load(Ordering::Relaxed),
+            admission_deferrals: self.admission_deferrals.load(Ordering::Relaxed),
+            streams_opened: self.streams_opened.load(Ordering::Relaxed),
+            streams_completed: self.streams_completed.load(Ordering::Relaxed),
+            streams_parked: self.streams_parked.load(Ordering::Relaxed),
+            queue_wait: self.queue_wait.snap(),
+            ttft: self.ttft.snap(),
+            itl: self.itl.snap(),
             latency_buckets: self.latency_buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
             latency_sum_us: self.latency_sum_us.load(Ordering::Relaxed),
             jobs_per_cycle_buckets: self.jobs_per_cycle_buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
@@ -151,6 +256,14 @@ pub struct Snapshot {
     pub kv_block_evictions: u64,
     pub kv_prefix_share_hits: u64,
     pub kv_cow_copies: u64,
+    pub queue_depth: u64,
+    pub admission_deferrals: u64,
+    pub streams_opened: u64,
+    pub streams_completed: u64,
+    pub streams_parked: u64,
+    pub queue_wait: HistoSnap,
+    pub ttft: HistoSnap,
+    pub itl: HistoSnap,
     pub latency_buckets: Vec<u64>,
     pub latency_sum_us: u64,
     pub jobs_per_cycle_buckets: Vec<u64>,
@@ -177,19 +290,7 @@ impl Snapshot {
     /// Approximate percentile from the histogram (upper bound of the
     /// bucket containing the quantile).
     pub fn latency_percentile_us(&self, p: f64) -> u64 {
-        let total: u64 = self.latency_buckets.iter().sum();
-        if total == 0 {
-            return 0;
-        }
-        let target = (p / 100.0 * total as f64).ceil() as u64;
-        let mut seen = 0;
-        for (i, c) in self.latency_buckets.iter().enumerate() {
-            seen += c;
-            if seen >= target {
-                return BUCKETS_US[i];
-            }
-        }
-        BUCKETS_US[BUCKETS_US.len() - 1]
+        bucket_percentile(&self.latency_buckets, p)
     }
 
     pub fn mean_batch_size(&self) -> f64 {
@@ -212,6 +313,9 @@ impl Snapshot {
              kernel steps={} skipped={}\n\
              kv pool: bytes={} peak={} blocks={} block_evictions={} \
              prefix_share_hits={} cow_copies={}\n\
+             queue: depth={} wait mean={:.0}µs p99<={}µs deferrals={}\n\
+             streams: opened={} completed={} parked={} \
+             ttft p50<={}µs p99<={}µs itl p50<={}µs p99<={}µs\n\
              latency: mean={:.0}µs p50<={}µs p95<={}µs p99<={}µs",
             self.requests,
             self.responses,
@@ -234,6 +338,17 @@ impl Snapshot {
             self.kv_block_evictions,
             self.kv_prefix_share_hits,
             self.kv_cow_copies,
+            self.queue_depth,
+            self.queue_wait.mean_us(),
+            fmt_b(self.queue_wait.percentile_us(99.0)),
+            self.admission_deferrals,
+            self.streams_opened,
+            self.streams_completed,
+            self.streams_parked,
+            fmt_b(self.ttft.percentile_us(50.0)),
+            fmt_b(self.ttft.percentile_us(99.0)),
+            fmt_b(self.itl.percentile_us(50.0)),
+            fmt_b(self.itl.percentile_us(99.0)),
             self.mean_latency_us(),
             fmt_b(self.latency_percentile_us(50.0)),
             fmt_b(self.latency_percentile_us(95.0)),
@@ -288,6 +403,50 @@ mod tests {
         assert!(s.render().contains("requests=0"));
         assert!(s.render().contains("fused: cycles=0"));
         assert!(s.render().contains("kv pool: bytes=0"));
+        assert!(s.render().contains("queue: depth=0"));
+        assert!(s.render().contains("streams: opened=0"));
+    }
+
+    #[test]
+    fn latency_histo_observes_and_quantiles() {
+        let h = LatencyHisto::default();
+        for us in [10, 60, 300, 2_000, 200_000] {
+            h.observe(us);
+        }
+        let s = h.snap();
+        assert_eq!(s.count, 5);
+        assert_eq!(s.sum_us, 10 + 60 + 300 + 2_000 + 200_000);
+        assert_eq!(s.buckets[0], 1); // <=50
+        assert_eq!(s.buckets[11], 1); // unbounded tail
+        assert!((s.mean_us() - s.sum_us as f64 / 5.0).abs() < 1e-9);
+        assert!(s.percentile_us(50.0) <= s.percentile_us(99.0));
+        assert_eq!(s.percentile_us(99.0), u64::MAX);
+        assert_eq!(HistoSnap::default().percentile_us(99.0), 0);
+    }
+
+    #[test]
+    fn serving_histograms_land_in_snapshot_and_render() {
+        let m = Metrics::new();
+        m.queue_wait.observe(120);
+        m.ttft.observe(800);
+        m.ttft.observe(900);
+        m.itl.observe(40);
+        m.queue_depth.store(3, Ordering::Relaxed);
+        m.admission_deferrals.store(2, Ordering::Relaxed);
+        m.streams_opened.store(4, Ordering::Relaxed);
+        m.streams_completed.store(4, Ordering::Relaxed);
+        m.streams_parked.store(1, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.queue_wait.count, 1);
+        assert_eq!(s.ttft.count, 2);
+        assert_eq!(s.itl.count, 1);
+        assert_eq!(s.queue_depth, 3);
+        assert_eq!(s.admission_deferrals, 2);
+        assert_eq!(s.streams_parked, 1);
+        let r = s.render();
+        assert!(r.contains("queue: depth=3"));
+        assert!(r.contains("deferrals=2"));
+        assert!(r.contains("streams: opened=4 completed=4 parked=1"));
     }
 
     #[test]

@@ -4,15 +4,20 @@
 //! streamed KV context.
 //!
 //! Components:
-//! * [`request`]   — request/response types and shape signatures,
+//! * [`request`]   — request/response types, shape signatures, and the
+//!   streaming-response events,
 //! * [`kv_cache`]  — paged KV block pool: per-session block tables,
 //!   copy-on-write prefix sharing, block-granular LRU eviction,
 //! * [`router`]    — maps (variant, shape) to a compiled artifact + pad,
 //! * [`batcher`]   — dynamic batching of decode requests into query blocks,
-//! * [`scheduler`] — bounded two-class (prefill/decode) admission queue,
-//! * [`metrics`]   — counters + latency histograms,
+//! * [`scheduler`] — bounded two-class (prefill/decode) admission queue
+//!   with seq-stamped FIFO ordering,
+//! * [`worker`]    — the continuous-batching worker: token-budgeted
+//!   admission into the running batch between kernel submissions, stream
+//!   lifecycle management, backpressure,
+//! * [`metrics`]   — counters + latency/TTFT/inter-token histograms,
 //! * [`server`]    — the engine thread that owns the PJRT [`crate::runtime::Runtime`]
-//!   and drives the request loop (std threads + mpsc; tokio is not in the
+//!   and executes admitted cycles (std threads + mpsc; tokio is not in the
 //!   offline vendor set).
 //!
 //! Python never appears here: the engine executes AOT artifacts only.
@@ -24,6 +29,7 @@ pub mod request;
 pub mod router;
 pub mod scheduler;
 pub mod server;
+pub mod worker;
 
-pub use request::{AttentionRequest, AttentionResponse, RequestKind, ShapeSig, Variant};
-pub use server::{Coordinator, CoordinatorConfig};
+pub use request::{AttentionRequest, AttentionResponse, RequestKind, ShapeSig, StreamEvent, Variant};
+pub use server::{Coordinator, CoordinatorConfig, StreamHandle};

@@ -1,4 +1,6 @@
-//! Request/response types for the attention service.
+//! Request/response types for the attention service, including the
+//! streaming-response events yielded by
+//! [`Coordinator::submit_stream`](super::Coordinator::submit_stream).
 
 use std::time::Instant;
 
@@ -127,6 +129,26 @@ pub struct AttentionResponse {
     pub latency_us: u64,
     /// How many requests shared the executed batch.
     pub batch_size: usize,
+}
+
+/// One event on a stream's response channel. The worker serves a stream's
+/// requests strictly in submission order, one in flight at a time, so
+/// `Token` events arrive in the same order the requests were handed to
+/// [`Coordinator::submit_stream`](super::Coordinator::submit_stream).
+#[derive(Debug)]
+pub enum StreamEvent {
+    /// Per-cycle result for the stream's next request. An `Err` output
+    /// aborts the stream; `Done` follows immediately.
+    Token(AttentionResponse),
+    /// Terminal event: no further events follow on this stream.
+    Done {
+        /// Microseconds from stream admission to its first token.
+        ttft_us: u64,
+        /// Microseconds from stream admission to its last token.
+        total_us: u64,
+        /// Tokens delivered (equals the request count unless aborted).
+        tokens: u64,
+    },
 }
 
 #[cfg(test)]

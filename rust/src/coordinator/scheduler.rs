@@ -1,6 +1,14 @@
 //! Admission control and dispatch ordering: a bounded two-class queue with
 //! decode-priority (latency-sensitive single-token steps preempt bulk
 //! prefill work) and backpressure when full.
+//!
+//! Every admitted request is stamped with a monotone sequence number; the
+//! `Fifo` policy dispatches strictly by it, so same-`Instant` arrivals can
+//! never reorder. The continuous-batching worker builds cycles through the
+//! incremental API ([`Scheduler::peek_next`] / [`Scheduler::pop_next`])
+//! so it can apply token-budget and eviction checks per request;
+//! [`Scheduler::drain_cycle`] remains the pure-policy drain used by the
+//! property tests and width-bounded callers.
 
 use super::request::AttentionRequest;
 use std::collections::VecDeque;
@@ -17,15 +25,29 @@ pub enum Policy {
 /// Rejection reason surfaced to clients.
 #[derive(Debug, PartialEq, Eq)]
 pub enum Rejected {
-    QueueFull,
+    /// Queue at capacity. Carries the observed depth and the configured
+    /// capacity so clients can distinguish transient pressure from a
+    /// misconfigured limit and implement informed retry/backoff.
+    QueueFull { depth: usize, capacity: usize },
     Invalid(String),
+}
+
+/// One queued request, stamped at admission.
+#[derive(Debug)]
+struct Queued {
+    /// Monotone admission sequence number — the `Fifo` dispatch key.
+    seq: u64,
+    /// Value of the cycle counter when the request was admitted, for
+    /// starvation accounting ([`Scheduler::oldest_other_wait`]).
+    enq_cycle: u64,
+    req: AttentionRequest,
 }
 
 /// Bounded scheduler queue.
 #[derive(Debug)]
 pub struct Scheduler {
-    decode: VecDeque<AttentionRequest>,
-    other: VecDeque<AttentionRequest>,
+    decode: VecDeque<Queued>,
+    other: VecDeque<Queued>,
     pub capacity: usize,
     pub policy: Policy,
     /// Drain-cycle sizing knob: how many requests one dispatch cycle may
@@ -35,6 +57,7 @@ pub struct Scheduler {
     pub admitted: u64,
     pub rejected: u64,
     seq: u64,
+    cycles: u64,
 }
 
 impl Scheduler {
@@ -48,6 +71,7 @@ impl Scheduler {
             admitted: 0,
             rejected: 0,
             seq: 0,
+            cycles: 0,
         }
     }
 
@@ -65,59 +89,95 @@ impl Scheduler {
             self.rejected += 1;
             return Err(Rejected::Invalid(e));
         }
-        if self.len() >= self.capacity {
+        let depth = self.len();
+        if depth >= self.capacity {
             self.rejected += 1;
-            return Err(Rejected::QueueFull);
+            return Err(Rejected::QueueFull { depth, capacity: self.capacity });
         }
         self.admitted += 1;
         self.seq += 1;
-        if req.is_decode() {
-            self.decode.push_back(req);
+        let q = Queued { seq: self.seq, enq_cycle: self.cycles, req };
+        if q.req.is_decode() {
+            self.decode.push_back(q);
         } else {
-            self.other.push_back(req);
+            self.other.push_back(q);
         }
         Ok(())
+    }
+
+    /// Start a new admission cycle (starvation accounting tick).
+    pub fn begin_cycle(&mut self) {
+        self.cycles += 1;
+    }
+
+    /// Which queue the next pop comes from under the current policy:
+    /// `Some(true)` for decode, `Some(false)` for other, `None` when empty.
+    fn next_is_decode(&self) -> Option<bool> {
+        match self.policy {
+            Policy::DecodeFirst => {
+                if !self.decode.is_empty() {
+                    Some(true)
+                } else if !self.other.is_empty() {
+                    Some(false)
+                } else {
+                    None
+                }
+            }
+            // strict admission order: dispatch by sequence number
+            Policy::Fifo => match (self.decode.front(), self.other.front()) {
+                (Some(d), Some(o)) => Some(d.seq < o.seq),
+                (Some(_), None) => Some(true),
+                (None, Some(_)) => Some(false),
+                (None, None) => None,
+            },
+        }
+    }
+
+    /// The request the next [`Scheduler::pop_next`] would return, without
+    /// removing it — the admission loop peeks to cost a request against
+    /// its token budget before committing.
+    pub fn peek_next(&self) -> Option<&AttentionRequest> {
+        let decode = self.next_is_decode()?;
+        let q = if decode { self.decode.front() } else { self.other.front() };
+        q.map(|q| &q.req)
+    }
+
+    /// Pop the next request in dispatch order.
+    pub fn pop_next(&mut self) -> Option<AttentionRequest> {
+        let decode = self.next_is_decode()?;
+        let q = if decode { self.decode.pop_front() } else { self.other.pop_front() };
+        q.map(|q| q.req)
+    }
+
+    /// Admission cycles the oldest queued non-decode request has waited
+    /// (0 when none queued). Under `DecodeFirst` a steady decode stream
+    /// would otherwise starve prefills forever; the worker promotes the
+    /// head of the other queue once this crosses its wait threshold.
+    pub fn oldest_other_wait(&self) -> u64 {
+        self.other.front().map_or(0, |q| self.cycles.saturating_sub(q.enq_cycle))
+    }
+
+    /// Pop the oldest non-decode request out of dispatch order (starvation
+    /// promotion under `DecodeFirst`).
+    pub fn pop_other(&mut self) -> Option<AttentionRequest> {
+        self.other.pop_front().map(|q| q.req)
     }
 
     /// Drain one dispatch cycle: up to [`Scheduler::drain_max`] requests
     /// in dispatch order. The coordinator lowers everything one call
     /// returns into a single fused kernel submission.
     pub fn drain_cycle(&mut self) -> Vec<AttentionRequest> {
+        self.begin_cycle();
         self.drain(self.drain_max)
     }
 
     /// Drain up to `max` requests in dispatch order.
     pub fn drain(&mut self, max: usize) -> Vec<AttentionRequest> {
         let mut out = Vec::new();
-        match self.policy {
-            Policy::DecodeFirst => {
-                while out.len() < max {
-                    if let Some(r) = self.decode.pop_front() {
-                        out.push(r);
-                    } else if let Some(r) = self.other.pop_front() {
-                        out.push(r);
-                    } else {
-                        break;
-                    }
-                }
-            }
-            Policy::Fifo => {
-                // merge by submission id (ids are client-assigned; use
-                // arrival order within each queue and compare timestamps)
-                while out.len() < max {
-                    let take_decode = match (self.decode.front(), self.other.front()) {
-                        (Some(d), Some(o)) => d.submitted_at <= o.submitted_at,
-                        (Some(_), None) => true,
-                        (None, Some(_)) => false,
-                        (None, None) => break,
-                    };
-                    let r = if take_decode {
-                        self.decode.pop_front().unwrap()
-                    } else {
-                        self.other.pop_front().unwrap()
-                    };
-                    out.push(r);
-                }
+        while out.len() < max {
+            match self.pop_next() {
+                Some(r) => out.push(r),
+                None => break,
             }
         }
         out
@@ -150,7 +210,7 @@ mod tests {
         let mut s = Scheduler::new(2, Policy::Fifo);
         s.submit(req(1, true)).unwrap();
         s.submit(req(2, false)).unwrap();
-        assert_eq!(s.submit(req(3, true)), Err(Rejected::QueueFull));
+        assert_eq!(s.submit(req(3, true)), Err(Rejected::QueueFull { depth: 2, capacity: 2 }));
         assert_eq!(s.admitted, 2);
         assert_eq!(s.rejected, 1);
     }
@@ -176,14 +236,61 @@ mod tests {
         assert!(s.is_empty());
     }
 
+    /// Regression for the `submitted_at` tie-break: two requests admitted
+    /// at the very same `Instant` (prefill first, decode second) must
+    /// drain in admission order under `Fifo`. The old comparison let the
+    /// decode win ties and reorder ahead of the earlier prefill.
     #[test]
-    fn fifo_respects_arrival() {
+    fn fifo_same_instant_keeps_arrival_order() {
         let mut s = Scheduler::new(10, Policy::Fifo);
-        s.submit(req(1, false)).unwrap();
-        std::thread::sleep(std::time::Duration::from_millis(2));
-        s.submit(req(2, true)).unwrap();
+        let now = Instant::now();
+        let mut first = req(1, false);
+        first.submitted_at = now;
+        let mut second = req(2, true);
+        second.submitted_at = now;
+        s.submit(first).unwrap();
+        s.submit(second).unwrap();
         let order: Vec<u64> = s.drain(10).iter().map(|r| r.id).collect();
         assert_eq!(order, vec![1, 2]);
+    }
+
+    #[test]
+    fn fifo_interleaves_classes_by_seq() {
+        let mut s = Scheduler::new(10, Policy::Fifo);
+        s.submit(req(1, true)).unwrap();
+        s.submit(req(2, false)).unwrap();
+        s.submit(req(3, true)).unwrap();
+        s.submit(req(4, false)).unwrap();
+        let order: Vec<u64> = s.drain(10).iter().map(|r| r.id).collect();
+        assert_eq!(order, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn peek_matches_pop() {
+        for policy in [Policy::Fifo, Policy::DecodeFirst] {
+            let mut s = Scheduler::new(10, policy);
+            for i in 0..6 {
+                s.submit(req(i, i % 2 == 0)).unwrap();
+            }
+            while let Some(peeked) = s.peek_next().map(|r| r.id) {
+                let popped = s.pop_next().unwrap().id;
+                assert_eq!(peeked, popped);
+            }
+            assert!(s.is_empty());
+        }
+    }
+
+    #[test]
+    fn oldest_other_wait_tracks_cycles() {
+        let mut s = Scheduler::new(10, Policy::DecodeFirst);
+        assert_eq!(s.oldest_other_wait(), 0);
+        s.submit(req(1, false)).unwrap();
+        assert_eq!(s.oldest_other_wait(), 0);
+        s.begin_cycle();
+        s.begin_cycle();
+        assert_eq!(s.oldest_other_wait(), 2);
+        assert_eq!(s.pop_other().unwrap().id, 1);
+        assert_eq!(s.oldest_other_wait(), 0);
     }
 
     #[test]

@@ -1,10 +1,26 @@
 //! The engine thread: owns the (deliberately single-threaded) PJRT
-//! runtime, drains the request channel through the scheduler + batcher,
-//! manages session KV state, executes attention blocks, and responds.
+//! runtime, admits requests from the channel through the scheduler +
+//! batcher, manages session KV state, executes attention blocks, and
+//! responds.
 //!
 //! `AttnEngine` abstracts the executor so the entire coordination logic is
 //! testable against a pure-Rust engine ([`NaiveEngine`]) without compiled
 //! artifacts; production uses [`PjrtEngine`] over the AOT artifacts.
+//!
+//! # Continuous batching
+//!
+//! Admission is decoupled from execution (see
+//! [`worker`](super::worker)): the [`Coordinator`] handle is the
+//! front-end that enqueues requests onto the engine thread's channel, and
+//! the persistent batching worker admits arrivals *into the running
+//! batch* between kernel submissions — one budgeted cycle at a time —
+//! instead of draining the whole backlog before looking at the channel
+//! again. A long prefill therefore occupies exactly one cycle, and
+//! decodes arriving behind it are served in the next cycle rather than
+//! waiting for the backlog to empty. Streaming clients use
+//! [`Coordinator::submit_stream`] to get per-cycle
+//! [`StreamEvent`](super::request::StreamEvent)s instead of one blocking
+//! reply.
 //!
 //! # Fused cross-session dispatch
 //!
@@ -43,12 +59,13 @@
 //! to per-request reference execution — the differential conformance
 //! suite (`tests/conformance_serving.rs`) asserts exactly that.
 
-use super::batcher::{form_batches, member_row_spans, Batch, BatchPolicy};
+use super::batcher::{member_row_spans, Batch, BatchPolicy};
 use super::kv_cache::{PagedSessionKv, SessionStore};
 use super::metrics::Metrics;
-use super::request::{AttentionRequest, AttentionResponse, RequestKind, ShapeSig};
+use super::request::{AttentionRequest, AttentionResponse, RequestKind, ShapeSig, StreamEvent};
 use super::router::{Route, Router};
-use super::scheduler::{Policy, Rejected, Scheduler};
+use super::scheduler::Policy;
+use super::worker::{engine_loop, Msg};
 use crate::kernels::batch::{
     run_blocks_into_with, run_paged_kv_blocks_flat_into_with, BatchScratch, BlockJob,
     KernelConfig, PagedKvBlockJob,
@@ -62,7 +79,7 @@ use std::collections::HashSet;
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// Executes one routed attention block.
 /// Inputs are flat (heads, slots, head_dim); `kv_len` marks the valid
@@ -217,6 +234,24 @@ pub struct CoordinatorConfig {
     /// Drain-cycle sizing knob: how many requests one dispatch cycle may
     /// pull from the scheduler, bounding the width of a fused submission.
     pub drain_cycle: usize,
+    /// Token-budget admission control: the total live KV tokens one cycle
+    /// may stream (each request costs the context length its query rows
+    /// attend — `nkv` for prefill/stateless, session length + 1 for
+    /// decode). A cycle always admits at least one request, so an
+    /// over-budget problem still serves alone; the budget bounds how much
+    /// *additional* work can ride along, which is what keeps one long
+    /// prefill from dragging a cycle's decodes with it.
+    pub max_batch_total_tokens: usize,
+    /// Anti-starvation knob for `Policy::DecodeFirst` (the
+    /// `waiting_served_ratio` analogue): once the oldest queued
+    /// prefill/stateless request has waited this many admission cycles
+    /// behind the decode stream, it is promoted to the front of the next
+    /// cycle.
+    pub prefill_max_wait_cycles: u32,
+    /// Backpressure for [`Coordinator::submit_stream`]: streams active
+    /// (one request in flight each) at any time. Further streams park in
+    /// FIFO order until a slot frees.
+    pub max_concurrent_streams: usize,
     /// Run the paged KV store's full refcount/byte-accounting invariant
     /// check after every drain cycle, panicking the engine thread on a
     /// violation. Debug/stress-test knob — O(sessions + blocks) per
@@ -236,14 +271,12 @@ impl Default for CoordinatorConfig {
             kernel: KernelConfig::default(),
             fused: true,
             drain_cycle: 256,
+            max_batch_total_tokens: 32 * 1024,
+            prefill_max_wait_cycles: 4,
+            max_concurrent_streams: 64,
             validate_invariants: false,
         }
     }
-}
-
-enum Msg {
-    Request(AttentionRequest, Sender<AttentionResponse>),
-    Shutdown,
 }
 
 /// Client handle to a running coordinator.
@@ -309,6 +342,23 @@ impl Coordinator {
         rx
     }
 
+    /// Submit a whole request lifecycle (e.g. prefill + decode steps) as
+    /// one stream: the worker keeps exactly one of the stream's requests
+    /// in flight at a time, in order, and yields each result as a
+    /// [`StreamEvent::Token`] as soon as its cycle completes — the
+    /// streaming analogue of calling [`Coordinator::submit_blocking`] in
+    /// a loop, without occupying a client thread per step. Request ids
+    /// must be unique across in-flight requests. Streams beyond
+    /// [`CoordinatorConfig::max_concurrent_streams`] park in FIFO order
+    /// until a slot frees.
+    pub fn submit_stream(&self, reqs: Vec<AttentionRequest>) -> StreamHandle {
+        self.metrics.requests.fetch_add(reqs.len() as u64, Ordering::Relaxed);
+        let (tx, rx) = channel();
+        // engine gone => receiver errors out, surfaced as recv() -> None
+        let _ = self.tx.send(Msg::Stream(reqs, tx));
+        StreamHandle { rx }
+    }
+
     /// Submit and wait.
     pub fn submit_blocking(&self, req: AttentionRequest) -> AttentionResponse {
         let id = req.id;
@@ -340,117 +390,46 @@ impl Drop for Coordinator {
     }
 }
 
-struct Pending {
-    req: AttentionRequest,
-    reply: Sender<AttentionResponse>,
+/// Receiver half of a stream opened by [`Coordinator::submit_stream`].
+pub struct StreamHandle {
+    rx: Receiver<StreamEvent>,
 }
 
-fn engine_loop<E: AttnEngine>(engine: E, rx: Receiver<Msg>, cfg: CoordinatorConfig, metrics: Arc<Metrics>) {
-    let router = engine.router();
-    let fused = cfg.fused && engine.supports_fused();
-    // Session KV lives in the paged block pool at the kernel config's
-    // precision, one kernel tile of steps per block; f32 (the default)
-    // keeps every downstream path bit-identical to the unquantized
-    // coordinator.
-    let mut sessions = SessionStore::with_block_steps(
-        cfg.kv_budget_bytes,
-        cfg.kernel.kv_precision,
-        cfg.kernel.tile.max(1),
-    );
-    let mut sched = Scheduler::new(cfg.queue_capacity, cfg.policy);
-    sched.drain_max = cfg.drain_cycle.max(1);
-    let mut replies: std::collections::HashMap<u64, Sender<AttentionResponse>> = std::collections::HashMap::new();
+impl StreamHandle {
+    /// Block for the next event; `None` once the stream's sender is gone
+    /// (after `Done`, or if the engine died).
+    pub fn recv(&self) -> Option<StreamEvent> {
+        self.rx.recv().ok()
+    }
 
-    'outer: loop {
-        // Block for the first message, then greedily drain within the
-        // batch window to give the batcher material.
-        let first = match rx.recv() {
-            Ok(m) => m,
-            Err(_) => break,
-        };
-        let mut msgs = vec![first];
-        let deadline = Instant::now() + cfg.batch_window;
+    /// Non-blocking poll for the next event.
+    pub fn try_recv(&self) -> Option<StreamEvent> {
+        self.rx.try_recv().ok()
+    }
+
+    /// Drain the stream to completion: all token responses in submission
+    /// order, plus the `Done` summary when the stream terminated cleanly.
+    pub fn collect_blocking(self) -> (Vec<AttentionResponse>, Option<StreamEvent>) {
+        let mut tokens = Vec::new();
         loop {
-            match rx.try_recv() {
-                Ok(m) => msgs.push(m),
-                Err(_) => {
-                    // Hold the window open briefly so near-simultaneous
-                    // arrivals can share a batch.
-                    if Instant::now() >= deadline {
-                        break;
-                    }
-                    std::thread::yield_now();
-                }
+            match self.rx.recv() {
+                Ok(StreamEvent::Token(resp)) => tokens.push(resp),
+                Ok(done @ StreamEvent::Done { .. }) => return (tokens, Some(done)),
+                Err(_) => return (tokens, None),
             }
-        }
-
-        let mut shutdown = false;
-        for m in msgs {
-            match m {
-                Msg::Shutdown => shutdown = true,
-                Msg::Request(req, reply) => {
-                    let id = req.id;
-                    match sched.submit(req) {
-                        Ok(()) => {
-                            replies.insert(id, reply);
-                        }
-                        Err(Rejected::QueueFull) => {
-                            metrics.queue_rejections.fetch_add(1, Ordering::Relaxed);
-                            metrics.errors.fetch_add(1, Ordering::Relaxed);
-                            let _ = reply.send(AttentionResponse {
-                                id,
-                                output: Err("queue full".into()),
-                                latency_us: 0,
-                                batch_size: 0,
-                            });
-                        }
-                        Err(Rejected::Invalid(e)) => {
-                            metrics.errors.fetch_add(1, Ordering::Relaxed);
-                            let _ = reply.send(AttentionResponse {
-                                id,
-                                output: Err(format!("invalid request: {e}")),
-                                latency_us: 0,
-                                batch_size: 0,
-                            });
-                        }
-                    }
-                }
-            }
-        }
-
-        // Dispatch everything admitted so far, one drain cycle at a time.
-        while !sched.is_empty() {
-            let pending_reqs = sched.drain_cycle();
-            let batches = form_batches(&pending_reqs, &cfg.batch);
-            let mut pend: Vec<Option<Pending>> = pending_reqs
-                .into_iter()
-                .map(|req| {
-                    let reply = replies.remove(&req.id)?;
-                    Some(Pending { req, reply })
-                })
-                .collect();
-            if fused {
-                serve_cycle_fused(&engine, &router, &mut sessions, &batches, &mut pend, &metrics);
-            } else {
-                for batch in &batches {
-                    serve_batch(&engine, &router, &mut sessions, batch, &mut pend, &metrics);
-                }
-            }
-            publish_kv_metrics(&sessions, &metrics);
-            if cfg.validate_invariants {
-                sessions.check_invariants().expect("kv store invariants violated");
-            }
-        }
-        if shutdown {
-            break 'outer;
         }
     }
+}
+
+pub(crate) struct Pending {
+    pub(crate) req: AttentionRequest,
+    pub(crate) reply: Sender<AttentionResponse>,
 }
 
 /// Publish the paged store's pool gauges and sharing counters into the
 /// metrics sink (store-latest: the engine thread owns the store, so each
 /// drain cycle's value is the current truth).
-fn publish_kv_metrics(sessions: &SessionStore, metrics: &Arc<Metrics>) {
+pub(crate) fn publish_kv_metrics(sessions: &SessionStore, metrics: &Arc<Metrics>) {
     let pool = sessions.pool();
     metrics.kv_pool_bytes.store(pool.bytes as u64, Ordering::Relaxed);
     metrics.kv_pool_peak_bytes.store(pool.peak_bytes as u64, Ordering::Relaxed);
@@ -613,7 +592,7 @@ fn prepare_batch(
 
 /// Serial dispatch: execute one batch end to end through the padded
 /// per-route engine call and deliver its responses.
-fn serve_batch<E: AttnEngine>(
+pub(crate) fn serve_batch<E: AttnEngine>(
     engine: &E,
     router: &Router,
     sessions: &mut SessionStore,
@@ -711,7 +690,7 @@ fn pack_execute_split<E: AttnEngine>(
 /// Fused dispatch: serve one drain cycle's batches through as few kernel
 /// submissions as possible — one, absent session conflicts (see the
 /// module docs for the full drain-cycle → block-job lowering contract).
-fn serve_cycle_fused<E: AttnEngine>(
+pub(crate) fn serve_cycle_fused<E: AttnEngine>(
     engine: &E,
     router: &Router,
     sessions: &mut SessionStore,
@@ -980,8 +959,10 @@ fn scatter_batch(r: Ready, region: &[f32], metrics: &Arc<Metrics>) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::batcher::form_batches;
     use crate::coordinator::request::{ShapeSig, Variant};
     use crate::runtime::Manifest;
+    use std::time::Instant;
 
     fn test_router() -> Router {
         Router::from_manifest(

@@ -1,0 +1,817 @@
+//! The continuous-batching worker: decouples *admission* from
+//! *execution* so one long prefill can no longer head-of-line-block the
+//! decodes queued behind it.
+//!
+//! The old engine loop drained the whole scheduler backlog — every
+//! admitted request, across as many drain cycles as it took — before
+//! looking at the request channel again, so arrivals during a long cycle
+//! sat in the channel for the full backlog. [`BatchWorker`] inverts
+//! that: each [`BatchWorker::step`] plans ONE budgeted cycle, executes it
+//! as one fused submission (absent conflicts), and the loop pumps the
+//! channel *between* steps, admitting new arrivals into the running
+//! batch. The worker is a plain struct over the scheduler, the paged
+//! session store, and the per-request reply routes, so tests drive
+//! `handle_msg` + `step` directly — no threads, fully deterministic.
+//!
+//! # Cycle planning
+//!
+//! [`BatchWorker::step`] pulls requests in policy order, admitting while
+//! three limits hold (see [`CoordinatorConfig`] for the knobs):
+//!
+//! 1. **width** — at most `drain_cycle` requests per cycle,
+//! 2. **token budget** — the cycle's summed context cost stays within
+//!    `max_batch_total_tokens` (a cycle always admits at least one
+//!    request, so an over-budget problem still serves alone),
+//! 3. **memory** — a request whose session mutations would LRU-evict
+//!    live pool blocks (per the [`SessionStore`] predicates) ends the
+//!    cycle instead of joining it; it leads the next cycle, where
+//!    evicting is legitimate. This is admission-time shedding — the
+//!    fused dispatcher's conflict flush stays as the execution-time
+//!    backstop.
+//!
+//! Under `Policy::DecodeFirst`, a prefill/stateless request that has
+//! waited `prefill_max_wait_cycles` admission cycles is promoted to the
+//! front of the next cycle so a steady decode stream cannot starve it.
+//!
+//! # Streams
+//!
+//! A stream ([`Coordinator::submit_stream`](super::Coordinator::submit_stream))
+//! is a request lifecycle the worker feeds itself: exactly one of the
+//! stream's requests is in flight at a time, and when its cycle answers,
+//! the worker forwards the [`StreamEvent::Token`], records
+//! time-to-first-token / inter-token latency, and enqueues the stream's
+//! next request — so per-session submission order is preserved by
+//! construction. At most `max_concurrent_streams` are active; the rest
+//! park in FIFO order (the semaphore-style concurrency limit).
+
+use super::batcher::form_batches;
+use super::kv_cache::SessionStore;
+use super::metrics::Metrics;
+use super::request::{AttentionRequest, AttentionResponse, RequestKind, StreamEvent};
+use super::router::Router;
+use super::scheduler::{Policy, Rejected, Scheduler};
+use super::server::{
+    publish_kv_metrics, serve_batch, serve_cycle_fused, AttnEngine, CoordinatorConfig, Pending,
+};
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Engine-thread mailbox.
+pub(crate) enum Msg {
+    Request(AttentionRequest, Sender<AttentionResponse>),
+    Stream(Vec<AttentionRequest>, Sender<StreamEvent>),
+    Shutdown,
+}
+
+/// One active stream's state.
+struct Stream {
+    tx: Sender<StreamEvent>,
+    pending: VecDeque<AttentionRequest>,
+    /// Response receiver for the stream's in-flight request.
+    inflight: Option<Receiver<AttentionResponse>>,
+    opened: Instant,
+    first_token: Option<Instant>,
+    last_token: Option<Instant>,
+    tokens: u64,
+}
+
+fn dur_us(from: Instant, to: Instant) -> u64 {
+    to.saturating_duration_since(from).as_micros() as u64
+}
+
+fn reject_msg(rej: &Rejected) -> String {
+    match rej {
+        Rejected::QueueFull { depth, capacity } => format!("queue full ({depth}/{capacity})"),
+        Rejected::Invalid(e) => format!("invalid request: {e}"),
+    }
+}
+
+/// The admission/execution state machine. [`engine_loop`] owns one per
+/// engine thread; unit tests drive it synchronously.
+pub(crate) struct BatchWorker {
+    cfg: CoordinatorConfig,
+    router: Router,
+    fused: bool,
+    sched: Scheduler,
+    sessions: SessionStore,
+    /// Reply routes for requests currently queued in the scheduler.
+    replies: HashMap<u64, Sender<AttentionResponse>>,
+    streams: Vec<Stream>,
+    /// Streams beyond the concurrency limit, with their open timestamps
+    /// (TTFT is measured from open, so park time counts against it).
+    parked: VecDeque<(Vec<AttentionRequest>, Sender<StreamEvent>, Instant)>,
+    metrics: Arc<Metrics>,
+    shutdown: bool,
+}
+
+impl BatchWorker {
+    pub(crate) fn new(
+        cfg: CoordinatorConfig,
+        router: Router,
+        fused: bool,
+        metrics: Arc<Metrics>,
+    ) -> BatchWorker {
+        // Session KV lives in the paged block pool at the kernel config's
+        // precision, one kernel tile of steps per block; f32 (the
+        // default) keeps every downstream path bit-identical to the
+        // unquantized coordinator.
+        let sessions = SessionStore::with_block_steps(
+            cfg.kv_budget_bytes,
+            cfg.kernel.kv_precision,
+            cfg.kernel.tile.max(1),
+        );
+        let mut sched = Scheduler::new(cfg.queue_capacity, cfg.policy);
+        sched.drain_max = cfg.drain_cycle.max(1);
+        BatchWorker {
+            cfg,
+            router,
+            fused,
+            sched,
+            sessions,
+            replies: HashMap::new(),
+            streams: Vec::new(),
+            parked: VecDeque::new(),
+            metrics,
+            shutdown: false,
+        }
+    }
+
+    /// No queued work, no live streams: the loop may block on the channel.
+    fn is_idle(&self) -> bool {
+        self.sched.is_empty() && self.streams.is_empty() && self.parked.is_empty()
+    }
+
+    fn handle_msg(&mut self, msg: Msg) {
+        match msg {
+            Msg::Shutdown => self.shutdown = true,
+            Msg::Request(req, reply) => self.enqueue(req, reply),
+            Msg::Stream(reqs, tx) => self.open_stream(reqs, tx),
+        }
+    }
+
+    /// Admit one request into the scheduler, or answer its rejection.
+    /// Returns whether the request was admitted.
+    fn submit_to_sched(&mut self, req: AttentionRequest, reply: Sender<AttentionResponse>) -> bool {
+        let id = req.id;
+        match self.sched.submit(req) {
+            Ok(()) => {
+                self.replies.insert(id, reply);
+                self.metrics.queue_depth.store(self.sched.len() as u64, Ordering::Relaxed);
+                true
+            }
+            Err(rej) => {
+                if matches!(rej, Rejected::QueueFull { .. }) {
+                    self.metrics.queue_rejections.fetch_add(1, Ordering::Relaxed);
+                }
+                self.metrics.errors.fetch_add(1, Ordering::Relaxed);
+                let _ = reply.send(AttentionResponse {
+                    id,
+                    output: Err(reject_msg(&rej)),
+                    latency_us: 0,
+                    batch_size: 0,
+                });
+                false
+            }
+        }
+    }
+
+    fn enqueue(&mut self, req: AttentionRequest, reply: Sender<AttentionResponse>) {
+        self.submit_to_sched(req, reply);
+    }
+
+    fn open_stream(&mut self, reqs: Vec<AttentionRequest>, tx: Sender<StreamEvent>) {
+        self.metrics.streams_opened.fetch_add(1, Ordering::Relaxed);
+        let opened = Instant::now();
+        if self.streams.len() >= self.cfg.max_concurrent_streams.max(1) {
+            self.metrics.streams_parked.fetch_add(1, Ordering::Relaxed);
+            self.parked.push_back((reqs, tx, opened));
+        } else {
+            self.activate_stream(reqs, tx, opened);
+        }
+    }
+
+    fn activate_stream(
+        &mut self,
+        reqs: Vec<AttentionRequest>,
+        tx: Sender<StreamEvent>,
+        opened: Instant,
+    ) {
+        if reqs.is_empty() {
+            self.metrics.streams_completed.fetch_add(1, Ordering::Relaxed);
+            let _ = tx.send(StreamEvent::Done { ttft_us: 0, total_us: 0, tokens: 0 });
+            return;
+        }
+        self.streams.push(Stream {
+            tx,
+            pending: reqs.into(),
+            inflight: None,
+            opened,
+            first_token: None,
+            last_token: None,
+            tokens: 0,
+        });
+        let i = self.streams.len() - 1;
+        if self.submit_stream_next(i).is_err() {
+            self.finish_stream(i);
+        }
+    }
+
+    /// Enqueue stream `i`'s next request, restamping its admission time
+    /// (queue wait for a stream request is measured from the moment the
+    /// worker feeds it in, not from when the client packaged the stream).
+    fn submit_stream_next(&mut self, i: usize) -> Result<(), ()> {
+        let mut req = self.streams[i].pending.pop_front().expect("stream has a next request");
+        req.submitted_at = Instant::now();
+        let (tx, rx) = channel();
+        if self.submit_to_sched(req, tx) {
+            self.streams[i].inflight = Some(rx);
+            Ok(())
+        } else {
+            // submit_to_sched already delivered the error response into
+            // `tx`; forward it as the stream's terminal token
+            if let Ok(resp) = rx.try_recv() {
+                let _ = self.streams[i].tx.send(StreamEvent::Token(resp));
+            }
+            Err(())
+        }
+    }
+
+    /// Terminate stream `i`: send `Done`, release its slot, and activate
+    /// parked streams into the freed capacity.
+    fn finish_stream(&mut self, i: usize) {
+        let st = self.streams.swap_remove(i);
+        let ttft_us = st.first_token.map_or(0, |t| dur_us(st.opened, t));
+        let total_us = st.last_token.map_or(0, |t| dur_us(st.opened, t));
+        self.metrics.streams_completed.fetch_add(1, Ordering::Relaxed);
+        let _ = st.tx.send(StreamEvent::Done { ttft_us, total_us, tokens: st.tokens });
+        while self.streams.len() < self.cfg.max_concurrent_streams.max(1) {
+            match self.parked.pop_front() {
+                Some((reqs, tx, opened)) => self.activate_stream(reqs, tx, opened),
+                None => break,
+            }
+        }
+    }
+
+    /// Deliver one response to stream `i` and advance it. Returns whether
+    /// the stream is still live at index `i`.
+    fn deliver_token(&mut self, i: usize, resp: AttentionResponse) -> bool {
+        let now = Instant::now();
+        {
+            let st = &mut self.streams[i];
+            st.inflight = None;
+            if st.tokens == 0 {
+                st.first_token = Some(now);
+                self.metrics.ttft.observe(dur_us(st.opened, now));
+            } else if let Some(prev) = st.last_token {
+                self.metrics.itl.observe(dur_us(prev, now));
+            }
+            st.last_token = Some(now);
+            st.tokens += 1;
+        }
+        let failed = resp.output.is_err();
+        let client_gone = self.streams[i].tx.send(StreamEvent::Token(resp)).is_err();
+        if failed || client_gone || self.streams[i].pending.is_empty() {
+            self.finish_stream(i);
+            return false;
+        }
+        if self.submit_stream_next(i).is_err() {
+            self.finish_stream(i);
+            return false;
+        }
+        true
+    }
+
+    /// Poll every live stream's in-flight response; deliver tokens and
+    /// feed next requests. Runs after each cycle, so a stream's next
+    /// request joins the *next* cycle — continuous admission.
+    fn advance_streams(&mut self) {
+        let mut i = 0;
+        while i < self.streams.len() {
+            let polled = match self.streams[i].inflight.as_ref() {
+                Some(rx) => match rx.try_recv() {
+                    Ok(resp) => Some(Ok(resp)),
+                    Err(TryRecvError::Empty) => None,
+                    // reply route dropped without an answer (engine-side
+                    // anomaly): abort the stream rather than hang it
+                    Err(TryRecvError::Disconnected) => Some(Err(())),
+                },
+                None => Some(Err(())),
+            };
+            match polled {
+                None => i += 1,
+                Some(Err(())) => self.finish_stream(i),
+                Some(Ok(resp)) => {
+                    if self.deliver_token(i, resp) {
+                        i += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    /// The cycle-budget cost of a request in KV tokens: the live context
+    /// length its query rows will stream after its own mutations land.
+    fn request_tokens(&self, req: &AttentionRequest) -> usize {
+        match req.kind {
+            RequestKind::Stateless | RequestKind::Prefill { .. } => req.nkv,
+            RequestKind::Decode { session } => {
+                self.sessions.get(session).map_or(1, |t| t.len + 1)
+            }
+            RequestKind::Fork { src, .. } => {
+                self.sessions.get(src).map_or(req.nkv, |t| t.len + req.nkv)
+            }
+        }
+    }
+
+    /// Would this request's session mutations LRU-evict live pool blocks?
+    /// Mirrors the fused dispatcher's conflict predicate, applied at
+    /// admission time.
+    fn would_evict(&self, req: &AttentionRequest) -> bool {
+        match req.kind {
+            RequestKind::Stateless => false,
+            RequestKind::Decode { session } => self.sessions.append_would_evict(session, 1),
+            // an unknown signature can't create a session, so it can't
+            // evict either
+            RequestKind::Prefill { session } => match self.router.max_kv(req.variant, req.sig) {
+                Some(_) => self.sessions.prefill_would_evict(
+                    session,
+                    req.sig.heads,
+                    req.sig.head_dim,
+                    req.nkv,
+                ),
+                None => false,
+            },
+            RequestKind::Fork { src, session } => {
+                self.sessions.fork_would_evict(src, session, req.nkv)
+            }
+        }
+    }
+
+    /// Admission half of one serving cycle (see the module docs for the
+    /// width/budget/memory limits and the starvation promotion).
+    fn plan_cycle(&mut self) -> Vec<AttentionRequest> {
+        self.sched.begin_cycle();
+        let budget = self.cfg.max_batch_total_tokens.max(1);
+        let max_reqs = self.cfg.drain_cycle.max(1);
+        let mut cycle: Vec<AttentionRequest> = Vec::new();
+        let mut tokens = 0usize;
+
+        if self.cfg.policy == Policy::DecodeFirst
+            && self.sched.oldest_other_wait() >= self.cfg.prefill_max_wait_cycles.max(1) as u64
+        {
+            if let Some(req) = self.sched.pop_other() {
+                tokens += self.request_tokens(&req);
+                self.metrics.queue_wait.observe(req.submitted_at.elapsed().as_micros() as u64);
+                cycle.push(req);
+            }
+        }
+
+        while cycle.len() < max_reqs {
+            let Some(next) = self.sched.peek_next() else { break };
+            if !cycle.is_empty() {
+                if tokens + self.request_tokens(next) > budget {
+                    break;
+                }
+                if self.would_evict(next) {
+                    self.metrics.admission_deferrals.fetch_add(1, Ordering::Relaxed);
+                    break;
+                }
+            }
+            let req = self.sched.pop_next().expect("peeked request");
+            self.metrics.queue_wait.observe(req.submitted_at.elapsed().as_micros() as u64);
+            tokens += self.request_tokens(&req);
+            cycle.push(req);
+        }
+        self.metrics.queue_depth.store(self.sched.len() as u64, Ordering::Relaxed);
+        cycle
+    }
+
+    /// Execution half: batch the cycle and run it through the fused (or
+    /// serial) dispatch path.
+    fn run_cycle<E: AttnEngine>(&mut self, engine: &E, cycle: Vec<AttentionRequest>) {
+        if cycle.is_empty() {
+            return;
+        }
+        let batches = form_batches(&cycle, &self.cfg.batch);
+        let mut pend: Vec<Option<Pending>> = cycle
+            .into_iter()
+            .map(|req| {
+                let reply = self.replies.remove(&req.id)?;
+                Some(Pending { req, reply })
+            })
+            .collect();
+        if self.fused {
+            serve_cycle_fused(engine, &self.router, &mut self.sessions, &batches, &mut pend, &self.metrics);
+        } else {
+            for batch in &batches {
+                serve_batch(engine, &self.router, &mut self.sessions, batch, &mut pend, &self.metrics);
+            }
+        }
+        publish_kv_metrics(&self.sessions, &self.metrics);
+        if self.cfg.validate_invariants {
+            self.sessions.check_invariants().expect("kv store invariants violated");
+        }
+    }
+
+    /// One admission+execution round. Returns whether any request was
+    /// served.
+    pub(crate) fn step<E: AttnEngine>(&mut self, engine: &E) -> bool {
+        let cycle = self.plan_cycle();
+        let worked = !cycle.is_empty();
+        self.run_cycle(engine, cycle);
+        self.advance_streams();
+        worked
+    }
+}
+
+/// The persistent engine-thread loop: pump the mailbox (blocking with the
+/// batch window only when idle, non-blocking between kernel submissions),
+/// then serve one cycle. On shutdown or channel disconnect, finish
+/// serving everything pending — queued requests and open streams — before
+/// exiting.
+pub(crate) fn engine_loop<E: AttnEngine>(
+    engine: E,
+    rx: Receiver<Msg>,
+    cfg: CoordinatorConfig,
+    metrics: Arc<Metrics>,
+) {
+    let fused = cfg.fused && engine.supports_fused();
+    let router = engine.router();
+    let batch_window = cfg.batch_window;
+    let mut w = BatchWorker::new(cfg, router, fused, metrics);
+    let mut disconnected = false;
+    loop {
+        if w.is_idle() && !w.shutdown && !disconnected {
+            // Idle: block for the next arrival, then hold the batch
+            // window open so near-simultaneous arrivals share a cycle.
+            match rx.recv() {
+                Ok(m) => {
+                    w.handle_msg(m);
+                    let deadline = Instant::now() + batch_window;
+                    loop {
+                        match rx.try_recv() {
+                            Ok(m) => w.handle_msg(m),
+                            Err(TryRecvError::Empty) => {
+                                if Instant::now() >= deadline {
+                                    break;
+                                }
+                                std::thread::yield_now();
+                            }
+                            Err(TryRecvError::Disconnected) => {
+                                disconnected = true;
+                                break;
+                            }
+                        }
+                    }
+                }
+                Err(_) => disconnected = true,
+            }
+        } else {
+            // Busy: admit whatever has already arrived, without waiting —
+            // new requests join the running batch between submissions.
+            loop {
+                match rx.try_recv() {
+                    Ok(m) => w.handle_msg(m),
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        disconnected = true;
+                        break;
+                    }
+                }
+            }
+        }
+        let worked = w.step(&engine);
+        if (w.shutdown || disconnected) && w.is_idle() {
+            break;
+        }
+        if !worked {
+            std::thread::yield_now();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::{ShapeSig, Variant};
+    use crate::coordinator::server::NaiveEngine;
+    use crate::kernels::batch::KernelConfig;
+    use crate::runtime::Manifest;
+
+    fn test_router() -> Router {
+        Router::from_manifest(
+            &Manifest::parse(
+                r#"{"artifacts": {
+              "a128": {"file":"x","kind":"attention","variant":"flashd","causal":false,
+                "heads":2,"seq":128,"head_dim":8,"inputs":[],"n_outputs":1},
+              "a256": {"file":"y","kind":"attention","variant":"flashd","causal":false,
+                "heads":2,"seq":256,"head_dim":8,"inputs":[],"n_outputs":1}
+            }}"#,
+            )
+            .unwrap(),
+        )
+    }
+
+    fn rand_req(id: u64, kind: RequestKind, nq: usize, nkv: usize, seed: u64) -> AttentionRequest {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let sig = ShapeSig { heads: 2, head_dim: 8 };
+        AttentionRequest {
+            id,
+            kind,
+            variant: Variant::FlashD,
+            sig,
+            q: rng.normal_vec(2 * 8 * nq, 1.0),
+            nq,
+            k: rng.normal_vec(2 * 8 * nkv, 1.0),
+            v: rng.normal_vec(2 * 8 * nkv, 1.0),
+            nkv,
+            submitted_at: Instant::now(),
+        }
+    }
+
+    fn mk_worker(cfg: CoordinatorConfig) -> (BatchWorker, NaiveEngine) {
+        let router = test_router();
+        let engine = NaiveEngine::with_kernel(router.clone(), cfg.kernel);
+        let fused = cfg.fused && engine.supports_fused();
+        let w = BatchWorker::new(cfg, router, fused, Arc::new(Metrics::new()));
+        (w, engine)
+    }
+
+    /// Enqueue a one-shot request, returning its private response channel.
+    fn push(w: &mut BatchWorker, req: AttentionRequest) -> Receiver<AttentionResponse> {
+        let (tx, rx) = channel();
+        w.handle_msg(Msg::Request(req, tx));
+        rx
+    }
+
+    /// The acceptance scenario: decodes admitted *behind* a long prefill
+    /// complete before the prefill finishes. Deterministic — the worker
+    /// is stepped by hand, no threads, no timing.
+    #[test]
+    fn decodes_behind_long_prefill_complete_first() {
+        let cfg = CoordinatorConfig {
+            policy: Policy::DecodeFirst,
+            max_batch_total_tokens: 16,
+            validate_invariants: true,
+            ..CoordinatorConfig::default()
+        };
+        let (mut w, engine) = mk_worker(cfg);
+
+        // seed session 5 with a short prefill
+        let seed = push(&mut w, rand_req(1, RequestKind::Prefill { session: 5 }, 1, 4, 1));
+        assert!(w.step(&engine));
+        assert!(seed.recv().unwrap().output.is_ok());
+
+        // long prefill arrives FIRST, two decodes queue behind it
+        let long = push(&mut w, rand_req(2, RequestKind::Prefill { session: 6 }, 1, 40, 2));
+        let d1 = push(&mut w, rand_req(3, RequestKind::Decode { session: 5 }, 1, 1, 3));
+        let d2 = push(&mut w, rand_req(4, RequestKind::Decode { session: 5 }, 1, 1, 4));
+
+        // cycle 1: decode-first policy + the 16-token budget admit only
+        // the decodes (cost 5 + 6; the 40-token prefill would blow it)
+        assert!(w.step(&engine));
+        assert!(d1.try_recv().expect("decode 1 served in cycle 1").output.is_ok());
+        assert!(d2.try_recv().expect("decode 2 served in cycle 1").output.is_ok());
+        assert!(long.try_recv().is_err(), "prefill must not have finished yet");
+
+        // cycle 2 serves the prefill
+        assert!(w.step(&engine));
+        assert!(long.recv().unwrap().output.is_ok());
+        assert!(w.is_idle());
+    }
+
+    /// Continuous admission: a decode arriving while a prefill backlog is
+    /// mid-drain is served on the very next cycle, ahead of the remaining
+    /// backlog.
+    #[test]
+    fn late_decode_overtakes_prefill_backlog() {
+        let cfg = CoordinatorConfig {
+            policy: Policy::DecodeFirst,
+            max_batch_total_tokens: 16,
+            ..CoordinatorConfig::default()
+        };
+        let (mut w, engine) = mk_worker(cfg);
+        let p1 = push(&mut w, rand_req(1, RequestKind::Prefill { session: 11 }, 1, 40, 1));
+        let p2 = push(&mut w, rand_req(2, RequestKind::Prefill { session: 12 }, 1, 40, 2));
+        let p3 = push(&mut w, rand_req(3, RequestKind::Prefill { session: 13 }, 1, 40, 3));
+
+        // the budget forces one prefill per cycle
+        assert!(w.step(&engine));
+        assert!(p1.try_recv().is_ok());
+        assert!(p2.try_recv().is_err() && p3.try_recv().is_err());
+
+        // decode arrives mid-backlog; next cycle serves it alone (its
+        // 41-token cost + 40 for the next prefill exceed the budget)
+        let d = push(&mut w, rand_req(4, RequestKind::Decode { session: 11 }, 1, 1, 4));
+        assert!(w.step(&engine));
+        assert!(d.try_recv().expect("decode overtakes backlog").output.is_ok());
+        assert!(p2.try_recv().is_err() && p3.try_recv().is_err());
+
+        assert!(w.step(&engine));
+        assert!(p2.try_recv().is_ok());
+        assert!(w.step(&engine));
+        assert!(p3.try_recv().is_ok());
+        assert!(w.is_idle());
+    }
+
+    /// Fifo keeps strict arrival order even when the budget splits cycles.
+    #[test]
+    fn fifo_budget_splits_cycles_in_order() {
+        let cfg = CoordinatorConfig {
+            policy: Policy::Fifo,
+            max_batch_total_tokens: 16,
+            ..CoordinatorConfig::default()
+        };
+        let (mut w, engine) = mk_worker(cfg);
+        let seed = push(&mut w, rand_req(1, RequestKind::Prefill { session: 5 }, 1, 4, 1));
+        assert!(w.step(&engine));
+        assert!(seed.recv().unwrap().output.is_ok());
+
+        let long = push(&mut w, rand_req(2, RequestKind::Prefill { session: 6 }, 1, 40, 2));
+        let d = push(&mut w, rand_req(3, RequestKind::Decode { session: 5 }, 1, 1, 3));
+        // Fifo: the earlier prefill serves first (alone — over budget);
+        // the decode waits its turn
+        assert!(w.step(&engine));
+        assert!(long.try_recv().is_ok());
+        assert!(d.try_recv().is_err());
+        assert!(w.step(&engine));
+        assert!(d.try_recv().expect("decode in cycle 2").output.is_ok());
+    }
+
+    /// DecodeFirst starvation guard: a prefill stuck behind a steady
+    /// decode stream is promoted after `prefill_max_wait_cycles`.
+    #[test]
+    fn waiting_prefill_promoted_after_wait_cycles() {
+        let cfg = CoordinatorConfig {
+            policy: Policy::DecodeFirst,
+            max_batch_total_tokens: 16,
+            prefill_max_wait_cycles: 2,
+            ..CoordinatorConfig::default()
+        };
+        let (mut w, engine) = mk_worker(cfg);
+        let seed = push(&mut w, rand_req(1, RequestKind::Prefill { session: 31 }, 1, 4, 1));
+        assert!(w.step(&engine));
+        assert!(seed.recv().unwrap().output.is_ok());
+
+        let p = push(&mut w, rand_req(2, RequestKind::Prefill { session: 32 }, 1, 40, 2));
+        // cycle 1: wait=1 < 2 — the decode wins, the prefill's 40 tokens
+        // don't fit behind it
+        let d1 = push(&mut w, rand_req(3, RequestKind::Decode { session: 31 }, 1, 1, 3));
+        assert!(w.step(&engine));
+        assert!(d1.try_recv().is_ok());
+        assert!(p.try_recv().is_err());
+        // cycle 2: wait=2 — promoted ahead of the fresh decode
+        let d2 = push(&mut w, rand_req(4, RequestKind::Decode { session: 31 }, 1, 1, 4));
+        assert!(w.step(&engine));
+        assert!(p.try_recv().expect("promoted prefill").output.is_ok());
+        assert!(d2.try_recv().is_err());
+        assert!(w.step(&engine));
+        assert!(d2.try_recv().is_ok());
+    }
+
+    /// Admission-time shedding: a prefill whose append would evict live
+    /// pool blocks is deferred out of a non-empty cycle and leads the
+    /// next one (where evicting is legitimate).
+    #[test]
+    fn evicting_prefill_deferred_to_next_cycle() {
+        let cfg = CoordinatorConfig {
+            policy: Policy::Fifo,
+            // room for exactly two 32-step blocks of 2 heads x 8 dims
+            kv_budget_bytes: 2 * 2 * 2 * 32 * 8 * 4,
+            kernel: KernelConfig { tile: 32, ..KernelConfig::default() },
+            validate_invariants: true,
+            ..CoordinatorConfig::default()
+        };
+        let (mut w, engine) = mk_worker(cfg);
+        // fill the pool: 33 steps -> both blocks resident
+        let seed = push(&mut w, rand_req(1, RequestKind::Prefill { session: 41 }, 1, 33, 1));
+        assert!(w.step(&engine));
+        assert!(seed.recv().unwrap().output.is_ok());
+
+        // decode fits its partial tail block; the new session's prefill
+        // needs a fresh block the pool can't hold
+        let d = push(&mut w, rand_req(2, RequestKind::Decode { session: 41 }, 1, 1, 2));
+        let p = push(&mut w, rand_req(3, RequestKind::Prefill { session: 42 }, 1, 8, 3));
+        assert!(w.step(&engine));
+        assert!(d.try_recv().is_ok());
+        assert!(p.try_recv().is_err(), "evicting prefill must defer");
+        assert_eq!(w.metrics.snapshot().admission_deferrals, 1);
+        assert!(w.sessions.contains(41));
+
+        assert!(w.step(&engine));
+        assert!(p.try_recv().expect("deferred prefill served next cycle").output.is_ok());
+        assert!(!w.sessions.contains(41), "deferred prefill legitimately evicted");
+        assert!(w.sessions.contains(42));
+    }
+
+    /// Stream lifecycle: tokens arrive in submission order, one per
+    /// cycle, with TTFT/ITL recorded and a terminal Done summary.
+    #[test]
+    fn stream_yields_per_cycle_tokens_in_order() {
+        let cfg = CoordinatorConfig { validate_invariants: true, ..CoordinatorConfig::default() };
+        let (mut w, engine) = mk_worker(cfg);
+        let reqs = vec![
+            rand_req(10, RequestKind::Prefill { session: 21 }, 1, 4, 10),
+            rand_req(11, RequestKind::Decode { session: 21 }, 1, 1, 11),
+            rand_req(12, RequestKind::Decode { session: 21 }, 1, 1, 12),
+            rand_req(13, RequestKind::Decode { session: 21 }, 1, 1, 13),
+        ];
+        let (tx, rx) = channel();
+        w.handle_msg(Msg::Stream(reqs, tx));
+        let mut got = Vec::new();
+        for _ in 0..4 {
+            assert!(w.step(&engine), "one stream request per cycle");
+            match rx.try_recv().expect("token after its cycle") {
+                StreamEvent::Token(resp) => {
+                    assert!(resp.output.is_ok());
+                    got.push(resp.id);
+                }
+                other => panic!("expected token, got {other:?}"),
+            }
+        }
+        assert_eq!(got, vec![10, 11, 12, 13]);
+        match rx.try_recv().expect("terminal event") {
+            StreamEvent::Done { tokens, ttft_us, total_us } => {
+                assert_eq!(tokens, 4);
+                assert!(total_us >= ttft_us);
+            }
+            other => panic!("expected done, got {other:?}"),
+        }
+        assert!(w.is_idle());
+        let snap = w.metrics.snapshot();
+        assert_eq!(snap.ttft.count, 1);
+        assert_eq!(snap.itl.count, 3);
+        assert_eq!(snap.streams_completed, 1);
+        assert_eq!(snap.errors, 0);
+    }
+
+    /// Concurrency-limit backpressure: streams beyond the limit park and
+    /// activate in FIFO order as slots free.
+    #[test]
+    fn streams_park_beyond_concurrency_limit() {
+        let cfg = CoordinatorConfig { max_concurrent_streams: 1, ..CoordinatorConfig::default() };
+        let (mut w, engine) = mk_worker(cfg);
+        let a_reqs = vec![
+            rand_req(1, RequestKind::Prefill { session: 1 }, 1, 4, 1),
+            rand_req(2, RequestKind::Decode { session: 1 }, 1, 1, 2),
+        ];
+        let b_reqs = vec![rand_req(3, RequestKind::Prefill { session: 2 }, 1, 4, 3)];
+        let (atx, arx) = channel();
+        let (btx, brx) = channel();
+        w.handle_msg(Msg::Stream(a_reqs, atx));
+        w.handle_msg(Msg::Stream(b_reqs, btx));
+        assert_eq!(w.metrics.snapshot().streams_parked, 1);
+        assert!(brx.try_recv().is_err(), "parked stream must not start");
+
+        assert!(w.step(&engine)); // A token 1
+        assert!(w.step(&engine)); // A token 2 -> A done -> B activated
+        assert!(matches!(arx.try_recv(), Ok(StreamEvent::Token(_))));
+        assert!(matches!(arx.try_recv(), Ok(StreamEvent::Token(_))));
+        assert!(matches!(arx.try_recv(), Ok(StreamEvent::Done { .. })));
+        assert!(w.step(&engine)); // B's request
+        assert!(matches!(brx.try_recv(), Ok(StreamEvent::Token(_))));
+        assert!(matches!(brx.try_recv(), Ok(StreamEvent::Done { .. })));
+        assert_eq!(w.metrics.snapshot().streams_completed, 2);
+        assert!(w.is_idle());
+    }
+
+    /// An error response aborts the stream: the error token is forwarded,
+    /// queued stream requests are dropped, Done reports the short count.
+    #[test]
+    fn stream_aborts_on_error_token() {
+        let (mut w, engine) = mk_worker(CoordinatorConfig::default());
+        let reqs = vec![
+            rand_req(1, RequestKind::Decode { session: 99 }, 1, 1, 1), // unknown session
+            rand_req(2, RequestKind::Stateless, 1, 4, 2),
+        ];
+        let (tx, rx) = channel();
+        w.handle_msg(Msg::Stream(reqs, tx));
+        assert!(w.step(&engine));
+        match rx.try_recv().expect("error token") {
+            StreamEvent::Token(resp) => assert!(resp.output.is_err()),
+            other => panic!("expected token, got {other:?}"),
+        }
+        match rx.try_recv().expect("terminal event") {
+            StreamEvent::Done { tokens, .. } => assert_eq!(tokens, 1),
+            other => panic!("expected done, got {other:?}"),
+        }
+        assert!(w.is_idle(), "aborted stream must release its slot and queue");
+    }
+
+    /// Queue-full rejections carry depth/capacity in the error message.
+    #[test]
+    fn queue_full_rejection_reports_depth() {
+        let cfg = CoordinatorConfig { queue_capacity: 1, ..CoordinatorConfig::default() };
+        let (mut w, _engine) = mk_worker(cfg);
+        let _r1 = push(&mut w, rand_req(1, RequestKind::Stateless, 1, 4, 1));
+        let r2 = push(&mut w, rand_req(2, RequestKind::Stateless, 1, 4, 2));
+        let err = r2.try_recv().expect("immediate rejection").output.unwrap_err();
+        assert!(err.contains("queue full (1/1)"), "got: {err}");
+        let snap = w.metrics.snapshot();
+        assert_eq!(snap.queue_rejections, 1);
+        assert_eq!(snap.errors, 1);
+    }
+}

@@ -1,0 +1,208 @@
+//! Continuous-batching conformance: streamed sessions through
+//! `Coordinator::submit_stream` must deliver tokens in submission order,
+//! bit-exact against the per-request reference, across every scheduling
+//! policy × dispatch mode × token-budget cell — admission into a running
+//! batch must never change *what* is computed, only *when*.
+
+mod common;
+
+use common::{expect_for, mk_req, test_router, RefKv};
+use flashd::coordinator::request::{AttentionRequest, RequestKind};
+use flashd::coordinator::scheduler::Policy;
+use flashd::coordinator::{Coordinator, CoordinatorConfig, StreamEvent, StreamHandle};
+use flashd::kernels::batch::KernelConfig;
+use flashd::prop_assert;
+use flashd::util::prop::forall;
+use flashd::util::rng::Rng;
+use std::time::Duration;
+
+fn start(policy: Policy, fused: bool, budget: usize) -> Coordinator {
+    let cfg = CoordinatorConfig {
+        policy,
+        fused,
+        max_batch_total_tokens: budget,
+        batch_window: Duration::from_micros(50),
+        kernel: KernelConfig { tile: 8, threads: 2, ..KernelConfig::default() },
+        validate_invariants: true,
+        ..CoordinatorConfig::default()
+    };
+    Coordinator::start_naive(cfg, test_router()).expect("start coordinator")
+}
+
+/// Build one session lifecycle (prefill + `steps` decodes) and its
+/// reference outputs, computed before submission so the expectation is
+/// independent of how cycles slice the stream.
+fn session_script(
+    rng: &mut Rng,
+    session: u64,
+    base_id: u64,
+    prefill: usize,
+    steps: usize,
+) -> (Vec<AttentionRequest>, Vec<(u64, Vec<f32>)>) {
+    let mut kv = RefKv::new();
+    let mut reqs = vec![mk_req(rng, base_id, RequestKind::Prefill { session }, 1, prefill)];
+    for i in 0..steps {
+        reqs.push(mk_req(rng, base_id + 1 + i as u64, RequestKind::Decode { session }, 1, 1));
+    }
+    let expected = reqs.iter().map(|r| (r.id, expect_for(r, &mut kv))).collect();
+    (reqs, expected)
+}
+
+/// Drain a stream and assert order, bit-exactness, and the `Done` summary.
+fn check_stream(handle: StreamHandle, expected: &[(u64, Vec<f32>)], tag: &str) {
+    let (tokens, done) = handle.collect_blocking();
+    assert_eq!(tokens.len(), expected.len(), "{tag}: token count");
+    for (resp, (id, want)) in tokens.iter().zip(expected) {
+        assert_eq!(resp.id, *id, "{tag}: tokens out of submission order");
+        let out = resp.output.as_ref().unwrap_or_else(|e| panic!("{tag}: id {id} failed: {e}"));
+        assert_eq!(out, want, "{tag}: id {id} diverged from reference");
+    }
+    match done {
+        Some(StreamEvent::Done { ttft_us, total_us, tokens: n }) => {
+            assert_eq!(n, expected.len() as u64, "{tag}: Done token count");
+            assert!(total_us >= ttft_us, "{tag}: total {total_us} < ttft {ttft_us}");
+        }
+        other => panic!("{tag}: stream ended without Done: {other:?}"),
+    }
+}
+
+fn run_matrix_cell(policy: Policy, fused: bool, budget: usize) {
+    let tag = format!("{policy:?}/fused={fused}/budget={budget}");
+    let coord = start(policy, fused, budget);
+    let mut rng = Rng::new(0xC0FFEE ^ budget as u64 ^ u64::from(fused));
+    let (sessions, steps, prefill) = (3u64, 5usize, 8usize);
+    let mut handles = Vec::new();
+    let mut expected = Vec::new();
+    for s in 0..sessions {
+        let (reqs, exp) = session_script(&mut rng, s, 1000 * (s + 1), prefill, steps);
+        expected.push(exp);
+        handles.push(coord.submit_stream(reqs));
+    }
+    for (s, (h, exp)) in handles.into_iter().zip(&expected).enumerate() {
+        check_stream(h, exp, &format!("{tag}/stream {s}"));
+    }
+    let snap = coord.metrics.snapshot();
+    let total = sessions * (steps as u64 + 1);
+    assert_eq!(snap.errors, 0, "{tag}");
+    assert_eq!(snap.responses, total, "{tag}");
+    assert_eq!(snap.queue_wait.count, total, "{tag}: every admission observed");
+    assert_eq!(snap.streams_opened, sessions, "{tag}");
+    assert_eq!(snap.streams_completed, sessions, "{tag}");
+    assert_eq!(snap.ttft.count, sessions, "{tag}: one TTFT sample per stream");
+    assert_eq!(snap.itl.count, total - sessions, "{tag}: inter-token samples");
+    coord.shutdown();
+}
+
+/// The full conformance matrix: both policies × fused/serial dispatch ×
+/// a starved token budget (every cycle splits) and an unbounded one.
+#[test]
+fn streamed_sessions_bit_exact_across_policy_dispatch_budget() {
+    for policy in [Policy::Fifo, Policy::DecodeFirst] {
+        for fused in [true, false] {
+            for budget in [8usize, usize::MAX] {
+                run_matrix_cell(policy, fused, budget);
+            }
+        }
+    }
+}
+
+/// Streams beyond `max_concurrent_streams` park at admission and still
+/// complete in full once a slot frees, with order and outputs intact.
+#[test]
+fn parked_streams_complete_bit_exact() {
+    let cfg = CoordinatorConfig {
+        max_concurrent_streams: 2,
+        batch_window: Duration::from_micros(50),
+        kernel: KernelConfig { tile: 8, threads: 2, ..KernelConfig::default() },
+        validate_invariants: true,
+        ..CoordinatorConfig::default()
+    };
+    let coord = Coordinator::start_naive(cfg, test_router()).expect("start");
+    let mut rng = Rng::new(0xBACC);
+    let nstreams = 5u64;
+    let mut handles = Vec::new();
+    let mut expected = Vec::new();
+    for s in 0..nstreams {
+        let (reqs, exp) = session_script(&mut rng, 20 + s, 5000 + 100 * s, 6, 3);
+        expected.push(exp);
+        handles.push(coord.submit_stream(reqs));
+    }
+    for (s, (h, exp)) in handles.into_iter().zip(&expected).enumerate() {
+        check_stream(h, exp, &format!("parked/stream {s}"));
+    }
+    let snap = coord.metrics.snapshot();
+    assert_eq!(snap.streams_opened, nstreams);
+    assert_eq!(snap.streams_completed, nstreams);
+    assert_eq!(snap.errors, 0);
+    coord.shutdown();
+}
+
+/// Fork lineages driven as sequential streams: the forked session must
+/// see the source's prefix bit-exactly, and the source must keep
+/// decoding from its own unmutated state afterwards.
+#[test]
+fn forked_lineage_streams_bit_exact() {
+    let coord = start(Policy::DecodeFirst, true, usize::MAX);
+    let mut rng = Rng::new(0xF0BC);
+    let mut kv_src = RefKv::new();
+    let reqs = vec![
+        mk_req(&mut rng, 7000, RequestKind::Prefill { session: 70 }, 1, 8),
+        mk_req(&mut rng, 7001, RequestKind::Decode { session: 70 }, 1, 1),
+    ];
+    let exp: Vec<(u64, Vec<f32>)> = reqs.iter().map(|r| (r.id, expect_for(r, &mut kv_src))).collect();
+    check_stream(coord.submit_stream(reqs), &exp, "fork/source");
+
+    // fork 70 -> 71 with 2 fresh appends, then decode the fork
+    let mut kv_fork = kv_src.clone();
+    let reqs = vec![
+        mk_req(&mut rng, 7100, RequestKind::Fork { src: 70, session: 71 }, 1, 2),
+        mk_req(&mut rng, 7101, RequestKind::Decode { session: 71 }, 1, 1),
+    ];
+    let exp: Vec<(u64, Vec<f32>)> = reqs.iter().map(|r| (r.id, expect_for(r, &mut kv_fork))).collect();
+    check_stream(coord.submit_stream(reqs), &exp, "fork/child");
+
+    // the source lineage is untouched by the fork's appends
+    let req = mk_req(&mut rng, 7002, RequestKind::Decode { session: 70 }, 1, 1);
+    let want = expect_for(&req, &mut kv_src);
+    let resp = coord.submit_blocking(req);
+    assert_eq!(resp.output.expect("source decode"), want, "fork mutated the source lineage");
+    coord.shutdown();
+}
+
+/// Property: under randomized policy, dispatch mode, token budget, and
+/// session scripts, continuous admission never reorders responses within
+/// a session and never perturbs their numerics.
+#[test]
+fn prop_continuous_admission_preserves_per_session_streams() {
+    forall("continuous-admission-order", 20, |g| {
+        let policy = if g.bool() { Policy::Fifo } else { Policy::DecodeFirst };
+        let fused = g.bool();
+        let budget = if g.bool() { g.usize_in(4, 24) } else { usize::MAX };
+        let coord = start(policy, fused, budget);
+        let mut rng = Rng::new(g.usize_in(0, 1 << 30) as u64);
+        let nstreams = g.usize_in(1, 3);
+        let mut handles = Vec::new();
+        let mut expected = Vec::new();
+        for s in 0..nstreams {
+            let prefill = g.usize_in(1, 10);
+            let steps = g.usize_in(1, 5);
+            let (reqs, exp) = session_script(&mut rng, s as u64, 1 + 100 * s as u64, prefill, steps);
+            expected.push(exp);
+            handles.push(coord.submit_stream(reqs));
+        }
+        for (h, exp) in handles.into_iter().zip(&expected) {
+            let (tokens, done) = h.collect_blocking();
+            prop_assert!(g, tokens.len() == exp.len(), "token count mismatch");
+            for (resp, (id, want)) in tokens.iter().zip(exp) {
+                prop_assert!(g, resp.id == *id, "responses reordered within a session");
+                prop_assert!(g, resp.output.as_ref().ok() == Some(want), "stream output diverged from reference");
+            }
+            prop_assert!(g, matches!(done, Some(StreamEvent::Done { .. })), "missing Done");
+        }
+        let snap = coord.metrics.snapshot();
+        prop_assert!(g, snap.errors == 0, "errors under continuous admission");
+        prop_assert!(g, snap.streams_completed == nstreams as u64, "streams lost");
+        coord.shutdown();
+        true
+    });
+}

@@ -103,6 +103,34 @@ fn prop_scheduler_conserves_requests() {
     });
 }
 
+/// Satellite regression (PR 8): Fifo drains strictly in admission order —
+/// the admission-stamped `seq` is the only tiebreak, so interleaving
+/// partial cycle drains with fresh admissions (exactly what continuous
+/// batching does) must never reorder requests.
+#[test]
+fn prop_fifo_drain_is_admission_order() {
+    forall("fifo-admission-order", 120, |g| {
+        let cap = g.usize_in(1, 24);
+        let mut s = Scheduler::new(cap, Policy::Fifo);
+        let mut admitted: Vec<u64> = Vec::new();
+        let mut drained: Vec<u64> = Vec::new();
+        let n = g.usize_in(0, 40);
+        for i in 0..n {
+            // partial mid-stream drains exercise seq ordering across cycles
+            if g.bool() && g.bool() {
+                s.begin_cycle();
+                drained.extend(s.drain(g.usize_in(1, 4)).iter().map(|r| r.id));
+            }
+            if s.submit(mk_request(g, i as u64)).is_ok() {
+                admitted.push(i as u64);
+            }
+        }
+        drained.extend(s.drain(usize::MAX).iter().map(|r| r.id));
+        prop_assert!(g, drained == admitted, "Fifo drained out of admission order");
+        true
+    });
+}
+
 /// Pool invariants survive arbitrary interleavings of every mutating
 /// store operation: refcounts always equal the live table references, no
 /// block leaks or double-frees, byte accounting stays block-exact, and

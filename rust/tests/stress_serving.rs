@@ -151,6 +151,8 @@ fn assert_metrics_consistent(snap: &Snapshot, totals: &Totals) {
     assert_eq!(snap.errors, 0);
     assert_eq!(snap.queue_rejections, 0);
     assert_eq!(snap.batched_requests, totals.requests);
+    // continuous batching observes one queue-wait sample per admission
+    assert_eq!(snap.queue_wait.count, totals.requests);
     // KV accounting
     assert_eq!(snap.kv_appends, totals.kv_appends);
     // kernel-step accounting: the fused path executed every row with the

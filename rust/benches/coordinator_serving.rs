@@ -10,14 +10,16 @@
 //! back to the pure-Rust tiled kernel engine (`Coordinator::start_naive`),
 //! so the serving path is measurable in artifact-free environments too.
 
-use flashd::bench_harness::traces::poisson_arrival_gaps;
+use flashd::bench_harness::traces::{bursty_arrival_gaps, poisson_arrival_gaps, BurstSpec};
 use flashd::bench_harness::workload::{
-    mixed_streams, session_requests, stateless_request, MixedSpec, WorkloadSpec,
+    mixed_streams, session_requests, stateless_request, LengthDist, MixedSpec, WorkloadSpec,
 };
 use flashd::coordinator::kv_cache::SessionStore;
 use flashd::coordinator::router::Router;
 use flashd::coordinator::scheduler::Policy;
-use flashd::coordinator::{Coordinator, CoordinatorConfig, ShapeSig, StreamEvent, Variant};
+use flashd::coordinator::{
+    AttentionRequest, Coordinator, CoordinatorConfig, ShapeSig, StreamEvent, StreamHandle, Variant,
+};
 use flashd::kernels::batch::{
     run_kv_blocks_flat_into_with, run_paged_kv_blocks_flat_into_with, BatchScratch, KernelConfig,
     KvBlockJob, PagedKvBlockJob,
@@ -137,102 +139,185 @@ fn pctiles(xs: &[f64]) -> Json {
     ]))
 }
 
-/// One cell of the mixed prefill+decode scenario matrix: open-loop stream
-/// arrivals (Poisson gaps) into `Coordinator::submit_stream`, every 4th
-/// stream fronted by a long prefill — the head-of-line stimulus. Clients
-/// time their own events, so TTFT and inter-token gaps are end-to-end.
-fn run_mixed_scenario(name: &str, policy: Policy, fused: bool, seed: u64, fast: bool) -> Json {
-    let sessions = if fast { 6 } else { 16 };
-    let mix = MixedSpec {
-        spec: WorkloadSpec {
-            sessions,
-            prefill_len: 128,
-            decode_steps: if fast { 8 } else { 24 },
-            sig: ShapeSig { heads: 2, head_dim: 64 },
-            variant: Variant::FlashD,
-            seed: 3,
-        },
-        long_every: 4,
-        long_prefill_len: 1536,
-    };
-    let cfg = CoordinatorConfig { policy, fused, ..Default::default() };
-    let coord = Coordinator::start_naive(cfg, fused_sweep_router()).expect("start");
+/// One scenario cell of the trace-driven load harness: a stream workload,
+/// an arrival trace, and a coordinator configuration.
+struct Scenario {
+    name: &'static str,
+    policy: Policy,
+    fused: bool,
+    router: Router,
+    cfg: CoordinatorConfig,
+    /// One request lifecycle per stream, ready for `submit_stream`.
+    streams: Vec<Vec<AttentionRequest>>,
+    /// Inter-arrival gap slept before each stream opens (capped at 10ms
+    /// so CI smoke runs stay quick).
+    gaps: Vec<Duration>,
+    /// Every odd-indexed client drops its `StreamHandle` right after the
+    /// first token — the abandonment stimulus for the worker's
+    /// client-gone abort/slot-free path. Even-indexed clients drain to
+    /// completion, keeping the TTFT/ITL blocks populated.
+    abandon_odd_clients: bool,
+    /// Assert zero server errors and zero abandonments (clean cells);
+    /// churn-style cells tolerate and report them instead.
+    expect_clean: bool,
+}
 
-    let streams = mixed_streams(&mix, 1_000_000);
-    let total_reqs: usize = streams.iter().map(Vec::len).sum();
-    // ~200 stream-opens/s, gaps capped so the CI smoke run stays quick
-    let gaps = poisson_arrival_gaps(seed, 200.0, streams.len());
+/// What one stream's client observed (all client-side walltimes).
+struct ClientReport {
+    ttft_us: Option<f64>,
+    itl_us: Vec<f64>,
+    lat_us: Vec<f64>,
+    errors: u64,
+    abandoned: bool,
+}
+
+fn client_loop(handle: StreamHandle, opened: Instant, abandon_after_first: bool) -> ClientReport {
+    let mut rep = ClientReport {
+        ttft_us: None,
+        itl_us: Vec::new(),
+        lat_us: Vec::new(),
+        errors: 0,
+        abandoned: false,
+    };
+    let mut last: Option<Instant> = None;
+    while let Some(ev) = handle.recv() {
+        match ev {
+            StreamEvent::Token(resp) => {
+                let now = Instant::now();
+                rep.lat_us.push(resp.latency_us as f64);
+                if resp.output.is_err() {
+                    rep.errors += 1;
+                }
+                if rep.ttft_us.is_none() {
+                    rep.ttft_us = Some(now.duration_since(opened).as_secs_f64() * 1e6);
+                } else if let Some(prev) = last {
+                    rep.itl_us.push(now.duration_since(prev).as_secs_f64() * 1e6);
+                }
+                last = Some(now);
+                if abandon_after_first {
+                    // dropping the handle here is the abandonment signal:
+                    // the worker's next token send fails as client-gone
+                    rep.abandoned = true;
+                    return rep;
+                }
+            }
+            StreamEvent::Done { .. } => break,
+        }
+    }
+    rep
+}
+
+/// Run one scenario cell: open-loop stream arrivals into
+/// `Coordinator::submit_stream`, clients timing their own events (TTFT
+/// and inter-token gaps are end-to-end). Emits the cell's SLO block —
+/// client-measured TTFT/ITL/latency percentiles plus the
+/// rejected/evicted/abandoned/error counters from the server snapshot.
+fn run_scenario(sc: Scenario) -> Json {
+    let n_streams = sc.streams.len();
+    let total_reqs: usize = sc.streams.iter().map(Vec::len).sum();
+    assert_eq!(sc.gaps.len(), n_streams, "one arrival gap per stream");
+    let coord = Coordinator::start_naive(sc.cfg, sc.router).expect("start");
+
     let t0 = Instant::now();
     let mut clients = Vec::new();
-    for (stream, gap) in streams.into_iter().zip(gaps) {
+    for (idx, (stream, gap)) in sc.streams.into_iter().zip(sc.gaps).enumerate() {
         std::thread::sleep(gap.min(Duration::from_millis(10)));
         let opened = Instant::now();
         let handle = coord.submit_stream(stream);
-        clients.push(std::thread::spawn(move || {
-            let mut ttft_us = None;
-            let mut itl_us = Vec::new();
-            let mut lat_us = Vec::new();
-            let mut last: Option<Instant> = None;
-            let mut tokens = 0u64;
-            while let Some(ev) = handle.recv() {
-                match ev {
-                    StreamEvent::Token(resp) => {
-                        let now = Instant::now();
-                        lat_us.push(resp.latency_us as f64);
-                        resp.output.expect("mixed scenario response ok");
-                        if ttft_us.is_none() {
-                            ttft_us = Some(now.duration_since(opened).as_secs_f64() * 1e6);
-                        } else if let Some(prev) = last {
-                            itl_us.push(now.duration_since(prev).as_secs_f64() * 1e6);
-                        }
-                        last = Some(now);
-                        tokens += 1;
-                    }
-                    StreamEvent::Done { tokens: served, .. } => {
-                        assert_eq!(served, tokens, "stream must serve all its requests");
-                        break;
-                    }
-                }
-            }
-            (ttft_us.expect("at least one token per stream"), itl_us, lat_us)
-        }));
+        let abandon = sc.abandon_odd_clients && idx % 2 == 1;
+        clients.push(std::thread::spawn(move || client_loop(handle, opened, abandon)));
     }
     let (mut ttfts, mut itls, mut lats) = (Vec::new(), Vec::new(), Vec::new());
+    let (mut client_errors, mut client_abandoned) = (0u64, 0u64);
     for c in clients {
-        let (t, i, l) = c.join().expect("client thread");
-        ttfts.push(t);
-        itls.extend(i);
-        lats.extend(l);
+        let rep = c.join().expect("client thread");
+        ttfts.extend(rep.ttft_us);
+        itls.extend(rep.itl_us);
+        lats.extend(rep.lat_us);
+        client_errors += rep.errors;
+        client_abandoned += rep.abandoned as u64;
     }
     let wall_s = t0.elapsed().as_secs_f64();
-    let snap = coord.metrics.snapshot();
-    assert_eq!(snap.errors, 0, "mixed scenario must serve cleanly");
-    assert_eq!(snap.streams_completed, sessions as u64);
+
+    // Abandoning clients return before their streams terminate server-
+    // side; wait for the worker to drain every stream so the snapshot's
+    // counters are settled, not racing the drain.
+    let settle_deadline = Instant::now() + Duration::from_secs(60);
+    let snap = loop {
+        let snap = coord.metrics.snapshot();
+        if snap.streams_completed >= n_streams as u64 {
+            break snap;
+        }
+        assert!(
+            Instant::now() < settle_deadline,
+            "{}: only {}/{n_streams} streams terminated",
+            sc.name,
+            snap.streams_completed
+        );
+        std::thread::sleep(Duration::from_millis(2));
+    };
+    assert_eq!(snap.streams_completed, n_streams as u64, "{}", sc.name);
+    if sc.expect_clean {
+        assert_eq!(snap.errors, 0, "{}: scenario must serve cleanly", sc.name);
+        assert_eq!(client_errors, 0, "{}: clients saw error tokens", sc.name);
+        assert_eq!(snap.streams_abandoned, 0, "{}", sc.name);
+    }
+    if sc.abandon_odd_clients {
+        // A dropped handle is only observed when the worker's NEXT send
+        // fails, so a stream fully drained into the channel buffer before
+        // the drop escapes detection — the count is bounded by the
+        // clients that dropped, and with many pending decodes per
+        // abandoner at least one drop always lands mid-generation.
+        assert!(
+            (1..=client_abandoned).contains(&snap.streams_abandoned),
+            "{}: {} abandoned streams detected, {} clients dropped handles",
+            sc.name,
+            snap.streams_abandoned,
+            client_abandoned
+        );
+    }
     println!(
-        "{name:<26} {total_reqs:>4} reqs {wall_s:6.3}s  ttft p50={:>8.0}µs p99={:>8.0}µs  \
-         itl p50={:>7.0}µs p99={:>7.0}µs",
+        "{:<34} {total_reqs:>4} reqs {wall_s:6.3}s  ttft p50={:>8.0}µs p99={:>8.0}µs  \
+         itl p50={:>7.0}µs p99={:>7.0}µs  rej={} evi={} aband={} err={}",
+        sc.name,
         flashd::util::percentile(&ttfts, 50.0),
         flashd::util::percentile(&ttfts, 99.0),
         flashd::util::percentile(&itls, 50.0),
         flashd::util::percentile(&itls, 99.0),
+        snap.queue_rejections,
+        snap.kv_block_evictions,
+        snap.streams_abandoned,
+        snap.errors,
     );
     Json::Obj(BTreeMap::from([
-        ("name".to_string(), Json::Str(name.to_string())),
-        ("policy".to_string(), Json::Str(format!("{policy:?}"))),
-        ("fused".to_string(), Json::Bool(fused)),
-        ("streams".to_string(), Json::Num(sessions as f64)),
+        ("name".to_string(), Json::Str(sc.name.to_string())),
+        ("policy".to_string(), Json::Str(format!("{:?}", sc.policy))),
+        ("fused".to_string(), Json::Bool(sc.fused)),
+        ("streams".to_string(), Json::Num(n_streams as f64)),
         ("requests".to_string(), Json::Num(total_reqs as f64)),
         ("wall_s".to_string(), Json::Num(wall_s)),
+        // -- the per-cell SLO block ---------------------------------------
         ("ttft_us".to_string(), pctiles(&ttfts)),
         ("itl_us".to_string(), pctiles(&itls)),
         ("latency_us".to_string(), pctiles(&lats)),
+        ("rejected".to_string(), Json::Num(snap.queue_rejections as f64)),
+        ("evicted".to_string(), Json::Num(snap.kv_block_evictions as f64)),
+        ("abandoned".to_string(), Json::Num(snap.streams_abandoned as f64)),
+        ("errors".to_string(), Json::Num(snap.errors as f64)),
+        ("completed".to_string(), Json::Num(snap.streams_completed as f64)),
+        // server-side histogram percentiles (saturate finitely past 100ms)
+        ("server_ttft_p99_us".to_string(), Json::Num(snap.ttft.percentile_us(99.0) as f64)),
+        ("server_itl_p99_us".to_string(), Json::Num(snap.itl.percentile_us(99.0) as f64)),
         ("queue_wait_mean_us".to_string(), Json::Num(snap.queue_wait.mean_us())),
         ("admission_deferrals".to_string(), Json::Num(snap.admission_deferrals as f64)),
+        ("fused_cycles".to_string(), Json::Num(snap.fused_cycles as f64)),
+        ("fused_submissions".to_string(), Json::Num(snap.fused_submissions as f64)),
     ]))
 }
 
-/// Write the mixed-scenario matrix to the committed `BENCH_serving.json`
-/// (CI validates the per-scenario TTFT/inter-token percentile blocks).
+/// Write the scenario matrix to the committed `BENCH_serving.json`
+/// (CI validates every cell's SLO block: TTFT/ITL/latency percentile
+/// blocks plus the rejected/evicted/abandoned counters).
 fn write_bench_serving_json(scenarios: Vec<Json>, path: &str) {
     let obj = BTreeMap::from([
         ("suite".to_string(), Json::Str("coordinator_serving_mixed".to_string())),
@@ -241,12 +326,19 @@ fn write_bench_serving_json(scenarios: Vec<Json>, path: &str) {
             "note".to_string(),
             Json::Str(
                 "regenerate with `cargo bench --bench coordinator_serving` \
-                 (FLASHD_BENCH_FAST=1 for a smoke run); mixed prefill+decode \
-                 streaming scenarios through Coordinator::submit_stream under \
-                 continuous batching — client-measured TTFT, inter-token gap, \
-                 and per-request latency percentiles (µs) for each policy x \
-                 dispatch-mode cell, with every 4th stream fronted by a long \
-                 prefill as the head-of-line stimulus"
+                 (FLASHD_BENCH_FAST=1 for a smoke run); trace-driven streaming \
+                 scenarios through Coordinator::submit_stream under continuous \
+                 batching. Cells: mixed_* = policy x dispatch matrix with every \
+                 4th stream fronted by a long prefill; sampled_lengths = \
+                 ShareGPT-like lognormal prompt/response lengths; bursty = \
+                 on-off modulated Poisson arrivals; abandonment = clients drop \
+                 their StreamHandle mid-generation; long_context_nkv64k = \
+                 65536-token prefills through the paged pool; \
+                 churn_tiny_sessions = hundreds of tiny sessions under a small \
+                 KV budget (LRU eviction); conflict_storm = every stream on one \
+                 session (fusion-group splits). Each cell carries an SLO block: \
+                 client-measured ttft_us/itl_us/latency_us {p50,p99,count} in \
+                 µs plus rejected/evicted/abandoned/errors/completed counters"
                     .to_string(),
             ),
         ),
@@ -411,19 +503,256 @@ fn main() {
     }
     sb.note("fused_over_serial_sessions8_nkv2048_d64", serial_s / fused_s);
 
-    // -- mixed prefill+decode scenario matrix (continuous batching) ------
-    // Streaming lifecycles with long prefills salted in: measures TTFT and
-    // inter-token latency under head-of-line pressure, per policy x
-    // dispatch mode, into the committed BENCH_serving.json.
-    println!("\n=== mixed prefill+decode streaming scenarios (TTFT / inter-token latency) ===");
+    // -- trace-driven scenario matrix (continuous batching) --------------
+    // Streaming lifecycles under realistic arrival/length traces: the
+    // policy x dispatch mixed matrix, plus sampled-length, bursty-arrival,
+    // abandonment, long-context, churn, and conflict-storm cells — each
+    // emitting its SLO block into the committed BENCH_serving.json.
+    println!("\n=== trace-driven streaming scenarios (TTFT / inter-token latency / SLO counters) ===");
+    let mixed_workload = |seed: u64| MixedSpec {
+        spec: WorkloadSpec {
+            sessions: if fast { 6 } else { 16 },
+            prefill_len: 128,
+            decode_steps: if fast { 8 } else { 24 },
+            sig: ShapeSig { heads: 2, head_dim: 64 },
+            variant: Variant::FlashD,
+            seed,
+        },
+        long_every: 4,
+        long_prefill_len: 1536,
+        ..Default::default()
+    };
     let mut scenarios = Vec::new();
+
+    // (1) the policy x dispatch-mode matrix under the long-prefill salt
     for (name, policy, fused, seed) in [
         ("mixed_fifo_fused", Policy::Fifo, true, 0xA11CE_u64),
         ("mixed_fifo_serial", Policy::Fifo, false, 0xA11CF),
         ("mixed_decodefirst_fused", Policy::DecodeFirst, true, 0xA11D0),
         ("mixed_decodefirst_serial", Policy::DecodeFirst, false, 0xA11D1),
     ] {
-        scenarios.push(run_mixed_scenario(name, policy, fused, seed, fast));
+        let streams = mixed_streams(&mixed_workload(3), 1_000_000);
+        let gaps = poisson_arrival_gaps(seed, 200.0, streams.len());
+        scenarios.push(run_scenario(Scenario {
+            name,
+            policy,
+            fused,
+            router: fused_sweep_router(),
+            cfg: CoordinatorConfig { policy, fused, ..Default::default() },
+            streams,
+            gaps,
+            abandon_odd_clients: false,
+            expect_clean: true,
+        }));
+    }
+
+    // (2) ShareGPT-like sampled lengths: lognormal prompt/response token
+    // counts instead of fixed shapes — the long tail is the stimulus.
+    {
+        let mix = MixedSpec {
+            long_every: 0,
+            prompt_len: Some(LengthDist::lognormal(96.0, 0.8, 8, 1024)),
+            response_len: Some(LengthDist::lognormal(
+                if fast { 6.0 } else { 12.0 },
+                0.7,
+                2,
+                if fast { 16 } else { 48 },
+            )),
+            ..mixed_workload(3)
+        };
+        let streams = mixed_streams(&mix, 2_000_000);
+        let gaps = poisson_arrival_gaps(0xA11D2, 200.0, streams.len());
+        scenarios.push(run_scenario(Scenario {
+            name: "sampled_lengths_fifo_fused",
+            policy: Policy::Fifo,
+            fused: true,
+            router: fused_sweep_router(),
+            cfg: CoordinatorConfig { policy: Policy::Fifo, ..Default::default() },
+            streams,
+            gaps,
+            abandon_odd_clients: false,
+            expect_clean: true,
+        }));
+    }
+
+    // (3) bursty arrivals: on-off modulated Poisson — packed arrival
+    // bursts separated by idle dwells, the overload-then-drain stimulus.
+    {
+        let streams = mixed_streams(&mixed_workload(3), 3_000_000);
+        let burst = BurstSpec {
+            burst_rate_hz: 1_000.0,
+            idle_rate_hz: 25.0,
+            mean_burst_s: 0.02,
+            mean_idle_s: 0.04,
+        };
+        let gaps = bursty_arrival_gaps(0xA11D3, &burst, streams.len());
+        scenarios.push(run_scenario(Scenario {
+            name: "bursty_decodefirst_fused",
+            policy: Policy::DecodeFirst,
+            fused: true,
+            router: fused_sweep_router(),
+            cfg: CoordinatorConfig::default(),
+            streams,
+            gaps,
+            abandon_odd_clients: false,
+            expect_clean: true,
+        }));
+    }
+
+    // (4) client abandonment: odd-indexed clients drop their StreamHandle
+    // after the first token, exercising the worker's client-gone abort
+    // and slot-free path mid-generation.
+    {
+        let streams = mixed_streams(&mixed_workload(3), 4_000_000);
+        let gaps = poisson_arrival_gaps(0xA11D4, 200.0, streams.len());
+        scenarios.push(run_scenario(Scenario {
+            name: "abandonment_fifo_fused",
+            policy: Policy::Fifo,
+            fused: true,
+            router: fused_sweep_router(),
+            cfg: CoordinatorConfig { policy: Policy::Fifo, ..Default::default() },
+            streams,
+            gaps,
+            abandon_odd_clients: true,
+            expect_clean: false,
+        }));
+    }
+
+    // (5) long-context prefill: 64k-token contexts through the paged
+    // block pool (a dedicated 1-head router keeps the per-session KV at
+    // ~33 MB so a few sessions fit the default 256 MB budget).
+    {
+        let router = Router::from_manifest(
+            &Manifest::parse(
+                r#"{"artifacts": {
+              "attn_flashd_h1_l66048_d64": {"file":"l","kind":"attention","variant":"flashd","causal":false,
+                "heads":1,"seq":66048,"head_dim":64,"inputs":[],"n_outputs":1}
+            }}"#,
+            )
+            .expect("long-context manifest"),
+        );
+        let mix = MixedSpec {
+            spec: WorkloadSpec {
+                sessions: if fast { 2 } else { 3 },
+                prefill_len: 65_536,
+                decode_steps: if fast { 3 } else { 6 },
+                sig: ShapeSig { heads: 1, head_dim: 64 },
+                variant: Variant::FlashD,
+                seed: 5,
+            },
+            long_every: 0,
+            ..Default::default()
+        };
+        let streams = mixed_streams(&mix, 5_000_000);
+        let gaps = poisson_arrival_gaps(0xA11D5, 50.0, streams.len());
+        let cell = run_scenario(Scenario {
+            name: "long_context_nkv64k_fifo_fused",
+            policy: Policy::Fifo,
+            fused: true,
+            router,
+            cfg: CoordinatorConfig { policy: Policy::Fifo, ..Default::default() },
+            streams,
+            gaps,
+            abandon_odd_clients: false,
+            expect_clean: true,
+        });
+        assert!(
+            cell.get("requests").and_then(Json::as_f64).unwrap_or(0.0) > 0.0,
+            "long-context cell must serve its 64k-prefill streams"
+        );
+        scenarios.push(cell);
+    }
+
+    // (6) many-tiny-sessions churn: hundreds of 1-prefill/2-decode
+    // lifecycles against a 16-block KV budget — completed sessions must
+    // be LRU-evicted to admit new ones (evictions are the point, so the
+    // cell reports rather than forbids them). A dedicated 64-context
+    // router keeps the per-session worst-case reservation (2 blocks) far
+    // under the budget; the 2048-context router's 64-block worst case
+    // would fail session creation outright.
+    {
+        let router = Router::from_manifest(
+            &Manifest::parse(
+                r#"{"artifacts": {
+              "attn_flashd_h2_l64_d64": {"file":"c","kind":"attention","variant":"flashd","causal":false,
+                "heads":2,"seq":64,"head_dim":64,"inputs":[],"n_outputs":1}
+            }}"#,
+            )
+            .expect("churn manifest"),
+        );
+        let mix = MixedSpec {
+            spec: WorkloadSpec {
+                sessions: if fast { 64 } else { 192 },
+                prefill_len: 24,
+                decode_steps: 2,
+                sig: ShapeSig { heads: 2, head_dim: 64 },
+                variant: Variant::FlashD,
+                seed: 7,
+            },
+            long_every: 0,
+            ..Default::default()
+        };
+        let streams = mixed_streams(&mix, 6_000_000);
+        let gaps = poisson_arrival_gaps(0xA11D6, 2_000.0, streams.len());
+        let cell = run_scenario(Scenario {
+            name: "churn_tiny_sessions_fifo_fused",
+            policy: Policy::Fifo,
+            fused: true,
+            router,
+            cfg: CoordinatorConfig {
+                policy: Policy::Fifo,
+                // 16 blocks of 2 heads x 32 steps x 64 dims x 4 B x {K,V}
+                kv_budget_bytes: 16 * 2 * 2 * 32 * 64 * 4,
+                max_concurrent_streams: 8,
+                ..Default::default()
+            },
+            streams,
+            gaps,
+            abandon_odd_clients: false,
+            expect_clean: false,
+        });
+        assert!(
+            cell.get("evicted").and_then(Json::as_f64).unwrap_or(0.0) > 0.0,
+            "churn cell must force LRU block evictions"
+        );
+        scenarios.push(cell);
+    }
+
+    // (7) adversarial same-session conflict storm: every stream runs a
+    // full prefill+decode lifecycle on session 0, so the fused dispatcher
+    // must split its fusion groups on every cycle (re-prefills replace
+    // the cache the in-group decodes borrow).
+    {
+        let spec = WorkloadSpec {
+            sessions: 1,
+            prefill_len: 64,
+            decode_steps: if fast { 4 } else { 8 },
+            sig: ShapeSig { heads: 2, head_dim: 64 },
+            variant: Variant::FlashD,
+            seed: 11,
+        };
+        let n = if fast { 6 } else { 12 };
+        let mut next_id = 7_000_000u64;
+        let streams: Vec<_> = (0..n)
+            .map(|_| {
+                let reqs = session_requests(&spec, 0, next_id);
+                next_id += reqs.len() as u64;
+                reqs
+            })
+            .collect();
+        let gaps = vec![Duration::ZERO; n];
+        let cell = run_scenario(Scenario {
+            name: "conflict_storm_same_session_fused",
+            policy: Policy::Fifo,
+            fused: true,
+            router: fused_sweep_router(),
+            cfg: CoordinatorConfig { policy: Policy::Fifo, ..Default::default() },
+            streams,
+            gaps,
+            abandon_odd_clients: false,
+            expect_clean: true,
+        });
+        scenarios.push(cell);
     }
     write_bench_serving_json(scenarios, "BENCH_serving.json");
 

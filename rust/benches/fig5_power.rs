@@ -4,11 +4,15 @@
 //! prompts — the analogue of the paper's PowerPro runs over PromptBench
 //! traces. Falls back to synthetic stimulus when no weights exist yet.
 //!
-//! Emits reports/fig5.csv.
+//! Emits reports/fig5.csv plus reports/fig5.json (which records whether
+//! the stimulus was measured from a real model or fell back to the
+//! synthetic default, and why).
 
-use flashd::bench_harness::traces;
+use flashd::bench_harness::traces::{self, TraceSource};
 use flashd::hw::{power, CostDb, Format};
 use flashd::numerics::{Bf16, Fp8E4M3};
+use flashd::util::json::Json;
+use std::collections::BTreeMap;
 
 fn main() {
     println!("=== Fig. 5: average power at 28 nm / 500 MHz ===\n");
@@ -17,8 +21,14 @@ fn main() {
 
     let prompts = if std::env::var("FLASHD_BENCH_FAST").is_ok() { 1 } else { 2 };
     println!("measuring switching activity from model traces ({prompts} prompts/suite) ...");
-    let act16 = traces::measured_activity::<Bf16>(&dir, prompts);
-    let act8 = traces::measured_activity::<Fp8E4M3>(&dir, prompts);
+    let (act16, source) = traces::measured_activity_traced::<Bf16>(&dir, prompts);
+    let (act8, _) = traces::measured_activity_traced::<Fp8E4M3>(&dir, prompts);
+    match &source {
+        TraceSource::Measured { model } => println!("  stimulus: traces of model {model}"),
+        TraceSource::Synthetic { reason } => {
+            println!("  stimulus: SYNTHETIC fallback — {reason}");
+        }
+    }
     println!(
         "  bf16: alpha_kv={:.3} alpha_score={:.3} alpha_nonlin={:.3} skip={:.2}% ({} queries)",
         act16.alpha_kv, act16.alpha_score, act16.alpha_nonlin,
@@ -50,5 +60,37 @@ fn main() {
 
     std::fs::create_dir_all("reports").ok();
     std::fs::write("reports/fig5.csv", power::to_csv(&rows)).unwrap();
-    println!("\nwrote reports/fig5.csv");
+
+    // Machine-readable companion: the power rows plus stimulus
+    // provenance — `synthetic_fallback` is null when the activity came
+    // from real model traces, else the reason measurement fell back.
+    let json_rows: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            Json::Obj(BTreeMap::from([
+                ("format".to_string(), Json::Str(r.fmt.name().to_string())),
+                ("d".to_string(), Json::Num(r.d as f64)),
+                ("fa2_mw".to_string(), Json::Num(r.fa2_mw)),
+                ("flashd_mw".to_string(), Json::Num(r.flashd_mw)),
+                ("saving_pct".to_string(), Json::Num(r.saving_pct)),
+            ]))
+        })
+        .collect();
+    let fallback = match &source {
+        TraceSource::Measured { .. } => Json::Null,
+        TraceSource::Synthetic { reason } => Json::Str(reason.clone()),
+    };
+    let stimulus_model = match &source {
+        TraceSource::Measured { model } => Json::Str(model.clone()),
+        TraceSource::Synthetic { .. } => Json::Null,
+    };
+    let obj = BTreeMap::from([
+        ("suite".to_string(), Json::Str("fig5_power".to_string())),
+        ("rows".to_string(), Json::Arr(json_rows)),
+        ("avg_saving_pct".to_string(), Json::Num(avg)),
+        ("stimulus_model".to_string(), stimulus_model),
+        ("synthetic_fallback".to_string(), fallback),
+    ]);
+    std::fs::write("reports/fig5.json", Json::Obj(obj).to_string()).unwrap();
+    println!("\nwrote reports/fig5.csv and reports/fig5.json");
 }

@@ -1,6 +1,32 @@
 //! Shared benchmark infrastructure: the PromptBench-substitute suites, the
-//! Table I skip study, trace capture for the power model, and serving
-//! workload generation.
+//! Table I skip study, trace capture for the power model, and the
+//! trace-driven serving load harness.
+//!
+//! # Serving load harness
+//!
+//! [`workload`] generates request lifecycles (prefill + decode streams,
+//! ShareGPT-like lognormal [`workload::LengthDist`] prompt/response
+//! lengths) and [`traces`] generates arrival processes (plain Poisson
+//! and on-off modulated bursty gaps via [`traces::bursty_arrival_gaps`]).
+//! `benches/coordinator_serving.rs` combines them into the scenario
+//! matrix written to the committed `BENCH_serving.json`:
+//!
+//! | cell | stimulus |
+//! |------|----------|
+//! | `mixed_{fifo,decodefirst}_{fused,serial}` | policy x dispatch matrix, every 4th stream fronted by a long prefill |
+//! | `sampled_lengths_*` | lognormal prompt/response token counts (long-tail lengths) |
+//! | `bursty_*` | on-off modulated Poisson arrivals (overload-then-drain) |
+//! | `abandonment_*` | clients drop their `StreamHandle` mid-generation |
+//! | `long_context_nkv64k_*` | 64k-token prefills through the paged KV pool |
+//! | `churn_tiny_sessions_*` | hundreds of tiny sessions under a small KV budget (LRU eviction) |
+//! | `conflict_storm_same_session_*` | every stream on one session (fusion-group splits) |
+//!
+//! Every cell carries an SLO block: client-measured `ttft_us`, `itl_us`,
+//! and `latency_us` percentile objects (`{p50, p99, count}`, µs) plus the
+//! `rejected` / `evicted` / `abandoned` / `errors` / `completed` counters
+//! from the server metrics snapshot. CI validates the full schema for
+//! every cell after the smoke run. Everything is seeded and replays
+//! deterministically; only walltimes vary between runs.
 
 pub mod suites;
 pub mod table1;

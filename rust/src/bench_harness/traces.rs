@@ -3,8 +3,10 @@
 //! measures toggle activity on, mirroring the paper's "average power
 //! measured after executing attention kernels for various LLMs".
 //!
-//! Also provides deterministic open-loop arrival traces
-//! ([`poisson_arrival_gaps`]) for the serving benches.
+//! Also provides deterministic open-loop arrival traces for the serving
+//! load harness: [`poisson_arrival_gaps`] (memoryless arrivals) and
+//! [`bursty_arrival_gaps`] (an on-off modulated Poisson process, the
+//! standard model for bursty production traffic).
 
 use crate::bench_harness::suites::ALL_SUITES;
 use crate::hw::activity::{self, ActivityStats};
@@ -12,7 +14,8 @@ use crate::kernels::AttnProblem;
 use crate::model::engine::Engine;
 use crate::model::tokenizer::ByteTokenizer;
 use crate::numerics::Scalar;
-use anyhow::Result;
+use crate::runtime::Manifest;
+use anyhow::{anyhow, Result};
 use std::path::Path;
 use std::time::Duration;
 
@@ -32,6 +35,80 @@ pub fn poisson_arrival_gaps(seed: u64, rate_hz: f64, n: usize) -> Vec<Duration> 
         .collect()
 }
 
+/// Parameters of an on-off modulated Poisson arrival process (a 2-state
+/// MMPP): arrivals are Poisson at `burst_rate_hz` while the modulating
+/// state is ON and at `idle_rate_hz` while OFF, with exponentially
+/// distributed state dwell times. The result is the super-Poisson
+/// burstiness (squared coefficient of variation well above 1) that
+/// production request traces show and a plain Poisson trace cannot.
+#[derive(Clone, Copy, Debug)]
+pub struct BurstSpec {
+    /// Arrival rate while bursting (Hz).
+    pub burst_rate_hz: f64,
+    /// Background arrival rate between bursts (Hz).
+    pub idle_rate_hz: f64,
+    /// Mean dwell time in the bursting state (seconds).
+    pub mean_burst_s: f64,
+    /// Mean dwell time in the idle state (seconds).
+    pub mean_idle_s: f64,
+}
+
+impl Default for BurstSpec {
+    fn default() -> Self {
+        BurstSpec {
+            burst_rate_hz: 2_000.0,
+            idle_rate_hz: 20.0,
+            mean_burst_s: 0.05,
+            mean_idle_s: 0.05,
+        }
+    }
+}
+
+/// Deterministic inter-arrival gaps for the on-off modulated Poisson
+/// process described by `spec` — same contract as
+/// [`poisson_arrival_gaps`] (gap `i` is the wait before arrival `i`).
+/// The process starts in the bursting state; by the exponential's
+/// memorylessness, the time-to-next-arrival is resampled at the new rate
+/// whenever the modulating state flips mid-wait.
+pub fn bursty_arrival_gaps(seed: u64, spec: &BurstSpec, n: usize) -> Vec<Duration> {
+    assert!(spec.burst_rate_hz > 0.0 && spec.idle_rate_hz > 0.0, "rates must be positive");
+    assert!(spec.mean_burst_s > 0.0 && spec.mean_idle_s > 0.0, "dwell means must be positive");
+    let mut rng = crate::util::rng::Rng::new(seed);
+    let exp = |rng: &mut crate::util::rng::Rng, rate: f64| -(1.0 - rng.uniform()).ln() / rate;
+    let mut bursting = true;
+    let mut dwell_left = exp(&mut rng, 1.0 / spec.mean_burst_s);
+    let mut gaps = Vec::with_capacity(n);
+    // time already waited on the current gap, across state flips
+    let mut elapsed = 0.0;
+    while gaps.len() < n {
+        let rate = if bursting { spec.burst_rate_hz } else { spec.idle_rate_hz };
+        let wait = exp(&mut rng, rate);
+        if wait <= dwell_left {
+            dwell_left -= wait;
+            gaps.push(Duration::from_secs_f64(elapsed + wait));
+            elapsed = 0.0;
+        } else {
+            // the state flips before the arrival lands: the remaining
+            // dwell is waited out, then the wait restarts at the new
+            // state's rate. Discarding the partial wait is legitimate —
+            // exponential waits are memoryless.
+            elapsed += dwell_left;
+            bursting = !bursting;
+            let mean = if bursting { spec.mean_burst_s } else { spec.mean_idle_s };
+            dwell_left = exp(&mut rng, 1.0 / mean);
+        }
+    }
+    gaps
+}
+
+/// The model trace capture uses when a manifest lists several: the
+/// lexicographically-first name. Explicit ordering (not map iteration
+/// order) so the Fig. 5 power stimulus cannot silently switch models
+/// between two loads of the same manifest.
+pub fn representative_model(man: &Manifest) -> Option<&str> {
+    man.models.keys().map(String::as_str).min()
+}
+
 /// Capture attention problems from a model over suite prompts.
 pub fn capture_problems(engine: &Engine, prompts_per_suite: usize, seed: u64) -> Vec<AttnProblem> {
     let tok = ByteTokenizer;
@@ -47,32 +124,63 @@ pub fn capture_problems(engine: &Engine, prompts_per_suite: usize, seed: u64) ->
     problems
 }
 
-/// Measure activity for a format from real model traces; falls back to the
-/// synthetic default when no models/weights are available.
-pub fn measured_activity<T: Scalar>(dir: &Path, prompts_per_suite: usize) -> ActivityStats {
-    match activity_from_models::<T>(dir, prompts_per_suite) {
-        Ok(a) if a.n_queries > 0 => a,
-        _ => {
-            // Synthetic fallback: random attention problems at a trained-
-            // model score scale.
-            let mut rng = crate::util::rng::Rng::new(0xAC71);
-            let problems: Vec<AttnProblem> = (0..8)
-                .map(|_| AttnProblem::random(&mut rng, 4, 64, 32, 2.0))
-                .collect();
-            activity::measure::<T>(&problems)
-        }
-    }
+/// Where trace-capture activity stats came from: a real model, or the
+/// synthetic fallback (with the reason measurement was impossible — a
+/// corrupt manifest reads differently from "no models trained yet").
+#[derive(Clone, Debug, PartialEq)]
+pub enum TraceSource {
+    /// Measured from `model`'s attention traces over the suite prompts.
+    Measured { model: String },
+    /// Synthetic random stimulus; `reason` says why measurement failed.
+    Synthetic { reason: String },
 }
 
-fn activity_from_models<T: Scalar>(dir: &Path, prompts_per_suite: usize) -> Result<ActivityStats> {
-    let man = crate::runtime::Manifest::load(dir)?;
-    let mut problems = Vec::new();
-    // One model is representative for toggle statistics; use the first.
-    if let Some(name) = man.models.keys().next() {
-        let engine = Engine::from_artifacts(dir, name)?;
-        problems.extend(capture_problems(&engine, prompts_per_suite, 11));
+/// Measure activity for a format from real model traces, reporting where
+/// the stats came from. Falls back to a synthetic stimulus when no
+/// models/weights are available — the [`TraceSource::Synthetic`] reason
+/// distinguishes a corrupt manifest from a merely absent one.
+pub fn measured_activity_traced<T: Scalar>(
+    dir: &Path,
+    prompts_per_suite: usize,
+) -> (ActivityStats, TraceSource) {
+    let reason = match activity_from_models::<T>(dir, prompts_per_suite) {
+        Ok((a, model)) if a.n_queries > 0 => {
+            return (a, TraceSource::Measured { model });
+        }
+        Ok((_, model)) => format!("model {model} produced no attention traces"),
+        Err(e) => e.to_string(),
+    };
+    // Synthetic fallback: random attention problems at a trained-model
+    // score scale.
+    let mut rng = crate::util::rng::Rng::new(0xAC71);
+    let problems: Vec<AttnProblem> =
+        (0..8).map(|_| AttnProblem::random(&mut rng, 4, 64, 32, 2.0)).collect();
+    (activity::measure::<T>(&problems), TraceSource::Synthetic { reason })
+}
+
+/// [`measured_activity_traced`] minus the provenance, logging the
+/// fallback reason to stderr instead of swallowing it.
+pub fn measured_activity<T: Scalar>(dir: &Path, prompts_per_suite: usize) -> ActivityStats {
+    let (a, src) = measured_activity_traced::<T>(dir, prompts_per_suite);
+    if let TraceSource::Synthetic { reason } = &src {
+        eprintln!("trace capture: synthetic fallback ({reason})");
     }
-    Ok(activity::measure::<T>(&problems))
+    a
+}
+
+fn activity_from_models<T: Scalar>(
+    dir: &Path,
+    prompts_per_suite: usize,
+) -> Result<(ActivityStats, String)> {
+    let man = Manifest::load(dir)?;
+    // One model is representative for toggle statistics; the selection
+    // must be deterministic across loads (see `representative_model`).
+    let name = representative_model(&man)
+        .ok_or_else(|| anyhow!("manifest at {} lists no models", dir.display()))?
+        .to_string();
+    let engine = Engine::from_artifacts(dir, &name)?;
+    let problems = capture_problems(&engine, prompts_per_suite, 11);
+    Ok((activity::measure::<T>(&problems), name))
 }
 
 #[cfg(test)]
@@ -85,6 +193,63 @@ mod tests {
         let a = measured_activity::<Bf16>(Path::new("/nonexistent"), 1);
         assert!(a.alpha_kv > 0.05 && a.alpha_kv < 0.7);
         assert!(a.n_queries > 0);
+    }
+
+    /// The fallback must say *why* it fell back — a missing manifest is
+    /// a diagnosable reason, not a silently swallowed error.
+    #[test]
+    fn fallback_reason_is_surfaced() {
+        let (a, src) = measured_activity_traced::<Bf16>(Path::new("/nonexistent"), 1);
+        assert!(a.n_queries > 0);
+        match src {
+            TraceSource::Synthetic { reason } => {
+                assert!(!reason.is_empty(), "fallback reason must be non-empty");
+            }
+            other => panic!("expected synthetic fallback, got {other:?}"),
+        }
+    }
+
+    /// Regression: trace capture must pick the same model on every load
+    /// of the same manifest — the lexicographically-first name, not
+    /// whatever a map's iteration order happens to yield.
+    #[test]
+    fn representative_model_is_deterministic_lexicographic() {
+        let model = r#"{"config": {"vocab_size": 256, "seq_len": 64, "d_model": 32,
+            "n_heads": 4, "n_layers": 2, "d_ff": 64, "block_q": 16, "block_k": 16},
+            "param_spec": []}"#;
+        let text = format!(
+            r#"{{"artifacts": {{}}, "models": {{"zeta-late": {model}, "alpha-first": {model}, "mid-way": {model}}}}}"#
+        );
+        let a = Manifest::parse(&text).expect("manifest parses");
+        let b = Manifest::parse(&text).expect("manifest parses");
+        assert_eq!(representative_model(&a), representative_model(&b));
+        assert_eq!(representative_model(&a), Some("alpha-first"));
+        assert_eq!(representative_model(&Manifest::parse(r#"{"artifacts": {}}"#).unwrap()), None);
+    }
+
+    #[test]
+    fn bursty_gaps_deterministic_and_separate_rates() {
+        let spec = BurstSpec::default();
+        let a = bursty_arrival_gaps(0xB005, &spec, 4096);
+        let b = bursty_arrival_gaps(0xB005, &spec, 4096);
+        assert_eq!(a, b, "same seed must replay the same trace");
+        assert_ne!(a[..8], bursty_arrival_gaps(0x1D1E, &spec, 8)[..]);
+        let xs: Vec<f64> = a.iter().map(Duration::as_secs_f64).collect();
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        // the blended arrival rate sits strictly between the two phase
+        // rates — and clear of either, proving both phases contribute
+        assert!(mean > 1.0 / spec.burst_rate_hz * 1.25, "mean gap {mean} ~ pure burst");
+        assert!(mean < 1.0 / spec.idle_rate_hz / 4.0, "mean gap {mean} ~ pure idle");
+        // burstiness: squared coefficient of variation far above the
+        // exponential's 1 — the whole point of the on-off modulation
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64;
+        let cv2 = var / (mean * mean);
+        assert!(cv2 > 3.0, "gaps are not super-Poisson: cv^2 = {cv2}");
+        // most arrivals land inside bursts: the median gap is a burst-
+        // phase gap, an order of magnitude under the idle phase's mean
+        let mut sorted = xs.clone();
+        sorted.sort_by(|p, q| p.partial_cmp(q).unwrap());
+        assert!(sorted[xs.len() / 2] < 1.0 / spec.idle_rate_hz / 10.0);
     }
 
     #[test]

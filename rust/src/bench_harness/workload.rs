@@ -1,10 +1,44 @@
 //! Serving workload generation for the coordinator benches: session
 //! lifecycles (prefill then a decode stream) with deterministic pseudo-
-//! random arrival interleaving.
+//! random arrival interleaving, plus ShareGPT-like sampled length
+//! distributions ([`LengthDist`]) so the load harness can replay
+//! realistic long-tailed prompt/response mixes instead of fixed shapes.
 
 use crate::coordinator::request::{AttentionRequest, RequestKind, ShapeSig, Variant};
 use crate::util::rng::Rng;
 use std::time::Instant;
+
+/// A clamped lognormal length sampler — the standard model for
+/// ShareGPT-style prompt/response token counts, whose empirical
+/// distributions are long-tailed in exactly this way. Sampling is
+/// deterministic for a given [`Rng`] state, so a seeded workload replays
+/// bit-identically.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LengthDist {
+    /// Mean of `ln(length)` — `exp(mu)` is the median length.
+    pub mu: f64,
+    /// Stddev of `ln(length)`; larger means a heavier tail.
+    pub sigma: f64,
+    /// Inclusive clamp bounds (tokens).
+    pub min: usize,
+    pub max: usize,
+}
+
+impl LengthDist {
+    /// Lognormal with median `median` tokens and log-stddev `sigma`,
+    /// clamped to `[min, max]`.
+    pub fn lognormal(median: f64, sigma: f64, min: usize, max: usize) -> LengthDist {
+        assert!(median > 0.0 && sigma >= 0.0 && min >= 1 && min <= max);
+        LengthDist { mu: median.ln(), sigma, min, max }
+    }
+
+    /// Draw one length. Consumes exactly one normal variate, so sample
+    /// streams stay aligned across spec changes.
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let x = (self.mu + self.sigma * rng.normal()).exp();
+        (x.round() as usize).clamp(self.min, self.max)
+    }
+}
 
 /// Workload parameters.
 #[derive(Clone, Debug)]
@@ -78,6 +112,13 @@ pub struct MixedSpec {
     /// `long_prefill_len` tokens instead of `spec.prefill_len`.
     pub long_every: usize,
     pub long_prefill_len: usize,
+    /// When set, each session's prefill length is drawn from this
+    /// distribution (seeded off `spec.seed`) instead of the fixed
+    /// `spec.prefill_len`; `long_every` salting still applies on top.
+    pub prompt_len: Option<LengthDist>,
+    /// When set, each session's decode-step count is drawn from this
+    /// distribution instead of the fixed `spec.decode_steps`.
+    pub response_len: Option<LengthDist>,
 }
 
 impl Default for MixedSpec {
@@ -86,22 +127,36 @@ impl Default for MixedSpec {
             spec: WorkloadSpec::default(),
             long_every: 4,
             long_prefill_len: 1024,
+            prompt_len: None,
+            response_len: None,
         }
     }
 }
 
 /// Generate one request lifecycle per session for a mixed scenario —
 /// each inner `Vec` is ready for `Coordinator::submit_stream`. Session
-/// ids are the stream index; request ids are disjoint across streams.
+/// ids are the stream index; request ids are allocated from a running
+/// offset, so they stay disjoint across streams even when per-session
+/// lengths vary (a fixed stride of `decode_steps + 1` would collide the
+/// moment a sampled session outgrows the shared spec).
 pub fn mixed_streams(mix: &MixedSpec, base_id: u64) -> Vec<Vec<AttentionRequest>> {
-    let stride = mix.spec.decode_steps as u64 + 1;
+    let mut len_rng = Rng::new(mix.spec.seed ^ 0x5A3D_C0DE);
+    let mut next_id = base_id;
     (0..mix.spec.sessions)
         .map(|s| {
             let mut spec = mix.spec.clone();
+            if let Some(d) = mix.prompt_len {
+                spec.prefill_len = d.sample(&mut len_rng);
+            }
+            if let Some(d) = mix.response_len {
+                spec.decode_steps = d.sample(&mut len_rng);
+            }
             if mix.long_every > 0 && s % mix.long_every == 0 {
                 spec.prefill_len = mix.long_prefill_len;
             }
-            session_requests(&spec, s as u64, base_id + s as u64 * stride)
+            let reqs = session_requests(&spec, s as u64, next_id);
+            next_id += reqs.len() as u64;
+            reqs
         })
         .collect()
 }
@@ -147,6 +202,7 @@ mod tests {
             spec: WorkloadSpec { sessions: 6, prefill_len: 32, decode_steps: 4, ..Default::default() },
             long_every: 3,
             long_prefill_len: 200,
+            ..Default::default()
         };
         let streams = mixed_streams(&mix, 500);
         assert_eq!(streams.len(), 6);
@@ -167,5 +223,70 @@ mod tests {
         let r = stateless_request(&WorkloadSpec::default(), 9, 4, 32);
         assert!(r.validate().is_ok());
         assert_eq!(r.nq, 4);
+    }
+
+    /// Same Rng state => same sample stream; different seeds diverge.
+    #[test]
+    fn length_dist_deterministic() {
+        let d = LengthDist::lognormal(128.0, 1.0, 8, 2048);
+        let draw = |seed: u64| -> Vec<usize> {
+            let mut rng = Rng::new(seed);
+            (0..256).map(|_| d.sample(&mut rng)).collect()
+        };
+        assert_eq!(draw(7), draw(7), "same seed must replay the same lengths");
+        assert_ne!(draw(7), draw(8));
+    }
+
+    /// Shape bounds: samples respect the clamp, straddle the median, and
+    /// show the lognormal long tail (mean pulled above the median).
+    #[test]
+    fn length_dist_shape_bounds() {
+        let d = LengthDist::lognormal(128.0, 0.8, 8, 4096);
+        let mut rng = Rng::new(0x10C_A1);
+        let xs: Vec<usize> = (0..4096).map(|_| d.sample(&mut rng)).collect();
+        assert!(xs.iter().all(|&x| (8..=4096).contains(&x)));
+        let below = xs.iter().filter(|&&x| x < 128).count() as f64 / xs.len() as f64;
+        // exp(mu) is the median: ~half the mass on each side
+        assert!((0.4..=0.6).contains(&below), "median split off: {below}");
+        let mean = xs.iter().sum::<usize>() as f64 / xs.len() as f64;
+        // lognormal mean = median * exp(sigma^2/2) ~ 1.38x the median
+        assert!(mean > 128.0 * 1.15, "no long tail: mean {mean}");
+        // the clamp actually binds somewhere in a 4096-draw tail
+        let tight = LengthDist::lognormal(128.0, 0.8, 100, 160);
+        let mut rng = Rng::new(0x10C_A2);
+        assert!((0..512).map(|_| tight.sample(&mut rng)).all(|x| (100..=160).contains(&x)));
+    }
+
+    /// Request ids must stay globally unique when per-session lengths
+    /// vary — the old fixed `decode_steps + 1` stride collided as soon as
+    /// a sampled session was longer than the shared spec.
+    #[test]
+    fn mixed_streams_ids_unique_with_sampled_lengths() {
+        let mix = MixedSpec {
+            spec: WorkloadSpec { sessions: 24, decode_steps: 2, ..Default::default() },
+            long_every: 5,
+            long_prefill_len: 96,
+            prompt_len: Some(LengthDist::lognormal(24.0, 1.0, 4, 128)),
+            response_len: Some(LengthDist::lognormal(6.0, 1.0, 2, 40)),
+        };
+        let streams = mixed_streams(&mix, 9_000);
+        let lens: Vec<usize> = streams.iter().map(Vec::len).collect();
+        assert!(lens.iter().any(|&l| l != lens[0]), "sampled lengths must vary: {lens:?}");
+        let mut ids = std::collections::HashSet::new();
+        for stream in &streams {
+            for r in stream {
+                assert!(r.validate().is_ok());
+                assert!(ids.insert(r.id), "duplicate request id {}", r.id);
+            }
+        }
+        // and the whole construction replays bit-identically
+        let replay = mixed_streams(&mix, 9_000);
+        let ids2: Vec<u64> = replay.iter().flatten().map(|r| r.id).collect();
+        let ids1: Vec<u64> = streams.iter().flatten().map(|r| r.id).collect();
+        assert_eq!(ids1, ids2);
+        assert_eq!(
+            streams.iter().flatten().map(|r| r.nkv).collect::<Vec<_>>(),
+            replay.iter().flatten().map(|r| r.nkv).collect::<Vec<_>>(),
+        );
     }
 }

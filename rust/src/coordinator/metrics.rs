@@ -71,8 +71,16 @@ impl HistoSnap {
     }
 }
 
+/// Saturation value reported when a quantile lands in the unbounded
+/// overflow bucket: one past the largest finite bucket bound, so render
+/// shows `>100000µs` and JSON consumers see a finite number instead of
+/// `u64::MAX` µs.
+pub const SATURATED_US: u64 = BUCKETS_US[BUCKETS_US.len() - 2] + 1;
+
 /// Upper bound of the [`BUCKETS_US`] bucket containing quantile `p` (in
-/// percent) of the recorded samples; 0 when empty.
+/// percent) of the recorded samples; 0 when empty. A quantile in the
+/// unbounded overflow bucket saturates to [`SATURATED_US`] rather than
+/// reporting the bucket's `u64::MAX` bound.
 fn bucket_percentile(buckets: &[u64], p: f64) -> u64 {
     let total: u64 = buckets.iter().sum();
     if total == 0 {
@@ -83,10 +91,10 @@ fn bucket_percentile(buckets: &[u64], p: f64) -> u64 {
     for (i, c) in buckets.iter().enumerate() {
         seen += c;
         if seen >= target {
-            return BUCKETS_US[i];
+            return BUCKETS_US[i].min(SATURATED_US);
         }
     }
-    BUCKETS_US[BUCKETS_US.len() - 1]
+    SATURATED_US
 }
 
 /// Shared, thread-safe metrics sink.
@@ -144,6 +152,11 @@ pub struct Metrics {
     pub streams_completed: AtomicU64,
     /// Streams parked by the concurrency limit before activation.
     pub streams_parked: AtomicU64,
+    /// Streams whose client went away mid-generation (the event receiver
+    /// was dropped): the worker aborts the stream, drops its queued
+    /// requests, and frees the slot. Abandoned streams still count under
+    /// `streams_completed` — they reached their terminal state.
+    pub streams_abandoned: AtomicU64,
     /// Admission → cycle-dispatch wait per request.
     pub queue_wait: LatencyHisto,
     /// Stream admission → first token.
@@ -222,6 +235,7 @@ impl Metrics {
             streams_opened: self.streams_opened.load(Ordering::Relaxed),
             streams_completed: self.streams_completed.load(Ordering::Relaxed),
             streams_parked: self.streams_parked.load(Ordering::Relaxed),
+            streams_abandoned: self.streams_abandoned.load(Ordering::Relaxed),
             queue_wait: self.queue_wait.snap(),
             ttft: self.ttft.snap(),
             itl: self.itl.snap(),
@@ -261,6 +275,7 @@ pub struct Snapshot {
     pub streams_opened: u64,
     pub streams_completed: u64,
     pub streams_parked: u64,
+    pub streams_abandoned: u64,
     pub queue_wait: HistoSnap,
     pub ttft: HistoSnap,
     pub itl: HistoSnap,
@@ -303,7 +318,7 @@ impl Snapshot {
 
     pub fn render(&self) -> String {
         let fmt_b = |us: u64| -> String {
-            if us == u64::MAX { ">100000".into() } else { us.to_string() }
+            if us >= SATURATED_US { ">100000".into() } else { us.to_string() }
         };
         format!(
             "requests={} responses={} errors={} rejections={}\n\
@@ -314,7 +329,7 @@ impl Snapshot {
              kv pool: bytes={} peak={} blocks={} block_evictions={} \
              prefix_share_hits={} cow_copies={}\n\
              queue: depth={} wait mean={:.0}µs p99<={}µs deferrals={}\n\
-             streams: opened={} completed={} parked={} \
+             streams: opened={} completed={} parked={} abandoned={} \
              ttft p50<={}µs p99<={}µs itl p50<={}µs p99<={}µs\n\
              latency: mean={:.0}µs p50<={}µs p95<={}µs p99<={}µs",
             self.requests,
@@ -345,6 +360,7 @@ impl Snapshot {
             self.streams_opened,
             self.streams_completed,
             self.streams_parked,
+            self.streams_abandoned,
             fmt_b(self.ttft.percentile_us(50.0)),
             fmt_b(self.ttft.percentile_us(99.0)),
             fmt_b(self.itl.percentile_us(50.0)),
@@ -420,8 +436,33 @@ mod tests {
         assert_eq!(s.buckets[11], 1); // unbounded tail
         assert!((s.mean_us() - s.sum_us as f64 / 5.0).abs() < 1e-9);
         assert!(s.percentile_us(50.0) <= s.percentile_us(99.0));
-        assert_eq!(s.percentile_us(99.0), u64::MAX);
+        assert_eq!(s.percentile_us(99.0), SATURATED_US);
         assert_eq!(HistoSnap::default().percentile_us(99.0), 0);
+    }
+
+    /// Regression: a quantile landing in the unbounded overflow bucket
+    /// must report the finite saturation sentinel, not `u64::MAX` µs —
+    /// both through `HistoSnap::percentile_us` and the latency histogram.
+    #[test]
+    fn overflow_bucket_percentile_saturates_finite() {
+        let h = LatencyHisto::default();
+        for _ in 0..4 {
+            h.observe(250_000); // all samples beyond the 100ms bound
+        }
+        let s = h.snap();
+        assert_eq!(s.percentile_us(50.0), SATURATED_US);
+        assert_eq!(s.percentile_us(99.0), SATURATED_US);
+        assert!(s.percentile_us(99.0) < u64::MAX, "must stay finite");
+        assert_eq!(SATURATED_US, 100_001);
+
+        let m = Metrics::new();
+        m.observe_latency(10);
+        m.observe_latency(500_000);
+        let snap = m.snapshot();
+        assert_eq!(snap.latency_percentile_us(99.0), SATURATED_US);
+        let r = snap.render();
+        assert!(r.contains(">100000"), "render must show the saturated sentinel: {r}");
+        assert!(!r.contains(&u64::MAX.to_string()), "u64::MAX must never render: {r}");
     }
 
     #[test]
@@ -436,6 +477,7 @@ mod tests {
         m.streams_opened.store(4, Ordering::Relaxed);
         m.streams_completed.store(4, Ordering::Relaxed);
         m.streams_parked.store(1, Ordering::Relaxed);
+        m.streams_abandoned.store(2, Ordering::Relaxed);
         let s = m.snapshot();
         assert_eq!(s.queue_wait.count, 1);
         assert_eq!(s.ttft.count, 2);
@@ -443,10 +485,11 @@ mod tests {
         assert_eq!(s.queue_depth, 3);
         assert_eq!(s.admission_deferrals, 2);
         assert_eq!(s.streams_parked, 1);
+        assert_eq!(s.streams_abandoned, 2);
         let r = s.render();
         assert!(r.contains("queue: depth=3"));
         assert!(r.contains("deferrals=2"));
-        assert!(r.contains("streams: opened=4 completed=4 parked=1"));
+        assert!(r.contains("streams: opened=4 completed=4 parked=1 abandoned=2"));
     }
 
     #[test]

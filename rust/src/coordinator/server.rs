@@ -407,6 +407,15 @@ impl StreamHandle {
         self.rx.try_recv().ok()
     }
 
+    /// Block up to `timeout` for the next event; `None` on timeout or
+    /// once the stream's sender is gone. Deadline-driven clients (the
+    /// load harness's abandonment scenario) use this to walk away from a
+    /// stream mid-generation — dropping the handle afterwards is what the
+    /// worker observes as client-gone.
+    pub fn recv_timeout(&self, timeout: Duration) -> Option<StreamEvent> {
+        self.rx.recv_timeout(timeout).ok()
+    }
+
     /// Drain the stream to completion: all token responses in submission
     /// order, plus the `Done` summary when the stream terminated cleanly.
     pub fn collect_blocking(self) -> (Vec<AttentionResponse>, Option<StreamEvent>) {

@@ -273,6 +273,11 @@ impl BatchWorker {
         }
         let failed = resp.output.is_err();
         let client_gone = self.streams[i].tx.send(StreamEvent::Token(resp)).is_err();
+        if client_gone {
+            // Client dropped its StreamHandle mid-generation: abort the
+            // stream (its queued requests die with it) and free the slot.
+            self.metrics.streams_abandoned.fetch_add(1, Ordering::Relaxed);
+        }
         if failed || client_gone || self.streams[i].pending.is_empty() {
             self.finish_stream(i);
             return false;
@@ -799,6 +804,44 @@ mod tests {
             other => panic!("expected done, got {other:?}"),
         }
         assert!(w.is_idle(), "aborted stream must release its slot and queue");
+    }
+
+    /// A client that drops its `StreamHandle` mid-generation is detected
+    /// on the next token delivery: the stream aborts, its queued requests
+    /// are dropped, the slot frees for parked streams, and the
+    /// abandonment is counted.
+    #[test]
+    fn abandoned_stream_frees_slot_and_counts() {
+        let cfg = CoordinatorConfig { max_concurrent_streams: 1, ..CoordinatorConfig::default() };
+        let (mut w, engine) = mk_worker(cfg);
+        let a_reqs = vec![
+            rand_req(1, RequestKind::Prefill { session: 1 }, 1, 4, 1),
+            rand_req(2, RequestKind::Decode { session: 1 }, 1, 1, 2),
+            rand_req(3, RequestKind::Decode { session: 1 }, 1, 1, 3),
+            rand_req(4, RequestKind::Decode { session: 1 }, 1, 1, 4),
+        ];
+        let b_reqs = vec![rand_req(5, RequestKind::Prefill { session: 2 }, 1, 4, 5)];
+        let (atx, arx) = channel();
+        let (btx, brx) = channel();
+        w.handle_msg(Msg::Stream(a_reqs, atx));
+        w.handle_msg(Msg::Stream(b_reqs, btx));
+        assert_eq!(w.metrics.snapshot().streams_parked, 1);
+
+        assert!(w.step(&engine)); // A's first token
+        assert!(matches!(arx.try_recv(), Ok(StreamEvent::Token(_))));
+        drop(arx); // client walks away mid-generation
+
+        // the next delivery hits the dropped receiver: A aborts (ids 3-4
+        // never run), the freed slot activates B
+        assert!(w.step(&engine));
+        assert!(w.step(&engine)); // B's request
+        assert!(matches!(brx.try_recv(), Ok(StreamEvent::Token(_))));
+        assert!(matches!(brx.try_recv(), Ok(StreamEvent::Done { .. })));
+        let snap = w.metrics.snapshot();
+        assert_eq!(snap.streams_abandoned, 1);
+        assert_eq!(snap.streams_completed, 2, "abandoned streams still terminate");
+        assert_eq!(snap.errors, 0);
+        assert!(w.is_idle(), "abandoned stream must free its slot and queue");
     }
 
     /// Queue-full rejections carry depth/capacity in the error message.

@@ -315,6 +315,115 @@ fn run_scenario(sc: Scenario) -> Json {
     ]))
 }
 
+/// Run one sliding-window cell: a single stream prefills `w` steps and
+/// then decodes `8 * w` more, so a `Some(w)` attention window is
+/// outgrown eight times over. Beyond the standard SLO block the cell
+/// emits mid/late-phase ITL percentile blocks (middle vs final third of
+/// the decode gaps) and the pool's window-trim gauges — the evidence CI
+/// re-asserts from the committed JSON.
+fn run_sliding_window_cell(name: &'static str, window: Option<usize>, w: usize) -> Json {
+    let spec = WorkloadSpec {
+        sessions: 1,
+        prefill_len: w,
+        decode_steps: 8 * w,
+        sig: ShapeSig { heads: 2, head_dim: 64 },
+        variant: Variant::FlashD,
+        seed: 13,
+    };
+    let cfg = CoordinatorConfig { policy: Policy::Fifo, window, ..Default::default() };
+    let coord = Coordinator::start_naive(cfg, fused_sweep_router()).expect("start");
+    let stream = session_requests(&spec, 0, 8_000_000);
+    let total_reqs = stream.len();
+
+    let t0 = Instant::now();
+    let handle = coord.submit_stream(stream);
+    let rep = client_loop(handle, t0, false);
+    let wall_s = t0.elapsed().as_secs_f64();
+    assert_eq!(rep.errors, 0, "{name}: stream must serve cleanly");
+
+    let settle_deadline = Instant::now() + Duration::from_secs(60);
+    let snap = loop {
+        let snap = coord.metrics.snapshot();
+        if snap.streams_completed >= 1 {
+            break snap;
+        }
+        assert!(Instant::now() < settle_deadline, "{name}: stream did not terminate");
+        std::thread::sleep(Duration::from_millis(2));
+    };
+    assert_eq!(snap.errors, 0, "{name}");
+
+    // Phase split over the inter-token gaps: the middle third is steady
+    // state for both cells; by the final third an unwindowed session has
+    // outgrown `w` several times over.
+    let n = rep.itl_us.len();
+    assert!(n >= 30, "{name}: need enough inter-token gaps to phase-split (got {n})");
+    let mid = &rep.itl_us[n / 3..2 * n / 3];
+    let late = &rep.itl_us[2 * n / 3..];
+    let mid_p50 = flashd::util::percentile(mid, 50.0);
+    let late_p50 = flashd::util::percentile(late, 50.0);
+
+    if window.is_some() {
+        assert!(
+            snap.kv_window_trims > 0 && snap.kv_blocks_trimmed > 0,
+            "{name}: outgrowing the window 8x must trim leading blocks \
+             (trims={} blocks={})",
+            snap.kv_window_trims,
+            snap.kv_blocks_trimmed
+        );
+        // The tentpole claim: with the window bounding attended KV, the
+        // inter-token latency does not grow with total generated length.
+        assert!(
+            late_p50 <= 1.15 * mid_p50,
+            "{name}: windowed ITL must stay flat: late p50 {late_p50:.0}µs vs \
+             mid p50 {mid_p50:.0}µs"
+        );
+    } else {
+        assert_eq!(snap.kv_window_trims, 0, "{name}: control must never trim");
+        assert_eq!(snap.kv_blocks_trimmed, 0, "{name}: control must never trim");
+        // The control retains every generated step: the resident pool
+        // only grows, so the final gauge is also the high-water mark.
+        assert_eq!(snap.kv_pool_bytes, snap.kv_pool_peak_bytes, "{name}");
+    }
+
+    let ttfts: Vec<f64> = rep.ttft_us.iter().copied().collect();
+    println!(
+        "{:<34} {total_reqs:>4} reqs {wall_s:6.3}s  itl p50 mid={mid_p50:>7.0}µs \
+         late={late_p50:>7.0}µs  trims={} blocks_trimmed={} pool={}B",
+        name, snap.kv_window_trims, snap.kv_blocks_trimmed, snap.kv_pool_bytes,
+    );
+    Json::Obj(BTreeMap::from([
+        ("name".to_string(), Json::Str(name.to_string())),
+        ("policy".to_string(), Json::Str(format!("{:?}", Policy::Fifo))),
+        ("fused".to_string(), Json::Bool(true)),
+        ("window".to_string(), Json::Num(window.unwrap_or(0) as f64)),
+        ("streams".to_string(), Json::Num(1.0)),
+        ("requests".to_string(), Json::Num(total_reqs as f64)),
+        ("wall_s".to_string(), Json::Num(wall_s)),
+        // -- the per-cell SLO block ---------------------------------------
+        ("ttft_us".to_string(), pctiles(&ttfts)),
+        ("itl_us".to_string(), pctiles(&rep.itl_us)),
+        ("itl_mid_us".to_string(), pctiles(mid)),
+        ("itl_late_us".to_string(), pctiles(late)),
+        ("latency_us".to_string(), pctiles(&rep.lat_us)),
+        ("rejected".to_string(), Json::Num(snap.queue_rejections as f64)),
+        ("evicted".to_string(), Json::Num(snap.kv_block_evictions as f64)),
+        ("abandoned".to_string(), Json::Num(snap.streams_abandoned as f64)),
+        ("errors".to_string(), Json::Num(snap.errors as f64)),
+        ("completed".to_string(), Json::Num(snap.streams_completed as f64)),
+        // -- pool residency + trim gauges (the windowed-vs-control story) --
+        ("kv_pool_bytes".to_string(), Json::Num(snap.kv_pool_bytes as f64)),
+        ("kv_pool_peak_bytes".to_string(), Json::Num(snap.kv_pool_peak_bytes as f64)),
+        ("kv_window_trims".to_string(), Json::Num(snap.kv_window_trims as f64)),
+        ("kv_blocks_trimmed".to_string(), Json::Num(snap.kv_blocks_trimmed as f64)),
+        ("server_ttft_p99_us".to_string(), Json::Num(snap.ttft.percentile_us(99.0) as f64)),
+        ("server_itl_p99_us".to_string(), Json::Num(snap.itl.percentile_us(99.0) as f64)),
+        ("queue_wait_mean_us".to_string(), Json::Num(snap.queue_wait.mean_us())),
+        ("admission_deferrals".to_string(), Json::Num(snap.admission_deferrals as f64)),
+        ("fused_cycles".to_string(), Json::Num(snap.fused_cycles as f64)),
+        ("fused_submissions".to_string(), Json::Num(snap.fused_submissions as f64)),
+    ]))
+}
+
 /// Write the scenario matrix to the committed `BENCH_serving.json`
 /// (CI validates every cell's SLO block: TTFT/ITL/latency percentile
 /// blocks plus the rejected/evicted/abandoned counters).
@@ -336,7 +445,12 @@ fn write_bench_serving_json(scenarios: Vec<Json>, path: &str) {
                  65536-token prefills through the paged pool; \
                  churn_tiny_sessions = hundreds of tiny sessions under a small \
                  KV budget (LRU eviction); conflict_storm = every stream on one \
-                 session (fusion-group splits). Each cell carries an SLO block: \
+                 session (fusion-group splits); sliding_window_* = one stream \
+                 outgrows its attention window 8x (the windowed cell carries \
+                 itl_mid_us/itl_late_us phase blocks plus kv_window_trims/\
+                 kv_blocks_trimmed/kv_pool_bytes gauges and must keep late ITL \
+                 p50 within 1.15x of mid; the unwindowed control shows the \
+                 pool growing with history). Each cell carries an SLO block: \
                  client-measured ttft_us/itl_us/latency_us {p50,p99,count} in \
                  µs plus rejected/evicted/abandoned/errors/completed counters"
                     .to_string(),
@@ -753,6 +867,28 @@ fn main() {
             expect_clean: true,
         });
         scenarios.push(cell);
+    }
+
+    // (8)+(9) sliding-window tentpole: one stream outgrows its attention
+    // window eight times over. Windowed cell: block trims keep the
+    // attended KV — and hence the per-token latency — flat (late-phase
+    // ITL p50 must stay within 15% of mid-phase, asserted here and
+    // re-checked by CI from the emitted JSON). Unwindowed control: the
+    // same workload retains its whole history, so its resident pool
+    // bytes keep growing instead.
+    {
+        let w = if fast { 32 } else { 128 }; // block-aligned (32-step blocks)
+        let windowed = run_sliding_window_cell("sliding_window_flat_latency_fifo_fused", Some(w), w);
+        let control = run_sliding_window_cell("sliding_window_control_unwindowed", None, w);
+        let wb = windowed.get("kv_pool_bytes").and_then(Json::as_f64).expect("gauge");
+        let cb = control.get("kv_pool_bytes").and_then(Json::as_f64).expect("gauge");
+        assert!(
+            cb >= 4.0 * wb,
+            "unwindowed control must retain the whole history ({cb} B resident) \
+             while the windowed pool stays near one window ({wb} B)"
+        );
+        scenarios.push(windowed);
+        scenarios.push(control);
     }
     write_bench_serving_json(scenarios, "BENCH_serving.json");
 

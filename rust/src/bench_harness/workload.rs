@@ -73,7 +73,7 @@ pub fn session_requests(spec: &WorkloadSpec, session: u64, base_id: u64) -> Vec<
     let mut reqs = Vec::new();
     reqs.push(AttentionRequest {
         id: base_id,
-        kind: RequestKind::Prefill { session },
+        kind: RequestKind::prefill(session),
         variant: spec.variant,
         sig: spec.sig,
         q: rng.normal_vec(hd, std),
@@ -189,7 +189,7 @@ mod tests {
         let spec = WorkloadSpec::default();
         let reqs = session_requests(&spec, 3, 100);
         assert_eq!(reqs.len(), 1 + spec.decode_steps);
-        assert!(matches!(reqs[0].kind, RequestKind::Prefill { session: 3 }));
+        assert!(matches!(reqs[0].kind, RequestKind::Prefill { session: 3, .. }));
         for r in &reqs {
             assert!(r.validate().is_ok(), "{:?}", r.kind);
         }

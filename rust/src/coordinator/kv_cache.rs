@@ -33,6 +33,32 @@
 //! drops to zero free bytes, so evicting one fork never tears the shared
 //! prefix out from under its siblings.
 //!
+//! # Sliding windows and block-granular trimming
+//!
+//! A session created with an attention window `w` keeps `len` counting
+//! every step ever appended (absolute positions never shift), but only
+//! the most recent `min(len, w)` steps are *attended*. Appends eagerly
+//! drop leading blocks that lie fully outside the window
+//! ([`BlockTable::start`] advances in whole blocks); the sub-block
+//! remainder ("slop", `< block_steps` steps) stays resident and is hidden
+//! from the kernels by the gathered view's element offset
+//! ([`crate::numerics::quant::PagedKv::start`]), so a windowed kernel run
+//! streams exactly the attended suffix — bit-identical to a full kernel
+//! over only those steps, with no rescaling fix-up (the FLASH-D recursion
+//! is a pure function of the KV it is fed).
+//!
+//! **Window-trim → block-refcount contract:** trimming *dereferences*
+//! out-of-window blocks, it never frees them directly. Bytes are
+//! reclaimed only when a block's refcount hits zero, so a trimmed lineage
+//! can never free a prefix block a sibling fork or `share_prefix` child
+//! still references — `blocks_trimmed` counts blocks actually freed,
+//! `window_trims` counts trim events. Trimming runs *before* the eviction
+//! loop on every append (trim-before-evict): a session's own dead prefix
+//! is reclaimed before any other session is considered as an eviction
+//! victim, and the `*_would_evict` predicates mirror that order exactly.
+//!
+//! # Quantization
+//!
 //! Quantization is unchanged from the contiguous design: each block's K
 //! and V live in a [`KvStore`] (f32 / bf16 / fp8 at rest), quantized once
 //! on append, dequantized tile-by-tile through [`KvRef`].
@@ -524,15 +550,26 @@ impl BlockPool {
 // Block tables and the gathered kernel view
 // ---------------------------------------------------------------------------
 
-/// One session's logical KV sequence: an ordered list of pool slots. The
-/// first `len / block_steps` entries are full blocks; the final entry (if
-/// `len % block_steps != 0`) is a partially filled tail.
+/// One session's logical KV sequence: an ordered list of pool slots
+/// covering absolute steps `[start, len)`. Entry `j` covers steps
+/// `[start + j*block_steps, ..)`; the final entry (if `len % block_steps
+/// != 0`) is a partially filled tail. `start` is the window-trimmed
+/// prefix (always a multiple of `block_steps`, always 0 for unwindowed
+/// sessions), so in-block offsets stay congruent to the absolute step mod
+/// `block_steps` no matter how much has been trimmed.
 #[derive(Debug, Clone)]
 pub struct BlockTable {
     pub heads: usize,
     pub head_dim: usize,
+    /// Bound on *retained* steps ([`BlockTable::live`]); `len` itself
+    /// grows without bound on a windowed session.
     pub cap: usize,
+    /// Total steps ever appended (absolute end position).
     pub len: usize,
+    /// Steps trimmed off the front (multiple of `block_steps`).
+    pub start: usize,
+    /// Sliding attention window in steps; `None` attends everything.
+    pub window: Option<usize>,
     blocks: Vec<usize>,
 }
 
@@ -542,8 +579,23 @@ impl BlockTable {
         &self.blocks
     }
 
+    /// Retained (resident) steps: `len` minus the trimmed prefix.
+    pub fn live(&self) -> usize {
+        self.len - self.start
+    }
+
+    /// Steps the kernels attend: the last `min(live, window)` — what a
+    /// decode against this session pays for per token.
+    pub fn attended(&self) -> usize {
+        match self.window {
+            Some(w) => self.live().min(w),
+            None => self.live(),
+        }
+    }
+
+    /// Steps appendable before the retained length hits `cap`.
     pub fn remaining(&self) -> usize {
-        self.cap - self.len
+        self.cap - self.live()
     }
 }
 
@@ -555,8 +607,12 @@ impl BlockTable {
 pub struct PagedSessionKv<'p> {
     pub heads: usize,
     pub head_dim: usize,
-    /// Valid KV steps (the kernel's `n`).
+    /// Attended KV steps (the kernel's `n`): `min(live, window)`.
     pub len: usize,
+    /// Sub-block slop preceding the attended range inside the first
+    /// fragment — hidden from the kernels via the paged view's element
+    /// offset. Always `< block_steps`.
+    slop: usize,
     block_steps: usize,
     k: Vec<Vec<KvRef<'p>>>,
     v: Vec<Vec<KvRef<'p>>>,
@@ -568,6 +624,7 @@ impl<'p> PagedSessionKv<'p> {
         KvView::Paged(PagedKv {
             blocks: &self.k[h],
             block_elems: self.block_steps * self.head_dim,
+            start: self.slop * self.head_dim,
             len: self.len * self.head_dim,
         })
     }
@@ -576,6 +633,7 @@ impl<'p> PagedSessionKv<'p> {
         KvView::Paged(PagedKv {
             blocks: &self.v[h],
             block_elems: self.block_steps * self.head_dim,
+            start: self.slop * self.head_dim,
             len: self.len * self.head_dim,
         })
     }
@@ -602,6 +660,12 @@ pub struct SessionStore {
     pub block_evictions: u64,
     pub prefix_share_hits: u64,
     pub cow_copies: u64,
+    /// Window-trim events (one per append/set_window that dropped blocks).
+    pub window_trims: u64,
+    /// Out-of-window blocks whose refcount hit zero and freed bytes —
+    /// mirrors `block_evictions`: dereferenced-but-shared blocks don't
+    /// count.
+    pub blocks_trimmed: u64,
     pub precision: KvPrecision,
 }
 
@@ -627,6 +691,8 @@ impl SessionStore {
             block_evictions: 0,
             prefix_share_hits: 0,
             cow_copies: 0,
+            window_trims: 0,
+            blocks_trimmed: 0,
             precision,
         }
     }
@@ -671,12 +737,15 @@ impl SessionStore {
 
     /// New block allocations an `n`-step append to table `t` performs:
     /// fresh blocks to cover the growth, plus one copy-on-write clone if
-    /// the partial tail is currently shared.
+    /// the partial tail is currently shared. Invariant under pre-trim
+    /// (dropping a leading block shrinks `blocks` and advances `start`
+    /// by the same block count), so predicates can evaluate it on the
+    /// untrimmed table.
     fn blocks_needed(&self, t: &BlockTable, n: usize) -> usize {
         if n == 0 {
             return 0;
         }
-        let fresh = self.blocks_for(t.len + n) - t.blocks.len();
+        let fresh = (t.len + n - t.start).div_ceil(self.pool.block_steps) - t.blocks.len();
         let cow = if t.len % self.pool.block_steps != 0
             && self.pool.refs(*t.blocks.last().expect("partial len with no blocks")) > 1
         {
@@ -685,6 +754,53 @@ impl SessionStore {
             0
         };
         fresh + cow
+    }
+
+    /// Leading blocks an `n`-step append would trim before evicting:
+    /// blocks fully outside the window at the post-append length, clamped
+    /// to blocks already fully filled (a partial tail is never trimmed —
+    /// it becomes trimmable once later appends fill it).
+    fn pretrim_drop(&self, t: &BlockTable, n: usize) -> usize {
+        let Some(w) = t.window else { return 0 };
+        let bs = self.pool.block_steps;
+        let target = ((t.len + n).saturating_sub(w) / bs) * bs;
+        if target <= t.start {
+            return 0;
+        }
+        ((target - t.start) / bs).min((t.len - t.start) / bs)
+    }
+
+    /// Bytes an `n`-step append's pre-trim would free: only trimmed
+    /// blocks this table is the last owner of release memory.
+    fn pretrim_frees(&self, t: &BlockTable, n: usize) -> usize {
+        let drop = self.pretrim_drop(t, n);
+        let sole = t.blocks[..drop].iter().filter(|&&b| self.pool.refs(b) == 1).count();
+        sole * self.pool.block_bytes(t.heads, t.head_dim)
+    }
+
+    /// Drop session `id`'s leading blocks that lie fully outside its
+    /// window at length `len + lookahead` (`lookahead = n` for the
+    /// pre-append trim, 0 for the settle pass after streaming). Only
+    /// dereferences — bytes free solely through the refcount, so shared
+    /// lineage blocks survive for their siblings.
+    fn trim_to_window(&mut self, id: u64, lookahead: usize) {
+        let drop = match self.sessions.get(&id) {
+            Some(t) => self.pretrim_drop(t, lookahead),
+            None => return,
+        };
+        if drop == 0 {
+            return;
+        }
+        let SessionStore { pool, sessions, window_trims, blocks_trimmed, .. } = self;
+        let t = sessions.get_mut(&id).unwrap();
+        let bs = pool.block_steps;
+        *window_trims += 1;
+        for b in t.blocks.drain(..drop) {
+            if pool.decref(b) {
+                *blocks_trimmed += 1;
+            }
+        }
+        t.start += drop * bs;
     }
 
     /// Bytes freed by removing session `id`: only blocks this table is
@@ -696,14 +812,16 @@ impl SessionStore {
     }
 
     /// Would appending `n` steps to session `id` evict another session?
-    /// Exact mirror of `append`'s admission check — the fused dispatcher
-    /// flushes its current group before any append this returns true for,
-    /// so KV an earlier batch in the cycle reads can't vanish between
-    /// lowering and kernel submission.
+    /// Exact mirror of `append`'s admission check — trim-before-evict
+    /// included: bytes the append's own window trim frees are credited
+    /// before the budget comparison. The fused dispatcher flushes its
+    /// current group before any append this returns true for, so KV an
+    /// earlier batch in the cycle reads can't vanish between lowering and
+    /// kernel submission.
     pub fn append_would_evict(&self, id: u64, n: usize) -> bool {
         let Some(t) = self.sessions.get(&id) else { return false };
         let need = self.blocks_needed(t, n) * self.pool.block_bytes(t.heads, t.head_dim);
-        self.pool.bytes + need > self.pool.max_bytes
+        self.pool.bytes - self.pretrim_frees(t, n) + need > self.pool.max_bytes
     }
 
     /// Would a prefill (re-create + `n`-step append) of this geometry
@@ -719,9 +837,13 @@ impl SessionStore {
     /// for growth blocks plus a CoW of any partial tail (always shared
     /// right after a fork). Re-creating `dst` frees its solely owned
     /// blocks first.
+    /// Right after the fork every block is shared (refcount >= 2), so the
+    /// divergent append's trim-before-evict frees nothing — the predicate
+    /// credits no trim bytes.
     pub fn fork_would_evict(&self, src: u64, dst: u64, n: usize) -> bool {
         let Some(t) = self.sessions.get(&src) else { return false };
-        let mut blocks = if n == 0 { 0 } else { self.blocks_for(t.len + n) - t.blocks.len() };
+        let mut blocks =
+            if n == 0 { 0 } else { (t.len + n - t.start).div_ceil(self.pool.block_steps) - t.blocks.len() };
         if n > 0 && t.len % self.pool.block_steps != 0 {
             blocks += 1;
         }
@@ -734,13 +856,64 @@ impl SessionStore {
     /// full-capacity table alone must stay within the byte budget (which
     /// is what guarantees the append eviction loop always converges).
     pub fn create(&mut self, id: u64, heads: usize, head_dim: usize, cap: usize) -> Result<(), String> {
+        self.create_windowed(id, heads, head_dim, cap, None)
+    }
+
+    /// [`SessionStore::create`] with a sliding attention window: the
+    /// session retains at most `cap` steps at any instant (including the
+    /// pre-trim peak of an in-flight append), attends the last
+    /// `min(len, window)`, and appends trim fully-out-of-window leading
+    /// blocks eagerly. A steady decode needs `cap >= window +
+    /// block_steps` to run unbounded.
+    pub fn create_windowed(
+        &mut self,
+        id: u64,
+        heads: usize,
+        head_dim: usize,
+        cap: usize,
+        window: Option<usize>,
+    ) -> Result<(), String> {
+        if window == Some(0) {
+            return Err("attention window must be >= 1 step".into());
+        }
         let worst = self.blocks_for(cap) * self.pool.block_bytes(heads, head_dim);
         if worst > self.pool.max_bytes {
             return Err(format!("session of {worst} bytes exceeds budget {}", self.pool.max_bytes));
         }
         self.remove(id);
-        self.sessions.insert(id, BlockTable { heads, head_dim, cap, len: 0, blocks: Vec::new() });
+        self.sessions.insert(id, BlockTable { heads, head_dim, cap, len: 0, start: 0, window, blocks: Vec::new() });
         self.lru.touch(id);
+        Ok(())
+    }
+
+    /// Rebind session `id`'s attention window (the fork-with-policy
+    /// path), trimming immediately if the new window strands leading
+    /// blocks. Trimmed history is gone for good, so widening (or
+    /// unsetting) beyond what the session still retains is a typed error
+    /// rather than a window that silently attends fewer steps than it
+    /// promises.
+    pub fn set_window(&mut self, id: u64, window: Option<usize>) -> Result<(), String> {
+        if window == Some(0) {
+            return Err("attention window must be >= 1 step".into());
+        }
+        match self.sessions.get_mut(&id) {
+            Some(t) => {
+                let widened_past_trim = match window {
+                    None => t.start != 0,
+                    Some(w) => t.start != 0 && w > t.live(),
+                };
+                if widened_past_trim {
+                    return Err(format!(
+                        "cannot widen window past trimmed history (session {id} retains {} of {} steps)",
+                        t.live(),
+                        t.len
+                    ));
+                }
+                t.window = window;
+            }
+            None => return Err(format!("set_window on unknown session {id}")),
+        }
+        self.trim_to_window(id, 0);
         Ok(())
     }
 
@@ -758,15 +931,25 @@ impl SessionStore {
             return Err(format!("append: expected {} elems, got {}", hd * n, k_new.len()));
         }
         {
+            // Capacity bounds the *peak* retained length: post-append len
+            // minus what the pre-trim can reclaim. An append never trims
+            // mid-stream, so a single append larger than the window is
+            // rejected rather than silently truncated (and the peak is
+            // what the create-time worst-case budget check covered).
             let t = &self.sessions[&id];
-            if t.len + n > t.cap {
-                return Err(format!("kv cache full: {} + {n} > {}", t.len, t.cap));
+            let peak = t.len + n - (t.start + self.pretrim_drop(t, n) * self.pool.block_steps);
+            if peak > t.cap {
+                return Err(format!("kv cache full: {peak} retained > cap {}", t.cap));
             }
         }
         self.lru.touch(id);
         if n == 0 {
             return Ok(());
         }
+        // Trim-before-evict: reclaim this session's own dead prefix
+        // (blocks fully out of window at the post-append length) before
+        // any other session is considered as a victim.
+        self.trim_to_window(id, n);
         // Make room. Recompute per iteration: evicting a sibling fork can
         // drop the shared-tail refcount and cancel the CoW allocation.
         loop {
@@ -814,6 +997,10 @@ impl SessionStore {
             pool.push_step(slot, &krow, &vrow);
             t.len += 1;
         }
+        // Settle pass: the streamed steps may have pushed earlier blocks
+        // (including a tail the pre-trim had to leave partial) fully out
+        // of window.
+        self.trim_to_window(id, 0);
         Ok(())
     }
 
@@ -850,8 +1037,19 @@ impl SessionStore {
         if src == dst {
             return Err("share_prefix: src == dst".into());
         }
-        let (heads, head_dim, cap, src_len) = match self.sessions.get(&src) {
-            Some(t) => (t.heads, t.head_dim, t.cap, t.len),
+        let (heads, head_dim, cap, src_len, window) = match self.sessions.get(&src) {
+            Some(t) => {
+                // A window-trimmed source no longer holds its absolute
+                // prefix [0, steps) — sharing it would silently hand out
+                // the wrong steps.
+                if t.start != 0 {
+                    return Err(format!(
+                        "share_prefix from window-trimmed session {src} (first {} steps gone)",
+                        t.start
+                    ));
+                }
+                (t.heads, t.head_dim, t.cap, t.len, t.window)
+            }
             None => return Err(format!("share_prefix from unknown session {src}")),
         };
         if steps > src_len {
@@ -883,7 +1081,8 @@ impl SessionStore {
             blocks.push(clone);
             self.cow_copies += 1;
         }
-        self.sessions.insert(dst, BlockTable { heads, head_dim, cap, len: steps, blocks });
+        self.sessions
+            .insert(dst, BlockTable { heads, head_dim, cap, len: steps, start: 0, window, blocks });
         self.lru.touch(src);
         self.lru.touch(dst);
         Ok(())
@@ -914,26 +1113,42 @@ impl SessionStore {
         }
     }
 
-    /// Gather one session's KV as borrowed per-head fragment lists. The
-    /// fragments cover exactly `len` steps per head in logical order —
-    /// the contract the paged kernel view streams tiles from.
+    /// Gather one session's KV as borrowed per-head fragment lists
+    /// covering exactly the *attended* suffix: fragments for the last
+    /// `attended()` steps per head in logical order, with any sub-block
+    /// slop in the first fragment hidden behind the paged view's element
+    /// offset. For an unwindowed session this is the whole cache — the
+    /// contract the paged kernel view streams tiles from either way.
     pub fn gather(&self, id: u64) -> Option<PagedSessionKv<'_>> {
         let t = self.sessions.get(&id)?;
         let bs = self.pool.block_steps;
+        // Skip whole retained-but-dead leading blocks (possible when a
+        // fork re-bound a narrower window and hasn't appended yet); the
+        // sub-block remainder becomes the view's start offset.
+        let skip = t.live() - t.attended();
+        let (skip_blocks, slop) = (skip / bs, skip % bs);
         let mut k = Vec::with_capacity(t.heads);
         let mut v = Vec::with_capacity(t.heads);
         for h in 0..t.heads {
-            let mut kh = Vec::with_capacity(t.blocks.len());
-            let mut vh = Vec::with_capacity(t.blocks.len());
-            for (j, &slot) in t.blocks.iter().enumerate() {
-                let covered = (t.len - j * bs).min(bs);
+            let mut kh = Vec::with_capacity(t.blocks.len() - skip_blocks);
+            let mut vh = Vec::with_capacity(t.blocks.len() - skip_blocks);
+            for (j, &slot) in t.blocks.iter().enumerate().skip(skip_blocks) {
+                let covered = (t.len - (t.start + j * bs)).min(bs);
                 kh.push(self.pool.head_frag_k(slot, h, covered));
                 vh.push(self.pool.head_frag_v(slot, h, covered));
             }
             k.push(kh);
             v.push(vh);
         }
-        Some(PagedSessionKv { heads: t.heads, head_dim: t.head_dim, len: t.len, block_steps: bs, k, v })
+        Some(PagedSessionKv {
+            heads: t.heads,
+            head_dim: t.head_dim,
+            len: t.attended(),
+            slop,
+            block_steps: bs,
+            k,
+            v,
+        })
     }
 
     /// Gather several sessions simultaneously — the fused dispatch gather
@@ -958,18 +1173,39 @@ impl SessionStore {
             if !self.lru.contains(id) {
                 return Err(format!("session {id} missing from lru"));
             }
-            if t.len > t.cap {
-                return Err(format!("session {id}: len {} > cap {}", t.len, t.cap));
+            if t.window == Some(0) {
+                return Err(format!("session {id}: zero attention window"));
             }
-            if t.blocks.len() != t.len.div_ceil(bs) {
+            if t.start % bs != 0 {
+                return Err(format!("session {id}: trim start {} not block-aligned (block_steps {bs})", t.start));
+            }
+            if t.start > t.len {
+                return Err(format!("session {id}: trim start {} > len {}", t.start, t.len));
+            }
+            // A trim may never reach into the attended window: the first
+            // retained step must be at or before the window's first step.
+            if let Some(w) = t.window {
+                if t.start > t.len.saturating_sub(w) {
+                    return Err(format!(
+                        "session {id}: over-trimmed — start {} strands window {w} of len {}",
+                        t.start, t.len
+                    ));
+                }
+            } else if t.start != 0 {
+                return Err(format!("session {id}: unwindowed but trimmed to {}", t.start));
+            }
+            if t.live() > t.cap {
+                return Err(format!("session {id}: live {} > cap {}", t.live(), t.cap));
+            }
+            if t.blocks.len() != t.live().div_ceil(bs) {
                 return Err(format!(
-                    "session {id}: {} blocks for len {} (block_steps {bs})",
+                    "session {id}: {} blocks for live {} (block_steps {bs})",
                     t.blocks.len(),
-                    t.len
+                    t.live()
                 ));
             }
             for (j, &slot) in t.blocks.iter().enumerate() {
-                let covered = (t.len - j * bs).min(bs);
+                let covered = (t.len - (t.start + j * bs)).min(bs);
                 if covered > self.pool.block_len(slot) {
                     return Err(format!(
                         "session {id} block {j}: covers {covered} steps but block holds {}",
@@ -1306,6 +1542,133 @@ mod tests {
         );
         let partial = s.gather_many(&[1, 9]);
         assert!(partial[0].is_some() && partial[1].is_none());
+    }
+
+    #[test]
+    fn windowed_append_trims_leading_blocks() {
+        // bs 2, window 4: at len 8 the eager trim start is ((8-4)/2)*2 = 4.
+        let mut s = SessionStore::with_block_steps(BIG, KvPrecision::F32, 2);
+        s.create_windowed(1, 1, 1, 8, Some(4)).unwrap();
+        for i in 0..8 {
+            s.append(1, &[i as f32], &[i as f32], 1).unwrap();
+            s.check_invariants().unwrap();
+        }
+        let t = s.get(1).unwrap();
+        assert_eq!((t.len, t.start, t.live(), t.attended()), (8, 4, 4, 4));
+        assert_eq!(t.blocks().len(), 2);
+        assert_eq!(s.window_trims, 2, "trimmed at len 6 and len 8");
+        assert_eq!(s.blocks_trimmed, 2);
+        assert_eq!(s.bytes(), 2 * s.pool().block_bytes(1, 1), "freed bytes left the pool");
+        assert_eq!(gather_head_k(&s, 1, 0), [4., 5., 6., 7.]);
+    }
+
+    #[test]
+    fn window_trim_never_frees_shared_lineage_blocks() {
+        let mut s = SessionStore::with_block_steps(BIG, KvPrecision::F32, 2);
+        s.create(1, 1, 1, 8).unwrap();
+        s.append(1, &[0., 1., 2., 3.], &[0., 1., 2., 3.], 4).unwrap(); // blocks A, B (full)
+        s.fork(1, 2).unwrap();
+        s.set_window(2, Some(2)).unwrap(); // strands A in 2's table
+        assert_eq!(s.window_trims, 1);
+        assert_eq!(s.blocks_trimmed, 0, "shared block dereferenced, not freed");
+        assert_eq!(s.get(2).unwrap().start, 2);
+        assert_eq!(s.pool().refs(s.get(1).unwrap().blocks()[0]), 1);
+        assert_eq!(gather_head_k(&s, 1, 0), [0., 1., 2., 3.], "sibling reads the full prefix");
+        assert_eq!(gather_head_k(&s, 2, 0), [2., 3.]);
+        s.check_invariants().unwrap();
+        // decoding on the fork pushes shared B out of window: deref only
+        s.append(2, &[4.], &[4.], 1).unwrap();
+        s.append(2, &[5.], &[5.], 1).unwrap(); // len 6 → start 4, drops B
+        assert_eq!(s.blocks_trimmed, 0, "B still lives for session 1");
+        assert_eq!(gather_head_k(&s, 1, 0), [0., 1., 2., 3.]);
+        assert_eq!(gather_head_k(&s, 2, 0), [4., 5.]);
+        // two more steps push 2's exclusive block out: that one frees
+        s.append(2, &[6.], &[6.], 1).unwrap();
+        s.append(2, &[7.], &[7.], 1).unwrap();
+        assert_eq!(s.blocks_trimmed, 1);
+        // a trimmed source can't hand out its absolute prefix
+        assert!(s.share_prefix(2, 3, 1).unwrap_err().contains("window-trimmed"));
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn append_would_evict_credits_trim_before_evict() {
+        // block = 2*1*2*2*4 = 32B; budget 64 = 2 blocks.
+        let mut s = SessionStore::with_block_steps(64, KvPrecision::F32, 2);
+        s.create_windowed(1, 1, 2, 4, Some(2)).unwrap();
+        s.create(2, 1, 2, 2).unwrap();
+        s.append(1, &[1., 1., 2., 2.], &[1., 1., 2., 2.], 2).unwrap();
+        s.append(2, &[9., 9.], &[9., 9.], 1).unwrap();
+        assert_eq!(s.bytes(), 64);
+        // 1's next block fits because its own dead prefix frees first
+        assert!(!s.append_would_evict(1, 2), "trim-before-evict frees own dead prefix");
+        s.append(1, &[3., 3., 4., 4.], &[3., 3., 4., 4.], 2).unwrap();
+        assert!(s.contains(2), "no eviction needed");
+        assert_eq!(s.evictions, 0);
+        assert_eq!(s.blocks_trimmed, 1);
+        assert_eq!(gather_head_k(&s, 1, 0), [3., 3., 4., 4.]);
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn windowed_capacity_bounds_peak_not_absolute_len() {
+        let mut s = SessionStore::with_block_steps(BIG, KvPrecision::F32, 2);
+        s.create_windowed(1, 1, 1, 4, Some(2)).unwrap();
+        // a single append larger than cap is rejected, window notwithstanding
+        assert!(s.append(1, &[0.; 5], &[0.; 5], 5).is_err());
+        assert_eq!(s.get(1).unwrap().len, 0, "failed append leaves the table untouched");
+        // but a steady decode runs far past cap: retained length stays bounded
+        for i in 0..32 {
+            s.append(1, &[i as f32], &[i as f32], 1).unwrap();
+        }
+        let t = s.get(1).unwrap();
+        assert_eq!(t.len, 32);
+        assert!(t.live() <= 4);
+        assert_eq!(t.attended(), 2);
+        assert_eq!(gather_head_k(&s, 1, 0), [30., 31.]);
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn window_geq_len_matches_unwindowed_and_odd_windows_use_slop() {
+        let mut a = SessionStore::with_block_steps(BIG, KvPrecision::F32, 4);
+        let mut b = SessionStore::with_block_steps(BIG, KvPrecision::F32, 4);
+        a.create(1, 1, 1, 64).unwrap();
+        b.create_windowed(1, 1, 1, 64, Some(64)).unwrap();
+        let d: Vec<f32> = (0..10).map(|x| x as f32).collect();
+        a.append(1, &d, &d, 10).unwrap();
+        b.append(1, &d, &d, 10).unwrap();
+        assert_eq!(b.window_trims, 0);
+        assert_eq!(gather_head_k(&a, 1, 0), gather_head_k(&b, 1, 0));
+        // window 3 over block_steps 4: the attended suffix crosses a block
+        // boundary and the sub-block slop hides behind the view offset
+        let mut c = SessionStore::with_block_steps(BIG, KvPrecision::F32, 4);
+        c.create_windowed(1, 1, 1, 64, Some(3)).unwrap();
+        c.append(1, &d, &d, 10).unwrap();
+        assert_eq!(c.get(1).unwrap().attended(), 3);
+        assert_eq!(gather_head_k(&c, 1, 0), [7., 8., 9.]);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn fork_inherits_window_and_set_window_guards() {
+        let mut s = SessionStore::with_block_steps(BIG, KvPrecision::F32, 2);
+        s.create_windowed(1, 1, 1, 8, Some(4)).unwrap();
+        let d: Vec<f32> = (0..6).map(|x| x as f32).collect();
+        s.append(1, &d, &d, 6).unwrap(); // start 2, live 4
+        s.fork(1, 2).unwrap();
+        let t = s.get(2).unwrap();
+        assert_eq!(t.window, Some(4));
+        assert_eq!(t.start, 2);
+        // widening past trimmed history is a typed error...
+        assert!(s.set_window(2, Some(8)).is_err());
+        assert!(s.set_window(2, None).is_err());
+        // ...narrowing trims immediately, without touching the sibling
+        s.set_window(2, Some(2)).unwrap();
+        assert_eq!(gather_head_k(&s, 2, 0), [4., 5.]);
+        assert_eq!(gather_head_k(&s, 1, 0), [2., 3., 4., 5.], "sibling window unaffected");
+        assert!(s.create_windowed(9, 1, 1, 4, Some(0)).is_err());
+        s.check_invariants().unwrap();
     }
 
     #[test]

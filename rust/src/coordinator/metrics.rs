@@ -139,6 +139,13 @@ pub struct Metrics {
     /// Copy-on-write block clones (first divergent append to a shared
     /// tail, or a prefix share splitting a block).
     pub kv_cow_copies: AtomicU64,
+    /// Sliding-window trim events: appends/prefills that advanced a
+    /// windowed session's trimmed-prefix boundary.
+    pub kv_window_trims: AtomicU64,
+    /// Blocks released by window trimming (a block shared with a fork
+    /// survives under its other owners and still counts — it left *this*
+    /// session's table).
+    pub kv_blocks_trimmed: AtomicU64,
     /// Scheduler queue depth after the most recent admission event
     /// (gauge).
     pub queue_depth: AtomicU64,
@@ -230,6 +237,8 @@ impl Metrics {
             kv_block_evictions: self.kv_block_evictions.load(Ordering::Relaxed),
             kv_prefix_share_hits: self.kv_prefix_share_hits.load(Ordering::Relaxed),
             kv_cow_copies: self.kv_cow_copies.load(Ordering::Relaxed),
+            kv_window_trims: self.kv_window_trims.load(Ordering::Relaxed),
+            kv_blocks_trimmed: self.kv_blocks_trimmed.load(Ordering::Relaxed),
             queue_depth: self.queue_depth.load(Ordering::Relaxed),
             admission_deferrals: self.admission_deferrals.load(Ordering::Relaxed),
             streams_opened: self.streams_opened.load(Ordering::Relaxed),
@@ -270,6 +279,8 @@ pub struct Snapshot {
     pub kv_block_evictions: u64,
     pub kv_prefix_share_hits: u64,
     pub kv_cow_copies: u64,
+    pub kv_window_trims: u64,
+    pub kv_blocks_trimmed: u64,
     pub queue_depth: u64,
     pub admission_deferrals: u64,
     pub streams_opened: u64,
@@ -327,7 +338,8 @@ impl Snapshot {
              jobs/cycle={:.2}\n\
              kernel steps={} skipped={}\n\
              kv pool: bytes={} peak={} blocks={} block_evictions={} \
-             prefix_share_hits={} cow_copies={}\n\
+             prefix_share_hits={} cow_copies={} window_trims={} \
+             blocks_trimmed={}\n\
              queue: depth={} wait mean={:.0}µs p99<={}µs deferrals={}\n\
              streams: opened={} completed={} parked={} abandoned={} \
              ttft p50<={}µs p99<={}µs itl p50<={}µs p99<={}µs\n\
@@ -353,6 +365,8 @@ impl Snapshot {
             self.kv_block_evictions,
             self.kv_prefix_share_hits,
             self.kv_cow_copies,
+            self.kv_window_trims,
+            self.kv_blocks_trimmed,
             self.queue_depth,
             self.queue_wait.mean_us(),
             fmt_b(self.queue_wait.percentile_us(99.0)),
@@ -501,6 +515,8 @@ mod tests {
         m.kv_block_evictions.store(2, Ordering::Relaxed);
         m.kv_prefix_share_hits.store(7, Ordering::Relaxed);
         m.kv_cow_copies.store(1, Ordering::Relaxed);
+        m.kv_window_trims.store(3, Ordering::Relaxed);
+        m.kv_blocks_trimmed.store(6, Ordering::Relaxed);
         let s = m.snapshot();
         assert_eq!(s.kv_pool_bytes, 4096);
         assert_eq!(s.kv_pool_peak_bytes, 8192);
@@ -508,9 +524,12 @@ mod tests {
         assert_eq!(s.kv_block_evictions, 2);
         assert_eq!(s.kv_prefix_share_hits, 7);
         assert_eq!(s.kv_cow_copies, 1);
+        assert_eq!(s.kv_window_trims, 3);
+        assert_eq!(s.kv_blocks_trimmed, 6);
         let r = s.render();
         assert!(r.contains("kv pool: bytes=4096 peak=8192 blocks=4"));
         assert!(r.contains("block_evictions=2 prefix_share_hits=7 cow_copies=1"));
+        assert!(r.contains("cow_copies=1 window_trims=3 blocks_trimmed=6"));
     }
 
     #[test]

@@ -21,6 +21,29 @@
 //!   offline vendor set).
 //!
 //! Python never appears here: the engine executes AOT artifacts only.
+//!
+//! # Attention-policy resolution
+//!
+//! Every session binds one [`AttnPolicy`] (sliding window, KV storage
+//! precision, sigmoid mode, skip criterion) at creation and keeps it for
+//! life. The policy is resolved in precedence order:
+//!
+//! 1. **Request** — a `Prefill`/`Fork` carrying `Some(policy)` wins
+//!    outright (subject to validation: the KV precision must match the
+//!    pool's storage precision, and sigmoid/skip must match the
+//!    coordinator's kernel configuration — the window is the only axis
+//!    honored per session today; conflicts are rejected as typed errors
+//!    rather than silently ignored).
+//! 2. **Fork inheritance** — a `Fork` with `None` inherits the source
+//!    session's bound policy, window included, so a forked conversation
+//!    keeps attending exactly like its parent.
+//! 3. **Coordinator default** — otherwise
+//!    [`CoordinatorConfig::default_policy`] applies: the coordinator's
+//!    kernel knobs plus [`CoordinatorConfig::window`].
+//!
+//! Sessions with different windows never share a fused submission — the
+//! dispatcher splits the fusion group, keeping fused and serial dispatch
+//! bit-identical.
 
 pub mod batcher;
 pub mod kv_cache;
@@ -31,5 +54,5 @@ pub mod scheduler;
 pub mod server;
 pub mod worker;
 
-pub use request::{AttentionRequest, AttentionResponse, RequestKind, ShapeSig, StreamEvent, Variant};
-pub use server::{Coordinator, CoordinatorConfig, StreamHandle};
+pub use request::{AttentionRequest, AttentionResponse, AttnPolicy, RequestKind, ShapeSig, StreamEvent, Variant};
+pub use server::{ConfigError, Coordinator, CoordinatorConfig, CoordinatorConfigBuilder, StreamHandle};

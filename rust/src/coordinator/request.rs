@@ -1,7 +1,11 @@
 //! Request/response types for the attention service, including the
+//! per-session [`AttnPolicy`] bound at session creation and the
 //! streaming-response events yielded by
 //! [`Coordinator::submit_stream`](super::Coordinator::submit_stream).
 
+use crate::kernels::batch::KernelConfig;
+use crate::kernels::flashd::{SigmoidMode, SkipCriterion};
+use crate::numerics::quant::KvPrecision;
 use std::time::Instant;
 
 /// Which kernel variant serves the request (routing policy knob; the
@@ -37,19 +41,77 @@ impl ShapeSig {
     }
 }
 
+/// The per-session attention policy — the single type that names every
+/// per-session attention knob. A session binds its policy when it is
+/// created: `Prefill`/`Fork` may carry an explicit override; otherwise a
+/// fork inherits its source session's policy, and a fresh prefill gets
+/// the coordinator-wide default derived from
+/// [`KernelConfig`](crate::kernels::batch::KernelConfig). Resolution
+/// order: request > source session (fork) > coordinator default.
+#[derive(Copy, Clone, Debug, PartialEq)]
+pub struct AttnPolicy {
+    /// Sliding attention window in KV steps: queries attend only the most
+    /// recent `window` live pairs and the paged store trims fully
+    /// out-of-window leading blocks at block granularity. `None` attends
+    /// the whole cache (unbounded).
+    pub window: Option<usize>,
+    /// KV storage precision. The coordinator's block pool is
+    /// single-precision, so a policy whose precision differs from the
+    /// pool's is rejected at session creation (typed error, not silent
+    /// re-quantization).
+    pub kv_precision: KvPrecision,
+    /// Sigmoid evaluation mode the session's kernels run with.
+    pub sigmoid: SigmoidMode,
+    /// FLASH-D skip criterion the session's kernels run with.
+    pub skip: SkipCriterion,
+}
+
+impl AttnPolicy {
+    /// The coordinator-wide default policy for a kernel config: no window,
+    /// the config's storage precision and execution knobs.
+    pub fn from_kernel(cfg: &KernelConfig) -> AttnPolicy {
+        AttnPolicy {
+            window: None,
+            kv_precision: cfg.kv_precision,
+            sigmoid: cfg.sigmoid,
+            skip: cfg.skip,
+        }
+    }
+
+    /// This policy with a sliding window of `window` KV steps.
+    pub fn with_window(self, window: usize) -> AttnPolicy {
+        AttnPolicy { window: Some(window), ..self }
+    }
+}
+
 /// How the request interacts with session state.
 #[derive(Clone, Debug, PartialEq)]
 pub enum RequestKind {
     /// Stateless: the request carries its own K/V (prefill / offload style).
     Stateless,
     /// Create/extend a session cache with the carried K/V, then attend.
-    Prefill { session: u64 },
+    /// `policy` overrides the coordinator-wide default attention policy
+    /// for the (re)created session; `None` binds the default.
+    Prefill { session: u64, policy: Option<AttnPolicy> },
     /// Decode step: append one K/V pair to the session, attend with the
-    /// carried single query against the whole cache.
+    /// carried single query against the in-window cache.
     Decode { session: u64 },
     /// Fork session `src` into `session` (zero-copy prefix share in the
     /// paged store), append the carried divergent K/V, then attend.
-    Fork { src: u64, session: u64 },
+    /// `policy` overrides the inherited source-session policy.
+    Fork { src: u64, session: u64, policy: Option<AttnPolicy> },
+}
+
+impl RequestKind {
+    /// A `Prefill` with the default (coordinator-wide) policy.
+    pub fn prefill(session: u64) -> RequestKind {
+        RequestKind::Prefill { session, policy: None }
+    }
+
+    /// A `Fork` inheriting the source session's policy.
+    pub fn fork(src: u64, session: u64) -> RequestKind {
+        RequestKind::Fork { src, session, policy: None }
+    }
 }
 
 /// One attention request.
@@ -96,8 +158,13 @@ impl AttentionRequest {
             RequestKind::Fork { .. } if self.nkv == 0 => {
                 Err("fork needs at least one divergent kv pair".into())
             }
-            RequestKind::Fork { src, session } if src == session => {
+            RequestKind::Fork { src, session, .. } if src == session => {
                 Err("fork src == dst".into())
+            }
+            RequestKind::Prefill { policy: Some(p), .. } | RequestKind::Fork { policy: Some(p), .. }
+                if p.window == Some(0) =>
+            {
+                Err("attention window must be >= 1 step".into())
             }
             _ => Ok(()),
         }
@@ -108,9 +175,19 @@ impl AttentionRequest {
     pub fn session(&self) -> Option<u64> {
         match self.kind {
             RequestKind::Stateless => None,
-            RequestKind::Prefill { session }
+            RequestKind::Prefill { session, .. }
             | RequestKind::Decode { session }
             | RequestKind::Fork { session, .. } => Some(session),
+        }
+    }
+
+    /// The attention-policy override carried by a session-creating request
+    /// (`None` for decodes/stateless and for creation requests that bind
+    /// the default).
+    pub fn policy(&self) -> Option<AttnPolicy> {
+        match self.kind {
+            RequestKind::Prefill { policy, .. } | RequestKind::Fork { policy, .. } => policy,
+            _ => None,
         }
     }
 
@@ -188,22 +265,49 @@ mod tests {
     #[test]
     fn empty_context_rejected() {
         assert!(req(RequestKind::Stateless, 1, 0).validate().is_err());
-        assert!(req(RequestKind::Prefill { session: 2 }, 1, 0).validate().is_err());
+        assert!(req(RequestKind::prefill(2), 1, 0).validate().is_err());
     }
 
     #[test]
     fn session_extraction() {
         assert_eq!(req(RequestKind::Stateless, 1, 1).session(), None);
-        assert_eq!(req(RequestKind::Prefill { session: 5 }, 1, 1).session(), Some(5));
+        assert_eq!(req(RequestKind::prefill(5), 1, 1).session(), Some(5));
         assert_eq!(req(RequestKind::Decode { session: 7 }, 1, 1).session(), Some(7));
-        assert_eq!(req(RequestKind::Fork { src: 5, session: 6 }, 1, 1).session(), Some(6));
+        assert_eq!(req(RequestKind::fork(5, 6), 1, 1).session(), Some(6));
     }
 
     #[test]
     fn fork_needs_divergence_and_distinct_ids() {
-        assert!(req(RequestKind::Fork { src: 1, session: 2 }, 1, 3).validate().is_ok());
-        assert!(req(RequestKind::Fork { src: 1, session: 2 }, 1, 0).validate().is_err());
-        assert!(req(RequestKind::Fork { src: 2, session: 2 }, 1, 1).validate().is_err());
-        assert!(!req(RequestKind::Fork { src: 1, session: 2 }, 1, 1).is_decode());
+        assert!(req(RequestKind::fork(1, 2), 1, 3).validate().is_ok());
+        assert!(req(RequestKind::fork(1, 2), 1, 0).validate().is_err());
+        assert!(req(RequestKind::fork(2, 2), 1, 1).validate().is_err());
+        assert!(!req(RequestKind::fork(1, 2), 1, 1).is_decode());
+    }
+
+    #[test]
+    fn policy_carried_only_by_session_creators() {
+        let default = AttnPolicy::from_kernel(&KernelConfig::default());
+        assert_eq!(default.window, None);
+        let windowed = default.with_window(64);
+        assert_eq!(windowed.window, Some(64));
+
+        let kind = RequestKind::Prefill { session: 1, policy: Some(windowed) };
+        assert_eq!(req(kind, 1, 4).policy(), Some(windowed));
+        let kind = RequestKind::Fork { src: 1, session: 2, policy: Some(windowed) };
+        assert_eq!(req(kind, 1, 1).policy(), Some(windowed));
+        assert_eq!(req(RequestKind::prefill(1), 1, 4).policy(), None);
+        assert_eq!(req(RequestKind::Decode { session: 1 }, 1, 1).policy(), None);
+    }
+
+    #[test]
+    fn zero_window_rejected() {
+        let zero = AttnPolicy::from_kernel(&KernelConfig::default()).with_window(0);
+        let kind = RequestKind::Prefill { session: 1, policy: Some(zero) };
+        assert!(req(kind, 1, 4).validate().is_err());
+        let kind = RequestKind::Fork { src: 1, session: 2, policy: Some(zero) };
+        assert!(req(kind, 1, 1).validate().is_err());
+        let one = AttnPolicy::from_kernel(&KernelConfig::default()).with_window(1);
+        let kind = RequestKind::Prefill { session: 1, policy: Some(one) };
+        assert!(req(kind, 1, 4).validate().is_ok());
     }
 }

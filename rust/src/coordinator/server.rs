@@ -62,7 +62,7 @@
 use super::batcher::{member_row_spans, Batch, BatchPolicy};
 use super::kv_cache::{PagedSessionKv, SessionStore};
 use super::metrics::Metrics;
-use super::request::{AttentionRequest, AttentionResponse, RequestKind, ShapeSig, StreamEvent};
+use super::request::{AttentionRequest, AttentionResponse, AttnPolicy, RequestKind, ShapeSig, StreamEvent};
 use super::router::{Route, Router};
 use super::scheduler::Policy;
 use super::worker::{engine_loop, Msg};
@@ -226,6 +226,15 @@ pub struct CoordinatorConfig {
     /// session cache storage format — quantized caches are dequantized
     /// into the padded block tensors at pack time).
     pub kernel: KernelConfig,
+    /// Coordinator-wide default sliding attention window in KV steps,
+    /// bound by sessions whose creating request carries no explicit
+    /// [`AttnPolicy`] (see [`CoordinatorConfig::default_policy`]). `None`
+    /// — the default — attends the whole cache. Request-level policies
+    /// override this per session and may use any window `>= 1`; the
+    /// validating builder additionally requires *this* coordinator-wide
+    /// value to be block-aligned so steady-state trims reclaim whole
+    /// blocks with zero slop.
+    pub window: Option<usize>,
     /// Fused cross-session dispatch: lower a whole drain cycle into one
     /// kernel submission when the engine supports it. `false` restores
     /// per-batch serial dispatch (bit-identical outputs, more
@@ -269,6 +278,7 @@ impl Default for CoordinatorConfig {
             kv_budget_bytes: 256 << 20,
             batch_window: Duration::from_micros(200),
             kernel: KernelConfig::default(),
+            window: None,
             fused: true,
             drain_cycle: 256,
             max_batch_total_tokens: 32 * 1024,
@@ -276,6 +286,169 @@ impl Default for CoordinatorConfig {
             max_concurrent_streams: 64,
             validate_invariants: false,
         }
+    }
+}
+
+impl CoordinatorConfig {
+    /// Start a validating builder over the default configuration — the
+    /// typed-error alternative to struct-update syntax for knobs whose
+    /// bad values previously surfaced as silent clamps (`drain_cycle: 0`
+    /// ran as 1) or engine-thread failures (a KV budget below one block
+    /// rejects every append).
+    pub fn builder() -> CoordinatorConfigBuilder {
+        CoordinatorConfigBuilder { cfg: CoordinatorConfig::default() }
+    }
+
+    /// The coordinator-wide default [`AttnPolicy`]: the kernel config's
+    /// execution/storage knobs plus the config-level default `window`.
+    /// Sessions whose creating request carries no policy bind this one;
+    /// resolution order is request > source session (fork) > this.
+    pub fn default_policy(&self) -> AttnPolicy {
+        AttnPolicy { window: self.window, ..AttnPolicy::from_kernel(&self.kernel) }
+    }
+}
+
+/// Typed rejection from [`CoordinatorConfigBuilder::build`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ConfigError {
+    /// `drain_cycle == 0`: a cycle that can admit nothing serves nothing.
+    ZeroDrainCycle,
+    /// `queue_capacity == 0`: every request would bounce at the door.
+    ZeroQueueCapacity,
+    /// KV budget below even one minimal pool block (1 head, head_dim 1),
+    /// so no session could ever append.
+    KvBudgetBelowOneBlock { budget: usize, min_block_bytes: usize },
+    /// Coordinator-wide default window of zero or not a multiple of the
+    /// pool block size. The store itself serves any window `>= 1`
+    /// (sub-block slop is hidden behind the gathered view's element
+    /// offset), but the coordinator-wide default must be block-aligned so
+    /// steady-state trims reclaim whole blocks exactly.
+    WindowNotBlockAligned { window: usize, block_steps: usize },
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::ZeroDrainCycle => write!(f, "drain_cycle must be >= 1"),
+            ConfigError::ZeroQueueCapacity => write!(f, "queue_capacity must be >= 1"),
+            ConfigError::KvBudgetBelowOneBlock { budget, min_block_bytes } => write!(
+                f,
+                "kv_budget_bytes {budget} below one pool block ({min_block_bytes} bytes minimum)"
+            ),
+            ConfigError::WindowNotBlockAligned { window, block_steps } => write!(
+                f,
+                "default window {window} must be a nonzero multiple of block_steps {block_steps}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+/// Validating builder for [`CoordinatorConfig`], started via
+/// [`CoordinatorConfig::builder`]. Unset knobs keep their
+/// [`Default`] values; [`CoordinatorConfigBuilder::build`] returns the
+/// config or the first [`ConfigError`] it finds.
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfigBuilder {
+    cfg: CoordinatorConfig,
+}
+
+impl CoordinatorConfigBuilder {
+    pub fn artifact_dir(mut self, dir: std::path::PathBuf) -> Self {
+        self.cfg.artifact_dir = dir;
+        self
+    }
+
+    pub fn policy(mut self, policy: Policy) -> Self {
+        self.cfg.policy = policy;
+        self
+    }
+
+    pub fn queue_capacity(mut self, capacity: usize) -> Self {
+        self.cfg.queue_capacity = capacity;
+        self
+    }
+
+    pub fn batch(mut self, batch: BatchPolicy) -> Self {
+        self.cfg.batch = batch;
+        self
+    }
+
+    pub fn kv_budget_bytes(mut self, bytes: usize) -> Self {
+        self.cfg.kv_budget_bytes = bytes;
+        self
+    }
+
+    pub fn batch_window(mut self, window: Duration) -> Self {
+        self.cfg.batch_window = window;
+        self
+    }
+
+    pub fn kernel(mut self, kernel: KernelConfig) -> Self {
+        self.cfg.kernel = kernel;
+        self
+    }
+
+    /// Coordinator-wide default attention window (see
+    /// [`CoordinatorConfig::window`]).
+    pub fn window(mut self, window: Option<usize>) -> Self {
+        self.cfg.window = window;
+        self
+    }
+
+    pub fn fused(mut self, fused: bool) -> Self {
+        self.cfg.fused = fused;
+        self
+    }
+
+    pub fn drain_cycle(mut self, drain_cycle: usize) -> Self {
+        self.cfg.drain_cycle = drain_cycle;
+        self
+    }
+
+    pub fn max_batch_total_tokens(mut self, tokens: usize) -> Self {
+        self.cfg.max_batch_total_tokens = tokens;
+        self
+    }
+
+    pub fn prefill_max_wait_cycles(mut self, cycles: u32) -> Self {
+        self.cfg.prefill_max_wait_cycles = cycles;
+        self
+    }
+
+    pub fn max_concurrent_streams(mut self, streams: usize) -> Self {
+        self.cfg.max_concurrent_streams = streams;
+        self
+    }
+
+    pub fn validate_invariants(mut self, on: bool) -> Self {
+        self.cfg.validate_invariants = on;
+        self
+    }
+
+    pub fn build(self) -> Result<CoordinatorConfig, ConfigError> {
+        let cfg = self.cfg;
+        if cfg.drain_cycle == 0 {
+            return Err(ConfigError::ZeroDrainCycle);
+        }
+        if cfg.queue_capacity == 0 {
+            return Err(ConfigError::ZeroQueueCapacity);
+        }
+        // Block geometry depends on per-session heads/head_dim, unknown
+        // here; one block of the smallest servable geometry (1 head,
+        // head_dim 1) is the hard floor below which nothing ever fits.
+        let block_steps = cfg.kernel.tile.max(1);
+        let min_block_bytes = 2 * block_steps * cfg.kernel.kv_precision.bytes_per_elem();
+        if cfg.kv_budget_bytes < min_block_bytes {
+            return Err(ConfigError::KvBudgetBelowOneBlock { budget: cfg.kv_budget_bytes, min_block_bytes });
+        }
+        if let Some(w) = cfg.window {
+            if w == 0 || w % block_steps != 0 {
+                return Err(ConfigError::WindowNotBlockAligned { window: w, block_steps });
+            }
+        }
+        Ok(cfg)
     }
 }
 
@@ -446,6 +619,8 @@ pub(crate) fn publish_kv_metrics(sessions: &SessionStore, metrics: &Arc<Metrics>
     metrics.kv_block_evictions.store(sessions.block_evictions, Ordering::Relaxed);
     metrics.kv_prefix_share_hits.store(sessions.prefix_share_hits, Ordering::Relaxed);
     metrics.kv_cow_copies.store(sessions.cow_copies, Ordering::Relaxed);
+    metrics.kv_window_trims.store(sessions.window_trims, Ordering::Relaxed);
+    metrics.kv_blocks_trimmed.store(sessions.blocks_trimmed, Ordering::Relaxed);
 }
 
 /// How a prepared batch's K/V is sourced at lowering time.
@@ -464,8 +639,10 @@ struct Ready {
     sig: ShapeSig,
     route: Route,
     kv: KvSrc,
-    /// Live KV length captured at admission. The fusion-group conflict
-    /// rule guarantees it cannot change before the group flushes.
+    /// *Attended* KV length captured at admission — `min(live, window)`
+    /// for a windowed session, the full live length otherwise. The
+    /// fusion-group conflict rule guarantees it cannot change before the
+    /// group flushes.
     kv_len: usize,
     /// Total query rows across members — the fused query-block height.
     total_q: usize,
@@ -502,6 +679,7 @@ fn admit_batch(
     sessions: &mut SessionStore,
     batch: &Batch,
     pend: &mut [Option<Pending>],
+    default: &AttnPolicy,
     metrics: &Arc<Metrics>,
 ) -> Option<Ready> {
     let members: Vec<Pending> = batch.members.iter().filter_map(|&i| pend[i].take()).collect();
@@ -510,7 +688,7 @@ fn admit_batch(
     }
     metrics.batches.fetch_add(1, Ordering::Relaxed);
     metrics.batched_requests.fetch_add(members.len() as u64, Ordering::Relaxed);
-    match prepare_batch(router, sessions, &members, metrics) {
+    match prepare_batch(router, sessions, &members, default, metrics) {
         Ok((route, kv, kv_len)) => {
             let total_q = members.iter().map(|m| m.req.nq).sum();
             Some(Ready {
@@ -530,13 +708,42 @@ fn admit_batch(
     }
 }
 
-/// Apply a batch's session mutations and resolve its KV source, live
+/// Resolve a session-creating request's attention policy against the
+/// store and the coordinator-wide default. The block pool is
+/// single-precision and the engine executes one kernel config per
+/// process, so a request policy whose storage precision differs from the
+/// pool's — or whose sigmoid/skip knobs differ from the coordinator's —
+/// is a typed rejection, not a silently ignored knob; `window` is the
+/// per-session axis the store and the lowering honor end to end.
+fn bind_policy(
+    policy: Option<AttnPolicy>,
+    sessions: &SessionStore,
+    default: &AttnPolicy,
+) -> Result<AttnPolicy> {
+    let Some(p) = policy else { return Ok(*default) };
+    if p.kv_precision != sessions.precision {
+        return Err(anyhow!(
+            "policy kv_precision {:?} != pool precision {:?} (the block pool is single-precision; \
+             start a coordinator at the desired precision)",
+            p.kv_precision,
+            sessions.precision
+        ));
+    }
+    if p.sigmoid != default.sigmoid || p.skip != default.skip {
+        return Err(anyhow!("per-session sigmoid/skip overrides must match the coordinator's kernel config"));
+    }
+    Ok(p)
+}
+
+/// Apply a batch's session mutations and resolve its KV source, attended
 /// length, and route — the state half of dispatch, shared by the serial
-/// and fused paths.
+/// and fused paths. Session-creating requests bind their attention
+/// policy here (request > fork source > coordinator default).
 fn prepare_batch(
     router: &Router,
     sessions: &mut SessionStore,
     members: &[Pending],
+    default: &AttnPolicy,
     metrics: &Arc<Metrics>,
 ) -> Result<(Route, KvSrc, usize)> {
     let first = &members[0].req;
@@ -547,9 +754,12 @@ fn prepare_batch(
     // 1. Update session state (all appends land in the paged block pool).
     match &first.kind {
         RequestKind::Stateless => {}
-        RequestKind::Prefill { session } => {
+        RequestKind::Prefill { session, policy } => {
+            let pol = bind_policy(*policy, sessions, default)?;
             let cap = router.max_kv(variant, sig).ok_or_else(|| anyhow!("no artifacts for signature"))?;
-            sessions.create(*session, h, d, cap).map_err(|e| anyhow!("session create: {e}"))?;
+            sessions
+                .create_windowed(*session, h, d, cap, pol.window)
+                .map_err(|e| anyhow!("session create: {e}"))?;
             sessions
                 .append(*session, &first.k, &first.v, first.nkv)
                 .map_err(|e| anyhow!("prefill append: {e}"))?;
@@ -567,14 +777,22 @@ fn prepare_batch(
             }
             metrics.kv_appends.fetch_add(members.len() as u64, Ordering::Relaxed);
         }
-        RequestKind::Fork { src, session } => {
+        RequestKind::Fork { src, session, policy } => {
             let (src, dst) = (*src, *session);
             let t = sessions.get(src).ok_or_else(|| anyhow!("unknown fork source {src}"))?;
             if t.heads != h || t.head_dim != d {
                 return Err(anyhow!("fork source geometry mismatch"));
             }
             // Zero-copy prefix share; the carried K/V is the divergence.
+            // The fork inherits the source's attention policy (the table
+            // clone carries the window); an explicit override re-binds the
+            // window before the divergent append — widening past trimmed
+            // history is a typed error from the store.
             sessions.fork(src, dst).map_err(|e| anyhow!("fork: {e}"))?;
+            if policy.is_some() {
+                let pol = bind_policy(*policy, sessions, default)?;
+                sessions.set_window(dst, pol.window).map_err(|e| anyhow!("fork policy: {e}"))?;
+            }
             sessions
                 .append(dst, &first.k, &first.v, first.nkv)
                 .map_err(|e| anyhow!("fork append: {e}"))?;
@@ -582,12 +800,15 @@ fn prepare_batch(
         }
     }
 
-    // 2. Resolve the KV source + live length.
+    // 2. Resolve the KV source + attended length: `min(live, window)`,
+    //    the element range the kernels stream (the gathered view hides
+    //    retained-but-out-of-window slop behind its start offset), and
+    //    the length routing sizes the problem by.
     let total_q: usize = members.iter().map(|m| m.req.nq).sum();
     let (kv, kv_len) = match first.session() {
         Some(sid) if !matches!(first.kind, RequestKind::Stateless) => {
             let table = sessions.get(sid).ok_or_else(|| anyhow!("session vanished"))?;
-            (KvSrc::Session(sid), table.len)
+            (KvSrc::Session(sid), table.attended())
         }
         _ => (KvSrc::Inline, first.nkv),
     };
@@ -607,9 +828,10 @@ pub(crate) fn serve_batch<E: AttnEngine>(
     sessions: &mut SessionStore,
     batch: &Batch,
     pend: &mut [Option<Pending>],
+    default: &AttnPolicy,
     metrics: &Arc<Metrics>,
 ) {
-    let Some(ready) = admit_batch(router, sessions, batch, pend, metrics) else {
+    let Some(ready) = admit_batch(router, sessions, batch, pend, default, metrics) else {
         return;
     };
     let batch_size = ready.batch_size;
@@ -705,6 +927,7 @@ pub(crate) fn serve_cycle_fused<E: AttnEngine>(
     sessions: &mut SessionStore,
     batches: &[Batch],
     pend: &mut [Option<Pending>],
+    default: &AttnPolicy,
     metrics: &Arc<Metrics>,
 ) {
     if batches.is_empty() {
@@ -715,11 +938,11 @@ pub(crate) fn serve_cycle_fused<E: AttnEngine>(
     let mut group_sessions: HashSet<u64> = HashSet::new();
     let mut jobs_this_cycle = 0u64;
     for batch in batches {
-        if fusion_conflict(router, sessions, &group_sessions, batch, pend) {
+        if fusion_conflict(router, sessions, &group_sessions, batch, pend, default) {
             jobs_this_cycle += flush_group(engine, sessions, &mut group, metrics);
             group_sessions.clear();
         }
-        if let Some(r) = admit_batch(router, sessions, batch, pend, metrics) {
+        if let Some(r) = admit_batch(router, sessions, batch, pend, default, metrics) {
             if let KvSrc::Session(sid) = r.kv {
                 group_sessions.insert(sid);
             }
@@ -733,18 +956,22 @@ pub(crate) fn serve_cycle_fused<E: AttnEngine>(
 /// Must the current fusion group flush before this batch is admitted?
 /// True when the batch touches a session the group already reads — for a
 /// fork, conservatively either endpoint — (its mutations would be visible
-/// to the earlier batch's borrow), or when its appends could LRU-evict
-/// blocks out of the pool while the group still holds admitted-but-
-/// unflushed reads. Creation is lazy in the paged store, so the eviction
-/// predicates mirror `SessionStore::append`'s admission check exactly —
-/// per kind: decode appends `members` steps, prefill re-creates then
-/// appends `nkv`, fork shares then appends `nkv` (CoW-aware).
+/// to the earlier batch's borrow); when its session's attention window
+/// differs from one already in the group (mixed-policy isolation: each
+/// submission serves one policy, so fused-vs-serial reasoning stays
+/// per-window); or when its appends could LRU-evict blocks out of the
+/// pool while the group still holds admitted-but-unflushed reads.
+/// Creation is lazy in the paged store, so the eviction predicates mirror
+/// `SessionStore::append`'s admission check exactly — per kind: decode
+/// appends `members` steps, prefill re-creates then appends `nkv`, fork
+/// shares then appends `nkv` (CoW-aware).
 fn fusion_conflict(
     router: &Router,
     sessions: &SessionStore,
     group_sessions: &HashSet<u64>,
     batch: &Batch,
     pend: &[Option<Pending>],
+    default: &AttnPolicy,
 ) -> bool {
     let Some(sid) = batch.session else {
         return false; // stateless: private KV, never conflicts
@@ -759,6 +986,21 @@ fn fusion_conflict(
     }
     if group_sessions.is_empty() {
         return false;
+    }
+    // Mixed-policy isolation: the window this batch's session will run
+    // with (post-binding, for creators) vs the windows already grouped.
+    let incoming = match first.map(|r| &r.kind) {
+        Some(RequestKind::Prefill { policy, .. }) => {
+            policy.map_or(default.window, |p| p.window)
+        }
+        Some(RequestKind::Fork { src, policy, .. }) => match policy {
+            Some(p) => p.window,
+            None => sessions.get(*src).and_then(|t| t.window),
+        },
+        _ => sessions.get(sid).and_then(|t| t.window),
+    };
+    if group_sessions.iter().any(|&gs| sessions.get(gs).is_some_and(|t| t.window != incoming)) {
+        return true;
     }
     if batch.decode {
         return sessions.append_would_evict(sid, batch.members.len());
@@ -1042,7 +1284,7 @@ mod tests {
     #[test]
     fn prefill_then_decode_uses_cache() {
         let c = start_naive();
-        let prefill = rand_req(1, RequestKind::Prefill { session: 5 }, 1, 16, 7);
+        let prefill = rand_req(1, RequestKind::prefill(5), 1, 16, 7);
         let (pk, pv) = (prefill.k.clone(), prefill.v.clone());
         assert!(c.submit_blocking(prefill).output.is_ok());
 
@@ -1087,7 +1329,7 @@ mod tests {
     #[test]
     fn concurrent_decodes_batch_and_all_respond() {
         let c = start_naive();
-        assert!(c.submit_blocking(rand_req(0, RequestKind::Prefill { session: 1 }, 1, 8, 3)).output.is_ok());
+        assert!(c.submit_blocking(rand_req(0, RequestKind::prefill(1), 1, 8, 3)).output.is_ok());
         // submit a burst of decodes from worker threads
         let c = std::sync::Arc::new(c);
         let mut handles = Vec::new();
@@ -1143,12 +1385,13 @@ mod tests {
         let kernel = KernelConfig { tile: 8, threads: 2, ..KernelConfig::default() };
         let engine = NaiveEngine::with_kernel(router.clone(), kernel);
         let policy = BatchPolicy::default();
+        let default = AttnPolicy::from_kernel(&KernelConfig::default());
 
         // Cycle 1: two prefills (sessions 1, 2) + one stateless = 3
         // mergeable batches -> exactly one fused submission of 6 jobs.
         let reqs = vec![
-            rand_req(1, RequestKind::Prefill { session: 1 }, 1, 12, 100),
-            rand_req(2, RequestKind::Prefill { session: 2 }, 1, 9, 101),
+            rand_req(1, RequestKind::prefill(1), 1, 12, 100),
+            rand_req(2, RequestKind::prefill(2), 1, 9, 101),
             rand_req(3, RequestKind::Stateless, 2, 17, 102),
         ];
         let batches = form_batches(&reqs, &policy);
@@ -1157,7 +1400,7 @@ mod tests {
         let m_f = Arc::new(Metrics::new());
         let mut sess_f = SessionStore::new(256 << 20);
         let (mut pend_f, rxs_f) = mk_pend(reqs.clone());
-        serve_cycle_fused(&engine, &router, &mut sess_f, &batches, &mut pend_f, &m_f);
+        serve_cycle_fused(&engine, &router, &mut sess_f, &batches, &mut pend_f, &default, &m_f);
         let outs_f = recv_ok(&rxs_f);
         let snap = m_f.snapshot();
         assert_eq!(snap.fused_cycles, 1);
@@ -1171,7 +1414,7 @@ mod tests {
         let mut sess_s = SessionStore::new(256 << 20);
         let (mut pend_s, rxs_s) = mk_pend(reqs);
         for b in &batches {
-            serve_batch(&engine, &router, &mut sess_s, b, &mut pend_s, &m_s);
+            serve_batch(&engine, &router, &mut sess_s, b, &mut pend_s, &default, &m_s);
         }
         let outs_s = recv_ok(&rxs_s);
         assert_eq!(outs_f, outs_s, "fused outputs must be bit-identical to serial");
@@ -1187,14 +1430,14 @@ mod tests {
         let batches2 = form_batches(&reqs2, &policy);
         assert_eq!(batches2.len(), 2);
         let (mut pend2_f, rxs2_f) = mk_pend(reqs2.clone());
-        serve_cycle_fused(&engine, &router, &mut sess_f, &batches2, &mut pend2_f, &m_f);
+        serve_cycle_fused(&engine, &router, &mut sess_f, &batches2, &mut pend2_f, &default, &m_f);
         let outs2_f = recv_ok(&rxs2_f);
         let snap2 = m_f.snapshot();
         assert_eq!(snap2.fused_cycles, 2);
         assert_eq!(snap2.fused_submissions, 2);
         let (mut pend2_s, rxs2_s) = mk_pend(reqs2);
         for b in &batches2 {
-            serve_batch(&engine, &router, &mut sess_s, b, &mut pend2_s, &m_s);
+            serve_batch(&engine, &router, &mut sess_s, b, &mut pend2_s, &default, &m_s);
         }
         assert_eq!(outs2_f, recv_ok(&rxs2_s));
         assert_eq!(sess_f.get(1).unwrap().len, sess_s.get(1).unwrap().len);
@@ -1216,8 +1459,9 @@ mod tests {
         };
         let engine = NaiveEngine::with_kernel(router.clone(), kernel);
         let policy = BatchPolicy::default();
+        let default = AttnPolicy::from_kernel(&KernelConfig::default());
         let reqs = vec![
-            rand_req(1, RequestKind::Prefill { session: 1 }, 1, 12, 200),
+            rand_req(1, RequestKind::prefill(1), 1, 12, 200),
             rand_req(2, RequestKind::Stateless, 2, 17, 201),
         ];
         let batches = form_batches(&reqs, &policy);
@@ -1225,14 +1469,14 @@ mod tests {
         let m_f = Arc::new(Metrics::new());
         let mut sess_f = SessionStore::with_precision(256 << 20, KvPrecision::Bf16);
         let (mut pend_f, rxs_f) = mk_pend(reqs.clone());
-        serve_cycle_fused(&engine, &router, &mut sess_f, &batches, &mut pend_f, &m_f);
+        serve_cycle_fused(&engine, &router, &mut sess_f, &batches, &mut pend_f, &default, &m_f);
         let outs_f = recv_ok(&rxs_f);
 
         let m_s = Arc::new(Metrics::new());
         let mut sess_s = SessionStore::with_precision(256 << 20, KvPrecision::Bf16);
         let (mut pend_s, rxs_s) = mk_pend(reqs);
         for b in &batches {
-            serve_batch(&engine, &router, &mut sess_s, b, &mut pend_s, &m_s);
+            serve_batch(&engine, &router, &mut sess_s, b, &mut pend_s, &default, &m_s);
         }
         assert_eq!(outs_f, recv_ok(&rxs_s));
         // bf16 pool: the 12-step prefill occupies one 32-step block of
@@ -1244,10 +1488,10 @@ mod tests {
         let dec = vec![rand_req(3, RequestKind::Decode { session: 1 }, 1, 1, 202)];
         let db = form_batches(&dec, &policy);
         let (mut pd_f, rd_f) = mk_pend(dec.clone());
-        serve_cycle_fused(&engine, &router, &mut sess_f, &db, &mut pd_f, &m_f);
+        serve_cycle_fused(&engine, &router, &mut sess_f, &db, &mut pd_f, &default, &m_f);
         let (mut pd_s, rd_s) = mk_pend(dec);
         for b in &db {
-            serve_batch(&engine, &router, &mut sess_s, b, &mut pd_s, &m_s);
+            serve_batch(&engine, &router, &mut sess_s, b, &mut pd_s, &default, &m_s);
         }
         assert_eq!(recv_ok(&rd_f), recv_ok(&rd_s));
     }
@@ -1259,11 +1503,12 @@ mod tests {
         let m = Arc::new(Metrics::new());
         let mut sessions = SessionStore::new(256 << 20);
         let policy = BatchPolicy::default();
+        let default = AttnPolicy::from_kernel(&KernelConfig::default());
 
-        let pre = vec![rand_req(1, RequestKind::Prefill { session: 7 }, 1, 8, 7)];
+        let pre = vec![rand_req(1, RequestKind::prefill(7), 1, 8, 7)];
         let b0 = form_batches(&pre, &policy);
         let (mut p0, r0) = mk_pend(pre);
-        serve_cycle_fused(&engine, &router, &mut sessions, &b0, &mut p0, &m);
+        serve_cycle_fused(&engine, &router, &mut sessions, &b0, &mut p0, &default, &m);
         assert!(r0[0].recv().unwrap().output.is_ok());
 
         // One cycle: decode(7) then re-prefill(7). The re-prefill would
@@ -1271,12 +1516,12 @@ mod tests {
         // giving 2 submissions and serial-identical state.
         let cyc = vec![
             rand_req(2, RequestKind::Decode { session: 7 }, 1, 1, 8),
-            rand_req(3, RequestKind::Prefill { session: 7 }, 1, 6, 9),
+            rand_req(3, RequestKind::prefill(7), 1, 6, 9),
         ];
         let batches = form_batches(&cyc, &policy);
         assert_eq!(batches.len(), 2);
         let (mut pend, rxs) = mk_pend(cyc);
-        serve_cycle_fused(&engine, &router, &mut sessions, &batches, &mut pend, &m);
+        serve_cycle_fused(&engine, &router, &mut sessions, &batches, &mut pend, &default, &m);
         for rx in &rxs {
             assert!(rx.recv().unwrap().output.is_ok());
         }
@@ -1296,12 +1541,13 @@ mod tests {
         // 2 heads x 32 steps x 8 dims x 2 tensors x 4B = 4096B each.
         let mut sessions = SessionStore::new(8 * 4096);
         let policy = BatchPolicy::default();
+        let default = AttnPolicy::from_kernel(&KernelConfig::default());
 
         // fill the whole budget: 255 steps -> 8 blocks resident
-        let pre = vec![rand_req(1, RequestKind::Prefill { session: 1 }, 1, 255, 20)];
+        let pre = vec![rand_req(1, RequestKind::prefill(1), 1, 255, 20)];
         let b0 = form_batches(&pre, &policy);
         let (mut p0, r0) = mk_pend(pre);
-        serve_cycle_fused(&engine, &router, &mut sessions, &b0, &mut p0, &m);
+        serve_cycle_fused(&engine, &router, &mut sessions, &b0, &mut p0, &default, &m);
         assert!(r0[0].recv().unwrap().output.is_ok());
         assert_eq!(sessions.bytes(), 8 * 4096);
 
@@ -1310,11 +1556,11 @@ mod tests {
         // session 1's blocks, so the group flushes before admission.
         let cyc = vec![
             rand_req(2, RequestKind::Decode { session: 1 }, 1, 1, 21),
-            rand_req(3, RequestKind::Prefill { session: 2 }, 1, 5, 22),
+            rand_req(3, RequestKind::prefill(2), 1, 5, 22),
         ];
         let batches = form_batches(&cyc, &policy);
         let (mut pend, rxs) = mk_pend(cyc);
-        serve_cycle_fused(&engine, &router, &mut sessions, &batches, &mut pend, &m);
+        serve_cycle_fused(&engine, &router, &mut sessions, &batches, &mut pend, &default, &m);
         for rx in &rxs {
             assert!(rx.recv().unwrap().output.is_ok());
         }
@@ -1331,11 +1577,11 @@ mod tests {
     #[test]
     fn fork_request_shares_prefix_and_matches_reference() {
         let c = start_naive();
-        let pre = rand_req(1, RequestKind::Prefill { session: 1 }, 1, 16, 30);
+        let pre = rand_req(1, RequestKind::prefill(1), 1, 16, 30);
         let (pk, pv) = (pre.k.clone(), pre.v.clone());
         assert!(c.submit_blocking(pre).output.is_ok());
 
-        let fork = rand_req(2, RequestKind::Fork { src: 1, session: 2 }, 1, 2, 31);
+        let fork = rand_req(2, RequestKind::fork(1, 2), 1, 2, 31);
         let (fq, fk, fv) = (fork.q.clone(), fork.k.clone(), fork.v.clone());
         let out = c.submit_blocking(fork).output.expect("fork ok");
 
@@ -1361,8 +1607,106 @@ mod tests {
     #[test]
     fn fork_from_unknown_session_errors() {
         let c = start_naive();
-        let resp = c.submit_blocking(rand_req(1, RequestKind::Fork { src: 42, session: 2 }, 1, 1, 34));
+        let resp = c.submit_blocking(rand_req(1, RequestKind::fork(42, 2), 1, 1, 34));
         assert!(resp.output.unwrap_err().contains("unknown fork source"));
         c.shutdown();
+    }
+
+    /// A windowed session's decode attends exactly the window suffix —
+    /// identical to the full kernel run over only that KV — and the trim
+    /// counters surface through the metrics sink.
+    #[test]
+    fn windowed_prefill_decode_attends_window_suffix() {
+        let c = start_naive(); // tile 8 -> 8-step pool blocks
+        let policy = AttnPolicy::from_kernel(&KernelConfig::default()).with_window(8);
+        let kind = RequestKind::Prefill { session: 5, policy: Some(policy) };
+        let pre = rand_req(1, kind, 1, 20, 7);
+        let (pk, pv) = (pre.k.clone(), pre.v.clone());
+        assert!(c.submit_blocking(pre).output.is_ok());
+
+        let dec = rand_req(2, RequestKind::Decode { session: 5 }, 1, 1, 8);
+        let (dq, dk, dv) = (dec.q.clone(), dec.k.clone(), dec.v.clone());
+        let out = c.submit_blocking(dec).output.expect("decode ok");
+
+        // window 8 over 21 total steps: prefill steps 13..20 + the decode
+        // pair. No rescaling fix-up — the FLASH-D recursion over exactly
+        // this KV is the whole reference.
+        let scale = (8f32).powf(-0.5);
+        for hh in 0..2 {
+            let mut ks = pk[(hh * 20 + 13) * 8..(hh * 20 + 20) * 8].to_vec();
+            ks.extend_from_slice(&dk[hh * 8..(hh + 1) * 8]);
+            let mut vs = pv[(hh * 20 + 13) * 8..(hh * 20 + 20) * 8].to_vec();
+            vs.extend_from_slice(&dv[hh * 8..(hh + 1) * 8]);
+            let want = crate::kernels::naive::attention(&dq[hh * 8..(hh + 1) * 8], &ks, &vs, 8, 8, scale);
+            let got = &out[hh * 8..(hh + 1) * 8];
+            assert!(crate::kernels::max_abs_diff(got, &want) < 1e-4, "h={hh}");
+        }
+        let snap = c.metrics.snapshot();
+        assert!(snap.kv_window_trims >= 1, "prefill past the window must trim");
+        assert!(snap.kv_blocks_trimmed >= 1, "sole-owner trimmed blocks must free");
+        c.shutdown();
+    }
+
+    /// Mixed-policy isolation: sessions with different windows never
+    /// share a fused submission.
+    #[test]
+    fn mixed_window_policies_split_submissions() {
+        let router = test_router();
+        let engine = NaiveEngine::new(router.clone());
+        let m = Arc::new(Metrics::new());
+        let mut sessions = SessionStore::new(256 << 20);
+        let policy = BatchPolicy::default();
+        let default = AttnPolicy::from_kernel(&KernelConfig::default());
+
+        let windowed = RequestKind::Prefill { session: 1, policy: Some(default.with_window(32)) };
+        let reqs = vec![
+            rand_req(1, windowed, 1, 8, 50),
+            rand_req(2, RequestKind::prefill(2), 1, 8, 51),
+        ];
+        let batches = form_batches(&reqs, &policy);
+        assert_eq!(batches.len(), 2);
+        let (mut pend, rxs) = mk_pend(reqs);
+        serve_cycle_fused(&engine, &router, &mut sessions, &batches, &mut pend, &default, &m);
+        for rx in &rxs {
+            assert!(rx.recv().unwrap().output.is_ok());
+        }
+        assert_eq!(m.snapshot().fused_submissions, 2, "mixed windows must not fuse");
+        assert_eq!(sessions.get(1).unwrap().window, Some(32));
+        assert_eq!(sessions.get(2).unwrap().window, None);
+        sessions.check_invariants().unwrap();
+    }
+
+    /// The pool is single-precision: a policy asking for a different
+    /// storage precision is a typed rejection at session creation.
+    #[test]
+    fn policy_precision_mismatch_rejected_at_creation() {
+        let c = start_naive(); // f32 pool
+        let bad = AttnPolicy {
+            kv_precision: crate::numerics::quant::KvPrecision::Bf16,
+            ..AttnPolicy::from_kernel(&KernelConfig::default())
+        };
+        let kind = RequestKind::Prefill { session: 9, policy: Some(bad) };
+        let err = c.submit_blocking(rand_req(1, kind, 1, 4, 60)).output.unwrap_err();
+        assert!(err.contains("kv_precision"), "got: {err}");
+        c.shutdown();
+    }
+
+    #[test]
+    fn config_builder_rejects_bad_knobs() {
+        assert!(CoordinatorConfig::builder().build().is_ok());
+        assert_eq!(CoordinatorConfig::builder().drain_cycle(0).build().unwrap_err(), ConfigError::ZeroDrainCycle);
+        assert_eq!(CoordinatorConfig::builder().queue_capacity(0).build().unwrap_err(), ConfigError::ZeroQueueCapacity);
+        let err = CoordinatorConfig::builder().kv_budget_bytes(7).build().unwrap_err();
+        assert!(matches!(err, ConfigError::KvBudgetBelowOneBlock { budget: 7, .. }), "{err}");
+        // default tile = 32-step blocks: 33 is misaligned, 64 aligned
+        let err = CoordinatorConfig::builder().window(Some(33)).build().unwrap_err();
+        assert!(matches!(err, ConfigError::WindowNotBlockAligned { window: 33, .. }), "{err}");
+        assert_eq!(
+            CoordinatorConfig::builder().window(Some(0)).build().unwrap_err(),
+            ConfigError::WindowNotBlockAligned { window: 0, block_steps: 32 }
+        );
+        let cfg = CoordinatorConfig::builder().window(Some(64)).build().unwrap();
+        assert_eq!(cfg.default_policy().window, Some(64));
+        assert_eq!(cfg.default_policy().kv_precision, cfg.kernel.kv_precision);
     }
 }

@@ -317,16 +317,19 @@ impl BatchWorker {
         }
     }
 
-    /// The cycle-budget cost of a request in KV tokens: the live context
-    /// length its query rows will stream after its own mutations land.
+    /// The cycle-budget cost of a request in KV tokens: the *attended*
+    /// context length its query rows will stream after its own mutations
+    /// land. Window-aware — a decode against a windowed session costs
+    /// `min(live, window) + 1` no matter how long the session has run,
+    /// which is what keeps a sliding-window stream's admission cost flat.
     fn request_tokens(&self, req: &AttentionRequest) -> usize {
         match req.kind {
             RequestKind::Stateless | RequestKind::Prefill { .. } => req.nkv,
             RequestKind::Decode { session } => {
-                self.sessions.get(session).map_or(1, |t| t.len + 1)
+                self.sessions.get(session).map_or(1, |t| t.attended() + 1)
             }
             RequestKind::Fork { src, .. } => {
-                self.sessions.get(src).map_or(req.nkv, |t| t.len + req.nkv)
+                self.sessions.get(src).map_or(req.nkv, |t| t.attended() + req.nkv)
             }
         }
     }
@@ -340,7 +343,7 @@ impl BatchWorker {
             RequestKind::Decode { session } => self.sessions.append_would_evict(session, 1),
             // an unknown signature can't create a session, so it can't
             // evict either
-            RequestKind::Prefill { session } => match self.router.max_kv(req.variant, req.sig) {
+            RequestKind::Prefill { session, .. } => match self.router.max_kv(req.variant, req.sig) {
                 Some(_) => self.sessions.prefill_would_evict(
                     session,
                     req.sig.heads,
@@ -349,7 +352,7 @@ impl BatchWorker {
                 ),
                 None => false,
             },
-            RequestKind::Fork { src, session } => {
+            RequestKind::Fork { src, session, .. } => {
                 self.sessions.fork_would_evict(src, session, req.nkv)
             }
         }
@@ -408,11 +411,12 @@ impl BatchWorker {
                 Some(Pending { req, reply })
             })
             .collect();
+        let default = self.cfg.default_policy();
         if self.fused {
-            serve_cycle_fused(engine, &self.router, &mut self.sessions, &batches, &mut pend, &self.metrics);
+            serve_cycle_fused(engine, &self.router, &mut self.sessions, &batches, &mut pend, &default, &self.metrics);
         } else {
             for batch in &batches {
-                serve_batch(engine, &self.router, &mut self.sessions, batch, &mut pend, &self.metrics);
+                serve_batch(engine, &self.router, &mut self.sessions, batch, &mut pend, &default, &self.metrics);
             }
         }
         publish_kv_metrics(&self.sessions, &self.metrics);
@@ -501,7 +505,7 @@ pub(crate) fn engine_loop<E: AttnEngine>(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::request::{ShapeSig, Variant};
+    use crate::coordinator::request::{AttnPolicy, ShapeSig, Variant};
     use crate::coordinator::server::NaiveEngine;
     use crate::kernels::batch::KernelConfig;
     use crate::runtime::Manifest;
@@ -566,12 +570,12 @@ mod tests {
         let (mut w, engine) = mk_worker(cfg);
 
         // seed session 5 with a short prefill
-        let seed = push(&mut w, rand_req(1, RequestKind::Prefill { session: 5 }, 1, 4, 1));
+        let seed = push(&mut w, rand_req(1, RequestKind::prefill(5), 1, 4, 1));
         assert!(w.step(&engine));
         assert!(seed.recv().unwrap().output.is_ok());
 
         // long prefill arrives FIRST, two decodes queue behind it
-        let long = push(&mut w, rand_req(2, RequestKind::Prefill { session: 6 }, 1, 40, 2));
+        let long = push(&mut w, rand_req(2, RequestKind::prefill(6), 1, 40, 2));
         let d1 = push(&mut w, rand_req(3, RequestKind::Decode { session: 5 }, 1, 1, 3));
         let d2 = push(&mut w, rand_req(4, RequestKind::Decode { session: 5 }, 1, 1, 4));
 
@@ -599,9 +603,9 @@ mod tests {
             ..CoordinatorConfig::default()
         };
         let (mut w, engine) = mk_worker(cfg);
-        let p1 = push(&mut w, rand_req(1, RequestKind::Prefill { session: 11 }, 1, 40, 1));
-        let p2 = push(&mut w, rand_req(2, RequestKind::Prefill { session: 12 }, 1, 40, 2));
-        let p3 = push(&mut w, rand_req(3, RequestKind::Prefill { session: 13 }, 1, 40, 3));
+        let p1 = push(&mut w, rand_req(1, RequestKind::prefill(11), 1, 40, 1));
+        let p2 = push(&mut w, rand_req(2, RequestKind::prefill(12), 1, 40, 2));
+        let p3 = push(&mut w, rand_req(3, RequestKind::prefill(13), 1, 40, 3));
 
         // the budget forces one prefill per cycle
         assert!(w.step(&engine));
@@ -631,11 +635,11 @@ mod tests {
             ..CoordinatorConfig::default()
         };
         let (mut w, engine) = mk_worker(cfg);
-        let seed = push(&mut w, rand_req(1, RequestKind::Prefill { session: 5 }, 1, 4, 1));
+        let seed = push(&mut w, rand_req(1, RequestKind::prefill(5), 1, 4, 1));
         assert!(w.step(&engine));
         assert!(seed.recv().unwrap().output.is_ok());
 
-        let long = push(&mut w, rand_req(2, RequestKind::Prefill { session: 6 }, 1, 40, 2));
+        let long = push(&mut w, rand_req(2, RequestKind::prefill(6), 1, 40, 2));
         let d = push(&mut w, rand_req(3, RequestKind::Decode { session: 5 }, 1, 1, 3));
         // Fifo: the earlier prefill serves first (alone — over budget);
         // the decode waits its turn
@@ -657,11 +661,11 @@ mod tests {
             ..CoordinatorConfig::default()
         };
         let (mut w, engine) = mk_worker(cfg);
-        let seed = push(&mut w, rand_req(1, RequestKind::Prefill { session: 31 }, 1, 4, 1));
+        let seed = push(&mut w, rand_req(1, RequestKind::prefill(31), 1, 4, 1));
         assert!(w.step(&engine));
         assert!(seed.recv().unwrap().output.is_ok());
 
-        let p = push(&mut w, rand_req(2, RequestKind::Prefill { session: 32 }, 1, 40, 2));
+        let p = push(&mut w, rand_req(2, RequestKind::prefill(32), 1, 40, 2));
         // cycle 1: wait=1 < 2 — the decode wins, the prefill's 40 tokens
         // don't fit behind it
         let d1 = push(&mut w, rand_req(3, RequestKind::Decode { session: 31 }, 1, 1, 3));
@@ -692,14 +696,14 @@ mod tests {
         };
         let (mut w, engine) = mk_worker(cfg);
         // fill the pool: 33 steps -> both blocks resident
-        let seed = push(&mut w, rand_req(1, RequestKind::Prefill { session: 41 }, 1, 33, 1));
+        let seed = push(&mut w, rand_req(1, RequestKind::prefill(41), 1, 33, 1));
         assert!(w.step(&engine));
         assert!(seed.recv().unwrap().output.is_ok());
 
         // decode fits its partial tail block; the new session's prefill
         // needs a fresh block the pool can't hold
         let d = push(&mut w, rand_req(2, RequestKind::Decode { session: 41 }, 1, 1, 2));
-        let p = push(&mut w, rand_req(3, RequestKind::Prefill { session: 42 }, 1, 8, 3));
+        let p = push(&mut w, rand_req(3, RequestKind::prefill(42), 1, 8, 3));
         assert!(w.step(&engine));
         assert!(d.try_recv().is_ok());
         assert!(p.try_recv().is_err(), "evicting prefill must defer");
@@ -719,7 +723,7 @@ mod tests {
         let cfg = CoordinatorConfig { validate_invariants: true, ..CoordinatorConfig::default() };
         let (mut w, engine) = mk_worker(cfg);
         let reqs = vec![
-            rand_req(10, RequestKind::Prefill { session: 21 }, 1, 4, 10),
+            rand_req(10, RequestKind::prefill(21), 1, 4, 10),
             rand_req(11, RequestKind::Decode { session: 21 }, 1, 1, 11),
             rand_req(12, RequestKind::Decode { session: 21 }, 1, 1, 12),
             rand_req(13, RequestKind::Decode { session: 21 }, 1, 1, 13),
@@ -760,10 +764,10 @@ mod tests {
         let cfg = CoordinatorConfig { max_concurrent_streams: 1, ..CoordinatorConfig::default() };
         let (mut w, engine) = mk_worker(cfg);
         let a_reqs = vec![
-            rand_req(1, RequestKind::Prefill { session: 1 }, 1, 4, 1),
+            rand_req(1, RequestKind::prefill(1), 1, 4, 1),
             rand_req(2, RequestKind::Decode { session: 1 }, 1, 1, 2),
         ];
-        let b_reqs = vec![rand_req(3, RequestKind::Prefill { session: 2 }, 1, 4, 3)];
+        let b_reqs = vec![rand_req(3, RequestKind::prefill(2), 1, 4, 3)];
         let (atx, arx) = channel();
         let (btx, brx) = channel();
         w.handle_msg(Msg::Stream(a_reqs, atx));
@@ -815,12 +819,12 @@ mod tests {
         let cfg = CoordinatorConfig { max_concurrent_streams: 1, ..CoordinatorConfig::default() };
         let (mut w, engine) = mk_worker(cfg);
         let a_reqs = vec![
-            rand_req(1, RequestKind::Prefill { session: 1 }, 1, 4, 1),
+            rand_req(1, RequestKind::prefill(1), 1, 4, 1),
             rand_req(2, RequestKind::Decode { session: 1 }, 1, 1, 2),
             rand_req(3, RequestKind::Decode { session: 1 }, 1, 1, 3),
             rand_req(4, RequestKind::Decode { session: 1 }, 1, 1, 4),
         ];
-        let b_reqs = vec![rand_req(5, RequestKind::Prefill { session: 2 }, 1, 4, 5)];
+        let b_reqs = vec![rand_req(5, RequestKind::prefill(2), 1, 4, 5)];
         let (atx, arx) = channel();
         let (btx, brx) = channel();
         w.handle_msg(Msg::Stream(a_reqs, atx));
@@ -856,5 +860,35 @@ mod tests {
         let snap = w.metrics.snapshot();
         assert_eq!(snap.queue_rejections, 1);
         assert_eq!(snap.errors, 1);
+    }
+
+    /// Window-aware admission: a decode against a windowed session is
+    /// budgeted at `min(live, window) + 1` tokens, not the full history.
+    #[test]
+    fn windowed_decode_admission_cost_uses_window() {
+        let cfg = CoordinatorConfig {
+            policy: Policy::Fifo,
+            max_batch_total_tokens: 20,
+            validate_invariants: true,
+            ..CoordinatorConfig::default()
+        };
+        let (mut w, engine) = mk_worker(cfg);
+
+        // default kernel -> 32-step blocks; a 40-step prefill with an
+        // 8-step window retains one trimmed-off block's worth of slop
+        let policy = AttnPolicy::from_kernel(&KernelConfig::default()).with_window(8);
+        let kind = RequestKind::Prefill { session: 51, policy: Some(policy) };
+        let seed = push(&mut w, rand_req(1, kind, 1, 40, 1));
+        assert!(w.step(&engine));
+        assert!(seed.recv().unwrap().output.is_ok());
+
+        // each decode costs min(live, 8) + 1 = 9 tokens: both fit the
+        // 20-token budget in one cycle; unwindowed they'd cost 41 each
+        let d1 = push(&mut w, rand_req(2, RequestKind::Decode { session: 51 }, 1, 1, 2));
+        let d2 = push(&mut w, rand_req(3, RequestKind::Decode { session: 51 }, 1, 1, 3));
+        assert!(w.step(&engine));
+        assert!(d1.try_recv().expect("decode 1 in cycle 1").output.is_ok());
+        assert!(d2.try_recv().expect("decode 2 in cycle 1").output.is_ok());
+        assert!(w.metrics.snapshot().kv_window_trims >= 1);
     }
 }

@@ -1349,8 +1349,8 @@ mod tests {
                     );
                     let paged = PagedKvBlockJob {
                         q: &q,
-                        k: KvView::Paged(PagedKv { blocks: &kfr, block_elems: bs, len: n * d }),
-                        v: KvView::Paged(PagedKv { blocks: &vfr, block_elems: bs, len: n * d }),
+                        k: KvView::Paged(PagedKv { blocks: &kfr, block_elems: bs, start: 0, len: n * d }),
+                        v: KvView::Paged(PagedKv { blocks: &vfr, block_elems: bs, start: 0, len: n * d }),
                         nq,
                         n,
                         d,

@@ -767,8 +767,8 @@ mod tests {
                 .step_by(bs_elems)
                 .map(|a| vr.slice(a, (a + bs_elems).min(n * d)))
                 .collect();
-            let kp = KvView::Paged(PagedKv { blocks: &kfr, block_elems: bs_elems, len: n * d });
-            let vp = KvView::Paged(PagedKv { blocks: &vfr, block_elems: bs_elems, len: n * d });
+            let kp = KvView::Paged(PagedKv { blocks: &kfr, block_elems: bs_elems, start: 0, len: n * d });
+            let vp = KvView::Paged(PagedKv { blocks: &vfr, block_elems: bs_elems, start: 0, len: n * d });
             for tile in [8usize, 32, 200] {
                 for crit in [SkipCriterion::None, SkipCriterion::Static] {
                     let (want, want_st) = attention_kv(&q, kr, vr, n, d, 0.5, tile, crit);

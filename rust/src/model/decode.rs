@@ -25,6 +25,10 @@ pub struct DecodeSession<'a> {
     /// Paged KV pool, unbounded budget (capacity is enforced by the
     /// positional window, not by eviction).
     kv: SessionStore,
+    /// Sliding attention window: each step attends only the last
+    /// `window` positions; fully out-of-window blocks are trimmed from
+    /// the pool. `None` = full attention.
+    window: Option<usize>,
     pub pos: usize,
     pub stats: ForwardStats,
     /// Effective kernel config, snapshotted from [`Engine::kernel_config`]
@@ -63,6 +67,17 @@ fn chain_id(layer: usize, head: usize, n_heads: usize) -> u64 {
 
 impl<'a> DecodeSession<'a> {
     pub fn new(engine: &'a Engine) -> DecodeSession<'a> {
+        DecodeSession::with_window(engine, None)
+    }
+
+    /// Like [`DecodeSession::new`], but each step attends only the last
+    /// `window` positions. Fully out-of-window KV blocks are trimmed
+    /// from the pool, so resident bytes stay bounded by the window (plus
+    /// at most one block of slop per chain) no matter how long the
+    /// generation runs. Positional capacity (`seq_len`) still bounds the
+    /// total step count.
+    pub fn with_window(engine: &'a Engine, window: Option<usize>) -> DecodeSession<'a> {
+        assert!(window != Some(0), "sliding window must be >= 1");
         let kernel = engine.kernel_config();
         let nl = engine.info.n_layers;
         let nh = engine.info.n_heads;
@@ -73,13 +88,14 @@ impl<'a> DecodeSession<'a> {
         let mut kv = SessionStore::with_block_steps(usize::MAX, prec, kernel.tile.max(1));
         for layer in 0..nl {
             for head in 0..nh {
-                kv.create(chain_id(layer, head, nh), 1, dh, engine.info.seq_len)
-                    .expect("unbounded pool rejects nothing");
+                kv.create_windowed(chain_id(layer, head, nh), 1, dh, engine.info.seq_len, window)
+                    .expect("valid window, unbounded pool rejects nothing");
             }
         }
         DecodeSession {
             engine,
             kv,
+            window,
             pos: 0,
             stats: ForwardStats::default(),
             kernel,
@@ -150,7 +166,12 @@ impl<'a> DecodeSession<'a> {
                     .expect("append within positional capacity");
                 qhs.push(qh);
             }
-            let n = self.pos + 1;
+            // Attended KV length this step: `min(pos + 1, window)`. The
+            // gathered views hide the trimmed/slop prefix, so the kernel
+            // streams exactly the in-window rows — the FLASH-D recursion
+            // over that suffix IS the windowed answer, no rescaling
+            // fix-up (asserted bit-exactly in the tests below).
+            let n = self.window.map_or(self.pos + 1, |w| (self.pos + 1).min(w));
             let kcfg = self.kernel;
             // head-ordered jobs write straight into the (nh * dh) attention
             // row — no per-head output allocation, and the session-owned
@@ -164,6 +185,7 @@ impl<'a> DecodeSession<'a> {
                     .into_iter()
                     .map(|o| o.expect("decode chain exists"))
                     .collect();
+                debug_assert!(views.iter().all(|p| p.len == n));
                 let jobs: Vec<KvRowJob<'_>> = (0..nh)
                     .map(|head| KvRowJob {
                         q: &qhs[head],
@@ -217,6 +239,12 @@ impl Engine {
     /// Start a KV-cached decode session.
     pub fn start_session(&self) -> DecodeSession<'_> {
         DecodeSession::new(self)
+    }
+
+    /// Start a KV-cached decode session with a sliding attention window
+    /// (see [`DecodeSession::with_window`]).
+    pub fn start_windowed_session(&self, window: usize) -> DecodeSession<'_> {
+        DecodeSession::with_window(self, Some(window))
     }
 
     /// Fast greedy decode via the KV cache (same function as
@@ -290,7 +318,7 @@ mod tests {
         }
 
         let mut e16 = tiny_engine(25);
-        e16.set_kv_precision(KvPrecision::Bf16);
+        e16.configure(KernelConfig { kv_precision: KvPrecision::Bf16, ..e16.kernel_config() });
         let mut sess16 = e16.start_session();
         assert_eq!(sess16.kv_precision(), KvPrecision::Bf16);
         let mut last16 = Vec::new();
@@ -307,12 +335,66 @@ mod tests {
         assert_eq!(sess16.kv_bytes() * 2, sess32.kv_bytes());
 
         let mut e8 = tiny_engine(25);
-        e8.set_kv_precision(KvPrecision::Fp8);
+        e8.configure(KernelConfig { kv_precision: KvPrecision::Fp8, ..e8.kernel_config() });
         let mut sess8 = e8.start_session();
         for &t in &toks {
             sess8.push_token(t);
         }
         assert_eq!(sess8.kv_bytes() * 4, sess32.kv_bytes());
+    }
+
+    /// A window covering the whole positional capacity takes the windowed
+    /// code path (attended-length n, slop arithmetic) but must stay
+    /// *bit-identical* to the unwindowed session: the FLASH-D recursion
+    /// over the in-window KV is the complete answer — no rescaling fix-up.
+    #[test]
+    fn window_covering_capacity_is_bit_identical() {
+        let e = tiny_engine(26);
+        let toks: Vec<i32> = (0..16).map(|i| (i * 11 + 3) % 32).collect();
+        let mut full = e.start_session();
+        let mut win = e.start_windowed_session(e.info.seq_len);
+        for &t in &toks {
+            let a = full.push_token(t);
+            let b = win.push_token(t);
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn sliding_window_trims_pool_and_restricts_attention() {
+        let mut e = tiny_engine(27);
+        // 4-step blocks so a 16-token generation crosses trim boundaries
+        e.configure(KernelConfig { tile: 4, threads: 1, ..KernelConfig::default() });
+        let toks: Vec<i32> = (0..16).map(|i| (i * 7 + 5) % 32).collect();
+        let mut full = e.start_session();
+        let mut win = e.start_windowed_session(8);
+        let mut diverged = false;
+        let mut last_w = Vec::new();
+        for (i, &t) in toks.iter().enumerate() {
+            let a = full.push_token(t);
+            last_w = win.push_token(t);
+            assert!(last_w.iter().all(|x| x.is_finite()));
+            if i < 8 {
+                assert_eq!(a, last_w, "inside the window the paths are identical");
+            } else if crate::kernels::max_abs_diff(&a, &last_w) > 1e-6 {
+                diverged = true;
+            }
+        }
+        assert!(diverged, "a slid window must change late logits");
+        assert!(win.kv_bytes() < full.kv_bytes(), "trim must bound resident bytes");
+
+        // trim path (4-step blocks) vs pure-slop path (16-step blocks
+        // never fill, prefix hidden by the view offset): same attended
+        // rows, same recursion, same logits
+        let mut e_big = tiny_engine(27);
+        e_big.configure(KernelConfig { tile: 16, threads: 1, ..KernelConfig::default() });
+        let mut slop = e_big.start_windowed_session(8);
+        let mut last_s = Vec::new();
+        for &t in &toks {
+            last_s = slop.push_token(t);
+        }
+        let diff = crate::kernels::max_abs_diff(&last_w, &last_s);
+        assert!(diff < 2e-4, "trim vs slop windowing drifted: {diff}");
     }
 
     #[test]

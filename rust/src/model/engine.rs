@@ -37,9 +37,8 @@ pub struct Engine {
     pub info: ModelInfo,
     params: HashMap<String, NamedTensor>,
     /// Skip criterion applied by the instrumented attention — the single
-    /// skip knob (the CLI, Table I harness, and tests set this; the kernel
-    /// driver's tile/thread tuning lives behind
-    /// [`Engine::set_kernel_tuning`]).
+    /// skip knob (the CLI, Table I harness, and tests set this; every
+    /// other kernel knob lives behind [`Engine::configure`]).
     pub criterion: SkipCriterion,
     /// Tile/thread tuning for the batched kernel driver. Private so the
     /// engine has exactly one skip knob: `criterion` is substituted into
@@ -131,35 +130,47 @@ impl Engine {
         KernelConfig { skip: self.criterion, ..self.kernel }
     }
 
+    /// Apply a complete kernel configuration in one call: tile/thread
+    /// tuning, query block length, KV storage precision, sigmoid mode,
+    /// and the skip criterion (`cfg.skip` becomes [`Engine::criterion`]).
+    /// Replaces the former `set_kernel_tuning` / `set_query_block` /
+    /// `set_kv_precision` / `set_sigmoid_mode` setter quartet, which now
+    /// forward here.
+    pub fn configure(&mut self, cfg: KernelConfig) {
+        assert!(cfg.tile >= 1 && cfg.threads >= 1 && cfg.block_q >= 1);
+        self.criterion = cfg.skip;
+        self.kernel = cfg;
+    }
+
     /// Tune the batched kernel driver (KV tile length and worker threads).
-    /// The skip criterion is NOT part of this — set [`Engine::criterion`].
+    #[deprecated(note = "use `Engine::configure` with a full `KernelConfig`")]
     pub fn set_kernel_tuning(&mut self, tile: usize, threads: usize) {
-        assert!(tile >= 1 && threads >= 1);
-        self.kernel.tile = tile;
-        self.kernel.threads = threads;
+        self.configure(KernelConfig { tile, threads, ..self.kernel_config() });
     }
 
     /// Tune the query block length of the query-blocked kernel (how many
     /// queries share one KV-tile stream; 1 = per-query, the PR 1
     /// behavior). Results are bit-identical for every value.
+    #[deprecated(note = "use `Engine::configure` with a full `KernelConfig`")]
     pub fn set_query_block(&mut self, block_q: usize) {
-        assert!(block_q >= 1);
-        self.kernel.block_q = block_q;
+        self.configure(KernelConfig { block_q, ..self.kernel_config() });
     }
 
     /// Storage precision for KV caches opened by [`Engine::start_session`]
     /// (and honored by any layer that reads [`Engine::kernel_config`]).
     /// Quantization is storage-only: the FLASH-D recursion stays f32, so
     /// the default `F32` is bit-identical to the unquantized path.
+    #[deprecated(note = "use `Engine::configure` with a full `KernelConfig`")]
     pub fn set_kv_precision(&mut self, precision: KvPrecision) {
-        self.kernel.kv_precision = precision;
+        self.configure(KernelConfig { kv_precision: precision, ..self.kernel_config() });
     }
 
     /// Sigmoid evaluation mode for the attention kernels: exact `libm`
     /// transcendentals (default) or the piecewise-linear fast path of
     /// paper §IV-B (opt-in, bounded error).
+    #[deprecated(note = "use `Engine::configure` with a full `KernelConfig`")]
     pub fn set_sigmoid_mode(&mut self, mode: SigmoidMode) {
-        self.kernel.sigmoid = mode;
+        self.configure(KernelConfig { sigmoid: mode, ..self.kernel_config() });
     }
 
     /// Load a zoo model from the artifact directory (weights default to the
@@ -478,6 +489,49 @@ pub(crate) mod test_support {
             assert_eq!(p.nq, 8);
             assert_eq!(p.d, 8);
         }
+    }
+
+    #[test]
+    fn configure_applies_whole_kernel_config() {
+        let mut e = tiny_engine(7);
+        let cfg = KernelConfig {
+            tile: 4,
+            threads: 1,
+            block_q: 2,
+            kv_precision: KvPrecision::Bf16,
+            sigmoid: SigmoidMode::Pwl { segments: 16 },
+            skip: SkipCriterion::None,
+        };
+        e.configure(cfg);
+        assert_eq!(e.criterion, SkipCriterion::None);
+        let got = e.kernel_config();
+        assert_eq!(got.tile, 4);
+        assert_eq!(got.threads, 1);
+        assert_eq!(got.block_q, 2);
+        assert_eq!(got.kv_precision, KvPrecision::Bf16);
+        assert_eq!(got.sigmoid, SigmoidMode::Pwl { segments: 16 });
+        assert_eq!(got.skip, SkipCriterion::None);
+        // criterion stays the live skip knob after configure
+        e.criterion = SkipCriterion::Static;
+        assert_eq!(e.kernel_config().skip, SkipCriterion::Static);
+    }
+
+    /// The deprecated setter quartet must keep forwarding to `configure`
+    /// without clobbering unrelated knobs.
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_setters_forward_to_configure() {
+        let mut e = tiny_engine(8);
+        e.set_kernel_tuning(4, 1);
+        e.set_query_block(2);
+        e.set_kv_precision(KvPrecision::Bf16);
+        e.set_sigmoid_mode(SigmoidMode::Pwl { segments: 16 });
+        let got = e.kernel_config();
+        assert_eq!(got.tile, 4);
+        assert_eq!(got.threads, 1);
+        assert_eq!(got.block_q, 2);
+        assert_eq!(got.kv_precision, KvPrecision::Bf16);
+        assert_eq!(got.sigmoid, SigmoidMode::Pwl { segments: 16 });
     }
 
     #[test]

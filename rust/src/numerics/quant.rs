@@ -170,12 +170,17 @@ impl<'a> KvRef<'a> {
 /// A borrowed *paged* K or V buffer: an ordered list of per-block
 /// [`KvRef`] fragments standing in for one logical flat buffer. Every
 /// fragment except the last holds exactly `block_elems` elements; the last
-/// may be shorter (a partially-filled tail block). Element `e` of the
-/// logical buffer lives at offset `e % block_elems` of fragment
-/// `e / block_elems` — so [`PagedKv::load_into`] over any element range
-/// yields exactly the bytes a contiguous buffer would, and the kernels'
-/// tile streaming is bit-identical over paged and contiguous storage by
-/// construction.
+/// may be shorter (a partially-filled tail block). Logical element `e`
+/// lives at physical position `p = e + start` — offset `p % block_elems`
+/// of fragment `p / block_elems` — so [`PagedKv::load_into`] over any
+/// element range yields exactly the bytes the contiguous buffer
+/// `physical[start..start + len]` would, and the kernels' tile streaming
+/// is bit-identical over paged and contiguous storage by construction.
+///
+/// `start` is how sliding-window views skip the leading slop inside the
+/// oldest retained block: the paged store trims whole out-of-window blocks
+/// eagerly, and the `< block_elems`-sized remainder is hidden here rather
+/// than copied out, so windowed kernels see exactly the attended suffix.
 #[derive(Copy, Clone, Debug)]
 pub struct PagedKv<'a> {
     /// Per-block element fragments, in logical order.
@@ -183,20 +188,26 @@ pub struct PagedKv<'a> {
     /// Elements per full block (fragments `0..blocks.len()-1` are exactly
     /// this long).
     pub block_elems: usize,
-    /// Total logical length in elements (`<= blocks.len() * block_elems`).
+    /// Physical element offset of logical element 0 (`< block_elems`:
+    /// fully-skipped leading blocks are dropped from `blocks` instead).
+    pub start: usize,
+    /// Logical length in elements (`start + len <= blocks.len() *
+    /// block_elems`).
     pub len: usize,
 }
 
 impl<'a> PagedKv<'a> {
     /// Dequantize logical elements `[a, b)` into `dst` (`dst.len() ==
     /// b - a`), gathering across as many block fragments as the range
-    /// covers. Equals [`KvRef::load_into`] over the concatenated buffer.
+    /// covers. Equals [`KvRef::load_into`] over the concatenated buffer
+    /// with the leading `start` elements dropped.
     pub fn load_into(&self, a: usize, b: usize, dst: &mut [f32]) {
         debug_assert!(a <= b && b <= self.len, "range [{a}, {b}) out of len {}", self.len);
         debug_assert_eq!(dst.len(), b - a);
         if a == b {
             return;
         }
+        let (a, b) = (a + self.start, b + self.start);
         let bs = self.block_elems;
         let mut off = 0usize;
         for bi in a / bs..=(b - 1) / bs {
@@ -265,6 +276,7 @@ impl<'a> KvView<'a> {
                 std::ptr::eq(x.blocks.as_ptr(), y.blocks.as_ptr())
                     && x.blocks.len() == y.blocks.len()
                     && x.block_elems == y.block_elems
+                    && x.start == y.start
                     && x.len == y.len
             }
             _ => false,
@@ -347,7 +359,7 @@ mod tests {
             ),
         ];
         for (contig, frags) in &cases {
-            let paged = KvView::Paged(PagedKv { blocks: frags, block_elems: bs, len: n });
+            let paged = KvView::Paged(PagedKv { blocks: frags, block_elems: bs, start: 0, len: n });
             let flat = KvView::Contig(*contig);
             assert_eq!(paged.len(), flat.len());
             assert_eq!(paged.to_f32_vec(), flat.to_f32_vec());
@@ -367,7 +379,7 @@ mod tests {
     fn kvview_identity_and_zero_copy() {
         let src: Vec<f32> = (0..16).map(|i| i as f32).collect();
         let frags: Vec<KvRef> = src.chunks(8).map(KvRef::F32).collect();
-        let paged = KvView::Paged(PagedKv { blocks: &frags, block_elems: 8, len: 16 });
+        let paged = KvView::Paged(PagedKv { blocks: &frags, block_elems: 8, start: 0, len: 16 });
         let contig = KvView::Contig(KvRef::F32(&src));
         // zero-copy only for contiguous f32
         assert!(contig.as_contig_f32().is_some());
@@ -379,8 +391,44 @@ mod tests {
         assert!(KvView::same(paged, paged));
         assert!(!KvView::same(contig, paged));
         let other: Vec<KvRef> = src.chunks(8).map(KvRef::F32).collect();
-        let paged2 = KvView::Paged(PagedKv { blocks: &other, block_elems: 8, len: 16 });
+        let paged2 = KvView::Paged(PagedKv { blocks: &other, block_elems: 8, start: 0, len: 16 });
         assert!(!KvView::same(paged, paged2), "distinct fragment lists are not identical");
+        let shifted = KvView::Paged(PagedKv { blocks: &frags, block_elems: 8, start: 2, len: 14 });
+        assert!(!KvView::same(paged, shifted), "differing start offsets are not identical");
+    }
+
+    #[test]
+    fn paged_start_offset_matches_contiguous_suffix() {
+        // A windowed view with a nonzero start must load exactly what the
+        // contiguous buffer's suffix loads, at every precision.
+        let n = 44usize;
+        let bs = 8usize;
+        let src: Vec<f32> = (0..n).map(|i| (i as f32 * 0.53 + 1.0).cos()).collect();
+        let qb = quantize_bf16(&src);
+        let qf = quantize_fp8(&src);
+        let cases: Vec<(KvRef, Vec<KvRef>)> = vec![
+            (KvRef::F32(&src), src.chunks(bs).map(KvRef::F32).collect()),
+            (KvRef::Bf16(&qb), qb.chunks(bs).map(KvRef::Bf16).collect()),
+            (KvRef::Fp8(&qf), qf.chunks(bs).map(KvRef::Fp8).collect()),
+        ];
+        for (contig, frags) in &cases {
+            for start in [1usize, 3, 7] {
+                let len = n - start;
+                let paged = KvView::Paged(PagedKv { blocks: frags, block_elems: bs, start, len });
+                assert_eq!(paged.len(), len);
+                let flat = KvView::Contig(contig.slice(start, n));
+                assert_eq!(paged.to_f32_vec(), flat.to_f32_vec(), "start {start}");
+                // ranges inside the first partial block, crossing into the
+                // next block, block-aligned after shift, and the full tail
+                for (a, b) in [(0, 0), (0, 3), (2, 13), (bs - start, 2 * bs - start), (len - 4, len)] {
+                    let mut want = vec![0.0f32; b - a];
+                    flat.load_into(a, b, &mut want);
+                    let mut got = vec![7.7f32; b - a];
+                    paged.load_into(a, b, &mut got);
+                    assert_eq!(got, want, "start {start} range [{a}, {b})");
+                }
+            }
+        }
     }
 
     #[test]

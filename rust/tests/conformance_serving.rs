@@ -31,13 +31,13 @@ use std::time::Duration;
 fn session_script(rng: &mut Rng, session: u64, next_id: &mut u64) -> VecDeque<AttentionRequest> {
     let mut plan: Vec<(RequestKind, usize, usize)> = Vec::new();
     let prefill_len = 4 + rng.below(9);
-    plan.push((RequestKind::Prefill { session }, 1, prefill_len));
+    plan.push((RequestKind::prefill(session), 1, prefill_len));
     for _ in 0..(3 + rng.below(6)) {
         plan.push((RequestKind::Decode { session }, 1, 1));
     }
     if rng.below(3) == 0 {
         let re_len = 3 + rng.below(7);
-        plan.push((RequestKind::Prefill { session }, 1, re_len));
+        plan.push((RequestKind::prefill(session), 1, re_len));
         for _ in 0..2 {
             plan.push((RequestKind::Decode { session }, 1, 1));
         }
@@ -231,7 +231,7 @@ fn run_forked_interleaving(prec: KvPrecision, fused: bool, seed: u64) {
         let req = mk_req(
             &mut rng,
             next_id,
-            RequestKind::Prefill { session: s },
+            RequestKind::prefill(s),
             1,
             4 + rng.below(12),
         );
@@ -252,7 +252,7 @@ fn run_forked_interleaving(prec: KvPrecision, fused: bool, seed: u64) {
             let req = mk_req(
                 &mut rng,
                 next_id,
-                RequestKind::Fork { src: s, session: dst },
+                RequestKind::fork(s, dst),
                 1,
                 1 + rng.below(3),
             );
@@ -331,6 +331,53 @@ fn conformance_forked_sessions_fp8() {
     }
 }
 
+/// `window >= nkv` conformance: a session whose window covers every KV
+/// row it will ever hold must stay bit-identical to an unwindowed session
+/// fed the same stream (and both to the kernel reference) — nothing is
+/// trimmed, nothing rescaled.
+#[test]
+fn window_covering_all_kv_identical_to_unwindowed() {
+    use flashd::coordinator::request::AttnPolicy;
+    let cfg = CoordinatorConfig {
+        batch_window: Duration::from_micros(100),
+        kernel: KernelConfig { tile: 8, block_q: 4, threads: 2, ..KernelConfig::default() },
+        validate_invariants: true,
+        ..CoordinatorConfig::default()
+    };
+    let coord = Coordinator::start_naive(cfg, test_router()).expect("start");
+    let mut rng = Rng::new(8_100);
+    let mut kv = RefKv::new();
+
+    // the session peaks at 10 + 6 KV rows; window 64 covers all of it
+    let policy = AttnPolicy::from_kernel(&KernelConfig::default()).with_window(64);
+    let prefill = mk_req(&mut rng, 1, RequestKind::prefill(1), 1, 10);
+    let mut wpre = prefill.clone();
+    wpre.id = 101;
+    wpre.kind = RequestKind::Prefill { session: 2, policy: Some(policy) };
+    let want = expect_for(&prefill, &mut kv);
+    let a = coord.submit_blocking(prefill).output.expect("prefill ok");
+    let b = coord.submit_blocking(wpre).output.expect("windowed prefill ok");
+    assert_eq!(a, want);
+    assert_eq!(b, want, "covering window diverged at prefill");
+
+    for i in 0..6u64 {
+        let dec = mk_req(&mut rng, 10 + i, RequestKind::Decode { session: 1 }, 1, 1);
+        let mut wdec = dec.clone();
+        wdec.id = 110 + i;
+        wdec.kind = RequestKind::Decode { session: 2 };
+        let want = expect_for(&dec, &mut kv);
+        let a = coord.submit_blocking(dec).output.expect("decode ok");
+        let b = coord.submit_blocking(wdec).output.expect("windowed decode ok");
+        assert_eq!(a, want);
+        assert_eq!(b, want, "covering window diverged at decode {i}");
+    }
+    let snap = coord.metrics.snapshot();
+    assert_eq!(snap.errors, 0);
+    assert_eq!(snap.kv_window_trims, 0, "covering window must never trim");
+    assert_eq!(snap.kv_blocks_trimmed, 0);
+    coord.shutdown();
+}
+
 /// A same-session decode burst that merges into ONE multi-member batch
 /// must equal the block reference: every member's query attends the full
 /// post-append KV (all burst pairs included), bit-exactly.
@@ -348,7 +395,7 @@ fn fused_decode_burst_matches_block_reference() {
         let mut rng = Rng::new(9_000 + attempt);
         let mut kv = RefKv::new();
 
-        let prefill = mk_req(&mut rng, 1, RequestKind::Prefill { session: 1 }, 1, 10);
+        let prefill = mk_req(&mut rng, 1, RequestKind::prefill(1), 1, 10);
         let expected = expect_for(&prefill, &mut kv);
         let got = coord.submit_blocking(prefill).output.expect("prefill ok");
         assert_eq!(got, expected);

@@ -40,7 +40,7 @@ fn session_script(
     steps: usize,
 ) -> (Vec<AttentionRequest>, Vec<(u64, Vec<f32>)>) {
     let mut kv = RefKv::new();
-    let mut reqs = vec![mk_req(rng, base_id, RequestKind::Prefill { session }, 1, prefill)];
+    let mut reqs = vec![mk_req(rng, base_id, RequestKind::prefill(session), 1, prefill)];
     for i in 0..steps {
         reqs.push(mk_req(rng, base_id + 1 + i as u64, RequestKind::Decode { session }, 1, 1));
     }
@@ -146,7 +146,7 @@ fn forked_lineage_streams_bit_exact() {
     let mut rng = Rng::new(0xF0BC);
     let mut kv_src = RefKv::new();
     let reqs = vec![
-        mk_req(&mut rng, 7000, RequestKind::Prefill { session: 70 }, 1, 8),
+        mk_req(&mut rng, 7000, RequestKind::prefill(70), 1, 8),
         mk_req(&mut rng, 7001, RequestKind::Decode { session: 70 }, 1, 1),
     ];
     let exp: Vec<(u64, Vec<f32>)> = reqs.iter().map(|r| (r.id, expect_for(r, &mut kv_src))).collect();
@@ -155,7 +155,7 @@ fn forked_lineage_streams_bit_exact() {
     // fork 70 -> 71 with 2 fresh appends, then decode the fork
     let mut kv_fork = kv_src.clone();
     let reqs = vec![
-        mk_req(&mut rng, 7100, RequestKind::Fork { src: 70, session: 71 }, 1, 2),
+        mk_req(&mut rng, 7100, RequestKind::fork(70, 71), 1, 2),
         mk_req(&mut rng, 7101, RequestKind::Decode { session: 71 }, 1, 1),
     ];
     let exp: Vec<(u64, Vec<f32>)> = reqs.iter().map(|r| (r.id, expect_for(r, &mut kv_fork))).collect();

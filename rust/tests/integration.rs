@@ -137,7 +137,7 @@ fn coordinator_full_session_lifecycle_against_reference() {
     let pv = rng.normal_vec(hd * 10, 1.0);
     let resp = coord.submit_blocking(flashd::coordinator::AttentionRequest {
         id: 1,
-        kind: RequestKind::Prefill { session: 3 },
+        kind: RequestKind::prefill(3),
         variant: Variant::FlashD,
         sig,
         q: rng.normal_vec(hd, 0.6),

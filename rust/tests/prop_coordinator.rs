@@ -19,7 +19,7 @@ fn mk_request(g: &mut flashd::util::prop::Gen, id: u64) -> AttentionRequest {
     let (kind, nq, nkv) = if decode {
         (RequestKind::Decode { session }, 1usize, 1usize)
     } else if g.bool() {
-        (RequestKind::Prefill { session }, 1, g.usize_in(1, 8))
+        (RequestKind::prefill(session), 1, g.usize_in(1, 8))
     } else {
         (RequestKind::Stateless, g.usize_in(1, 4), g.usize_in(1, 8))
     };
@@ -147,11 +147,13 @@ fn prop_session_store_invariants_under_random_ops() {
         let ops = g.usize_in(1, 80);
         for i in 0..ops {
             let sid = g.usize_in(0, 5) as u64;
-            match g.usize_in(0, 5) {
+            match g.usize_in(0, 6) {
                 0 => {
-                    // create: 1 head, dim 2, random cap (may exceed budget)
+                    // create: 1 head, dim 2, random cap (may exceed
+                    // budget), sometimes with a sliding window
                     let cap = g.usize_in(1, 12);
-                    let _ = store.create(sid, 1, 2, cap);
+                    let window = if g.bool() { Some(g.usize_in(1, 8)) } else { None };
+                    let _ = store.create_windowed(sid, 1, 2, cap, window);
                 }
                 1 => {
                     let n = g.usize_in(1, 3);
@@ -168,6 +170,12 @@ fn prop_session_store_invariants_under_random_ops() {
                     let _ = store.share_prefix(sid, dst, steps);
                 }
                 4 => store.remove(sid),
+                5 => {
+                    // retarget the window (may legally refuse: widening
+                    // past already-trimmed history is a typed error)
+                    let window = if g.bool() { Some(g.usize_in(1, 8)) } else { None };
+                    let _ = store.set_window(sid, window);
+                }
                 _ => {
                     // gather builds the borrowed paged view end to end
                     if let Some(view) = store.gather(sid) {
@@ -448,6 +456,87 @@ fn prop_quantized_kv_append_is_stable_projection() {
         let bb = store.pool().block_bytes(1, 2);
         prop_assert!(g, bb == 2 * bs * 2 * prec.bytes_per_elem(), "block bytes");
         prop_assert!(g, store.bytes() == n_ops.div_ceil(bs) * bb, "byte accounting");
+        true
+    });
+}
+
+/// Tentpole property (sliding windows): over random windows, block sizes,
+/// storage precisions, and fork lineages, the windowed gather view is
+/// bit-identical to a store holding only the trimmed-to-window suffix —
+/// and the FLASH-D kernel over the windowed view is bit-identical to the
+/// full kernel over that suffix. The hidden-division recursion needs no
+/// rescaling fix-up anywhere.
+#[test]
+fn prop_windowed_kernel_bit_identical_to_trimmed_full() {
+    use flashd::kernels::batch::{run_kv_rows_into_with, BatchScratch, KernelConfig, KvRowJob};
+    use flashd::numerics::quant::KvPrecision;
+    forall("kv-windowed-bit-identical", 100, |g| {
+        let prec = match g.usize_in(0, 2) {
+            0 => KvPrecision::F32,
+            1 => KvPrecision::Bf16,
+            _ => KvPrecision::Fp8,
+        };
+        let bs = g.usize_in(1, 5);
+        let w = g.usize_in(1, 10);
+        let mut store = SessionStore::with_block_steps(1 << 20, prec, bs);
+        store.create_windowed(1, 1, 2, 64, Some(w)).unwrap();
+        // modest magnitudes so fp8 stays in range
+        let row = |i: usize| {
+            let a = (i as f32 * 0.37 - 1.0).sin();
+            let b = (i as f32 * 0.91 + 0.5).cos();
+            ([a, b], [b, a])
+        };
+        let mut hist1: Vec<usize> = Vec::new();
+        for i in 0..g.usize_in(1, 20) {
+            let (k, v) = row(i);
+            store.append(1, &k, &v, 1).unwrap();
+            hist1.push(i);
+        }
+        // fork: the lineage inherits the window (and any trimmed prefix),
+        // then both sides diverge
+        store.fork(1, 2).unwrap();
+        let mut hist2 = hist1.clone();
+        for j in 0..g.usize_in(0, 10) {
+            let (k, v) = row(100 + j);
+            store.append(1, &k, &v, 1).unwrap();
+            hist1.push(100 + j);
+            let (k, v) = row(200 + j);
+            store.append(2, &k, &v, 1).unwrap();
+            hist2.push(200 + j);
+        }
+        if let Err(e) = store.check_invariants() {
+            prop_assert!(g, false, "invariant broken: {e}");
+        }
+        for (sid, hist) in [(1u64, &hist1), (2u64, &hist2)] {
+            let att = hist.len().min(w);
+            // reference: a fresh store holding exactly the in-window
+            // suffix (per-element quantization makes this bit-faithful)
+            let mut full = SessionStore::with_block_steps(1 << 20, prec, bs);
+            full.create(9, 1, 2, 64).unwrap();
+            for &i in &hist[hist.len() - att..] {
+                let (k, v) = row(i);
+                full.append(9, &k, &v, 1).unwrap();
+            }
+            let view = store.gather(sid).unwrap();
+            let fview = full.gather(9).unwrap();
+            prop_assert!(g, view.len == att, "attended len {} != {att}", view.len);
+            prop_assert!(
+                g,
+                view.head_k(0).to_f32_vec() == fview.head_k(0).to_f32_vec()
+                    && view.head_v(0).to_f32_vec() == fview.head_v(0).to_f32_vec(),
+                "windowed view != trimmed suffix (sid {sid})"
+            );
+            let q = [0.3f32, -0.2];
+            let cfg = KernelConfig { tile: bs, threads: 1, ..KernelConfig::default() };
+            let mut scratch = BatchScratch::new();
+            let mut out_w = vec![0.0f32; 2];
+            let job = KvRowJob { q: &q, k: view.head_k(0), v: view.head_v(0), n: att, d: 2, scale: 0.7 };
+            run_kv_rows_into_with(&cfg, &[job], 2, &mut out_w, &mut scratch);
+            let mut out_f = vec![0.0f32; 2];
+            let job = KvRowJob { q: &q, k: fview.head_k(0), v: fview.head_v(0), n: att, d: 2, scale: 0.7 };
+            run_kv_rows_into_with(&cfg, &[job], 2, &mut out_f, &mut scratch);
+            prop_assert!(g, out_w == out_f, "windowed kernel != full kernel over window (sid {sid})");
+        }
         true
     });
 }

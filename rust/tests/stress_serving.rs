@@ -98,7 +98,7 @@ fn drive_client(coord: &Coordinator, t: u64) -> (Totals, Vec<(u64, Vec<f32>)>) {
         .collect();
     for dr in drivers.iter_mut() {
         let p = 6 + (dr.sid as usize % 4) * 2;
-        let kind = RequestKind::Prefill { session: dr.sid };
+        let kind = RequestKind::prefill(dr.sid);
         step(coord, dr, kind, 1, p, &mut totals, &mut outs);
     }
     let mut stl = SessDriver::new(900 + t);
